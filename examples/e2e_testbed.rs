@@ -1,0 +1,165 @@
+//! End-to-end testbed reproduction (paper §5, Table 3) — THE e2e driver.
+//!
+//! The paper: a 19x5 cFS constellation on 5 NUCs, a Jetson-hosted
+//! TinyLlama, a 250-character prompt → 4 x 128-token blocks (~2.9 MB each,
+//! 8-bit quantized), striped as 6 kB chunks over 10 LOS satellites; a
+//! 30-token generation speeds up from 6.2 s to 4.9 s (21%) with
+//! Optimum-Quanto, 10.2 s → 7.8 s (24%) with HQQ.
+//!
+//! Here: the same 19x5 constellation (in-process, with wall-clock link
+//! latency emulation), the build-time-trained byte LM, a 250-character
+//! prompt → 7 x 32-token blocks, 6 kB chunks over 10 servers, 30 new
+//! tokens.  We report the same table — generation seconds without / with
+//! the KVC for both quantizers — plus a batched serving run (latency /
+//! throughput), and write results/table3.csv + results/e2e_serving.csv.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_testbed
+//! ```
+
+use skymemory::constellation::geometry::Geometry;
+use skymemory::coordinator::{GenRequest, Stack, StackConfig};
+use skymemory::kvc::quantize::Quantizer;
+use skymemory::net::transport::LinkModel;
+use skymemory::sim::workload::{generate as gen_workload, WorkloadConfig};
+use skymemory::util::bench::summarize;
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// The paper's ~250-character validation prompt, adapted thematically and
+/// trimmed to 224 bytes = 7 exact 32-token blocks (our context is 256).
+const PROMPT: &str = "We expand the scope of cache memory to include LEO constellations, \
+highly distributed systems with thousands of satellites connected with free-space \
+optics inter-satellite links, always one hop from any point on earth.";
+
+/// Link-latency calibration.  The Table 3 speedups depend on the
+/// fetch-to-prefill time ratio, not on absolute seconds.  From the paper's
+/// own numbers: 4 blocks save 6.2-4.9 = 1.3 s, i.e. ~325 ms of Jetson
+/// prefill replaced by a fetch of roughly 60-80 ms per 2.9 MB block —
+/// fetch/prefill ~ 0.2.  Our byte-LM prefills a block in ~3 ms, so the
+/// emulated constellation must answer in ~0.6 ms per block to present the
+/// same ratio; full-scale LEO RTTs (~5-100 ms at this 19x5 geometry) are
+/// scaled down accordingly (see DESIGN.md §Hardware-Adaptation).
+const LINK_SCALE: f64 = 1.0 / 300.0;
+
+fn build_stack(quantizer: Quantizer, link_scale: f64) -> anyhow::Result<Stack> {
+    let mut cfg = StackConfig::default(); // 19x5, the paper's constellation
+    cfg.kvc.quantizer = quantizer;
+    cfg.kvc.n_servers = 10; // paper: "10 LOS cFS satellites to stripe across"
+    cfg.kvc.chunk_size = 6000; // paper: 6 kB chunks
+    let mut link = LinkModel::laser_defaults(Geometry::new(550.0, 19, 5));
+    link.sleep_scale = link_scale;
+    link.bandwidth_bps = 200e6;
+    cfg.link = Some(link);
+    cfg.n_workers = 1;
+    Stack::build(cfg)
+}
+
+fn timed_generation(stack: &Stack, use_cache: bool, warm: bool) -> anyhow::Result<f64> {
+    let req = GenRequest {
+        prompt: PROMPT.into(),
+        max_new_tokens: 30, // paper: 30-token generation
+        use_cache,
+        ..Default::default()
+    };
+    // untimed warm-up: spins up PJRT/thread pools; when `warm`, it also
+    // primes the constellation with the prompt's blocks
+    let mut prime = req.clone();
+    prime.use_cache = warm && use_cache;
+    stack.router.generate(prime)?;
+    // median of 5 timed runs
+    let mut times = Vec::new();
+    for _ in 0..5 {
+        let r = stack.router.generate(req.clone())?;
+        times.push(r.total_s);
+    }
+    times.sort_by(f64::total_cmp);
+    Ok(times[2])
+}
+
+fn table3(outdir: &std::path::Path) -> anyhow::Result<()> {
+    println!("=== Table 3: Jetson cFS testbed experiment (scaled) ===");
+    println!("{:<16} {:>14} {:>12} {:>9}", "quantization", "no KVC (s)", "KVC (s)", "speedup");
+    let mut csv = String::from("quantization,no_kvc_s,kvc_s,speedup_pct\n");
+    for (name, q) in [
+        ("optimum-quanto", Quantizer::QuantoInt8 { group: 32 }),
+        ("hqq", Quantizer::HqqInt8 { group: 32 }),
+    ] {
+        let stack = build_stack(q, LINK_SCALE)?;
+        let cold = timed_generation(&stack, false, false)?;
+        let warm = timed_generation(&stack, true, true)?;
+        let speedup = 100.0 * (1.0 - warm / cold);
+        println!("{name:<16} {cold:>14.3} {warm:>12.3} {speedup:>8.1}%");
+        let _ = writeln!(csv, "{name},{cold:.4},{warm:.4},{speedup:.1}");
+    }
+    println!("(paper: quanto 6.2 -> 4.9 s = 21%; hqq 10.2 -> 7.8 s = 24%)");
+    println!("(absolute seconds differ — the Jetson's quantized-model compute is ~80x ours;");
+    println!(" the KVC-vs-no-KVC *speedup* is the comparable quantity)");
+    std::fs::write(outdir.join("table3.csv"), csv)?;
+    Ok(())
+}
+
+fn serving_run(outdir: &std::path::Path) -> anyhow::Result<()> {
+    println!("\n=== batched serving over the constellation cache ===");
+    let stack = build_stack(Quantizer::QuantoInt8 { group: 32 }, LINK_SCALE)?;
+    let wl = WorkloadConfig { n_contexts: 4, context_chars: 160, n_questions: 6, seed: 42 };
+    let items = gen_workload(&wl, 32);
+    let t0 = Instant::now();
+    // submit everything (router fans across workers), then collect
+    let rxs: Vec<_> = items
+        .iter()
+        .map(|it| {
+            stack.router.submit(GenRequest {
+                prompt: it.prompt.clone(),
+                max_new_tokens: 16,
+                ..Default::default()
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    let mut cached_blocks = 0usize;
+    for rx in rxs {
+        let r = rx.recv()??;
+        latencies.push(Duration::from_secs_f64(r.total_s));
+        tokens += r.tokens.len();
+        cached_blocks += r.cached_blocks;
+    }
+    let wall = t0.elapsed();
+    let summary = summarize("serving e2e latency", latencies);
+    println!("{}", summary.report());
+    println!(
+        "32 requests in {:.2}s -> {:.2} req/s, {:.1} tok/s, {} blocks served from orbit, hit rate {:.0}%",
+        wall.as_secs_f64(),
+        32.0 / wall.as_secs_f64(),
+        tokens as f64 / wall.as_secs_f64(),
+        cached_blocks,
+        stack.metrics.block_hit_rate() * 100.0
+    );
+    let csv = format!(
+        "requests,wall_s,req_per_s,tok_per_s,mean_latency_s,p95_latency_s,cached_blocks,hit_rate\n32,{:.3},{:.3},{:.3},{:.4},{:.4},{},{:.3}\n",
+        wall.as_secs_f64(),
+        32.0 / wall.as_secs_f64(),
+        tokens as f64 / wall.as_secs_f64(),
+        summary.mean.as_secs_f64(),
+        summary.p95.as_secs_f64(),
+        cached_blocks,
+        stack.metrics.block_hit_rate()
+    );
+    std::fs::write(outdir.join("e2e_serving.csv"), csv)?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let outdir = std::path::PathBuf::from(
+        std::env::args()
+            .skip_while(|a| a != "--outdir")
+            .nth(1)
+            .unwrap_or_else(|| "results".into()),
+    );
+    std::fs::create_dir_all(&outdir)?;
+    table3(&outdir)?;
+    serving_run(&outdir)?;
+    println!("\nwrote {}/table3.csv and {}/e2e_serving.csv", outdir.display(), outdir.display());
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Regenerate every table and figure of the paper's evaluation (except the
+//! model-driven Table 3, which `e2e_testbed` produces) into results/.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures -- --all --outdir results
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let outdir = std::path::PathBuf::from(
+        args.iter()
+            .position(|a| a == "--outdir")
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or_else(|| "results".into()),
+    );
+    let files = skymemory::repro::write_all(&outdir)?;
+    for f in &files {
+        println!("wrote {}", f.display());
+    }
+    println!("\n--- Figure 13 (rotation-aware) 5x5 ---");
+    print!("{}", section(&skymemory::repro::fig13(), "5x5"));
+    println!("--- Figure 14 (hop-aware) 5x5 ---");
+    print!("{}", section(&skymemory::repro::fig14(), "5x5"));
+    println!("--- Figure 15 (rotation-and-hop-aware) 5x5 ---");
+    print!("{}", section(&skymemory::repro::fig15(), "5x5"));
+    println!("--- Figure 16 headline ---");
+    print!("{}", skymemory::repro::fig16_summary());
+    Ok(())
+}
+
+fn section(full: &str, which: &str) -> String {
+    let mut out = String::new();
+    let mut in_section = false;
+    for line in full.lines() {
+        if line.starts_with('#') {
+            in_section = line.contains(which);
+            continue;
+        }
+        if in_section {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}

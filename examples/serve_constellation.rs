@@ -1,0 +1,98 @@
+//! Full networked demo: a 19x5 **UDP** constellation (real sockets, CCSDS
+//! Space Packets, greedy ISL forwarding — the paper's 5-NUC testbed with
+//! threads standing in for the NUCs), the KVC manager speaking to it over
+//! the UDP transport, an HTTP serving front-end, and a batched client.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_constellation
+//! ```
+
+use skymemory::constellation::los::LosGrid;
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::coordinator::http::{client, HttpServer};
+use skymemory::coordinator::{Executor, Metrics, Router};
+use skymemory::kvc::block::model_fingerprint;
+use skymemory::kvc::eviction::EvictionPolicy;
+use skymemory::kvc::manager::{KvcConfig, KvcManager};
+use skymemory::net::transport::{GroundView, Transport};
+use skymemory::net::udp::{UdpFleet, UdpTransport};
+use skymemory::runtime::model_config::{default_artifacts_dir, Artifacts};
+use skymemory::sim::workload::{generate as gen_workload, WorkloadConfig};
+use skymemory::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let torus = Torus::new(5, 19);
+    println!("spawning 19x5 UDP constellation (95 satellites, CCSDS SPP)...");
+    let fleet = UdpFleet::spawn(torus, 64 << 20, EvictionPolicy::Gossip, None)?;
+
+    let center = SatId::new(2, 9);
+    let ground = GroundView::new(center, &LosGrid::new(center, 2, 2), torus.sats_per_plane);
+    let transport: Arc<dyn Transport> = Arc::new(UdpTransport::new(
+        torus,
+        fleet.book.clone(),
+        ground,
+        Duration::from_secs(5),
+    )?);
+    let kvc = KvcConfig { n_servers: 10, ..KvcConfig::default() };
+    let manager = Arc::new(KvcManager::new(kvc, torus, transport));
+
+    println!("loading AOT model + spawning serving stack...");
+    let artifacts = Artifacts::load(default_artifacts_dir())?;
+    let fingerprint = model_fingerprint("skymemory-bytelm", "byte-v1", &artifacts.weights_digest()?);
+    let executor = Executor::spawn(artifacts, 8)?;
+    let metrics = Arc::new(Metrics::default());
+    let router = Arc::new(Router::spawn(executor, Some(manager.clone()), fingerprint, 2, metrics.clone()));
+    let server = HttpServer::spawn("127.0.0.1:0", router.clone())?;
+    println!("serving on http://{}", server.addr);
+
+    // batched client load over HTTP
+    let wl = WorkloadConfig { n_contexts: 3, context_chars: 130, n_questions: 5, seed: 11 };
+    let items = gen_workload(&wl, 24);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for chunk in items.chunks(6) {
+        let addr = server.addr;
+        let chunk: Vec<String> = chunk.iter().map(|i| i.prompt.clone()).collect();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut lat = Vec::new();
+            for prompt in chunk {
+                let body = skymemory::util::json::obj(vec![
+                    ("prompt", skymemory::util::json::s(&prompt)),
+                    ("max_tokens", skymemory::util::json::n(12.0)),
+                ])
+                .to_string();
+                let (status, resp) = client::post(addr, "/generate", &body)?;
+                anyhow::ensure!(status == 200, "status {status}: {resp}");
+                let j = Json::parse(&resp)?;
+                lat.push(j.get("total_s").and_then(Json::as_f64).unwrap_or(0.0));
+            }
+            Ok(lat)
+        }));
+    }
+    let mut latencies = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(f64::total_cmp);
+    println!(
+        "\n24 HTTP requests in {wall:.2}s ({:.1} req/s); latency p50 {:.0} ms p95 {:.0} ms",
+        24.0 / wall,
+        latencies[latencies.len() / 2] * 1e3,
+        latencies[latencies.len() * 95 / 100] * 1e3,
+    );
+
+    let (_, metrics_text) = client::get(server.addr, "/metrics")?;
+    for line in metrics_text.lines().filter(|l| {
+        l.starts_with("skymemory_cache") || l.starts_with("skymemory_block_hit")
+    }) {
+        println!("  {line}");
+    }
+    println!("constellation stores {} chunks across 95 UDP satellites", fleet.total_chunks());
+
+    server.shutdown();
+    fleet.shutdown();
+    Ok(())
+}

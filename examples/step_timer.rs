@@ -1,0 +1,24 @@
+//! Micro-timer for the PJRT prefill/decode steps (the L2 hot path) —
+//! used by the §Perf iteration loop in EXPERIMENTS.md.
+
+fn main() {
+    let ex = skymemory::coordinator::Executor::spawn_default(1).unwrap();
+    let slot = ex.alloc_slot().unwrap();
+    let b = ex.dims.block_tokens;
+    let tokens: Vec<i32> = (0..b as i32).collect();
+    ex.prefill(slot, tokens, 0).unwrap();
+    for i in 0..20usize {
+        ex.decode(slot, 65, b + i).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    let n = 100u32;
+    for i in 0..n as usize {
+        ex.decode(slot, 65, b + 20 + (i % 100)).unwrap();
+    }
+    println!("decode step mean: {:?}", t0.elapsed() / n);
+    let t0 = std::time::Instant::now();
+    for _ in 0..20 {
+        ex.prefill(slot, (0..b as i32).collect(), 0).unwrap();
+    }
+    println!("prefill step mean: {:?}", t0.elapsed() / 20);
+}

@@ -1,0 +1,118 @@
+"""AOT compile path: train (once) -> lower prefill/decode -> artifacts/.
+
+Emits HLO *text* (NOT lowered.compile()/serialize()): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects; the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (all consumed by rust/src/runtime/):
+  artifacts/prefill.hlo.txt   forward of one BLOCK_TOKENS block vs cache
+  artifacts/decode.hlo.txt    forward of one token vs cache
+  artifacts/weights.bin       flat <f4 params in param_spec order
+  artifacts/model_config.json config + weights manifest + arg-order contract
+  artifacts/train_log.json    build-time loss curve
+
+Run: cd python && python -m compile.aot --outdir ../artifacts
+Python never runs again after this: the rust binary is self-contained.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .config import CONFIG, KEY_BLOCK
+from .model import make_serving_fn, serving_arg_specs
+from .train import load_weights, save_weights, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_serving(block: int) -> str:
+    fn = make_serving_fn(CONFIG, block=block, use_pallas=True)
+    specs = serving_arg_specs(CONFIG, block)
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _inputs_digest() -> str:
+    """Digest of the compile-path sources, to skip rebuilds when unchanged."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    names = ["config.py", "model.py", "train.py", "corpus.py", "aot.py",
+             os.path.join("kernels", "attention.py"),
+             os.path.join("kernels", "ref.py")]
+    for n in names:
+        with open(os.path.join(base, n), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--steps", type=int, default=800)
+    args = ap.parse_args()
+    out = args.outdir
+    os.makedirs(out, exist_ok=True)
+
+    digest = _inputs_digest()
+    stamp = os.path.join(out, "inputs.sha256")
+    done = all(
+        os.path.exists(os.path.join(out, f))
+        for f in ["prefill.hlo.txt", "decode.hlo.txt", "weights.bin", "model_config.json"]
+    )
+    if done and not args.retrain and os.path.exists(stamp) and open(stamp).read() == digest:
+        print("artifacts up to date; skipping (use --retrain to force)")
+        return 0
+
+    wpath = os.path.join(out, "weights.bin")
+    if os.path.exists(wpath) and not args.retrain:
+        print("loading existing weights.bin")
+        params = load_weights(wpath)
+        manifest = save_weights(params, wpath)  # re-derive manifest
+        log = []
+    else:
+        print(f"training byte-LM for {args.steps} steps ...")
+        params, log = train(steps=args.steps)
+        manifest = save_weights(params, wpath)
+        json.dump(log, open(os.path.join(out, "train_log.json"), "w"))
+
+    for name, block in [("prefill", CONFIG.block_tokens), ("decode", 1)]:
+        text = lower_serving(block)
+        path = os.path.join(out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    config = {
+        "model": CONFIG.to_json_dict(),
+        "key_block": KEY_BLOCK,
+        "weights": manifest,
+        # Contract with rust/src/runtime: positional PJRT args are the
+        # weights in manifest order, then tokens i32[block], k_cache and
+        # v_cache f32[L,H,S,D], then pos i32[].  Output is a 3-tuple
+        # (logits f32[block,vocab], k_new f32[L,H,block,D], v_new likewise).
+        "arg_order": ["weights..."] + ["tokens", "k_cache", "v_cache", "pos"],
+        "artifacts": {"prefill": "prefill.hlo.txt", "decode": "decode.hlo.txt"},
+    }
+    with open(os.path.join(out, "model_config.json"), "w") as f:
+        json.dump(config, f, indent=2)
+    with open(stamp, "w") as f:
+        f.write(digest)
+    print("aot done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Model + serving configuration shared between the build path (L1/L2) and
+the rust coordinator (L3), which reads the JSON emitted by aot.py.
+
+The paper's testbed model is TinyLlama-1.1B with 128-token blocks (~2.9 MB
+of KV per block after 8-bit quantization).  We scale the model to a
+byte-level GPT that trains at build time on CPU; the block/chunk arithmetic
+of the SkyMemory protocol is preserved (a block's KVC is a fixed-size byte
+string split into fixed-size chunks striped over satellites).
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256  # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    max_seq: int = 256  # KV cache capacity (positions)
+    block_tokens: int = 32  # SkyMemory block size in tokens (paper: 128)
+
+    @property
+    def kv_block_bytes(self) -> int:
+        """f32 bytes of one block's (K, V) = 2 * L * H * block * head_dim * 4."""
+        return 2 * self.n_layers * self.n_heads * self.block_tokens * self.head_dim * 4
+
+    def to_json_dict(self):
+        d = asdict(self)
+        d["kv_block_bytes"] = self.kv_block_bytes
+        return d
+
+
+CONFIG = ModelConfig()
+
+# Pallas kernel tiling: keys are streamed through VMEM in KEY_BLOCK-sized
+# tiles (flash-attention style online softmax).  256 = one tile at the
+# default max_seq: measured ~15% faster decode on the CPU-interpret path
+# (EXPERIMENTS.md §Perf) and still a comfortable 32 KiB/head VMEM tile on
+# TPU; contexts beyond 256 re-engage the online-softmax loop.
+KEY_BLOCK = 256

@@ -1,0 +1,58 @@
+"""Tiny build-time training corpus for the byte-level LM.
+
+The serving demo does not need a capable model — it needs a *real* one: a
+model whose generations are drawn from a learned distribution so the
+end-to-end example exercises tokenize → prefill → decode with meaningful
+logits.  A few KB of thematic prose, sampled in random windows, is enough
+for a 0.8M-parameter byte LM to learn word shapes and local structure.
+"""
+
+_BASE = """
+The satellite passes overhead every ninety minutes, and the cache moves
+with it. A constellation in low earth orbit is a ring of memory that the
+planet spins beneath: each node holds a shard of the key value cache, and
+each inter satellite laser link carries chunks of attention state from one
+orbital plane to the next. When a prompt arrives, the model does not start
+from nothing. It asks the sky what it has seen before.
+
+A transformer reads a prompt as a sequence of tokens, and for every token
+it stores a key and a value in every layer and every head. The cost of
+recomputing that state grows with the square of the context, so the state
+itself becomes the thing worth shipping. Split the prompt into blocks,
+hash each block with the hash of the block before it, and the prefix of a
+conversation becomes an address. The address names the blocks, the blocks
+name the chunks, and the chunks are striped over the satellites in line of
+sight.
+
+The ground station sees ten or twenty satellites at once. The nearest one
+is the center of the map, and the others are rings around it: one hop
+north, one hop east, one hop south, one hop west, then the diagonals, then
+the rings beyond. A chunk stored one hop away costs a few milliseconds of
+light. A chunk stored across the constellation costs the worst case
+distance of the torus, which is why the mapping matters: rotation aware,
+hop aware, or both at once.
+
+Satellites do not wait. Every few minutes a column of the grid slides over
+the horizon and a new column rises in the west. The cache migrates ahead
+of the motion: the chunks on the setting satellites are copied to the
+rising ones, plane by plane, in parallel, so that when the client asks
+again the answer is still one hop away. A miss is not a failure, only a
+recomputation; an eviction is only a broadcast to the neighborhood. The
+protocol is simple because the orbit is predictable: given the time a
+block was written, every chunk location can be computed without asking
+anyone.
+
+Memory is a hierarchy and the sky is one of its levels. Registers, cache,
+host memory, flash, disk, network, orbit. Each level trades latency for
+capacity, and the orbit trades both for coverage: the same cache is one
+hop from every point on earth. Inference begins with a lookup and ends
+with a token, and between those two, light crosses the grid.
+"""
+
+
+def corpus_bytes() -> bytes:
+    """The corpus, normalized to single-space prose."""
+    text = " ".join(_BASE.split())
+    # Repeat with light punctuation-variation so windows differ.
+    parts = [text, text.replace(". ", ".\n"), text.lower()]
+    return ("\n\n".join(parts)).encode("utf-8")

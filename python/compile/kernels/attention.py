@@ -1,0 +1,91 @@
+"""L1: KV-cache causal attention as a Pallas kernel (flash-attention style).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot spot
+runs on a Jetson GPU (CUDA threadblocks + shared memory).  On TPU the same
+insight — stream the KV cache through fast on-chip memory in tiles while
+keeping an online softmax — maps to:
+
+  * grid over heads; one kernel instance owns one head's query block,
+  * BlockSpec carves the [H, S, D] caches into per-head [S, D] VMEM views,
+  * keys/values are consumed in KEY_BLOCK-sized tiles (the VMEM analogue of
+    the CUDA shared-memory tile), with a running (max, denom, acc) online
+    softmax so the full [B, S] score matrix never materializes,
+  * matmuls are shaped [B, D] x [D, KEY_BLOCK] -> MXU-friendly.
+
+interpret=True is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for execution and the
+TPU mapping is an estimate (EXPERIMENTS.md §Perf has the VMEM/MXU budget).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import KEY_BLOCK
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, *, key_block):
+    """One head: q [1,B,D] vs cache k/v [1,S,D], valid cols <= pos+row."""
+    q = q_ref[0]  # [B, D]
+    pos = pos_ref[0]
+    b, d = q.shape
+    s = k_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    row = jax.lax.broadcasted_iota(jnp.int32, (b, key_block), 0)
+
+    n_kb = s // key_block
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = pl.load(k_ref, (0, pl.ds(i * key_block, key_block), slice(None)))
+        v_tile = pl.load(v_ref, (0, pl.ds(i * key_block, key_block), slice(None)))
+        scores = jnp.dot(q, k_tile.T) * scale  # [B, KB]
+        col = i * key_block + jax.lax.broadcasted_iota(
+            jnp.int32, (b, key_block), 1
+        )
+        scores = jnp.where(col <= pos + row, scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1, keepdims=True)  # [B,1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new)  # [B, KB]
+        alpha = jnp.exp(m_prev - m_new)  # rescale of previous accum
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = alpha * acc + jnp.dot(p, v_tile)  # [B, D]
+        return m_new, l_new, acc
+
+    m0 = jnp.full((b, 1), NEG_INF, dtype=q.dtype)
+    l0 = jnp.zeros((b, 1), dtype=q.dtype)
+    acc0 = jnp.zeros((b, d), dtype=q.dtype)
+    _, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[0] = acc / l
+
+
+def mha_with_cache(q, k, v, pos, *, key_block=KEY_BLOCK, interpret=True):
+    """Pallas multi-head attention of a new block against a KV cache.
+
+    Args / returns match kernels.ref.mha_with_cache_ref:
+      q [H,B,D], k/v [H,S,D], pos scalar int32 -> [H,B,D].
+    Requires S % key_block == 0.
+    """
+    h, b, d = q.shape
+    s = k.shape[1]
+    if s % key_block != 0:
+        raise ValueError(f"cache length {s} not a multiple of {key_block}")
+    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    kernel = functools.partial(_attn_kernel, key_block=key_block)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),  # q: one head
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),  # k cache: one head
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),  # v cache: one head
+            pl.BlockSpec((1,), lambda i: (0,)),  # pos scalar
+        ],
+        out_specs=pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, b, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, pos_arr)

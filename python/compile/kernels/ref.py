@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the KV-cache causal attention kernel.
+
+This is the correctness reference the Pallas kernel (attention.py) is
+checked against in python/tests/test_kernel.py, and the implementation the
+training path uses (interpret-mode Pallas is too slow for the train loop).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_with_cache_ref(q, k, v, pos):
+    """Multi-head attention of a new token block against a KV cache.
+
+    Args:
+      q:   [H, B, D] queries for the B new tokens (one block).
+      k:   [H, S, D] key cache; positions [pos, pos+B) already hold the new
+           block's keys, positions >= pos+B are garbage and must be masked.
+      v:   [H, S, D] value cache, same layout.
+      pos: scalar int32, number of tokens already in the cache before this
+           block (the new block occupies [pos, pos+B)).
+
+    Returns:
+      [H, B, D] attention outputs.
+
+    Query i (absolute position pos+i) may attend to cache positions
+    j <= pos + i  (causal within the block, everything before it).
+    """
+    h, b, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("hbd,hsd->hbs", q, k) * scale
+    row = jnp.arange(b, dtype=jnp.int32)[:, None]  # query index in block
+    col = jnp.arange(s, dtype=jnp.int32)[None, :]  # cache position
+    mask = col <= (pos + row)  # [B, S]
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hbs,hsd->hbd", p, v)
+
+
+def causal_attention_ref(q, k, v):
+    """Plain batched causal self-attention (training path, no cache).
+
+    q, k, v: [N, H, T, D] -> [N, H, T, D]
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("nhtd,nhsd->nhts", q, k) * scale
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("nhts,nhsd->nhtd", p, v)

@@ -1,0 +1,228 @@
+"""L2: byte-level GPT decoder with an explicit KV cache, in JAX.
+
+Two entry points are AOT-lowered (aot.py) and executed by the rust runtime:
+
+  * prefill — forward one BLOCK_TOKENS token block against the cache,
+  * decode  — forward a single token against the cache.
+
+Both take the KV caches as explicit arguments and return only the *new*
+block's K/V ([L, H, B, D]) next to the logits: the rust coordinator owns the
+cache layout (it must hold the bytes anyway to chunk them into the
+SkyMemory constellation), so the multi-MB caches are never copied back.
+
+A third, training-only forward (`forward_train`) runs full-sequence causal
+attention with the pure-jnp reference kernel; train.py uses it at build
+time.  The serving forwards call the Pallas kernel (kernels.attention) so
+it lowers into the AOT HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import CONFIG, ModelConfig
+from .kernels.attention import mha_with_cache
+from .kernels.ref import causal_attention_ref, mha_with_cache_ref
+
+# ---------------------------------------------------------------------------
+# Parameters.  Order matters: the rust runtime feeds weights.bin slices as
+# positional PJRT arguments in exactly this order (see aot.py manifest).
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered [(name, shape)] for every learnable tensor."""
+    spec = [
+        ("wte", (cfg.vocab, cfg.d_model)),
+        ("wpe", (cfg.max_seq, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "ln1.g", (cfg.d_model,)),
+            (p + "ln1.b", (cfg.d_model,)),
+            (p + "attn.wq", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wk", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wv", (cfg.d_model, cfg.d_model)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2.g", (cfg.d_model,)),
+            (p + "ln2.b", (cfg.d_model,)),
+            (p + "mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.b1", (cfg.d_ff,)),
+            (p + "mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.b2", (cfg.d_model,)),
+        ]
+    spec += [("ln_f.g", (cfg.d_model,)), ("ln_f.b", (cfg.d_model,))]
+    return spec
+
+
+def init_params(key, cfg: ModelConfig = CONFIG):
+    """GPT-2-style init; returns a dict keyed by param_spec names."""
+    params = {}
+    n_residual = 2 * cfg.n_layers
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".b", ".b1", ".b2")) and len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith(("attn.wo", "mlp.w2")):
+                # residual-branch scaling a la GPT-2
+                std = 0.02 / (n_residual ** 0.5)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def params_to_list(params, cfg: ModelConfig = CONFIG):
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def params_from_list(flat, cfg: ModelConfig = CONFIG):
+    return {name: t for (name, _), t in zip(param_spec(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _split_heads(x, cfg):
+    # [T, d_model] -> [H, T, D]
+    t = x.shape[0]
+    return x.reshape(t, cfg.n_heads, cfg.head_dim).transpose(1, 0, 2)
+
+
+def _merge_heads(x, cfg):
+    # [H, T, D] -> [T, d_model]
+    return x.transpose(1, 0, 2).reshape(x.shape[1], cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# Serving forward: one block (or one token) against the KV cache
+# ---------------------------------------------------------------------------
+
+
+def forward_block(params, tokens, k_cache, v_cache, pos, *, cfg: ModelConfig = CONFIG, use_pallas=True):
+    """Forward `tokens` (shape [B] int32) through the model with a cache.
+
+    k_cache/v_cache: [L, H, S, D] with positions < pos valid.
+    pos: scalar int32 — tokens already cached; the new block occupies
+         [pos, pos+B).
+
+    Returns (logits [B, vocab], k_new [L, H, B, D], v_new [L, H, B, D]).
+    The caller is responsible for writing k_new/v_new into its cache copy.
+    """
+    b = tokens.shape[0]
+    pos = pos.astype(jnp.int32) if hasattr(pos, "astype") else jnp.int32(pos)
+    x = params["wte"][tokens]  # [B, d]
+    x = x + jax.lax.dynamic_slice(params["wpe"], (pos, 0), (b, cfg.d_model))
+
+    attend = mha_with_cache if use_pallas else mha_with_cache_ref
+
+    k_news, v_news = [], []
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = _layernorm(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        q = _split_heads(h @ params[p + "attn.wq"], cfg)  # [H, B, D]
+        k_new = _split_heads(h @ params[p + "attn.wk"], cfg)
+        v_new = _split_heads(h @ params[p + "attn.wv"], cfg)
+        # Write the new block into this layer's cache view before attending.
+        kc = jax.lax.dynamic_update_slice(k_cache[l], k_new, (0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[l], v_new, (0, pos, 0))
+        o = attend(q, kc, vc, pos)  # [H, B, D]
+        x = x + _merge_heads(o, cfg) @ params[p + "attn.wo"]
+        h2 = _layernorm(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        x = x + _gelu(h2 @ params[p + "mlp.w1"] + params[p + "mlp.b1"]) @ params[
+            p + "mlp.w2"
+        ] + params[p + "mlp.b2"]
+        k_news.append(k_new)
+        v_news.append(v_new)
+
+    x = _layernorm(x, params["ln_f.g"], params["ln_f.b"])
+    logits = x @ params["wte"].T  # weight-tied LM head, [B, vocab]
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def make_serving_fn(cfg: ModelConfig = CONFIG, *, block: int, use_pallas=True):
+    """A lowering-ready fn(flat_params, tokens, k_cache, v_cache, pos)."""
+
+    def fn(flat_params, tokens, k_cache, v_cache, pos):
+        params = params_from_list(flat_params, cfg)
+        return forward_block(
+            params, tokens, k_cache, v_cache, pos, cfg=cfg, use_pallas=use_pallas
+        )
+
+    return fn
+
+
+def serving_arg_specs(cfg: ModelConfig, block: int):
+    """ShapeDtypeStructs matching make_serving_fn's signature."""
+    f32, i32 = jnp.float32, jnp.int32
+    flat = tuple(
+        jax.ShapeDtypeStruct(shape, f32) for _, shape in param_spec(cfg)
+    )
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim), f32
+    )
+    return (
+        flat,
+        jax.ShapeDtypeStruct((block,), i32),
+        cache,
+        cache,
+        jax.ShapeDtypeStruct((), i32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training forward (build-time only)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, tokens, *, cfg: ModelConfig = CONFIG):
+    """Full-sequence causal forward.  tokens [N, T] -> logits [N, T, vocab]."""
+    n, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:t][None]  # [N, T, d]
+
+    def split(x_):  # [N, T, d] -> [N, H, T, D]
+        return x_.reshape(n, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        h = _layernorm(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        q, k, v = (
+            split(h @ params[p + "attn.wq"]),
+            split(h @ params[p + "attn.wk"]),
+            split(h @ params[p + "attn.wv"]),
+        )
+        o = causal_attention_ref(q, k, v)  # [N, H, T, D]
+        o = o.transpose(0, 2, 1, 3).reshape(n, t, cfg.d_model)
+        x = x + o @ params[p + "attn.wo"]
+        h2 = _layernorm(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        x = x + _gelu(h2 @ params[p + "mlp.w1"] + params[p + "mlp.b1"]) @ params[
+            p + "mlp.w2"
+        ] + params[p + "mlp.b2"]
+
+    x = _layernorm(x, params["ln_f.g"], params["ln_f.b"])
+    return x @ params["wte"].T
+
+
+def loss_fn(params, tokens, *, cfg: ModelConfig = CONFIG):
+    """Next-token cross entropy.  tokens [N, T+1]."""
+    logits = forward_train(params, tokens[:, :-1], cfg=cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,113 @@
+"""Build-time training of the byte-level LM (L2 training path).
+
+Runs once from aot.py when artifacts/weights.bin is absent.  Pure JAX with
+a from-scratch Adam; uses the jnp reference attention (interpret-mode
+Pallas would be needlessly slow here — kernel equivalence is pinned by
+python/tests/test_kernel.py and test_model.py instead).
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import CONFIG, ModelConfig
+from .corpus import corpus_bytes
+from .model import init_params, loss_fn, param_spec, params_from_list, params_to_list
+
+
+def _batches(data: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(data) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([data[s : s + seq + 1] for s in starts]).astype(np.int32)
+
+
+def adam_update(params_flat, grads_flat, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = [b1 * mi + (1 - b1) * g for mi, g in zip(m, grads_flat)]
+    v = [b2 * vi + (1 - b2) * g * g for vi, g in zip(v, grads_flat)]
+    mhat = [mi / (1 - b1**step) for mi in m]
+    vhat = [vi / (1 - b2**step) for vi in v]
+    new = [
+        p - lr * mh / (jnp.sqrt(vh) + eps)
+        for p, mh, vh in zip(params_flat, mhat, vhat)
+    ]
+    return new, m, v
+
+
+def train(
+    cfg: ModelConfig = CONFIG,
+    *,
+    steps: int = 800,
+    batch: int = 16,
+    seq: int = 128,
+    lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 50,
+):
+    """Train and return (params_dict, loss_log:list[(step, loss)])."""
+    data = np.frombuffer(corpus_bytes(), dtype=np.uint8)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    flat = params_to_list(params, cfg)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+
+    def step_loss(flat_params, tokens):
+        return loss_fn(params_from_list(flat_params, cfg), tokens, cfg=cfg)
+
+    grad_fn = jax.jit(jax.value_and_grad(step_loss))
+    log = []
+    t0 = time.time()
+    for i, tokens in enumerate(_batches(data, batch, seq, steps, seed), start=1):
+        loss, grads = grad_fn(flat, jnp.asarray(tokens))
+        # cosine decay with short warmup
+        warm = min(1.0, i / 50)
+        decay = 0.5 * (1 + np.cos(np.pi * i / steps))
+        flat, m, v = adam_update(flat, grads, m, v, i, lr * warm * (0.1 + 0.9 * decay))
+        if i % log_every == 0 or i == 1:
+            log.append((i, float(loss)))
+            print(f"step {i:4d}  loss {float(loss):.4f}  ({time.time()-t0:.1f}s)")
+    return params_from_list(flat, cfg), log
+
+
+def save_weights(params, path, cfg: ModelConfig = CONFIG):
+    """Flat little-endian f32 concat in param_spec order; returns manifest."""
+    manifest = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, shape in param_spec(cfg):
+            arr = np.asarray(params[name], dtype="<f4")
+            assert arr.shape == tuple(shape), (name, arr.shape, shape)
+            f.write(arr.tobytes())
+            manifest.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "offset_bytes": offset,
+                    "size_bytes": arr.nbytes,
+                }
+            )
+            offset += arr.nbytes
+    return manifest
+
+
+def load_weights(path, cfg: ModelConfig = CONFIG):
+    raw = np.fromfile(path, dtype="<f4")
+    params, offset = {}, 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        params[name] = jnp.asarray(raw[offset : offset + n].reshape(shape))
+        offset += n
+    if offset != raw.size:
+        raise ValueError(f"weights.bin size mismatch: {offset} != {raw.size}")
+    return params
+
+
+if __name__ == "__main__":
+    params, log = train()
+    manifest = save_weights(params, "weights.bin")
+    json.dump(log, open("train_log.json", "w"))
+    print("saved", sum(m["size_bytes"] for m in manifest), "bytes")

@@ -1,0 +1,105 @@
+"""AOT path: HLO text generation + weights serialization round-trip."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile.aot import lower_serving
+from compile.config import CONFIG
+from compile.model import init_params, param_spec
+from compile.train import load_weights, save_weights
+
+
+class TestLowering:
+    @pytest.fixture(scope="class")
+    def prefill_hlo(self):
+        return lower_serving(CONFIG.block_tokens)
+
+    def test_prefill_lowers_to_text(self, prefill_hlo):
+        assert prefill_hlo.startswith("HloModule")
+        assert "ROOT" in prefill_hlo
+
+    def test_root_is_3_tuple(self, prefill_hlo):
+        # logits, k_new, v_new
+        c = CONFIG
+        want = (
+            f"(f32[{c.block_tokens},{c.vocab}]"
+            f"{{1,0}}, f32[{c.n_layers},{c.n_heads},{c.block_tokens},{c.head_dim}]"
+        )
+        assert want in prefill_hlo.replace("\n", " ")
+
+    def test_param_count_matches_contract(self, prefill_hlo):
+        # weights... + tokens + k_cache + v_cache + pos, counted from the
+        # ENTRY computation signature (fused sub-computations re-declare
+        # parameters, so a global count would overshoot)
+        n_weights = len(param_spec(CONFIG))
+        lines = prefill_hlo.splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        n_params = 0
+        for line in lines[start + 1:]:
+            if line.strip() == "}":
+                break
+            if " parameter(" in line:
+                n_params += 1
+        assert n_params == n_weights + 4
+
+    def test_decode_lowers_to_text(self):
+        text = lower_serving(1)
+        assert "HloModule" in text
+        assert f"s32[1]" in text  # single-token input
+
+
+class TestWeightsRoundtrip:
+    def test_save_load_identity(self, tmp_path):
+        params = init_params(jax.random.PRNGKey(0))
+        path = tmp_path / "w.bin"
+        manifest = save_weights(params, path)
+        back = load_weights(path)
+        for name in params:
+            np.testing.assert_array_equal(np.asarray(params[name]), np.asarray(back[name]))
+        # manifest covers the file exactly, contiguously, in order
+        offset = 0
+        for m in manifest:
+            assert m["offset_bytes"] == offset
+            assert m["size_bytes"] == 4 * int(np.prod(m["shape"]))
+            offset += m["size_bytes"]
+        assert offset == os.path.getsize(path)
+
+    def test_manifest_order_is_param_spec_order(self, tmp_path):
+        params = init_params(jax.random.PRNGKey(1))
+        manifest = save_weights(params, tmp_path / "w.bin")
+        assert [m["name"] for m in manifest] == [n for n, _ in param_spec(CONFIG)]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/model_config.json")),
+    reason="artifacts not built",
+)
+class TestBuiltArtifacts:
+    """Validate the artifacts/ dir the rust runtime will consume."""
+
+    @pytest.fixture(scope="class")
+    def art(self):
+        base = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        return base, json.load(open(os.path.join(base, "model_config.json")))
+
+    def test_config_matches(self, art):
+        _, cfg = art
+        assert cfg["model"]["vocab"] == CONFIG.vocab
+        assert cfg["model"]["block_tokens"] == CONFIG.block_tokens
+        assert cfg["model"]["kv_block_bytes"] == CONFIG.kv_block_bytes
+
+    def test_weights_size(self, art):
+        base, cfg = art
+        total = sum(m["size_bytes"] for m in cfg["weights"])
+        assert os.path.getsize(os.path.join(base, "weights.bin")) == total
+
+    def test_hlo_files_exist(self, art):
+        base, cfg = art
+        for f in cfg["artifacts"].values():
+            p = os.path.join(base, f)
+            assert os.path.getsize(p) > 10_000
+            assert open(p).read(9) == "HloModule"

@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas KV-cache attention kernel vs the pure-jnp oracle.
+
+This is the CORE numeric signal for the AOT path: the kernel tested here is
+the one lowered into artifacts/{prefill,decode}.hlo.txt.  hypothesis sweeps
+shapes/dtypes/positions; fixed tests pin the serving configuration.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import CONFIG, KEY_BLOCK
+from compile.kernels.attention import mha_with_cache
+from compile.kernels.ref import mha_with_cache_ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _check(h, b, d, s, pos, key_block, scale=1.0, seed=0):
+    q = scale * _rand(seed, (h, b, d))
+    k = scale * _rand(seed + 1, (h, s, d))
+    v = scale * _rand(seed + 2, (h, s, d))
+    out = mha_with_cache(q, k, v, jnp.int32(pos), key_block=key_block)
+    ref = mha_with_cache_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------- fixed ---
+
+
+class TestServingShapes:
+    """The exact shapes the AOT artifacts use."""
+
+    def test_prefill_shape_pos0(self):
+        c = CONFIG
+        _check(c.n_heads, c.block_tokens, c.head_dim, c.max_seq, 0, KEY_BLOCK)
+
+    def test_prefill_shape_mid(self):
+        c = CONFIG
+        _check(c.n_heads, c.block_tokens, c.head_dim, c.max_seq, 96, KEY_BLOCK)
+
+    def test_prefill_shape_last_block(self):
+        c = CONFIG
+        _check(
+            c.n_heads,
+            c.block_tokens,
+            c.head_dim,
+            c.max_seq,
+            c.max_seq - c.block_tokens,
+            KEY_BLOCK,
+        )
+
+    def test_decode_shape(self):
+        c = CONFIG
+        for pos in [0, 1, 63, 64, 200, c.max_seq - 1]:
+            _check(c.n_heads, 1, c.head_dim, c.max_seq, pos, KEY_BLOCK)
+
+
+class TestMasking:
+    def test_garbage_beyond_pos_ignored(self):
+        """Positions >= pos+B must not affect the output at all."""
+        c = CONFIG
+        h, b, d, s = c.n_heads, c.block_tokens, c.head_dim, c.max_seq
+        pos = 64
+        q = _rand(0, (h, b, d))
+        k = _rand(1, (h, s, d))
+        v = _rand(2, (h, s, d))
+        out1 = mha_with_cache(q, k, v, jnp.int32(pos))
+        # overwrite the masked region with large garbage
+        k2 = k.at[:, pos + b :, :].set(1e4)
+        v2 = v.at[:, pos + b :, :].set(-1e4)
+        out2 = mha_with_cache(q, k2, v2, jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=0, atol=0)
+
+    def test_causal_within_block(self):
+        """Query i must not see keys at positions pos+j for j > i."""
+        c = CONFIG
+        h, b, d, s = 2, 8, 16, 64
+        pos = 16
+        q = _rand(3, (h, b, d))
+        k = _rand(4, (h, s, d))
+        v = _rand(5, (h, s, d))
+        out1 = mha_with_cache(q, k, v, jnp.int32(pos), key_block=16)
+        # change the last key/value of the block; only the last query may move
+        k2 = k.at[:, pos + b - 1, :].add(3.0)
+        out2 = mha_with_cache(q, k2, v, jnp.int32(pos), key_block=16)
+        np.testing.assert_allclose(
+            np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]), rtol=0, atol=0
+        )
+        assert not np.allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]))
+
+    def test_single_token_pos0_attends_only_itself(self):
+        h, d, s = 2, 8, 64
+        q = _rand(6, (h, 1, d))
+        k = _rand(7, (h, s, d))
+        v = _rand(8, (h, s, d))
+        out = mha_with_cache(q, k, v, jnp.int32(0), key_block=16)
+        # softmax over a single valid key -> output == v[:, 0]
+        np.testing.assert_allclose(
+            np.asarray(out[:, 0]), np.asarray(v[:, 0]), rtol=1e-6, atol=1e-6
+        )
+
+
+class TestNumerics:
+    def test_large_scores_stable(self):
+        _check(2, 4, 8, 32, 5, 16, scale=10.0)
+
+    def test_extreme_scores_finite(self):
+        # at scale 30 the softmax saturates: outputs must stay finite and
+        # close to the oracle up to saturation-level tolerance
+        q = 30.0 * _rand(0, (2, 4, 8))
+        k = 30.0 * _rand(1, (2, 32, 8))
+        v = 30.0 * _rand(2, (2, 32, 8))
+        out = mha_with_cache(q, k, v, jnp.int32(5), key_block=16)
+        ref = mha_with_cache_ref(q, k, v, jnp.int32(5))
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-3, atol=5e-2)
+
+    def test_tiny_scores_stable(self):
+        _check(2, 4, 8, 32, 5, 16, scale=1e-4)
+
+    def test_s_not_multiple_of_key_block_raises(self):
+        q = _rand(0, (1, 2, 4))
+        k = _rand(1, (1, 33, 4))
+        v = _rand(2, (1, 33, 4))
+        with pytest.raises(ValueError):
+            mha_with_cache(q, k, v, jnp.int32(0), key_block=16)
+
+
+# ------------------------------------------------------------ hypothesis ---
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    b=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    s_blocks=st.integers(1, 4),
+    key_block=st.sampled_from([8, 16, 32]),
+    pos_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_sweep(h, b, d, s_blocks, key_block, pos_frac, seed):
+    s = s_blocks * key_block
+    b = min(b, s)  # block cannot exceed cache
+    pos = int(pos_frac * max(0, s - b))
+    _check(h, b, d, s, pos, key_block, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    pos=st.integers(0, CONFIG.max_seq - CONFIG.block_tokens),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_serving_config_positions(pos, seed):
+    c = CONFIG
+    _check(c.n_heads, c.block_tokens, c.head_dim, c.max_seq, pos, KEY_BLOCK, seed=seed)

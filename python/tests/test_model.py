@@ -1,0 +1,166 @@
+"""L2 correctness: the serving forward (prefill/decode with KV cache) must
+agree with the full-sequence training forward, with both attention
+implementations (pallas / jnp-ref).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import CONFIG
+from compile.model import (
+    forward_block,
+    forward_train,
+    init_params,
+    loss_fn,
+    make_serving_fn,
+    param_spec,
+    params_from_list,
+    params_to_list,
+    serving_arg_specs,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(42))
+
+
+def _empty_cache():
+    c = CONFIG
+    shape = (c.n_layers, c.n_heads, c.max_seq, c.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _run_blocks(params, tokens, block, use_pallas):
+    """Feed `tokens` through forward_block in `block`-sized pieces."""
+    k_cache, v_cache = _empty_cache()
+    logits_all = []
+    for pos in range(0, len(tokens), block):
+        blk = jnp.asarray(tokens[pos : pos + block], jnp.int32)
+        logits, k_new, v_new = forward_block(
+            params, blk, k_cache, v_cache, jnp.int32(pos), use_pallas=use_pallas
+        )
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, 0, pos, 0))
+        logits_all.append(logits)
+    return jnp.concatenate(logits_all, axis=0), k_cache, v_cache
+
+
+class TestParams:
+    def test_spec_order_stable(self):
+        names = [n for n, _ in param_spec(CONFIG)]
+        assert names[0] == "wte" and names[1] == "wpe"
+        assert names[-2:] == ["ln_f.g", "ln_f.b"]
+        assert len(names) == 2 + 12 * CONFIG.n_layers + 2
+
+    def test_roundtrip(self, params):
+        flat = params_to_list(params)
+        back = params_from_list(flat)
+        for n in params:
+            np.testing.assert_array_equal(params[n], back[n])
+
+    def test_param_count(self, params):
+        total = sum(int(np.prod(p.shape)) for p in params.values())
+        # ~0.8M params for the default config
+        assert 500_000 < total < 2_000_000
+
+
+class TestServingVsTrain:
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_blockwise_prefill_matches_full_forward(self, params, use_pallas):
+        rng = np.random.default_rng(0)
+        t = 96  # 3 blocks
+        tokens = rng.integers(0, 256, size=t)
+        blk_logits, _, _ = _run_blocks(params, tokens, CONFIG.block_tokens, use_pallas)
+        full = forward_train(params, jnp.asarray(tokens, jnp.int32)[None])[0]
+        np.testing.assert_allclose(
+            np.asarray(blk_logits), np.asarray(full), rtol=2e-4, atol=2e-4
+        )
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_decode_matches_prefill(self, params, use_pallas):
+        """Prefill 1 block then decode token-by-token == prefill 2 blocks."""
+        rng = np.random.default_rng(1)
+        b = CONFIG.block_tokens
+        tokens = rng.integers(0, 256, size=2 * b)
+        ref_logits, _, _ = _run_blocks(params, tokens, b, use_pallas)
+
+        k_cache, v_cache = _empty_cache()
+        logits, k_new, v_new = forward_block(
+            params, jnp.asarray(tokens[:b], jnp.int32), k_cache, v_cache,
+            jnp.int32(0), use_pallas=use_pallas,
+        )
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, 0, 0, 0))
+        outs = []
+        for i in range(b, 2 * b):
+            logits, k_new, v_new = forward_block(
+                params, jnp.asarray(tokens[i : i + 1], jnp.int32),
+                k_cache, v_cache, jnp.int32(i), use_pallas=use_pallas,
+            )
+            k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, 0, i, 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, 0, i, 0))
+            outs.append(logits[0])
+        np.testing.assert_allclose(
+            np.asarray(jnp.stack(outs)),
+            np.asarray(ref_logits[b:]),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+    def test_kv_new_matches_cache_region(self, params):
+        """Returned k_new/v_new are exactly what was written at [pos, pos+B)."""
+        rng = np.random.default_rng(2)
+        b = CONFIG.block_tokens
+        tokens = rng.integers(0, 256, size=b)
+        k_cache, v_cache = _empty_cache()
+        _, k_new, v_new = forward_block(
+            params, jnp.asarray(tokens, jnp.int32), k_cache, v_cache, jnp.int32(0)
+        )
+        assert k_new.shape == (
+            CONFIG.n_layers, CONFIG.n_heads, b, CONFIG.head_dim,
+        )
+        # stale cache contents must not leak into the new block tensors
+        k_cache2 = k_cache + 7.0
+        _, k_new2, _ = forward_block(
+            params, jnp.asarray(tokens, jnp.int32), k_cache2, v_cache, jnp.int32(0)
+        )
+        np.testing.assert_allclose(np.asarray(k_new), np.asarray(k_new2), rtol=0, atol=0)
+
+
+class TestServingFn:
+    def test_lowerable_signature(self, params):
+        """make_serving_fn consumes flat params and matches forward_block."""
+        fn = make_serving_fn(CONFIG, block=CONFIG.block_tokens, use_pallas=False)
+        flat = params_to_list(params)
+        specs = serving_arg_specs(CONFIG, CONFIG.block_tokens)
+        assert len(specs[0]) == len(flat)
+        rng = np.random.default_rng(3)
+        tokens = jnp.asarray(rng.integers(0, 256, size=CONFIG.block_tokens), jnp.int32)
+        k_cache, v_cache = _empty_cache()
+        out = fn(tuple(flat), tokens, k_cache, v_cache, jnp.int32(0))
+        ref = forward_block(params, tokens, k_cache, v_cache, jnp.int32(0), use_pallas=False)
+        for a, b_ in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-6, atol=1e-6)
+
+
+class TestTraining:
+    def test_loss_decreases_fast(self, params):
+        """A couple of SGD steps on a fixed batch should reduce the loss."""
+        rng = np.random.default_rng(4)
+        tokens = jnp.asarray(rng.integers(0, 256, size=(4, 33)), jnp.int32)
+        grad_fn = jax.jit(jax.value_and_grad(lambda p: loss_fn(p, tokens)))
+        l0, g = grad_fn(params)
+        p1 = jax.tree_util.tree_map(lambda p, gg: p - 0.5 * gg, params, g)
+        l1, _ = grad_fn(p1)
+        assert float(l1) < float(l0)
+
+    def test_loss_is_log_vocab_at_init(self):
+        """Fresh params ≈ uniform predictions -> loss ≈ ln(256)."""
+        fresh = init_params(jax.random.PRNGKey(7))
+        rng = np.random.default_rng(5)
+        tokens = jnp.asarray(rng.integers(0, 256, size=(2, 65)), jnp.int32)
+        l = float(loss_fn(fresh, tokens))
+        assert abs(l - np.log(256)) < 0.35

@@ -1,0 +1,62 @@
+//! Bench + reproduction harness for Figure 16: worst-case KVC latency
+//! across strategies x altitude x servers x chunk-processing x KVC size.
+//! Prints the paper's series (who wins, by how much, where the knees are)
+//! and times the simulator.
+
+use skymemory::mapping::Strategy;
+use skymemory::sim::latency::{figure16_sweep, worst_case_latency};
+use skymemory::sim::SimConfig;
+use skymemory::util::bench::Bencher;
+
+fn main() {
+    println!("=== Figure 16: max latency across parameters and strategies ===");
+    println!(
+        "{:<26} {:>8} {:>8} {:>7} {:>8} {:>10}",
+        "strategy", "alt(km)", "servers", "kvc", "proc(ms)", "total(s)"
+    );
+    // the headline series: latency vs altitude per strategy (81 servers,
+    // 21 MB, 2 ms — the dense corner of Table 2)
+    for st in Strategy::ALL {
+        for alt in SimConfig::altitude_sweep() {
+            let cfg = SimConfig { strategy: st, altitude_km: alt, ..Default::default() };
+            let b = worst_case_latency(&cfg);
+            println!(
+                "{:<26} {:>8} {:>8} {:>7} {:>8} {:>10.4}",
+                st.name(),
+                alt,
+                cfg.n_servers,
+                "21MB",
+                cfg.chunk_processing_s * 1e3,
+                b.total_s
+            );
+        }
+    }
+
+    // server scaling (the 8x claim)
+    println!("\n--- server scaling at 550 km, 21 MB, 20 ms processing ---");
+    for st in Strategy::ALL {
+        print!("{:<26}", st.name());
+        for n in SimConfig::server_sweep() {
+            let cfg = SimConfig {
+                strategy: st,
+                n_servers: n,
+                chunk_processing_s: 0.02,
+                ..Default::default()
+            };
+            print!(" {:>9.3}s", worst_case_latency(&cfg).total_s);
+        }
+        println!();
+    }
+    print!("\n{}", skymemory::repro::fig16_summary());
+
+    println!("\n=== timings ===");
+    let cfg = SimConfig::default();
+    let r = Bencher::new("worst_case_latency (81 servers)").run(|| {
+        std::hint::black_box(worst_case_latency(&cfg));
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("figure16 full sweep (336 cells)").max_iters(200).run(|| {
+        std::hint::black_box(figure16_sweep());
+    });
+    println!("{}", r.report());
+}

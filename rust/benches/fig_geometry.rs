@@ -1,0 +1,65 @@
+//! Bench + reproduction harness for Figures 1 & 2 (and Table 1's LEO
+//! rows): intra-plane ISL latency vs altitude and plane size, straight
+//! from eq. (1).  Prints the same series the paper plots, then times the
+//! geometry hot functions.
+
+use skymemory::constellation::geometry::{chord_distance_km, Geometry, LIGHT_SPEED_KM_S};
+use skymemory::util::bench::Bencher;
+
+fn main() {
+    println!("=== Figure 1 / Figure 2: intra-plane ISL latency (ms) ===");
+    println!(
+        "{:>6} {}",
+        "M \\ h",
+        (0..8).map(|i| format!("{:>8}", 160 + i * 260)).collect::<String>()
+    );
+    for m in [10usize, 15, 20, 30, 40, 50, 60] {
+        let mut row = format!("{m:>6} ");
+        for i in 0..8 {
+            let h = 160.0 + i as f64 * 260.0;
+            row += &format!("{:>8.3}", chord_distance_km(h, m) / LIGHT_SPEED_KM_S * 1e3);
+        }
+        println!("{row}");
+    }
+    println!("\npaper claims (§2): ~50+ satellites per plane give low-ms hops;");
+    println!(
+        "  50 sats @ 550 km: {:.3} ms",
+        chord_distance_km(550.0, 50) / LIGHT_SPEED_KM_S * 1e3
+    );
+    println!(
+        "  80 sats @ 550 km: {:.3} ms",
+        chord_distance_km(550.0, 80) / LIGHT_SPEED_KM_S * 1e3
+    );
+
+    println!("\n=== Table 1 LEO rows (model cross-check) ===");
+    for (name, g) in [
+        ("19x5 testbed shell @550km", Geometry::new(550.0, 19, 5)),
+        ("dense 60x60 @550km", Geometry::new(550.0, 60, 60)),
+    ] {
+        println!(
+            "{name}: intra {:.3} ms, inter {:.3} ms, ground(overhead) {:.3} ms",
+            g.intra_plane_latency_s() * 1e3,
+            g.inter_plane_latency_s() * 1e3,
+            g.ground_latency_s(0, 0) * 1e3
+        );
+    }
+
+    println!("\n=== timings ===");
+    let g = Geometry::new(550.0, 19, 5);
+    let r = Bencher::new("geometry::worst_hop_latency_s").run(|| {
+        std::hint::black_box(g.worst_hop_latency_s());
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("geometry::ground_latency_s(2,2)").run(|| {
+        std::hint::black_box(g.ground_latency_s(2, 2));
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("fig1 full sweep (7 M x 24 h)").run(|| {
+        for m in [10usize, 15, 20, 30, 40, 50, 60] {
+            for i in 0..24 {
+                std::hint::black_box(chord_distance_km(160.0 + i as f64 * 80.0, m));
+            }
+        }
+    });
+    println!("{}", r.report());
+}

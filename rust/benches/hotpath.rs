@@ -1,0 +1,127 @@
+//! Hot-path micro-benchmarks (the §Perf working set): hashing, chunking,
+//! quantization codecs, the radix index, wire codecs, store ops, and the
+//! in-proc protocol round-trip.  Used to drive the L3 optimization loop —
+//! before/after numbers live in EXPERIMENTS.md §Perf.
+
+use skymemory::constellation::los::LosGrid;
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::kvc::block::{block_hashes, BlockHash};
+use skymemory::kvc::chunk::{split_chunks, ChunkKey};
+use skymemory::kvc::eviction::EvictionPolicy;
+use skymemory::kvc::hash::sha256;
+use skymemory::kvc::manager::{KvcConfig, KvcManager};
+use skymemory::kvc::quantize::Quantizer;
+use skymemory::kvc::radix::RadixTree;
+use skymemory::net::messages::{decode_request, encode_request, Envelope, Request};
+use skymemory::net::transport::{GroundView, InProcTransport};
+use skymemory::satellite::fleet::Fleet;
+use skymemory::util::bench::Bencher;
+use skymemory::util::rng::XorShift64;
+use std::sync::Arc;
+
+fn main() {
+    let mut rng = XorShift64::new(1);
+
+    // --- hashing ---------------------------------------------------------
+    let payload_64k = vec![0xA5u8; 65536];
+    let r = Bencher::new("sha256 64 KiB").run(|| {
+        std::hint::black_box(sha256(&payload_64k));
+    });
+    println!("{}", r.report());
+    println!("{}", r.throughput(65536));
+    let tokens: Vec<i32> = (0..256).collect();
+    let r = Bencher::new("block_hashes 256 tokens / 32-blocks").run(|| {
+        std::hint::black_box(block_hashes(&tokens, 32));
+    });
+    println!("{}", r.report());
+
+    // --- quantization (the KVC encode/decode on the request path) --------
+    let kv: Vec<f32> = (0..65536).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect();
+    for q in [
+        Quantizer::F32,
+        Quantizer::QuantoInt8 { group: 32 },
+        Quantizer::HqqInt8 { group: 32 },
+    ] {
+        let enc = q.encode(&kv);
+        let r = Bencher::new(format!("{}::encode 64k f32 (one block)", q.name())).run(|| {
+            std::hint::black_box(q.encode(&kv));
+        });
+        println!("{}", r.report());
+        println!("{}", r.throughput(kv.len() * 4));
+        let r = Bencher::new(format!("{}::decode", q.name())).run(|| {
+            std::hint::black_box(q.decode(&enc).unwrap());
+        });
+        println!("{}", r.report());
+        println!("{}", r.throughput(kv.len() * 4));
+    }
+
+    // --- chunking ---------------------------------------------------------
+    let payload = vec![0u8; 73728];
+    let r = Bencher::new("split_chunks 72 KiB / 6 kB").run(|| {
+        std::hint::black_box(split_chunks(&payload, 6000));
+    });
+    println!("{}", r.report());
+
+    // --- radix index -------------------------------------------------------
+    let mut tree = RadixTree::new();
+    let mut keys = Vec::new();
+    for i in 0..10_000u32 {
+        let mut key = vec![0u8; 32 * 4];
+        for (j, b) in key.iter_mut().enumerate() {
+            *b = (i as usize * 31 + j) as u8;
+        }
+        tree.insert(&key, i);
+        keys.push(key);
+    }
+    let r = Bencher::new("radix::longest_prefix (10k keys)").run(|| {
+        std::hint::black_box(tree.longest_prefix(&keys[4321]));
+    });
+    println!("{}", r.report());
+
+    // --- wire codecs -------------------------------------------------------
+    let env = Envelope::new(SatId::new(3, 14), 42);
+    let req = Request::Set {
+        key: ChunkKey::new(BlockHash([7; 32]), 3),
+        payload: vec![0xCD; 6000],
+    };
+    let bytes = encode_request(&env, &req);
+    let r = Bencher::new("messages::encode Set(6 kB)").run(|| {
+        std::hint::black_box(encode_request(&env, &req));
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("messages::decode Set(6 kB)").run(|| {
+        std::hint::black_box(decode_request(&bytes).unwrap());
+    });
+    println!("{}", r.report());
+
+    // --- full protocol round trip (in-proc, no link emulation) ------------
+    let torus = Torus::new(15, 15);
+    let fleet = Arc::new(Fleet::new(torus, 1 << 30, EvictionPolicy::Gossip));
+    let center = SatId::new(7, 7);
+    let ground = GroundView::new(center, &LosGrid::new(center, 2, 2), torus.sats_per_plane);
+    let transport = Arc::new(InProcTransport::new(fleet, ground, None));
+    let manager = KvcManager::new(
+        KvcConfig { n_servers: 10, ..KvcConfig::default() },
+        torus,
+        transport,
+    );
+    let hashes = block_hashes(&tokens, 32);
+    let kv_block: Vec<f32> = kv[..65536].to_vec();
+    manager.put_block(&hashes, 0, &kv_block, 0).unwrap();
+    let r = Bencher::new("manager::put_block 64k f32 (13 chunks)").run(|| {
+        // fresh hash each iter so the index does not dedupe
+        let mut t2 = tokens.clone();
+        t2[0] = rng.next_u64() as i32;
+        let h = block_hashes(&t2, 32);
+        manager.put_block(&h, 0, &kv_block, 0).unwrap();
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("manager::fetch_block 64k f32 (13 chunks)").run(|| {
+        std::hint::black_box(manager.fetch_block(&hashes, 0, 0).unwrap().unwrap());
+    });
+    println!("{}", r.report());
+    println!(
+        "  (per-fetch payload {} bytes quantized)",
+        manager.config.quantizer.encoded_len(kv_block.len())
+    );
+}

@@ -1,0 +1,42 @@
+//! Bench + reproduction harness for Figures 13/14/15: the three
+//! chunk-to-server mapping layouts (printed exactly as the paper's grids)
+//! and the cost of layout generation + migration planning.
+
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::mapping::{migration, Strategy};
+use skymemory::util::bench::Bencher;
+
+fn main() {
+    println!("=== Figure 13 (rotation-aware row-major) ===");
+    print!("{}", skymemory::repro::fig13());
+    println!("=== Figure 14 (hop-aware concentric rings) ===");
+    print!("{}", skymemory::repro::fig14());
+    println!("=== Figure 15 (rotation-and-hop-aware bounded rings) ===");
+    print!("{}", skymemory::repro::fig15());
+
+    println!("=== timings ===");
+    let torus = Torus::new(15, 15);
+    let center = SatId::new(7, 7);
+    for st in Strategy::ALL {
+        for n in [9usize, 81] {
+            let r = Bencher::new(format!("{}::layout n={n}", st.name())).run(|| {
+                std::hint::black_box(st.initial_layout(&torus, center, n));
+            });
+            println!("{}", r.report());
+        }
+    }
+    let r = Bencher::new("layout_at with 7 epochs of migration (81)").run(|| {
+        std::hint::black_box(Strategy::RotationHopAware.layout_at(&torus, center, 81, 7));
+    });
+    println!("{}", r.report());
+    let r = Bencher::new("migration_plan (81 servers)").run(|| {
+        std::hint::black_box(migration::migration_plan(
+            &torus,
+            Strategy::RotationHopAware,
+            center,
+            81,
+            0,
+        ));
+    });
+    println!("{}", r.report());
+}

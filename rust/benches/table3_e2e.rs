@@ -1,0 +1,65 @@
+//! Bench harness for Table 3: end-to-end generation with and without the
+//! SkyMemory KVC, per quantizer, over the 19x5 in-process constellation
+//! with calibrated link emulation (see examples/e2e_testbed.rs for the
+//! calibration rationale).  Requires `make artifacts`.
+
+use skymemory::constellation::geometry::Geometry;
+use skymemory::coordinator::{GenRequest, Stack, StackConfig};
+use skymemory::kvc::quantize::Quantizer;
+use skymemory::net::transport::LinkModel;
+use skymemory::util::bench::summarize;
+use std::time::Duration;
+
+const PROMPT: &str = "We expand the scope of cache memory to include LEO constellations, \
+highly distributed systems with thousands of satellites connected with free-space \
+optics inter-satellite links, always one hop from any point on earth.";
+
+fn main() -> anyhow::Result<()> {
+    if !skymemory::runtime::model_config::default_artifacts_dir()
+        .join("model_config.json")
+        .exists()
+    {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    println!("=== Table 3 bench: 30-token generation, 19x5 constellation ===");
+    for (name, q) in [
+        ("optimum-quanto", Quantizer::QuantoInt8 { group: 32 }),
+        ("hqq", Quantizer::HqqInt8 { group: 32 }),
+        ("f32 (ablation)", Quantizer::F32),
+    ] {
+        let mut cfg = StackConfig::default();
+        cfg.kvc.quantizer = q;
+        cfg.kvc.n_servers = 10;
+        let mut link = LinkModel::laser_defaults(Geometry::new(550.0, 19, 5));
+        link.sleep_scale = 1.0 / 300.0;
+        link.bandwidth_bps = 200e6;
+        cfg.link = Some(link);
+        cfg.n_workers = 1;
+        let stack = Stack::build(cfg)?;
+
+        let req = GenRequest { prompt: PROMPT.into(), max_new_tokens: 30, ..Default::default() };
+        // warm-up + prime
+        let mut nocache = req.clone();
+        nocache.use_cache = false;
+        stack.router.generate(nocache.clone())?;
+        let cold: Vec<Duration> = (0..7)
+            .map(|_| {
+                Duration::from_secs_f64(stack.router.generate(nocache.clone()).unwrap().total_s)
+            })
+            .collect();
+        stack.router.generate(req.clone())?; // prime the cache
+        let warm: Vec<Duration> = (0..7)
+            .map(|_| Duration::from_secs_f64(stack.router.generate(req.clone()).unwrap().total_s))
+            .collect();
+        let c = summarize(format!("{name} no-KVC"), cold);
+        let w = summarize(format!("{name} KVC"), warm);
+        println!("{}", c.report());
+        println!("{}", w.report());
+        println!(
+            "  -> speedup {:.1}% (paper: quanto 21%, hqq 24%)\n",
+            100.0 * (1.0 - w.p50.as_secs_f64() / c.p50.as_secs_f64())
+        );
+    }
+    Ok(())
+}

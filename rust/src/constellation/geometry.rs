@@ -1,0 +1,287 @@
+//! Orbital geometry: the paper's equations (1)–(4) and derived latencies.
+//!
+//! All distances are in kilometres, all times in seconds unless a name says
+//! otherwise.  The speed-of-light latencies here generate Table 1's LEO
+//! rows and Figures 1–2 (intra-plane ISL latency vs. `M` and `h`).
+
+/// Mean Earth radius in km (`r_E` in the paper).
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+
+/// Speed of light in vacuum, km/s (free-space optics ISL).
+pub const LIGHT_SPEED_KM_S: f64 = 299_792.458;
+
+/// Standard gravitational parameter of Earth, km^3/s^2 (orbital period).
+pub const MU_EARTH: f64 = 398_600.4418;
+
+/// Geometry of one constellation shell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Geometry {
+    /// Constellation altitude `h` in km.
+    pub altitude_km: f64,
+    /// Satellites per orbital plane (`M` in eq. (1)).
+    pub sats_per_plane: usize,
+    /// Number of orbital planes (`N` in eq. (2)).
+    pub planes: usize,
+}
+
+impl Geometry {
+    pub fn new(altitude_km: f64, sats_per_plane: usize, planes: usize) -> Self {
+        assert!(altitude_km > 0.0, "altitude must be positive");
+        assert!(sats_per_plane >= 2 && planes >= 2, "need a real torus");
+        Self { altitude_km, sats_per_plane, planes }
+    }
+
+    /// Orbit radius `r_E + h`.
+    pub fn orbit_radius_km(&self) -> f64 {
+        EARTH_RADIUS_KM + self.altitude_km
+    }
+
+    /// Paper eq. (1): chord distance `D_m` between adjacent satellites in
+    /// the same plane: `(r_E + h) * sqrt(2 * (1 - cos(2*pi/M)))`.
+    pub fn intra_plane_distance_km(&self) -> f64 {
+        chord_distance_km(self.altitude_km, self.sats_per_plane)
+    }
+
+    /// Paper eq. (2): worst-case chord distance `D_n` between neighbouring
+    /// satellites of adjacent planes: `(r_E + h) * sqrt(2*(1 - cos(2*pi/N)))`.
+    pub fn inter_plane_distance_km(&self) -> f64 {
+        chord_distance_km(self.altitude_km, self.planes)
+    }
+
+    /// One-hop ISL latency along the plane, seconds.
+    pub fn intra_plane_latency_s(&self) -> f64 {
+        self.intra_plane_distance_km() / LIGHT_SPEED_KM_S
+    }
+
+    /// One-hop ISL latency across planes (worst case), seconds.
+    pub fn inter_plane_latency_s(&self) -> f64 {
+        self.inter_plane_distance_km() / LIGHT_SPEED_KM_S
+    }
+
+    /// Worst-case single-hop ISL latency, seconds.  §2: "we can consider
+    /// (1) as a worst-case scenario distance or latency for all ISL
+    /// communication" — eq. (1) with the *smaller* of M, N dominates, so we
+    /// take the max of the two chords.
+    pub fn worst_hop_latency_s(&self) -> f64 {
+        self.intra_plane_latency_s().max(self.inter_plane_latency_s())
+    }
+
+    /// Paper eq. (3): straight-line distance covered by a route step of
+    /// `d_planes` plane-hops and `d_slots` slot-hops:
+    /// `D = sqrt((D_m * Δo)^2 + (D_n * Δs)^2)`.
+    pub fn hop_distance_km(&self, d_slots: usize, d_planes: usize) -> f64 {
+        let dm = self.intra_plane_distance_km() * d_slots as f64;
+        let dn = self.inter_plane_distance_km() * d_planes as f64;
+        (dm * dm + dn * dn).sqrt()
+    }
+
+    /// Paper eq. (4): slant range from the ground host to a satellite whose
+    /// sub-satellite point is `ground_km` away: `x = sqrt(D^2 + h^2)`.
+    pub fn slant_range_km(&self, ground_km: f64) -> f64 {
+        (ground_km * ground_km + self.altitude_km * self.altitude_km).sqrt()
+    }
+
+    /// Ground-to-satellite one-way latency for a satellite `slots`/`planes`
+    /// grid cells away from the sub-stellar (directly overhead) satellite.
+    pub fn ground_latency_s(&self, d_slots: usize, d_planes: usize) -> f64 {
+        let d = self.hop_distance_km(d_slots, d_planes);
+        self.slant_range_km(d) / LIGHT_SPEED_KM_S
+    }
+
+    /// Orbital period `T = 2*pi*sqrt((r_E+h)^3 / mu)`, seconds.
+    pub fn orbital_period_s(&self) -> f64 {
+        let r = self.orbit_radius_km();
+        2.0 * std::f64::consts::PI * (r * r * r / MU_EARTH).sqrt()
+    }
+
+    /// Time between successive "column shifts": the constellation advances
+    /// by one intra-plane slot every `T / M` seconds; this is the epoch at
+    /// which rotation-aware mappings migrate (§3.4).
+    pub fn slot_shift_period_s(&self) -> f64 {
+        self.orbital_period_s() / self.sats_per_plane as f64
+    }
+}
+
+/// Chord between adjacent points of `count` equidistant points on the orbit
+/// circle at `altitude_km` — shared body of eqs. (1) and (2).
+pub fn chord_distance_km(altitude_km: f64, count: usize) -> f64 {
+    let r = EARTH_RADIUS_KM + altitude_km;
+    let theta = 2.0 * std::f64::consts::PI / count as f64;
+    r * (2.0 * (1.0 - theta.cos())).sqrt()
+}
+
+/// Approximate latencies of classical memory/storage tiers (paper Table 1),
+/// used for the memory-hierarchy comparisons in docs and the Table 1
+/// reproduction.  Values are the midpoints of the paper's ranges, seconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemoryTier {
+    Cpu,
+    Gpu,
+    Rdma,
+    Ssd,
+    Hdd,
+    Nas,
+    LeoRf,
+    LeoLaser,
+}
+
+impl MemoryTier {
+    pub const ALL: [MemoryTier; 8] = [
+        MemoryTier::Cpu,
+        MemoryTier::Gpu,
+        MemoryTier::Rdma,
+        MemoryTier::Ssd,
+        MemoryTier::Hdd,
+        MemoryTier::Nas,
+        MemoryTier::LeoRf,
+        MemoryTier::LeoLaser,
+    ];
+
+    /// (low, high) latency band in seconds, straight from Table 1.
+    pub fn latency_band_s(&self) -> (f64, f64) {
+        match self {
+            MemoryTier::Cpu => (10e-9, 15e-9),
+            MemoryTier::Gpu => (50e-9, 100e-9),
+            MemoryTier::Rdma => (2e-6, 5e-6),
+            MemoryTier::Ssd => (20e-6, 200e-6),
+            MemoryTier::Hdd => (2e-3, 20e-3),
+            MemoryTier::Nas => (30e-3, 40e-3),
+            MemoryTier::LeoRf => (20e-3, 50e-3),
+            MemoryTier::LeoLaser => (2e-3, 4e-3),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemoryTier::Cpu => "CPU",
+            MemoryTier::Gpu => "GPU",
+            MemoryTier::Rdma => "RDMA",
+            MemoryTier::Ssd => "SSD",
+            MemoryTier::Hdd => "HDD",
+            MemoryTier::Nas => "NAS",
+            MemoryTier::LeoRf => "LEO (current RF)",
+            MemoryTier::LeoLaser => "LEO (theoretical Laser)",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> Geometry {
+        Geometry::new(550.0, 19, 5)
+    }
+
+    #[test]
+    fn eq1_matches_hand_computation() {
+        // D_m = (6371+550) * sqrt(2*(1-cos(2*pi/19)))
+        let g = geo();
+        let theta = 2.0 * std::f64::consts::PI / 19.0;
+        let want = 6921.0 * (2.0 * (1.0 - theta.cos())).sqrt();
+        assert!((g.intra_plane_distance_km() - want).abs() < 1e-9);
+        // sanity: ~2280 km for 19 sats at 550 km
+        assert!((g.intra_plane_distance_km() - 2280.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn eq2_uses_plane_count() {
+        let g = geo();
+        let theta = 2.0 * std::f64::consts::PI / 5.0;
+        let want = 6921.0 * (2.0 * (1.0 - theta.cos())).sqrt();
+        assert!((g.inter_plane_distance_km() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_sats_shrink_the_chord() {
+        let mut prev = f64::INFINITY;
+        for m in [5, 10, 20, 40, 80] {
+            let d = chord_distance_km(550.0, m);
+            assert!(d < prev, "chord must shrink with M");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn higher_altitude_grows_the_chord() {
+        assert!(chord_distance_km(2000.0, 30) > chord_distance_km(160.0, 30));
+    }
+
+    #[test]
+    fn paper_claim_50_plus_sats_low_ms() {
+        // §2: "roughly a latency between SSD and HDD with about 50+
+        // satellites in a plane or 50+ planes (<2 milliseconds)".  The
+        // claim is an extrapolation ("roughly"): at 50 sats the hop sits
+        // in the low single-digit ms across the altitude sweep, and drops
+        // under 2 ms as M grows ((~75+ at 550 km).
+        for h in [160.0, 550.0, 1200.0, 2000.0] {
+            let g = Geometry::new(h, 50, 50);
+            assert!(
+                g.intra_plane_latency_s() < 4.0e-3,
+                "h={h}: {}",
+                g.intra_plane_latency_s()
+            );
+        }
+        assert!(Geometry::new(550.0, 80, 80).intra_plane_latency_s() < 2.0e-3);
+        assert!(Geometry::new(160.0, 75, 75).intra_plane_latency_s() < 2.0e-3);
+    }
+
+    #[test]
+    fn eq3_eq4_compose() {
+        let g = geo();
+        // zero offset -> directly overhead -> slant == altitude
+        assert!((g.slant_range_km(0.0) - 550.0).abs() < 1e-12);
+        assert!((g.ground_latency_s(0, 0) - 550.0 / LIGHT_SPEED_KM_S).abs() < 1e-15);
+        // diagonal hop distance is the hypotenuse
+        let d = g.hop_distance_km(1, 1);
+        let dm = g.intra_plane_distance_km();
+        let dn = g.inter_plane_distance_km();
+        assert!((d - (dm * dm + dn * dn).sqrt()).abs() < 1e-9);
+        assert!(g.ground_latency_s(1, 0) > g.ground_latency_s(0, 0));
+    }
+
+    #[test]
+    fn orbital_period_is_leo_like() {
+        // LEO periods are ~90-130 min
+        let p = Geometry::new(550.0, 19, 5).orbital_period_s();
+        assert!(p > 80.0 * 60.0 && p < 130.0 * 60.0, "{p}");
+        let p2 = Geometry::new(2000.0, 19, 5).orbital_period_s();
+        assert!(p2 > p);
+    }
+
+    #[test]
+    fn table1_leo_laser_band_holds_for_isl() {
+        // A 19x5 at 550 km has single-hop ISL latency in the low-ms band,
+        // consistent with Table 1's laser row at constellation scale.
+        let g = geo();
+        assert!(g.intra_plane_latency_s() < 10e-3);
+        assert!(g.worst_hop_latency_s() >= g.intra_plane_latency_s());
+    }
+
+    #[test]
+    fn memory_tiers_ordered() {
+        let bands: Vec<_> =
+            MemoryTier::ALL.iter().map(|t| t.latency_band_s()).collect();
+        for (lo, hi) in &bands {
+            assert!(lo <= hi);
+        }
+        // LEO laser undercuts NAS and HDD midpoints (the paper's pitch)
+        let mid = |t: MemoryTier| {
+            let (a, b) = t.latency_band_s();
+            (a + b) / 2.0
+        };
+        assert!(mid(MemoryTier::LeoLaser) < mid(MemoryTier::Nas));
+        assert!(mid(MemoryTier::LeoLaser) < mid(MemoryTier::Hdd));
+    }
+
+    #[test]
+    fn slot_shift_period_divides_orbit() {
+        let g = geo();
+        let want = g.orbital_period_s() / 19.0;
+        assert!((g.slot_shift_period_s() - want).abs() < 1e-9);
+        // 19 sats -> a new satellite overhead every ~5 minutes, matching
+        // the paper's "visible for 5-10 minutes" observation.
+        assert!(g.slot_shift_period_s() > 3.0 * 60.0);
+        assert!(g.slot_shift_period_s() < 10.0 * 60.0);
+    }
+}

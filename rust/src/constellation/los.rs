@@ -1,0 +1,206 @@
+//! Line-of-sight window: which satellites a ground host can reach directly.
+//!
+//! §2: "From a single point on Earth, as many as 10-20 LEO satellites may
+//! be visible."  We model LOS as an axis-aligned box of grid cells around
+//! the sub-stellar (closest) satellite, derived from a minimum elevation
+//! angle: a satellite whose sub-satellite point is ground distance `d` away
+//! is visible when `atan(h / d) >= min_elevation` (flat-earth local
+//! approximation, adequate for the few-hundred-km LOS radii of LEO).
+
+use super::geometry::Geometry;
+use super::topology::{SatId, Torus};
+
+/// A rectangular LOS window on the torus, centred on the closest satellite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LosGrid {
+    pub center: SatId,
+    /// Half-extent in slots (east-west).
+    pub half_slots: usize,
+    /// Half-extent in planes (north-south).
+    pub half_planes: usize,
+}
+
+impl LosGrid {
+    pub fn new(center: SatId, half_slots: usize, half_planes: usize) -> Self {
+        Self { center, half_slots, half_planes }
+    }
+
+    /// Derive the LOS window from geometry and a minimum elevation angle.
+    pub fn from_geometry(geo: &Geometry, center: SatId, min_elevation_deg: f64) -> Self {
+        let d_max = los_ground_radius_km(geo.altitude_km, min_elevation_deg);
+        let dm = geo.intra_plane_distance_km();
+        let dn = geo.inter_plane_distance_km();
+        let half_slots = (d_max / dm).floor() as usize;
+        let half_planes = (d_max / dn).floor() as usize;
+        Self { center, half_slots, half_planes }
+    }
+
+    /// A square window big enough to hold `n_servers` cells (the §3.7
+    /// bounding box: side = ceil(sqrt(n))).
+    pub fn square_for_servers(center: SatId, n_servers: usize) -> Self {
+        let side = (n_servers as f64).sqrt().ceil() as usize;
+        // side w -> half extents (left, right) = (floor((w-1)/2), rest).
+        // We keep symmetric half extents; odd sides centre exactly.
+        Self::new(center, side / 2, side / 2)
+    }
+
+    pub fn width(&self) -> usize {
+        2 * self.half_slots + 1
+    }
+
+    pub fn height(&self) -> usize {
+        2 * self.half_planes + 1
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.width() * self.height()
+    }
+
+    /// Is `sat` inside the window (torus-aware)?
+    pub fn contains(&self, torus: &Torus, sat: SatId) -> bool {
+        let (dp, ds) = torus.signed_offset(self.center, sat);
+        dp.unsigned_abs() as usize <= self.half_planes
+            && ds.unsigned_abs() as usize <= self.half_slots
+    }
+
+    /// All cells of the window, row-major (north-west to south-east), the
+    /// order Figure 4's rotation-aware numbering uses.
+    pub fn cells_row_major(&self, torus: &Torus) -> Vec<SatId> {
+        let mut out = Vec::with_capacity(self.cell_count());
+        for dp in -(self.half_planes as i32)..=(self.half_planes as i32) {
+            for ds in -(self.half_slots as i32)..=(self.half_slots as i32) {
+                out.push(torus.offset(self.center, dp, ds));
+            }
+        }
+        out
+    }
+
+    /// The eastmost (exiting) column at the current position.
+    pub fn east_column(&self, torus: &Torus) -> Vec<SatId> {
+        self.column(torus, self.half_slots as i32)
+    }
+
+    /// The column that enters when the window shifts one slot west.
+    pub fn entering_west_column(&self, torus: &Torus) -> Vec<SatId> {
+        self.column(torus, -(self.half_slots as i32) - 1)
+    }
+
+    fn column(&self, torus: &Torus, ds: i32) -> Vec<SatId> {
+        (-(self.half_planes as i32)..=(self.half_planes as i32))
+            .map(|dp| torus.offset(self.center, dp, ds))
+            .collect()
+    }
+
+    /// The same window after the constellation advanced `epochs` slot
+    /// shifts (window slides west with the overhead satellite).
+    pub fn shifted(&self, torus: &Torus, epochs: u64) -> Self {
+        Self {
+            center: torus.offset(self.center, 0, -((epochs % torus.sats_per_plane as u64) as i32)),
+            ..*self
+        }
+    }
+}
+
+/// Ground radius of the LOS disc for a given altitude and min elevation.
+pub fn los_ground_radius_km(altitude_km: f64, min_elevation_deg: f64) -> f64 {
+    assert!(min_elevation_deg > 0.0 && min_elevation_deg < 90.0);
+    altitude_km / min_elevation_deg.to_radians().tan()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_to_twenty_sats_visible_for_dense_shell() {
+        // A Starlink-like dense shell (72 sats x 36 planes at 550 km)
+        // puts 10-20 satellites in LOS at a ~18 deg mask — §2: "as many
+        // as 10-20 LEO satellites may be visible".
+        let geo = Geometry::new(550.0, 72, 36);
+        let g = LosGrid::from_geometry(&geo, SatId::new(5, 5), 18.0);
+        assert!(
+            (10..=25).contains(&g.cell_count()),
+            "visible={} ({}x{})",
+            g.cell_count(),
+            g.width(),
+            g.height()
+        );
+    }
+
+    #[test]
+    fn lower_mask_sees_more() {
+        let geo = Geometry::new(550.0, 40, 20);
+        let lo = LosGrid::from_geometry(&geo, SatId::new(0, 0), 15.0);
+        let hi = LosGrid::from_geometry(&geo, SatId::new(0, 0), 45.0);
+        assert!(lo.cell_count() > hi.cell_count());
+    }
+
+    #[test]
+    fn square_for_servers_matches_paper_sizes() {
+        let c = SatId::new(8, 8);
+        for (n, side) in [(9, 3), (25, 5), (49, 7), (81, 9)] {
+            let g = LosGrid::square_for_servers(c, n);
+            assert_eq!(g.width(), side, "n={n}");
+            assert_eq!(g.height(), side);
+            assert_eq!(g.cell_count(), n);
+        }
+    }
+
+    #[test]
+    fn contains_is_torus_aware() {
+        let torus = Torus::new(6, 8);
+        let g = LosGrid::new(SatId::new(0, 0), 1, 1);
+        assert!(g.contains(&torus, SatId::new(5, 7))); // wraps both axes
+        assert!(g.contains(&torus, SatId::new(0, 0)));
+        assert!(!g.contains(&torus, SatId::new(3, 4)));
+    }
+
+    #[test]
+    fn row_major_enumeration_is_window_shaped() {
+        let torus = Torus::new(9, 9);
+        let g = LosGrid::new(SatId::new(4, 4), 2, 1);
+        let cells = g.cells_row_major(&torus);
+        assert_eq!(cells.len(), 5 * 3);
+        assert_eq!(cells[0], SatId::new(3, 2)); // NW corner
+        assert_eq!(cells[7], SatId::new(4, 4)); // centre
+        assert_eq!(*cells.last().unwrap(), SatId::new(5, 6)); // SE corner
+        for c in &cells {
+            assert!(g.contains(&torus, *c));
+        }
+    }
+
+    #[test]
+    fn east_and_entering_columns() {
+        let torus = Torus::new(5, 9);
+        let g = LosGrid::new(SatId::new(2, 4), 1, 1);
+        assert_eq!(g.east_column(&torus), vec![
+            SatId::new(1, 5), SatId::new(2, 5), SatId::new(3, 5)
+        ]);
+        assert_eq!(g.entering_west_column(&torus), vec![
+            SatId::new(1, 2), SatId::new(2, 2), SatId::new(3, 2)
+        ]);
+    }
+
+    #[test]
+    fn shifted_window_slides_west() {
+        let torus = Torus::new(5, 9);
+        let g = LosGrid::new(SatId::new(2, 4), 1, 1);
+        let g1 = g.shifted(&torus, 1);
+        assert_eq!(g1.center, SatId::new(2, 3));
+        // the old entering column is the new west edge... and the old east
+        // column has left the window
+        for s in g.east_column(&torus) {
+            assert!(!g1.contains(&torus, s));
+        }
+        for s in g.entering_west_column(&torus) {
+            assert!(g1.contains(&torus, s));
+        }
+    }
+
+    #[test]
+    fn los_radius_shrinks_with_elevation() {
+        assert!(los_ground_radius_km(550.0, 10.0) > los_ground_radius_km(550.0, 30.0));
+        // 45 deg -> radius == altitude
+        assert!((los_ground_radius_km(550.0, 45.0) - 550.0).abs() < 1e-9);
+    }
+}

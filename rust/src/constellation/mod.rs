@@ -1,0 +1,16 @@
+//! Constellation substrate: geometry, topology, rotation and line-of-sight.
+//!
+//! The paper's system model (§2, §3.2): a Walker-style LEO constellation at
+//! altitude `h` with `N` orbital planes of `M` equidistant satellites each,
+//! meshed by 4 free-space-optics inter-satellite links per satellite into a
+//! +GRID 2D torus (Pfandzelter & Bermbach [4]).
+
+pub mod geometry;
+pub mod los;
+pub mod rotation;
+pub mod topology;
+
+pub use geometry::Geometry;
+pub use los::LosGrid;
+pub use rotation::RotationModel;
+pub use topology::{SatId, Torus};

@@ -1,0 +1,131 @@
+//! Deterministic rotation model (paper §3.4, Figures 5, 8, 9).
+//!
+//! The protocol never needs continuous orbital mechanics — only the
+//! discrete consequences of rotation: *which* satellite is closest to the
+//! ground host at time `t`, and *when* the closest satellite hands over to
+//! its western (lower-slot) neighbour.  Both are exact functions of the
+//! orbital period: the constellation advances one intra-plane slot every
+//! `T / M` seconds, so the slot directly overhead decreases by one per
+//! epoch (satellites exit LOS east, enter west — Fig. 8: satellite 4 is
+//! overhead now, satellite 3 "in a few minutes").
+//!
+//! §3.7's closing observation — "the set of satellites in the LOS at that
+//! future time is known exactly" — is `center_at(t)`: predictive placement
+//! (see `kvc::manager`) just evaluates the model at a future `t`.
+
+use super::geometry::Geometry;
+use super::topology::{SatId, Torus};
+
+/// Rotation state of one constellation shell relative to one ground host.
+#[derive(Debug, Clone, Copy)]
+pub struct RotationModel {
+    pub geometry: Geometry,
+    /// Satellite directly overhead at `t = 0`.
+    pub initial_center: SatId,
+}
+
+impl RotationModel {
+    pub fn new(geometry: Geometry, initial_center: SatId) -> Self {
+        Self { geometry, initial_center }
+    }
+
+    pub fn torus(&self) -> Torus {
+        Torus::new(self.geometry.planes, self.geometry.sats_per_plane)
+    }
+
+    /// Seconds between successive overhead handovers.
+    pub fn epoch_period_s(&self) -> f64 {
+        self.geometry.slot_shift_period_s()
+    }
+
+    /// Number of completed slot shifts at time `t`.
+    pub fn epoch_at(&self, t_s: f64) -> u64 {
+        assert!(t_s >= 0.0, "model starts at t=0");
+        (t_s / self.epoch_period_s()) as u64
+    }
+
+    /// The satellite closest to the ground host at time `t`.
+    pub fn center_at(&self, t_s: f64) -> SatId {
+        self.center_at_epoch(self.epoch_at(t_s))
+    }
+
+    /// The satellite closest to the ground host after `epoch` slot shifts.
+    pub fn center_at_epoch(&self, epoch: u64) -> SatId {
+        let torus = self.torus();
+        let slot = torus.wrap_slot(self.initial_center.slot as i64 - epoch as i64);
+        SatId::new(self.initial_center.plane, slot)
+    }
+
+    /// Seconds until the next handover after time `t`.
+    pub fn time_to_next_epoch_s(&self, t_s: f64) -> f64 {
+        let p = self.epoch_period_s();
+        p - (t_s % p)
+    }
+
+    /// How many columns a layout written at `t_write` has drifted east of
+    /// the current center by `t_now` if it was never migrated.  This is the
+    /// penalty non-rotation-aware mappings pay in the §4 simulation.
+    pub fn drift_epochs(&self, t_write_s: f64, t_now_s: f64) -> u64 {
+        self.epoch_at(t_now_s).saturating_sub(self.epoch_at(t_write_s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> RotationModel {
+        RotationModel::new(Geometry::new(550.0, 19, 5), SatId::new(2, 9))
+    }
+
+    #[test]
+    fn center_is_initial_at_t0() {
+        assert_eq!(model().center_at(0.0), SatId::new(2, 9));
+    }
+
+    #[test]
+    fn center_moves_one_slot_west_per_epoch() {
+        let m = model();
+        let p = m.epoch_period_s();
+        assert_eq!(m.center_at(p * 1.01), SatId::new(2, 8));
+        assert_eq!(m.center_at(p * 2.5), SatId::new(2, 7));
+        // plane never changes
+        for e in 0..40 {
+            assert_eq!(m.center_at_epoch(e).plane, 2);
+        }
+    }
+
+    #[test]
+    fn center_wraps_after_full_orbit() {
+        let m = model();
+        assert_eq!(m.center_at_epoch(19), m.center_at_epoch(0));
+        assert_eq!(m.center_at_epoch(19 + 3), m.center_at_epoch(3));
+    }
+
+    #[test]
+    fn epoch_period_matches_paper_visibility_window() {
+        // "a particular LEO satellite may only be visible from a point on
+        // earth for 5-10 minutes" — handover cadence must be in that order.
+        let p = model().epoch_period_s();
+        assert!(p > 60.0 * 3.0 && p < 60.0 * 10.0, "{p}");
+    }
+
+    #[test]
+    fn drift_counts_missed_migrations() {
+        let m = model();
+        let p = m.epoch_period_s();
+        assert_eq!(m.drift_epochs(0.0, 0.5 * p), 0);
+        assert_eq!(m.drift_epochs(0.0, 3.2 * p), 3);
+        assert_eq!(m.drift_epochs(2.1 * p, 3.2 * p), 1);
+    }
+
+    #[test]
+    fn time_to_next_epoch_counts_down() {
+        let m = model();
+        let p = m.epoch_period_s();
+        let early = m.time_to_next_epoch_s(0.1 * p);
+        let late = m.time_to_next_epoch_s(0.9 * p);
+        assert!(early > late);
+        assert!((early + 0.1 * p - p).abs() < 1e-6);
+    }
+}

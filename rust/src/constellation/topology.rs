@@ -1,0 +1,354 @@
+//! +GRID 2D-torus topology and greedy ISL routing (paper §3.2, §4).
+//!
+//! Coordinate convention (matches the paper's figures): a satellite is
+//! identified by `(plane, slot)` — `plane` is the orbital plane (a *row* of
+//! the figures' grids), `slot` is the satellite's index within its plane (a
+//! *column*).  East/West neighbours are adjacent slots of the same plane
+//! (intra-plane ISL, chord `D_m`, eq. 1); North/South neighbours are the
+//! same slot of adjacent planes (inter-plane ISL, chord `D_n`, eq. 2).
+//! Both axes wrap around (2D torus).
+//!
+//! Ground motion: as the Earth rotates under the constellation, the LOS
+//! window slides towards *higher* slots — the satellite about to exit LOS
+//! on the east is replaced by one entering on the west (paper Fig. 5/8).
+
+
+
+/// A satellite's coordinates in the torus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SatId {
+    /// Orbital plane index, `0..planes`.
+    pub plane: u16,
+    /// Index within the plane, `0..sats_per_plane`.
+    pub slot: u16,
+}
+
+impl SatId {
+    pub fn new(plane: u16, slot: u16) -> Self {
+        Self { plane, slot }
+    }
+
+    /// Dense index for array-backed lookup tables.
+    pub fn linear(&self, sats_per_plane: usize) -> usize {
+        self.plane as usize * sats_per_plane + self.slot as usize
+    }
+}
+
+impl std::fmt::Display for SatId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(p{},s{})", self.plane, self.slot)
+    }
+}
+
+/// A single routing step in the +GRID mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    North,
+    South,
+    East,
+    West,
+    /// Already at the target.
+    Arrived,
+}
+
+/// The +GRID 2D-torus mesh of a constellation shell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Torus {
+    pub planes: usize,
+    pub sats_per_plane: usize,
+}
+
+impl Torus {
+    pub fn new(planes: usize, sats_per_plane: usize) -> Self {
+        assert!(planes >= 2 && sats_per_plane >= 2, "torus needs >=2 on each axis");
+        Self { planes, sats_per_plane }
+    }
+
+    pub fn len(&self) -> usize {
+        self.planes * self.sats_per_plane
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn contains(&self, s: SatId) -> bool {
+        (s.plane as usize) < self.planes && (s.slot as usize) < self.sats_per_plane
+    }
+
+    pub fn all(&self) -> impl Iterator<Item = SatId> + '_ {
+        (0..self.planes).flat_map(move |p| {
+            (0..self.sats_per_plane).map(move |s| SatId::new(p as u16, s as u16))
+        })
+    }
+
+    /// Wrap-around plane arithmetic.
+    pub fn wrap_plane(&self, plane: i64) -> u16 {
+        plane.rem_euclid(self.planes as i64) as u16
+    }
+
+    /// Wrap-around slot arithmetic.
+    pub fn wrap_slot(&self, slot: i64) -> u16 {
+        slot.rem_euclid(self.sats_per_plane as i64) as u16
+    }
+
+    pub fn north(&self, s: SatId) -> SatId {
+        SatId::new(self.wrap_plane(s.plane as i64 - 1), s.slot)
+    }
+
+    pub fn south(&self, s: SatId) -> SatId {
+        SatId::new(self.wrap_plane(s.plane as i64 + 1), s.slot)
+    }
+
+    pub fn west(&self, s: SatId) -> SatId {
+        SatId::new(s.plane, self.wrap_slot(s.slot as i64 - 1))
+    }
+
+    pub fn east(&self, s: SatId) -> SatId {
+        SatId::new(s.plane, self.wrap_slot(s.slot as i64 + 1))
+    }
+
+    /// The four +GRID ISL neighbours, in the paper's N, E, S, W order.
+    pub fn neighbors(&self, s: SatId) -> [SatId; 4] {
+        [self.north(s), self.east(s), self.south(s), self.west(s)]
+    }
+
+    // --- The §4 directional distances -----------------------------------
+
+    /// Hops to reach `to`'s plane travelling north (decreasing plane).
+    pub fn d_north(&self, from: SatId, to: SatId) -> usize {
+        let (o, ot) = (from.plane as i64, to.plane as i64);
+        (o - ot).rem_euclid(self.planes as i64) as usize
+    }
+
+    /// Hops to reach `to`'s plane travelling south (increasing plane).
+    pub fn d_south(&self, from: SatId, to: SatId) -> usize {
+        let (o, ot) = (from.plane as i64, to.plane as i64);
+        (ot - o).rem_euclid(self.planes as i64) as usize
+    }
+
+    /// Hops to reach `to`'s slot travelling west (decreasing slot).
+    pub fn d_west(&self, from: SatId, to: SatId) -> usize {
+        let (s, st) = (from.slot as i64, to.slot as i64);
+        (s - st).rem_euclid(self.sats_per_plane as i64) as usize
+    }
+
+    /// Hops to reach `to`'s slot travelling east (increasing slot).
+    pub fn d_east(&self, from: SatId, to: SatId) -> usize {
+        let (s, st) = (from.slot as i64, to.slot as i64);
+        (st - s).rem_euclid(self.sats_per_plane as i64) as usize
+    }
+
+    /// Minimal wrap distance across planes.
+    pub fn plane_distance(&self, from: SatId, to: SatId) -> usize {
+        self.d_north(from, to).min(self.d_south(from, to))
+    }
+
+    /// Minimal wrap distance along the plane.
+    pub fn slot_distance(&self, from: SatId, to: SatId) -> usize {
+        self.d_west(from, to).min(self.d_east(from, to))
+    }
+
+    /// Total hop count (torus Manhattan distance) — ISL hops of the
+    /// shortest +GRID route.
+    pub fn hops(&self, from: SatId, to: SatId) -> usize {
+        self.plane_distance(from, to) + self.slot_distance(from, to)
+    }
+
+    /// The §4 greedy next-step rule, verbatim: prefer the strictly shorter
+    /// vertical direction, then the strictly shorter horizontal one.
+    pub fn next_step(&self, from: SatId, to: SatId) -> Step {
+        let dn = self.d_north(from, to);
+        let ds = self.d_south(from, to);
+        if dn != 0 || ds != 0 {
+            // need to change plane
+            if dn < ds {
+                return Step::North;
+            }
+            if ds < dn {
+                return Step::South;
+            }
+            // dn == ds != 0: either way is shortest; the paper's rule falls
+            // through to the horizontal cases, so only break the tie when
+            // no horizontal travel remains.
+            let dw = self.d_west(from, to);
+            let de = self.d_east(from, to);
+            if dw < de {
+                return Step::West;
+            }
+            if de < dw {
+                return Step::East;
+            }
+            return Step::North; // full tie: deterministic choice
+        }
+        let dw = self.d_west(from, to);
+        let de = self.d_east(from, to);
+        if dw < de {
+            Step::West
+        } else if de < dw {
+            Step::East
+        } else if dw != 0 {
+            Step::West // antipodal tie: deterministic choice
+        } else {
+            Step::Arrived
+        }
+    }
+
+    pub fn step(&self, from: SatId, step: Step) -> SatId {
+        match step {
+            Step::North => self.north(from),
+            Step::South => self.south(from),
+            Step::East => self.east(from),
+            Step::West => self.west(from),
+            Step::Arrived => from,
+        }
+    }
+
+    /// Full greedy route `from -> to` (excluding `from`, including `to`).
+    pub fn route(&self, from: SatId, to: SatId) -> Vec<SatId> {
+        let mut path = Vec::with_capacity(self.hops(from, to));
+        let mut cur = from;
+        loop {
+            match self.next_step(cur, to) {
+                Step::Arrived => break,
+                s => {
+                    cur = self.step(cur, s);
+                    path.push(cur);
+                }
+            }
+            assert!(path.len() <= self.len(), "routing loop {from}->{to}");
+        }
+        path
+    }
+
+    /// Offset (plane_delta, slot_delta) of `to` relative to `from`, each in
+    /// the signed minimal-wrap range.  Ties (exactly half the axis) resolve
+    /// to the positive direction.
+    pub fn signed_offset(&self, from: SatId, to: SatId) -> (i32, i32) {
+        let dn = self.d_north(from, to) as i32;
+        let ds = self.d_south(from, to) as i32;
+        let dp = if ds <= dn { ds } else { -dn };
+        let dw = self.d_west(from, to) as i32;
+        let de = self.d_east(from, to) as i32;
+        let dsl = if de <= dw { de } else { -dw };
+        (dp, dsl)
+    }
+
+    /// The satellite at a signed (plane_delta, slot_delta) from `base`.
+    pub fn offset(&self, base: SatId, plane_delta: i32, slot_delta: i32) -> SatId {
+        SatId::new(
+            self.wrap_plane(base.plane as i64 + plane_delta as i64),
+            self.wrap_slot(base.slot as i64 + slot_delta as i64),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Torus {
+        Torus::new(5, 19) // the paper's 19x5 testbed constellation
+    }
+
+    #[test]
+    fn neighbors_wrap() {
+        let t = t();
+        let corner = SatId::new(0, 0);
+        assert_eq!(t.north(corner), SatId::new(4, 0));
+        assert_eq!(t.west(corner), SatId::new(0, 18));
+        assert_eq!(t.south(SatId::new(4, 3)), SatId::new(0, 3));
+        assert_eq!(t.east(SatId::new(2, 18)), SatId::new(2, 0));
+    }
+
+    #[test]
+    fn directional_distances_match_paper_cases() {
+        let t = t();
+        let a = SatId::new(1, 2);
+        let b = SatId::new(4, 6);
+        // o_t > o: d_north wraps, d_south direct
+        assert_eq!(t.d_south(a, b), 3);
+        assert_eq!(t.d_north(a, b), 2);
+        // s_t > s: d_east direct, d_west wraps
+        assert_eq!(t.d_east(a, b), 4);
+        assert_eq!(t.d_west(a, b), 15);
+        assert_eq!(t.hops(a, b), 2 + 4);
+    }
+
+    #[test]
+    fn hops_symmetric_and_zero_on_self() {
+        let t = t();
+        for a in t.all() {
+            assert_eq!(t.hops(a, a), 0);
+        }
+        let a = SatId::new(0, 1);
+        let b = SatId::new(3, 17);
+        assert_eq!(t.hops(a, b), t.hops(b, a));
+    }
+
+    #[test]
+    fn greedy_route_realizes_hop_count() {
+        let t = t();
+        let pairs = [
+            (SatId::new(0, 0), SatId::new(0, 0)),
+            (SatId::new(0, 0), SatId::new(4, 18)),
+            (SatId::new(2, 5), SatId::new(2, 6)),
+            (SatId::new(1, 18), SatId::new(3, 1)),
+            (SatId::new(4, 9), SatId::new(0, 2)),
+        ];
+        for (a, b) in pairs {
+            let route = t.route(a, b);
+            assert_eq!(route.len(), t.hops(a, b), "{a} -> {b}");
+            assert_eq!(*route.last().unwrap_or(&a), b);
+            // each step is a +GRID neighbour of the previous
+            let mut prev = a;
+            for s in route {
+                assert!(t.neighbors(prev).contains(&s));
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn route_prefers_vertical_first() {
+        // paper's rule lists north/south before west/east
+        let t = t();
+        let a = SatId::new(0, 0);
+        let b = SatId::new(2, 2);
+        let route = t.route(a, b);
+        assert_eq!(route[0].plane, 1, "first step should change plane");
+    }
+
+    #[test]
+    fn signed_offset_roundtrip() {
+        let t = t();
+        let base = SatId::new(2, 9);
+        for target in t.all() {
+            let (dp, ds) = t.signed_offset(base, target);
+            assert_eq!(t.offset(base, dp, ds), target);
+            assert_eq!(dp.unsigned_abs() as usize, t.plane_distance(base, target));
+            assert_eq!(ds.unsigned_abs() as usize, t.slot_distance(base, target));
+        }
+    }
+
+    #[test]
+    fn antipodal_ties_terminate() {
+        let t = Torus::new(4, 6);
+        let a = SatId::new(0, 0);
+        let b = SatId::new(2, 3); // exactly opposite on both axes
+        let route = t.route(a, b);
+        assert_eq!(route.len(), t.hops(a, b));
+    }
+
+    #[test]
+    fn linear_index_bijective() {
+        let t = t();
+        let mut seen = vec![false; t.len()];
+        for s in t.all() {
+            let i = s.linear(t.sats_per_plane);
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.into_iter().all(|b| b));
+    }
+}

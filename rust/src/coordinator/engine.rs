@@ -1,0 +1,276 @@
+//! The generation engine: prompt in, tokens out, with the SkyMemory KVC
+//! as the prefix-cache tier (the paper's §5 validation flow, generalized).
+//!
+//! Per request:
+//! 1. tokenize, chain-hash the full blocks (model-fingerprinted root),
+//! 2. look up the longest cached prefix (radix index or distributed),
+//! 3. fetch those blocks' chunks from the constellation, dequantize,
+//!    install into the sequence slot's KV cache,
+//! 4. prefill the remaining full blocks (storing each new block's KV back
+//!    into the constellation),
+//! 5. decode the trailing partial block token-by-token,
+//! 6. sample and decode `max_new_tokens`.
+
+use super::executor::Executor;
+use super::metrics::Metrics;
+use crate::kvc::block::{block_hashes_for_model, full_blocks, BlockHash};
+use crate::kvc::manager::KvcManager;
+use crate::runtime::kv::payload_from_new;
+use crate::runtime::sampler::{Sampler, SamplerConfig};
+use crate::runtime::tokenizer::ByteTokenizer;
+use anyhow::{bail, Result};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub use_cache: bool,
+    pub sampler: SamplerConfig,
+}
+
+impl Default for GenRequest {
+    fn default() -> Self {
+        Self {
+            prompt: String::new(),
+            max_new_tokens: 30,
+            use_cache: true,
+            sampler: SamplerConfig::default(),
+        }
+    }
+}
+
+/// A generation result with serving telemetry.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    /// Blocks restored from the constellation cache.
+    pub cached_blocks: usize,
+    /// Blocks prefilled on the accelerator.
+    pub prefill_blocks: usize,
+    /// Seconds to first generated token (the paper's TTFT target).
+    pub ttft_s: f64,
+    /// Total generation wall time.
+    pub total_s: f64,
+    /// Time spent talking to the constellation (fetch + store).
+    pub kvc_fetch_s: f64,
+    pub kvc_store_s: f64,
+}
+
+/// The engine: executor handle + optional cache manager.
+pub struct Engine {
+    pub executor: Executor,
+    pub kvc: Option<Arc<KvcManager>>,
+    pub metrics: Arc<Metrics>,
+    tokenizer: ByteTokenizer,
+    fingerprint: BlockHash,
+    /// Store freshly-computed blocks back to the constellation.
+    pub write_through: bool,
+    /// Optional §3.7 hit predictor (records block traffic; the rotation
+    /// driver calls its `preplace` ahead of each epoch).
+    pub prefetcher: Option<Arc<super::prefetch::Prefetcher>>,
+}
+
+impl Engine {
+    pub fn new(
+        executor: Executor,
+        kvc: Option<Arc<KvcManager>>,
+        fingerprint: BlockHash,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self {
+            executor,
+            kvc,
+            metrics,
+            tokenizer: ByteTokenizer,
+            fingerprint,
+            write_through: true,
+            prefetcher: None,
+        }
+    }
+
+    pub fn tokenizer(&self) -> &ByteTokenizer {
+        &self.tokenizer
+    }
+
+    /// Chained block hashes for a prompt (§3.8 steps 1-2).
+    pub fn hashes_for(&self, tokens: &[i32]) -> Vec<BlockHash> {
+        block_hashes_for_model(tokens, self.executor.dims.block_tokens, &self.fingerprint)
+    }
+
+    /// Run one generation request to completion.
+    pub fn generate(&self, req: &GenRequest) -> Result<GenResult> {
+        let t_start = Instant::now();
+        let dims = self.executor.dims;
+        let b = dims.block_tokens;
+        let tokens = self.tokenizer.encode(&req.prompt);
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        if tokens.len() + req.max_new_tokens > dims.max_seq {
+            bail!(
+                "prompt ({}) + max_new_tokens ({}) exceeds context {}",
+                tokens.len(),
+                req.max_new_tokens,
+                dims.max_seq
+            );
+        }
+        Metrics::inc(&self.metrics.requests_total);
+        Metrics::add(&self.metrics.prompt_tokens, tokens.len() as u64);
+
+        let hashes = self.hashes_for(&tokens);
+        let n_full = full_blocks(tokens.len(), b);
+        let slot = self.executor.alloc_slot()?;
+        let result = self.generate_inner(req, &tokens, &hashes, n_full, slot, t_start);
+        self.executor.free_slot(slot);
+        match &result {
+            Ok(r) => {
+                Metrics::add(&self.metrics.tokens_generated, r.tokens.len() as u64);
+                Metrics::add(&self.metrics.cache_blocks_hit, r.cached_blocks as u64);
+                Metrics::add(&self.metrics.cache_blocks_missed, r.prefill_blocks as u64);
+                self.metrics.ttft.observe(std::time::Duration::from_secs_f64(r.ttft_s));
+                self.metrics.e2e.observe(std::time::Duration::from_secs_f64(r.total_s));
+            }
+            Err(_) => Metrics::inc(&self.metrics.requests_failed),
+        }
+        result
+    }
+
+    fn generate_inner(
+        &self,
+        req: &GenRequest,
+        tokens: &[i32],
+        hashes: &[BlockHash],
+        n_full: usize,
+        slot: usize,
+        t_start: Instant,
+    ) -> Result<GenResult> {
+        let dims = self.executor.dims;
+        let b = dims.block_tokens;
+        let mut kvc_fetch_s = 0.0;
+        let mut kvc_store_s = 0.0;
+
+        // --- 2+3: restore the longest cached prefix -----------------------
+        let mut cached_blocks = 0usize;
+        if req.use_cache {
+            if let Some(m) = &self.kvc {
+                let epoch = epoch_of(m);
+                let t0 = Instant::now();
+                if let Some((blocks, _meta)) = m.lookup(hashes, epoch) {
+                    if let Some(p) = &self.prefetcher {
+                        p.record(hashes, blocks);
+                    }
+                    let fetch = m.fetch_prefix(hashes, blocks, epoch)?;
+                    for (i, payload) in fetch.kv_blocks.iter().enumerate() {
+                        self.executor.write_block(slot, i, payload.clone())?;
+                    }
+                    cached_blocks = fetch.blocks;
+                }
+                kvc_fetch_s = t0.elapsed().as_secs_f64();
+            }
+        }
+        let mut pos = cached_blocks * b;
+
+        // --- 4: prefill remaining full blocks -----------------------------
+        let mut last_logits: Option<Vec<f32>> = None;
+        let mut prefill_blocks = 0usize;
+        for blk in cached_blocks..n_full {
+            let block_tokens = tokens[blk * b..(blk + 1) * b].to_vec();
+            let out = self.executor.prefill(slot, block_tokens, pos)?;
+            Metrics::inc(&self.metrics.prefill_steps);
+            prefill_blocks += 1;
+            pos += b;
+            if req.use_cache && self.write_through {
+                if let Some(m) = &self.kvc {
+                    let t0 = Instant::now();
+                    let payload = payload_from_new(&out.k_new, &out.v_new);
+                    m.put_block(hashes, blk, &payload, epoch_of(m))?;
+                    Metrics::inc(&self.metrics.blocks_stored);
+                    kvc_store_s += t0.elapsed().as_secs_f64();
+                }
+            }
+            last_logits = Some(last_row(&out.logits, dims.vocab));
+        }
+
+        // --- 5: trailing partial block, token by token --------------------
+        for &t in &tokens[n_full * b..] {
+            let out = self.executor.decode(slot, t, pos)?;
+            Metrics::inc(&self.metrics.decode_steps);
+            pos += 1;
+            last_logits = Some(out.logits);
+        }
+
+        // cached prefix covered the *whole* prompt: we still need logits
+        // for the last prompt token — recompute it as a decode step at
+        // pos-1 (its KV gets overwritten with identical values).
+        if last_logits.is_none() {
+            let out = self.executor.decode(slot, tokens[tokens.len() - 1], pos - 1)?;
+            Metrics::inc(&self.metrics.decode_steps);
+            last_logits = Some(out.logits);
+        }
+
+        // --- 6: sample + decode loop --------------------------------------
+        let mut sampler = Sampler::new(req.sampler);
+        let mut generated = Vec::with_capacity(req.max_new_tokens);
+        let mut logits = last_logits.unwrap();
+        let mut ttft_s = 0.0;
+        for i in 0..req.max_new_tokens {
+            let next = sampler.sample(&logits[logits.len() - dims.vocab..]);
+            if i == 0 {
+                ttft_s = t_start.elapsed().as_secs_f64();
+            }
+            generated.push(next);
+            if pos >= dims.max_seq {
+                break;
+            }
+            let t_step = Instant::now();
+            let out = self.executor.decode(slot, next, pos)?;
+            self.metrics.decode_step.observe(t_step.elapsed());
+            Metrics::inc(&self.metrics.decode_steps);
+            pos += 1;
+            logits = out.logits;
+        }
+
+        Ok(GenResult {
+            text: self.tokenizer.decode(&generated),
+            tokens: generated,
+            prompt_tokens: tokens.len(),
+            cached_blocks,
+            prefill_blocks,
+            ttft_s,
+            total_s: t_start.elapsed().as_secs_f64(),
+            kvc_fetch_s,
+            kvc_store_s,
+        })
+    }
+}
+
+/// Current epoch as seen by the manager's transport ground view.
+fn epoch_of(m: &KvcManager) -> u64 {
+    // GroundView tracks the epoch; Transport exposes it via closest()
+    // movement.  We keep an explicit counter on the transport stats-free
+    // path: ask the transport.
+    m.transport_epoch()
+}
+
+fn last_row(logits: &[f32], vocab: usize) -> Vec<f32> {
+    logits[logits.len() - vocab..].to_vec()
+}
+
+impl std::ops::Deref for Engine {
+    type Target = Executor;
+
+    fn deref(&self) -> &Executor {
+        &self.executor
+    }
+}
+
+#[allow(unused)]
+fn _ordering_probe() {
+    let _ = Ordering::Relaxed;
+}

@@ -1,0 +1,253 @@
+//! The model executor: one dedicated thread owns the PJRT model (and the
+//! per-sequence KV cache slots) and serializes all accelerator work — the
+//! standard single-execution-stream design of serving engines.  Engine
+//! workers talk to it through channels, so `PjRtModel`'s !Send types never
+//! cross threads.
+//!
+//! Keeping the KV caches *inside* the executor means scheduler messages
+//! carry tokens and block payloads, never multi-MB cache tensors.
+
+use crate::runtime::kv::KvCache;
+use crate::runtime::model_config::ModelDims;
+use crate::runtime::pjrt::{PjRtModel, StepOutput};
+use anyhow::{anyhow, bail, Result};
+use std::sync::mpsc;
+
+/// A sequence slot id.
+pub type SlotId = usize;
+
+enum Msg {
+    Alloc(mpsc::Sender<Result<SlotId>>),
+    Free(SlotId),
+    Prefill { slot: SlotId, tokens: Vec<i32>, pos: usize, reply: mpsc::Sender<Result<StepOutput>> },
+    Decode { slot: SlotId, token: i32, pos: usize, reply: mpsc::Sender<Result<StepOutput>> },
+    WriteBlock { slot: SlotId, block_idx: usize, payload: Vec<f32>, reply: mpsc::Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Cloneable handle to the executor thread.
+#[derive(Clone)]
+pub struct Executor {
+    tx: mpsc::Sender<Msg>,
+    pub dims: ModelDims,
+}
+
+impl Executor {
+    /// Spawn the executor thread with `max_slots` sequence slots.  The
+    /// PJRT model is *built inside* the thread (its handles are !Send);
+    /// compile/load errors are reported back synchronously.
+    pub fn spawn(artifacts: crate::runtime::model_config::Artifacts, max_slots: usize) -> Result<Self> {
+        let dims = artifacts.dims;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("skymemory-executor".into())
+            .spawn(move || {
+                let model = match PjRtModel::load(artifacts) {
+                    Ok(m) => {
+                        let _ = ready_tx.send(Ok(()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                run(model, rx, max_slots)
+            })
+            .expect("spawn executor");
+        ready_rx.recv().map_err(|_| anyhow!("executor thread died during load"))??;
+        Ok(Self { tx, dims })
+    }
+
+    /// Spawn from the default artifacts directory.
+    pub fn spawn_default(max_slots: usize) -> Result<Self> {
+        let dir = crate::runtime::model_config::default_artifacts_dir();
+        Self::spawn(crate::runtime::model_config::Artifacts::load(dir)?, max_slots)
+    }
+
+    pub fn alloc_slot(&self) -> Result<SlotId> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Alloc(tx)).map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    pub fn free_slot(&self, slot: SlotId) {
+        let _ = self.tx.send(Msg::Free(slot));
+    }
+
+    /// Prefill one token block at `pos`; the slot cache is updated and the
+    /// step output (logits + new block KV) returned.
+    pub fn prefill(&self, slot: SlotId, tokens: Vec<i32>, pos: usize) -> Result<StepOutput> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Prefill { slot, tokens, pos, reply: tx })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    /// Decode a single token at `pos`.
+    pub fn decode(&self, slot: SlotId, token: i32, pos: usize) -> Result<StepOutput> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Decode { slot, token, pos, reply: tx })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    /// Install a fetched KVC block payload into a slot's cache.
+    pub fn write_block(&self, slot: SlotId, block_idx: usize, payload: Vec<f32>) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::WriteBlock { slot, block_idx, payload, reply: tx })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+struct Slot {
+    cache: KvCache,
+    in_use: bool,
+}
+
+fn run(model: PjRtModel, rx: mpsc::Receiver<Msg>, max_slots: usize) {
+    let dims = model.artifacts.dims;
+    let mut slots: Vec<Slot> = (0..max_slots)
+        .map(|_| Slot { cache: KvCache::new(dims), in_use: false })
+        .collect();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Alloc(reply) => {
+                let r = match slots.iter_mut().enumerate().find(|(_, s)| !s.in_use) {
+                    Some((i, s)) => {
+                        s.in_use = true;
+                        s.cache.reset();
+                        Ok(i)
+                    }
+                    None => Err(anyhow!("no free sequence slots (max {max_slots})")),
+                };
+                let _ = reply.send(r);
+            }
+            Msg::Free(slot) => {
+                if let Some(s) = slots.get_mut(slot) {
+                    s.in_use = false;
+                }
+            }
+            Msg::Prefill { slot, tokens, pos, reply } => {
+                let _ = reply.send(step(&model, &mut slots, slot, &tokens, pos, true));
+            }
+            Msg::Decode { slot, token, pos, reply } => {
+                let _ = reply.send(step(&model, &mut slots, slot, &[token], pos, false));
+            }
+            Msg::WriteBlock { slot, block_idx, payload, reply } => {
+                let r = match slots.get_mut(slot) {
+                    Some(s) if payload.len() == dims.block_payload_elems() => {
+                        s.cache.write_block_payload(block_idx, &payload);
+                        Ok(())
+                    }
+                    Some(_) => Err(anyhow!("bad payload length")),
+                    None => Err(anyhow!("bad slot")),
+                };
+                let _ = reply.send(r);
+            }
+            Msg::Shutdown => return,
+        }
+    }
+}
+
+fn step(
+    model: &PjRtModel,
+    slots: &mut [Slot],
+    slot: SlotId,
+    tokens: &[i32],
+    pos: usize,
+    prefill: bool,
+) -> Result<StepOutput> {
+    let Some(s) = slots.get_mut(slot) else { bail!("bad slot {slot}") };
+    let out = if prefill {
+        model.prefill(tokens, &s.cache.k, &s.cache.v, pos)?
+    } else {
+        model.decode(tokens[0], &s.cache.k, &s.cache.v, pos)?
+    };
+    s.cache.write_new(pos, &out.k_new, &out.v_new, tokens.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::model_config::default_artifacts_dir;
+    use crate::runtime::pjrt::PjRtModel;
+
+    fn executor() -> Option<Executor> {
+        if !default_artifacts_dir().join("model_config.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Executor::spawn_default(4).unwrap())
+    }
+
+    #[test]
+    fn slot_lifecycle() {
+        let Some(ex) = executor() else { return };
+        let a = ex.alloc_slot().unwrap();
+        let b = ex.alloc_slot().unwrap();
+        assert_ne!(a, b);
+        ex.free_slot(a);
+        let c = ex.alloc_slot().unwrap();
+        assert_eq!(c, a, "freed slot is reused");
+        ex.shutdown();
+    }
+
+    #[test]
+    fn slots_exhaust() {
+        let Some(ex) = executor() else { return };
+        let slots: Vec<_> = (0..4).map(|_| ex.alloc_slot().unwrap()).collect();
+        assert!(ex.alloc_slot().is_err());
+        for s in slots {
+            ex.free_slot(s);
+        }
+        ex.shutdown();
+    }
+
+    #[test]
+    fn prefill_decode_via_executor_threads() {
+        let Some(ex) = executor() else { return };
+        let b = ex.dims.block_tokens;
+        // run two sequences from two threads concurrently
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                let ex = ex.clone();
+                std::thread::spawn(move || {
+                    let slot = ex.alloc_slot().unwrap();
+                    let tokens: Vec<i32> = (0..b as i32).map(|t| (t + i) % 256).collect();
+                    let out = ex.prefill(slot, tokens, 0).unwrap();
+                    assert_eq!(out.logits.len(), b * ex.dims.vocab);
+                    let out2 = ex.decode(slot, 65, b).unwrap();
+                    assert_eq!(out2.logits.len(), ex.dims.vocab);
+                    ex.free_slot(slot);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        ex.shutdown();
+    }
+
+    #[test]
+    fn write_block_validates() {
+        let Some(ex) = executor() else { return };
+        let slot = ex.alloc_slot().unwrap();
+        assert!(ex.write_block(slot, 0, vec![0.0; 3]).is_err());
+        assert!(ex
+            .write_block(slot, 0, vec![0.0; ex.dims.block_payload_elems()])
+            .is_ok());
+        assert!(ex.write_block(99, 0, vec![0.0; ex.dims.block_payload_elems()]).is_err());
+        ex.shutdown();
+    }
+}

@@ -1,0 +1,228 @@
+//! Minimal HTTP/1.1 server (from scratch — no web framework offline) for
+//! the serving API:
+//!
+//! * `POST /generate` — body `{"prompt": "...", "max_tokens": 30,
+//!   "use_cache": true, "temperature": 0.0}` → generation result JSON.
+//! * `GET /metrics` — Prometheus text exposition.
+//! * `GET /healthz` — liveness.
+//!
+//! One thread per connection (keep-alive not supported; every response
+//! closes the connection — fine for the demo scale this serves).
+
+use super::scheduler::Router;
+use crate::runtime::sampler::SamplerConfig;
+use crate::util::json::{n, obj, s, Json};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running HTTP server.
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve on a background thread.
+    pub fn spawn(bind: &str, router: Arc<Router>) -> Result<Self> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = shutdown.clone();
+        let handle = std::thread::spawn(move || {
+            loop {
+                if sd.load(Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let router = router.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &router);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => return,
+                }
+            }
+        });
+        Ok(Self { addr, shutdown, handle: Some(handle) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(300)))?;
+    let (method, path, body) = read_request(&mut stream)?;
+    let (status, content_type, payload) = match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => (200, "text/plain", "ok\n".to_string()),
+        ("GET", "/metrics") => (200, "text/plain", router.metrics.render()),
+        ("POST", "/generate") => match handle_generate(router, &body) {
+            Ok(j) => (200, "application/json", j.to_string()),
+            Err(e) => (
+                400,
+                "application/json",
+                obj(vec![("error", s(&e.to_string()))]).to_string(),
+            ),
+        },
+        _ => (404, "text/plain", "not found\n".to_string()),
+    };
+    write_response(&mut stream, status, content_type, &payload)
+}
+
+fn handle_generate(router: &Router, body: &str) -> Result<Json> {
+    let j = Json::parse(body).context("request body must be JSON")?;
+    let prompt = j
+        .get("prompt")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing 'prompt'"))?
+        .to_string();
+    let max_new_tokens = j.get("max_tokens").and_then(Json::as_usize).unwrap_or(30);
+    let use_cache = j.get("use_cache").and_then(Json::as_bool).unwrap_or(true);
+    let temperature = j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    let top_k = j.get("top_k").and_then(Json::as_usize).unwrap_or(0);
+    let seed = j.get("seed").and_then(Json::as_u64).unwrap_or(0x5eed);
+    let result = router.generate(super::engine::GenRequest {
+        prompt,
+        max_new_tokens,
+        use_cache,
+        sampler: SamplerConfig { temperature, top_k, seed },
+    })?;
+    Ok(obj(vec![
+        ("text", s(&result.text)),
+        ("prompt_tokens", n(result.prompt_tokens as f64)),
+        ("generated_tokens", n(result.tokens.len() as f64)),
+        ("cached_blocks", n(result.cached_blocks as f64)),
+        ("prefill_blocks", n(result.prefill_blocks as f64)),
+        ("ttft_s", n(result.ttft_s)),
+        ("total_s", n(result.total_s)),
+        ("kvc_fetch_s", n(result.kvc_fetch_s)),
+        ("kvc_store_s", n(result.kvc_store_s)),
+    ]))
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_length > 10 << 20 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    payload: &str,
+) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Tiny blocking HTTP client for tests, examples and the load generator.
+pub mod client {
+    use super::*;
+
+    /// `POST path` with a JSON body; returns (status, body).
+    pub fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> Result<(u16, String)> {
+        let mut stream = TcpStream::connect(addr)?;
+        let req = format!(
+            "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(req.as_bytes())?;
+        read_response(stream)
+    }
+
+    /// `GET path`; returns (status, body).
+    pub fn get(addr: std::net::SocketAddr, path: &str) -> Result<(u16, String)> {
+        let mut stream = TcpStream::connect(addr)?;
+        let req = format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n");
+        stream.write_all(req.as_bytes())?;
+        read_response(stream)
+    }
+
+    fn read_response(stream: TcpStream) -> Result<(u16, String)> {
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            if line.trim_end().is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().unwrap_or(0);
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
+        Ok((status, String::from_utf8_lossy(&body).into_owned()))
+    }
+}

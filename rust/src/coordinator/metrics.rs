@@ -1,0 +1,162 @@
+//! Serving metrics: lock-free counters + fixed-bucket latency histograms,
+//! exported in Prometheus text exposition format at `GET /metrics`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram buckets (seconds) tuned for token-level latencies.
+const BUCKETS_S: [f64; 12] =
+    [0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5];
+
+/// A fixed-bucket histogram.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; 12],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
+        let s = d.as_secs_f64();
+        for (i, b) in BUCKETS_S.iter().enumerate() {
+            if s <= *b {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    fn render(&self, name: &str, out: &mut String) {
+        let mut cumulative = 0;
+        for (i, b) in BUCKETS_S.iter().enumerate() {
+            cumulative += self.buckets[i].load(Ordering::Relaxed);
+            out.push_str(&format!("{name}_bucket{{le=\"{b}\"}} {cumulative}\n"));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", self.count()));
+        out.push_str(&format!(
+            "{name}_sum {}\n{name}_count {}\n",
+            self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.count()
+        ));
+    }
+}
+
+/// All serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub prompt_tokens: AtomicU64,
+    pub cache_blocks_hit: AtomicU64,
+    pub cache_blocks_missed: AtomicU64,
+    pub blocks_stored: AtomicU64,
+    pub prefill_steps: AtomicU64,
+    pub decode_steps: AtomicU64,
+    pub ttft: Histogram,
+    pub e2e: Histogram,
+    pub decode_step: Histogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Cache hit rate over blocks.
+    pub fn block_hit_rate(&self) -> f64 {
+        let h = self.cache_blocks_hit.load(Ordering::Relaxed) as f64;
+        let m = self.cache_blocks_missed.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+
+    /// Prometheus text exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(2048);
+        let c = |name: &str, v: &AtomicU64, out: &mut String| {
+            out.push_str(&format!(
+                "# TYPE skymemory_{name} counter\nskymemory_{name} {}\n",
+                v.load(Ordering::Relaxed)
+            ));
+        };
+        c("requests_total", &self.requests_total, &mut out);
+        c("requests_failed", &self.requests_failed, &mut out);
+        c("tokens_generated", &self.tokens_generated, &mut out);
+        c("prompt_tokens", &self.prompt_tokens, &mut out);
+        c("cache_blocks_hit", &self.cache_blocks_hit, &mut out);
+        c("cache_blocks_missed", &self.cache_blocks_missed, &mut out);
+        c("blocks_stored", &self.blocks_stored, &mut out);
+        c("prefill_steps", &self.prefill_steps, &mut out);
+        c("decode_steps", &self.decode_steps, &mut out);
+        out.push_str(&format!(
+            "# TYPE skymemory_block_hit_rate gauge\nskymemory_block_hit_rate {}\n",
+            self.block_hit_rate()
+        ));
+        self.ttft.render("skymemory_ttft_seconds", &mut out);
+        self.e2e.render("skymemory_e2e_seconds", &mut out);
+        self.decode_step.render("skymemory_decode_step_seconds", &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_mean() {
+        let h = Histogram::default();
+        h.observe(Duration::from_millis(1));
+        h.observe(Duration::from_millis(3));
+        h.observe(Duration::from_millis(300));
+        assert_eq!(h.count(), 3);
+        let mean = h.mean();
+        assert!(mean > Duration::from_millis(90) && mean < Duration::from_millis(120));
+        let mut s = String::new();
+        h.render("x", &mut s);
+        assert!(s.contains("x_bucket{le=\"0.001\"} 1"));
+        assert!(s.contains("x_count 3"));
+    }
+
+    #[test]
+    fn hit_rate() {
+        let m = Metrics::default();
+        assert_eq!(m.block_hit_rate(), 0.0);
+        Metrics::add(&m.cache_blocks_hit, 3);
+        Metrics::add(&m.cache_blocks_missed, 1);
+        assert!((m.block_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_is_prometheus_shaped() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests_total);
+        let text = m.render();
+        assert!(text.contains("skymemory_requests_total 1"));
+        assert!(text.contains("# TYPE skymemory_requests_total counter"));
+        assert!(text.contains("skymemory_ttft_seconds_bucket"));
+    }
+}

@@ -1,0 +1,127 @@
+//! The serving coordinator (L3): executor thread, generation engine,
+//! prefix-affinity router + worker pool, HTTP API and metrics — the
+//! vLLM-router-shaped stack the paper's testbed runs on its Jetson host,
+//! with the SkyMemory constellation as the prefix-cache tier.
+
+pub mod engine;
+pub mod executor;
+pub mod http;
+pub mod metrics;
+pub mod prefetch;
+pub mod scheduler;
+
+pub use engine::{Engine, GenRequest, GenResult};
+pub use executor::Executor;
+pub use metrics::Metrics;
+pub use scheduler::Router;
+
+use crate::constellation::geometry::Geometry;
+use crate::constellation::los::LosGrid;
+use crate::constellation::topology::{SatId, Torus};
+use crate::kvc::block::{model_fingerprint, BlockHash};
+use crate::kvc::manager::{KvcConfig, KvcManager};
+use crate::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
+use crate::runtime::model_config::Artifacts;
+use crate::satellite::fleet::Fleet;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Everything needed to stand up a serving stack in one call (used by the
+/// CLI, examples, benches and integration tests).
+pub struct StackConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub torus: Torus,
+    pub geometry: Geometry,
+    pub initial_center: SatId,
+    pub los_half_slots: usize,
+    pub los_half_planes: usize,
+    pub kvc: KvcConfig,
+    pub n_workers: usize,
+    pub max_slots: usize,
+    /// Emulate link latency (sleeping) in the in-proc transport.
+    pub link: Option<LinkModel>,
+    /// Per-satellite store budget in bytes.
+    pub sat_budget: usize,
+}
+
+impl Default for StackConfig {
+    fn default() -> Self {
+        let geometry = Geometry::new(550.0, 19, 5); // the paper's 19x5 testbed
+        Self {
+            artifacts_dir: crate::runtime::model_config::default_artifacts_dir(),
+            torus: Torus::new(5, 19),
+            geometry,
+            initial_center: SatId::new(2, 9),
+            los_half_slots: 2,
+            los_half_planes: 2,
+            kvc: KvcConfig::default(),
+            n_workers: 2,
+            max_slots: 8,
+            link: None,
+            sat_budget: 64 << 20,
+        }
+    }
+}
+
+/// A fully-assembled in-process serving stack.
+pub struct Stack {
+    pub fleet: Arc<Fleet>,
+    pub manager: Arc<KvcManager>,
+    pub router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    pub fingerprint: BlockHash,
+}
+
+impl Stack {
+    /// Spawn the rotation driver: a background thread that, every
+    /// `period`, (1) §3.7-pre-places the hottest blocks for the next
+    /// epoch, (2) issues the §3.4 column migrations, (3) advances the
+    /// ground view.  `period` is the (possibly time-scaled) epoch period;
+    /// the real cadence is `geometry.slot_shift_period_s()` (~5 min).
+    pub fn spawn_rotation_driver(
+        &self,
+        period: std::time::Duration,
+    ) -> std::sync::mpsc::Sender<()> {
+        let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
+        let manager = self.manager.clone();
+        let prefetcher = self.router.prefetcher.clone();
+        std::thread::spawn(move || {
+            let mut epoch = manager.transport_epoch();
+            loop {
+                match stop_rx.recv_timeout(period) {
+                    Ok(()) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                }
+                let _ = prefetcher.preplace(&manager, epoch, epoch + 1);
+                let _ = manager.advance_epoch(epoch);
+                epoch += 1;
+            }
+        });
+        stop_tx
+    }
+
+    /// Build the whole serving stack over an in-process fleet.
+    pub fn build(cfg: StackConfig) -> Result<Self> {
+        let artifacts = Artifacts::load(&cfg.artifacts_dir)?;
+        let fingerprint =
+            model_fingerprint("skymemory-bytelm", "byte-v1", &artifacts.weights_digest()?);
+        let executor = Executor::spawn(artifacts, cfg.max_slots)?;
+
+        let fleet = Arc::new(Fleet::new(cfg.torus, cfg.sat_budget, cfg.kvc.eviction));
+        let los = LosGrid::new(cfg.initial_center, cfg.los_half_slots, cfg.los_half_planes);
+        let ground = GroundView::new(cfg.initial_center, &los, cfg.torus.sats_per_plane);
+        let transport: Arc<dyn Transport> =
+            Arc::new(InProcTransport::new(fleet.clone(), ground, cfg.link));
+        let manager = Arc::new(KvcManager::new(cfg.kvc, cfg.torus, transport));
+
+        let metrics = Arc::new(Metrics::default());
+        let router = Arc::new(Router::spawn(
+            executor,
+            Some(manager.clone()),
+            fingerprint,
+            cfg.n_workers,
+            metrics.clone(),
+        ));
+        Ok(Self { fleet, manager, router, metrics, fingerprint })
+    }
+}

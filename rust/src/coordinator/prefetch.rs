@@ -1,0 +1,142 @@
+//! Predictive placement (§3.7): "if we predict a cache hit on a certain
+//! set of chunks at some future time ... the set of satellites in the LOS
+//! at that future time is known exactly and [we can] arrange to make those
+//! chunks available on those LOS satellites at that time."
+//!
+//! The [`Prefetcher`] tracks per-block access frequency (EWMA-decayed hit
+//! counts) and, ahead of each rotation epoch, re-places the hottest blocks
+//! for the *next* epoch's LOS window using the manager's
+//! `put_block_at(.., target_epoch)` — sourcing KV values from the local
+//! RAM tier, so prediction costs no recompute and no extra downlink.
+
+use crate::kvc::block::BlockHash;
+use crate::kvc::manager::KvcManager;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A tracked prefix (the hash list up to and including a block).
+#[derive(Clone)]
+struct Tracked {
+    hashes: Vec<BlockHash>,
+    block_idx: usize,
+    score: f64,
+}
+
+/// Frequency-based hit predictor + pre-placer.
+pub struct Prefetcher {
+    state: Mutex<HashMap<BlockHash, Tracked>>,
+    /// Exponential decay applied at each epoch boundary.
+    pub decay: f64,
+    /// Blocks re-placed per epoch.
+    pub budget: usize,
+}
+
+impl Default for Prefetcher {
+    fn default() -> Self {
+        Self::new(0.5, 16)
+    }
+}
+
+impl Prefetcher {
+    pub fn new(decay: f64, budget: usize) -> Self {
+        assert!((0.0..=1.0).contains(&decay));
+        Self { state: Mutex::new(HashMap::new()), decay, budget }
+    }
+
+    /// Record that a request touched the first `blocks` blocks of
+    /// `hashes` (call on every lookup, hit or miss).
+    pub fn record(&self, hashes: &[BlockHash], blocks: usize) {
+        let mut state = self.state.lock().unwrap();
+        for (i, h) in hashes.iter().take(blocks).enumerate() {
+            let e = state.entry(*h).or_insert_with(|| Tracked {
+                hashes: hashes[..=i].to_vec(),
+                block_idx: i,
+                score: 0.0,
+            });
+            e.score += 1.0;
+        }
+    }
+
+    /// The hottest blocks, hottest first.
+    pub fn hottest(&self, k: usize) -> Vec<(Vec<BlockHash>, usize, f64)> {
+        let state = self.state.lock().unwrap();
+        let mut all: Vec<_> = state.values().cloned().collect();
+        all.sort_by(|a, b| b.score.total_cmp(&a.score));
+        all.truncate(k);
+        all.into_iter().map(|t| (t.hashes, t.block_idx, t.score)).collect()
+    }
+
+    pub fn tracked(&self) -> usize {
+        self.state.lock().unwrap().len()
+    }
+
+    /// Epoch boundary: decay scores and pre-place the hottest blocks for
+    /// `target_epoch` (normally `now_epoch + 1`).  Values come from the
+    /// manager's local tier; blocks not resident there are skipped (they
+    /// would need recompute, which prediction must not trigger).
+    /// Returns the number of blocks pre-placed.
+    pub fn preplace(
+        &self,
+        manager: &KvcManager,
+        now_epoch: u64,
+        target_epoch: u64,
+    ) -> anyhow::Result<usize> {
+        let Some(local) = manager.local_tier() else { return Ok(0) };
+        let mut placed = 0;
+        for (hashes, block_idx, _score) in self.hottest(self.budget) {
+            if let Some(values) = local.get(&hashes[block_idx]) {
+                // force a store even if the radix index knows the block:
+                // the *placement epoch* is what changes
+                manager.put_block_at_forced(&hashes, block_idx, &values, now_epoch, target_epoch)?;
+                placed += 1;
+            }
+        }
+        // decay after acting so fresh traffic dominates next epoch
+        let mut state = self.state.lock().unwrap();
+        state.retain(|_, t| {
+            t.score *= self.decay;
+            t.score > 0.05
+        });
+        Ok(placed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvc::block::block_hashes;
+
+    #[test]
+    fn record_and_rank() {
+        let p = Prefetcher::new(0.5, 4);
+        let a = block_hashes(&(0..64).collect::<Vec<i32>>(), 32);
+        let b = block_hashes(&(100..164).collect::<Vec<i32>>(), 32);
+        for _ in 0..3 {
+            p.record(&a, 2);
+        }
+        p.record(&b, 1);
+        let hot = p.hottest(10);
+        assert_eq!(hot.len(), 3); // a[0], a[1], b[0]
+        assert_eq!(hot[0].2, 3.0);
+        assert!(hot.iter().any(|(h, i, _)| h.last() == Some(&b[0]) && *i == 0));
+    }
+
+    #[test]
+    fn decay_forgets_cold_blocks() {
+        let p = Prefetcher::new(0.1, 4);
+        let a = block_hashes(&(0..32).collect::<Vec<i32>>(), 32);
+        p.record(&a, 1);
+        assert_eq!(p.tracked(), 1);
+        // two decay rounds at 0.1: 1.0 -> 0.1 -> 0.01 < 0.05 threshold
+        let mut state = p.state.lock().unwrap();
+        state.retain(|_, t| {
+            t.score *= p.decay;
+            t.score > 0.05
+        });
+        state.retain(|_, t| {
+            t.score *= p.decay;
+            t.score > 0.05
+        });
+        assert_eq!(state.len(), 0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Request scheduling: a prefix-affinity router in front of a pool of
+//! engine workers sharing one executor (vLLM-router-style).
+//!
+//! * [`Router`] — hashes the first token block of each prompt and pins the
+//!   request to a worker queue, so prompts sharing a prefix land on the
+//!   same worker (warm radix index, fewer duplicate constellation sets).
+//!   Queue-depth-aware spill: if the pinned queue is much deeper than the
+//!   shallowest, the request spills to the shallowest (work conservation).
+//! * [`WorkQueue`] — a Mutex+Condvar MPMC queue (no crossbeam offline).
+//! * Workers run [`Engine::generate`] and fulfil one-shot reply channels.
+
+use super::engine::{Engine, GenRequest, GenResult};
+use super::executor::Executor;
+use super::metrics::Metrics;
+use crate::kvc::block::BlockHash;
+use crate::kvc::hash::sha256;
+use crate::kvc::manager::KvcManager;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// A queued unit of work.
+struct Job {
+    request: GenRequest,
+    reply: mpsc::Sender<Result<GenResult>>,
+}
+
+/// Blocking MPMC queue.
+pub struct WorkQueue {
+    inner: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    closed: AtomicBool,
+    depth: AtomicUsize,
+}
+
+impl Default for WorkQueue {
+    fn default() -> Self {
+        Self {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            depth: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl WorkQueue {
+    fn push(&self, job: Job) {
+        let mut q = self.inner.lock().unwrap();
+        q.push_back(job);
+        self.depth.store(q.len(), Ordering::Relaxed);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(j) = q.pop_front() {
+                self.depth.store(q.len(), Ordering::Relaxed);
+                return Some(j);
+            }
+            if self.closed.load(Ordering::Relaxed) {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+}
+
+/// The router + worker pool.
+pub struct Router {
+    queues: Vec<Arc<WorkQueue>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    /// Shared §3.7 hit predictor across workers.
+    pub prefetcher: Arc<super::prefetch::Prefetcher>,
+    block_tokens: usize,
+    /// Spill when pinned queue depth exceeds shallowest + this.
+    pub spill_threshold: usize,
+}
+
+impl Router {
+    /// Spawn `n_workers` engine workers over a shared executor.
+    pub fn spawn(
+        executor: Executor,
+        kvc: Option<Arc<KvcManager>>,
+        fingerprint: BlockHash,
+        n_workers: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        assert!(n_workers >= 1);
+        let queues: Vec<Arc<WorkQueue>> =
+            (0..n_workers).map(|_| Arc::new(WorkQueue::default())).collect();
+        let prefetcher = std::sync::Arc::new(super::prefetch::Prefetcher::default());
+        let mut workers = Vec::with_capacity(n_workers);
+        for q in &queues {
+            let mut engine =
+                Engine::new(executor.clone(), kvc.clone(), fingerprint, metrics.clone());
+            engine.prefetcher = Some(prefetcher.clone());
+            let q = q.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Some(job) = q.pop() {
+                    let result = engine.generate(&job.request);
+                    let _ = job.reply.send(result);
+                }
+            }));
+        }
+        Self {
+            queues,
+            workers,
+            metrics,
+            prefetcher,
+            block_tokens: executor.dims.block_tokens,
+            spill_threshold: 4,
+        }
+    }
+
+    /// Prefix-affinity worker choice with depth-aware spill.
+    pub fn pick_worker(&self, prompt: &str) -> usize {
+        let n = self.queues.len();
+        if n == 1 {
+            return 0;
+        }
+        let prefix_len = prompt.len().min(self.block_tokens);
+        let digest = sha256(prompt[..prefix_len].as_bytes());
+        let pinned = (u64::from_le_bytes(digest[..8].try_into().unwrap()) % n as u64) as usize;
+        let (shallowest, depth) = self
+            .queues
+            .iter()
+            .enumerate()
+            .map(|(i, q)| (i, q.depth()))
+            .min_by_key(|(_, d)| *d)
+            .unwrap();
+        if self.queues[pinned].depth() > depth + self.spill_threshold {
+            shallowest
+        } else {
+            pinned
+        }
+    }
+
+    /// Enqueue a request; returns a receiver for the result.
+    pub fn submit(&self, request: GenRequest) -> mpsc::Receiver<Result<GenResult>> {
+        let (tx, rx) = mpsc::channel();
+        let worker = self.pick_worker(&request.prompt);
+        self.queues[worker].push(Job { request, reply: tx });
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn generate(&self, request: GenRequest) -> Result<GenResult> {
+        self.submit(request)
+            .recv()
+            .map_err(|_| anyhow!("worker dropped the request"))?
+    }
+
+    /// Total queued jobs across workers.
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.depth()).sum()
+    }
+
+    pub fn shutdown(mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn work_queue_fifo_and_close() {
+        let q = Arc::new(WorkQueue::default());
+        let (tx, _rx) = mpsc::channel();
+        q.push(Job { request: GenRequest { prompt: "a".into(), ..Default::default() }, reply: tx.clone() });
+        q.push(Job { request: GenRequest { prompt: "b".into(), ..Default::default() }, reply: tx });
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop().unwrap().request.prompt, "a");
+        assert_eq!(q.pop().unwrap().request.prompt, "b");
+        q.close();
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_unblocks_waiters_on_close() {
+        let q = Arc::new(WorkQueue::default());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        q.close();
+        assert!(h.join().unwrap());
+    }
+}

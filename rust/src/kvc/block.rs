@@ -1,0 +1,174 @@
+//! Token blocks and chained block hashing (§3.1, §3.8 steps 1–2).
+//!
+//! A prompt's token sequence is split into fixed-size blocks; block `i`'s
+//! key is `SHA256(key_{i-1} || le_bytes(tokens_i))` with a null (all-zero)
+//! key before block 0.  A block key therefore commits to the *entire*
+//! prefix, so "find the matching hash furthest toward the end" (the
+//! longest cached prefix) needs no further comparison of earlier blocks.
+//! Only full blocks are keyed — a trailing partial block is recomputed,
+//! exactly like vLLM's prefix-caching blocks the paper's baseline follows.
+
+use super::hash::{sha256, Sha256, DIGEST_LEN};
+
+/// A chained block key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockHash(pub [u8; DIGEST_LEN]);
+
+impl BlockHash {
+    /// The null hash preceding block 0.
+    pub const NULL: BlockHash = BlockHash([0u8; DIGEST_LEN]);
+
+    pub fn as_bytes(&self) -> &[u8; DIGEST_LEN] {
+        &self.0
+    }
+
+    pub fn to_hex(&self) -> String {
+        super::hash::to_hex(&self.0)
+    }
+
+    /// Short prefix for logs.
+    pub fn short(&self) -> String {
+        self.to_hex()[..12].to_string()
+    }
+}
+
+impl From<[u8; DIGEST_LEN]> for BlockHash {
+    fn from(d: [u8; DIGEST_LEN]) -> Self {
+        BlockHash(d)
+    }
+}
+
+/// Chain one step: `H_i = SHA256(H_{i-1} || tokens)`.
+pub fn chain_hash(prev: &BlockHash, tokens: &[i32]) -> BlockHash {
+    let mut h = Sha256::new();
+    h.update(prev.as_bytes());
+    for t in tokens {
+        h.update(&t.to_le_bytes());
+    }
+    BlockHash(h.finalize())
+}
+
+/// Chained hashes for every *full* block of `tokens` (§3.8 steps 1–2).
+pub fn block_hashes(tokens: &[i32], block_size: usize) -> Vec<BlockHash> {
+    assert!(block_size > 0);
+    let mut out = Vec::with_capacity(tokens.len() / block_size);
+    let mut prev = BlockHash::NULL;
+    for block in tokens.chunks_exact(block_size) {
+        prev = chain_hash(&prev, block);
+        out.push(prev);
+    }
+    out
+}
+
+/// Number of full blocks (the cacheable prefix length in blocks).
+pub fn full_blocks(n_tokens: usize, block_size: usize) -> usize {
+    n_tokens / block_size
+}
+
+/// A convenience digest of arbitrary bytes used as a cache-namespace key:
+/// the cache is only valid for one (model, tokenizer) pair (§3.3), so the
+/// manager mixes this fingerprint into the chain root.
+pub fn model_fingerprint(model_id: &str, tokenizer_id: &str, weights_digest: &[u8]) -> BlockHash {
+    let mut h = Sha256::new();
+    h.update(model_id.as_bytes());
+    h.update(&[0]);
+    h.update(tokenizer_id.as_bytes());
+    h.update(&[0]);
+    h.update(weights_digest);
+    BlockHash(h.finalize())
+}
+
+/// Chained hashes with a model fingerprint as the chain root.
+pub fn block_hashes_for_model(
+    tokens: &[i32],
+    block_size: usize,
+    fingerprint: &BlockHash,
+) -> Vec<BlockHash> {
+    assert!(block_size > 0);
+    let mut out = Vec::with_capacity(tokens.len() / block_size);
+    let mut prev = *fingerprint;
+    for block in tokens.chunks_exact(block_size) {
+        prev = chain_hash(&prev, block);
+        out.push(prev);
+    }
+    out
+}
+
+#[allow(unused)]
+fn _assert_digest_is_32() {
+    let _ = sha256(b"");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_commits_to_prefix() {
+        let a = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+        let b = vec![9i32, 2, 3, 4, 5, 6, 7, 8]; // first token differs
+        let ha = block_hashes(&a, 4);
+        let hb = block_hashes(&b, 4);
+        assert_eq!(ha.len(), 2);
+        assert_ne!(ha[0], hb[0]);
+        // second block tokens identical, but hash differs because the
+        // chain differs
+        assert_ne!(ha[1], hb[1]);
+    }
+
+    #[test]
+    fn shared_prefix_shares_hashes() {
+        let a = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+        let b = vec![1i32, 2, 3, 4, 9, 9, 9, 9];
+        let ha = block_hashes(&a, 4);
+        let hb = block_hashes(&b, 4);
+        assert_eq!(ha[0], hb[0], "same first block, same hash");
+        assert_ne!(ha[1], hb[1]);
+    }
+
+    #[test]
+    fn partial_blocks_not_keyed() {
+        let tokens = vec![1i32; 10];
+        assert_eq!(block_hashes(&tokens, 4).len(), 2);
+        assert_eq!(full_blocks(10, 4), 2);
+        assert_eq!(block_hashes(&tokens[..8], 4), block_hashes(&tokens, 4));
+    }
+
+    #[test]
+    fn token_value_boundaries() {
+        // token serialization must distinguish sign/width cleanly
+        let a = block_hashes(&[i32::MAX, i32::MIN, -1, 0], 4);
+        let b = block_hashes(&[i32::MAX, i32::MIN, -1, 1], 4);
+        assert_ne!(a[0], b[0]);
+    }
+
+    #[test]
+    fn block_size_one() {
+        let h = block_hashes(&[5, 6], 1);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h[0], chain_hash(&BlockHash::NULL, &[5]));
+        assert_eq!(h[1], chain_hash(&h[0], &[6]));
+    }
+
+    #[test]
+    fn model_fingerprint_separates_caches() {
+        let t = vec![1i32; 8];
+        let f1 = model_fingerprint("m1", "bytes", b"w1");
+        let f2 = model_fingerprint("m1", "bytes", b"w2"); // different weights
+        let f3 = model_fingerprint("m1", "bpe", b"w1"); // different tokenizer
+        let h1 = block_hashes_for_model(&t, 4, &f1);
+        let h2 = block_hashes_for_model(&t, 4, &f2);
+        let h3 = block_hashes_for_model(&t, 4, &f3);
+        assert_ne!(h1[0], h2[0]);
+        assert_ne!(h1[0], h3[0]);
+    }
+
+    #[test]
+    fn null_root_matches_plain_chain() {
+        let t = vec![7i32; 8];
+        assert_eq!(
+            block_hashes(&t, 4),
+            block_hashes_for_model(&t, 4, &BlockHash::NULL)
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Chunking (§3.1): a block's (possibly multi-MB) KVC byte string is split
+//! into fixed-size chunks; chunk `i` goes to virtual server `i mod n`
+//! (§3.8 step 5).  Every cache entry is identified by `(block_hash,
+//! chunk_id)`, and a single missing chunk invalidates the whole block.
+
+use super::block::BlockHash;
+
+/// Identifier of one stored chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkKey {
+    pub block: BlockHash,
+    pub chunk_id: u32,
+}
+
+impl ChunkKey {
+    pub fn new(block: BlockHash, chunk_id: u32) -> Self {
+        Self { block, chunk_id }
+    }
+
+    /// Wire encoding: 32-byte block hash || 4-byte LE chunk id.
+    pub fn encode(&self) -> [u8; 36] {
+        let mut out = [0u8; 36];
+        out[..32].copy_from_slice(self.block.as_bytes());
+        out[32..].copy_from_slice(&self.chunk_id.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() != 36 {
+            return None;
+        }
+        let mut h = [0u8; 32];
+        h.copy_from_slice(&bytes[..32]);
+        let chunk_id = u32::from_le_bytes(bytes[32..36].try_into().ok()?);
+        Some(Self { block: BlockHash(h), chunk_id })
+    }
+}
+
+/// Number of chunks a payload of `len` bytes produces.
+pub fn chunk_count(len: usize, chunk_size: usize) -> usize {
+    assert!(chunk_size > 0);
+    len.div_ceil(chunk_size)
+}
+
+/// Split a block's KVC bytes into `chunk_size`-byte chunks (last one may
+/// be short).  Zero-copy: returns sub-slices.
+pub fn split_chunks(data: &[u8], chunk_size: usize) -> Vec<&[u8]> {
+    assert!(chunk_size > 0);
+    if data.is_empty() {
+        return vec![];
+    }
+    data.chunks(chunk_size).collect()
+}
+
+/// Reassemble chunks into the block's KVC bytes.  Returns `None` when a
+/// chunk is missing (`None` entry) — §3.1: "a failed lookup of a single
+/// chunk is enough to determine that the KVC does not exist".
+pub fn join_chunks(chunks: &[Option<Vec<u8>>], expected_len: usize) -> Option<Vec<u8>> {
+    let mut out = Vec::with_capacity(expected_len);
+    for c in chunks {
+        out.extend_from_slice(c.as_deref()?);
+    }
+    if out.len() == expected_len {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+/// The virtual server (0-based) a chunk maps to (§3.1 baseline protocol).
+pub fn server_for_chunk(chunk_id: u32, n_servers: usize) -> usize {
+    assert!(n_servers > 0);
+    (chunk_id as usize) % n_servers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bh(b: u8) -> BlockHash {
+        BlockHash([b; 32])
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let data: Vec<u8> = (0..100u8).collect();
+        for cs in [1, 3, 7, 33, 100, 1000] {
+            let chunks = split_chunks(&data, cs);
+            assert_eq!(chunks.len(), chunk_count(data.len(), cs));
+            let owned: Vec<Option<Vec<u8>>> =
+                chunks.iter().map(|c| Some(c.to_vec())).collect();
+            assert_eq!(join_chunks(&owned, data.len()).unwrap(), data, "cs={cs}");
+        }
+    }
+
+    #[test]
+    fn missing_chunk_fails_join() {
+        let data = vec![7u8; 50];
+        let chunks = split_chunks(&data, 16);
+        let mut owned: Vec<Option<Vec<u8>>> =
+            chunks.iter().map(|c| Some(c.to_vec())).collect();
+        owned[2] = None;
+        assert!(join_chunks(&owned, 50).is_none());
+    }
+
+    #[test]
+    fn truncated_payload_fails_join() {
+        let data = vec![7u8; 50];
+        let mut owned: Vec<Option<Vec<u8>>> =
+            split_chunks(&data, 16).iter().map(|c| Some(c.to_vec())).collect();
+        owned.pop();
+        assert!(join_chunks(&owned, 50).is_none());
+    }
+
+    #[test]
+    fn empty_payload() {
+        assert_eq!(chunk_count(0, 6000), 0);
+        assert!(split_chunks(&[], 6000).is_empty());
+        assert_eq!(join_chunks(&[], 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn paper_example_sizes() {
+        // paper §5: ~2.9 MB block split into 6 kB chunks
+        let n = chunk_count(2_900_000, 6000);
+        assert_eq!(n, 484);
+        // our scaled model: 128 KiB f32 block KVC, 6 kB chunks
+        assert_eq!(chunk_count(131_072, 6000), 22);
+    }
+
+    #[test]
+    fn chunk_key_codec_roundtrip() {
+        let k = ChunkKey::new(bh(0xab), 1234);
+        let enc = k.encode();
+        assert_eq!(ChunkKey::decode(&enc), Some(k));
+        assert_eq!(ChunkKey::decode(&enc[..35]), None);
+    }
+
+    #[test]
+    fn server_mapping_is_mod_n() {
+        assert_eq!(server_for_chunk(0, 10), 0);
+        assert_eq!(server_for_chunk(9, 10), 9);
+        assert_eq!(server_for_chunk(10, 10), 0);
+        assert_eq!(server_for_chunk(25, 7), 4);
+    }
+
+    #[test]
+    fn parallelism_claim_holds() {
+        // §3.1: chunk->server mod n allows parallel get/set of one KVC —
+        // i.e. the first n chunks land on n distinct servers.
+        let n = 10;
+        let servers: std::collections::HashSet<_> =
+            (0..n as u32).map(|c| server_for_chunk(c, n)).collect();
+        assert_eq!(servers.len(), n);
+    }
+}

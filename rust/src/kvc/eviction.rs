@@ -1,0 +1,233 @@
+//! Eviction (§3.9): LRU under memory pressure, with three propagation
+//! policies — gossip broadcast to the chunk neighbourhood, lazy client
+//! eviction on discovered-missing chunks, and periodic scrub of incomplete
+//! blocks.  Migration-time eviction ("natural eviction as part of the
+//! rotation synchronization") falls out of the satellite store dropping
+//! migrated-away chunks.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// How satellites and clients propagate an eviction (§3.9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum EvictionPolicy {
+    /// Evicting satellite gossips the block eviction to its neighbours so
+    /// sibling chunks die together.
+    #[default]
+    Gossip,
+    /// Nothing is propagated; the *client* purges its index and issues
+    /// evictions when a lookup discovers missing chunks.
+    Lazy,
+    /// Satellites periodically scrub blocks whose chunk set is incomplete.
+    PeriodicScrub,
+}
+
+impl EvictionPolicy {
+    pub const ALL: [EvictionPolicy; 3] =
+        [EvictionPolicy::Gossip, EvictionPolicy::Lazy, EvictionPolicy::PeriodicScrub];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Gossip => "gossip",
+            EvictionPolicy::Lazy => "lazy",
+            EvictionPolicy::PeriodicScrub => "periodic-scrub",
+        }
+    }
+}
+
+/// An O(1) LRU tracker over arbitrary keys (intrusive doubly-linked list
+/// over a slab, no external crates).  Used by the satellite chunk store
+/// and the manager's local budget.
+pub struct LruTracker<K: Eq + Hash + Clone> {
+    map: HashMap<K, usize>,
+    // slab of (key, prev, next); usize::MAX = none
+    slab: Vec<(K, usize, usize)>,
+    free: Vec<usize>,
+    head: usize, // most recent
+    tail: usize, // least recent
+}
+
+const NONE: usize = usize::MAX;
+
+impl<K: Eq + Hash + Clone> Default for LruTracker<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq + Hash + Clone> LruTracker<K> {
+    pub fn new() -> Self {
+        Self { map: HashMap::new(), slab: Vec::new(), free: Vec::new(), head: NONE, tail: NONE }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Mark `key` as most-recently used (inserting it if new).
+    pub fn touch(&mut self, key: &K) {
+        if let Some(&idx) = self.map.get(key) {
+            self.unlink(idx);
+            self.push_front(idx);
+        } else {
+            let idx = if let Some(i) = self.free.pop() {
+                self.slab[i] = (key.clone(), NONE, NONE);
+                i
+            } else {
+                self.slab.push((key.clone(), NONE, NONE));
+                self.slab.len() - 1
+            };
+            self.map.insert(key.clone(), idx);
+            self.push_front(idx);
+        }
+    }
+
+    /// Remove and return the least-recently-used key.
+    pub fn pop_lru(&mut self) -> Option<K> {
+        if self.tail == NONE {
+            return None;
+        }
+        let idx = self.tail;
+        self.unlink(idx);
+        let key = self.slab[idx].0.clone();
+        self.map.remove(&key);
+        self.free.push(idx);
+        Some(key)
+    }
+
+    /// Remove a specific key.
+    pub fn remove(&mut self, key: &K) -> bool {
+        if let Some(idx) = self.map.remove(key) {
+            self.unlink(idx);
+            self.free.push(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Peek at the LRU key without removing it.
+    pub fn peek_lru(&self) -> Option<&K> {
+        if self.tail == NONE {
+            None
+        } else {
+            Some(&self.slab[self.tail].0)
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.slab[idx].1 = NONE;
+        self.slab[idx].2 = self.head;
+        if self.head != NONE {
+            self.slab[self.head].1 = idx;
+        }
+        self.head = idx;
+        if self.tail == NONE {
+            self.tail = idx;
+        }
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (_, prev, next) = self.slab[idx];
+        if prev != NONE {
+            self.slab[prev].2 = next;
+        } else if self.head == idx {
+            self.head = next;
+        }
+        if next != NONE {
+            self.slab[next].1 = prev;
+        } else if self.tail == idx {
+            self.tail = prev;
+        }
+        self.slab[idx].1 = NONE;
+        self.slab[idx].2 = NONE;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_order_basic() {
+        let mut lru = LruTracker::new();
+        lru.touch(&"a");
+        lru.touch(&"b");
+        lru.touch(&"c");
+        assert_eq!(lru.pop_lru(), Some("a"));
+        lru.touch(&"b"); // refresh b
+        assert_eq!(lru.pop_lru(), Some("c"));
+        assert_eq!(lru.pop_lru(), Some("b"));
+        assert_eq!(lru.pop_lru(), None);
+    }
+
+    #[test]
+    fn touch_refreshes() {
+        let mut lru = LruTracker::new();
+        for k in 0..5 {
+            lru.touch(&k);
+        }
+        lru.touch(&0);
+        assert_eq!(lru.pop_lru(), Some(1));
+        assert_eq!(lru.peek_lru(), Some(&2));
+    }
+
+    #[test]
+    fn remove_specific() {
+        let mut lru = LruTracker::new();
+        for k in 0..4 {
+            lru.touch(&k);
+        }
+        assert!(lru.remove(&2));
+        assert!(!lru.remove(&2));
+        assert_eq!(lru.len(), 3);
+        assert_eq!(lru.pop_lru(), Some(0));
+        assert_eq!(lru.pop_lru(), Some(1));
+        assert_eq!(lru.pop_lru(), Some(3));
+    }
+
+    #[test]
+    fn slab_reuse_after_churn() {
+        let mut lru = LruTracker::new();
+        for round in 0..10 {
+            for k in 0..100 {
+                lru.touch(&(round * 100 + k));
+            }
+            for _ in 0..100 {
+                assert!(lru.pop_lru().is_some());
+            }
+        }
+        assert!(lru.is_empty());
+        // slab should not have grown unboundedly (free-list reuse)
+        assert!(lru.slab.len() <= 200, "slab len {}", lru.slab.len());
+    }
+
+    #[test]
+    fn single_element_edge_cases() {
+        let mut lru = LruTracker::new();
+        lru.touch(&42);
+        lru.touch(&42);
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.pop_lru(), Some(42));
+        assert!(lru.is_empty());
+        lru.touch(&7);
+        assert!(lru.remove(&7));
+        assert_eq!(lru.pop_lru(), None);
+    }
+
+    #[test]
+    fn policies_enumerate() {
+        let names: std::collections::HashSet<_> =
+            EvictionPolicy::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), 3);
+        assert_eq!(EvictionPolicy::default(), EvictionPolicy::Gossip);
+    }
+}

@@ -1,0 +1,767 @@
+//! The SkyMemory KVC manager — the §3.3 interface and the §3.8 protocol.
+//!
+//! ```text
+//! class KVCManager:
+//!   init(model, tokenizer)
+//!   add_blocks(prompt)
+//!   get_cache(prompt) -> KVC
+//! ```
+//!
+//! Set path (§3.8): tokenize -> chained block hashes -> (for each block not
+//! yet cached) quantize the block's KV tensor -> split into fixed-size
+//! chunks -> map chunk `i` to server `i mod n` -> store on the strategy's
+//! satellite layout, in parallel.
+//!
+//! Get path: longest cached prefix via the local radix index (§3.10) or
+//! the distributed binary search (§3.8 steps 3-6), then fetch every cached
+//! block's chunks in parallel, reassemble and dequantize.  A missing chunk
+//! anywhere truncates the usable prefix and (lazy policy) triggers
+//! eviction of the broken block.
+//!
+//! Every stored chunk is prefixed with an 18-byte self-describing header
+//! (quantizer, chunk count, byte length, write epoch) so the distributed
+//! lookup path needs no local state at all.
+
+use crate::constellation::topology::{SatId, Torus};
+use crate::kvc::block::BlockHash;
+use crate::kvc::chunk::{chunk_count, split_chunks, ChunkKey};
+use crate::kvc::eviction::EvictionPolicy;
+use crate::kvc::quantize::Quantizer;
+use crate::kvc::radix::{BlockIndex, BlockMeta};
+use crate::mapping::{box_width, Strategy};
+use crate::net::messages::{Request, Response};
+use crate::net::transport::Transport;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Chunk payload header (see module docs).
+pub const CHUNK_HEADER_LEN: usize = 18;
+const CHUNK_VERSION: u8 = 1;
+
+/// Maximum worker threads for one block's chunk fan-out (§Perf: one
+/// thread per chunk wastes more on spawns than parallel RTTs save).
+const MAX_FANOUT: usize = 8;
+
+fn encode_chunk_header(quantizer_id: u8, num_chunks: u32, kvc_len: u32, write_epoch: u64) -> [u8; CHUNK_HEADER_LEN] {
+    let mut h = [0u8; CHUNK_HEADER_LEN];
+    h[0] = CHUNK_VERSION;
+    h[1] = quantizer_id;
+    h[2..6].copy_from_slice(&num_chunks.to_le_bytes());
+    h[6..10].copy_from_slice(&kvc_len.to_le_bytes());
+    h[10..18].copy_from_slice(&write_epoch.to_le_bytes());
+    h
+}
+
+fn decode_chunk_header(data: &[u8]) -> Result<(u8, u32, u32, u64)> {
+    if data.len() < CHUNK_HEADER_LEN || data[0] != CHUNK_VERSION {
+        bail!("bad chunk header");
+    }
+    Ok((
+        data[1],
+        u32::from_le_bytes(data[2..6].try_into().unwrap()),
+        u32::from_le_bytes(data[6..10].try_into().unwrap()),
+        u64::from_le_bytes(data[10..18].try_into().unwrap()),
+    ))
+}
+
+/// Manager configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct KvcConfig {
+    /// Tokens per block (paper: 128; our scaled model: 32).
+    pub block_tokens: usize,
+    /// Chunk payload size in bytes (paper: 6 kB).
+    pub chunk_size: usize,
+    /// Virtual servers to stripe over (paper testbed: 10 LOS satellites).
+    pub n_servers: usize,
+    pub strategy: Strategy,
+    pub quantizer: Quantizer,
+    pub eviction: EvictionPolicy,
+    /// Use the local radix index (§3.10) instead of the distributed
+    /// binary search for prefix lookup.
+    pub use_radix_index: bool,
+    /// Gossip radius for explicit evictions.
+    pub gossip_ttl: u8,
+}
+
+impl Default for KvcConfig {
+    fn default() -> Self {
+        Self {
+            block_tokens: 32,
+            chunk_size: 6000,
+            n_servers: 10,
+            strategy: Strategy::RotationHopAware,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Gossip,
+            use_radix_index: true,
+            gossip_ttl: 2,
+        }
+    }
+}
+
+/// Manager counters (exported via /metrics).
+#[derive(Debug, Default)]
+pub struct KvcStats {
+    pub lookups: AtomicU64,
+    pub prefix_hits: AtomicU64,
+    pub blocks_fetched: AtomicU64,
+    pub blocks_stored: AtomicU64,
+    pub chunks_fetched: AtomicU64,
+    pub chunks_stored: AtomicU64,
+    pub bytes_fetched: AtomicU64,
+    pub bytes_stored: AtomicU64,
+    pub broken_blocks: AtomicU64,
+}
+
+/// Result of a prefix fetch.
+#[derive(Debug)]
+pub struct PrefixFetch {
+    /// Number of leading blocks whose KV was retrieved.
+    pub blocks: usize,
+    /// Dequantized KV values per block, in block order.
+    pub kv_blocks: Vec<Vec<f32>>,
+}
+
+/// The SkyMemory cache manager.
+pub struct KvcManager {
+    pub config: KvcConfig,
+    transport: Arc<dyn Transport>,
+    torus: Torus,
+    index: Mutex<BlockIndex>,
+    /// Optional fast-RAM tier in front of the constellation (§2's memory
+    /// hierarchy: GPU/CPU RAM above the LEO level).
+    local: Option<crate::kvc::tiered::LocalTier>,
+    pub stats: KvcStats,
+}
+
+impl KvcManager {
+    pub fn new(config: KvcConfig, torus: Torus, transport: Arc<dyn Transport>) -> Self {
+        assert!(config.n_servers >= 1);
+        Self {
+            config,
+            transport,
+            torus,
+            index: Mutex::new(BlockIndex::new()),
+            local: None,
+            stats: KvcStats::default(),
+        }
+    }
+
+    /// Add a local RAM tier of `byte_budget` decoded-KV bytes.
+    pub fn with_local_tier(mut self, byte_budget: usize) -> Self {
+        self.local = Some(crate::kvc::tiered::LocalTier::new(byte_budget));
+        self
+    }
+
+    pub fn local_tier(&self) -> Option<&crate::kvc::tiered::LocalTier> {
+        self.local.as_ref()
+    }
+
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
+    }
+
+    /// Current rotation epoch of the transport's ground view.
+    pub fn transport_epoch(&self) -> u64 {
+        self.transport.epoch()
+    }
+
+    /// Current rotation epoch as the transport's ground view sees it.
+    fn write_center_for_epoch(&self, epoch: u64, now_epoch: u64) -> SatId {
+        // the centre moves one slot west per epoch; a block written
+        // `now_epoch - epoch` epochs ago had its centre that many slots east
+        let delta = (now_epoch - epoch) as i32;
+        self.torus.offset(self.transport.closest(), 0, delta)
+    }
+
+    /// Satellite currently hosting `server_idx` (0-based) for a block
+    /// written at `write_epoch`, given `now_epoch`.
+    pub fn server_satellite(&self, server_idx: usize, write_epoch: u64, now_epoch: u64) -> SatId {
+        let write_center = self.write_center_for_epoch(write_epoch, now_epoch);
+        let layout = self.config.strategy.layout_at(
+            &self.torus,
+            write_center,
+            self.config.n_servers,
+            now_epoch - write_epoch,
+        );
+        layout[server_idx % self.config.n_servers]
+    }
+
+    fn chunk_satellite(&self, chunk_id: u32, write_epoch: u64, now_epoch: u64) -> SatId {
+        self.server_satellite(chunk_id as usize % self.config.n_servers, write_epoch, now_epoch)
+    }
+
+    // ------------------------------------------------------------ SET ---
+
+    /// Store one block's KV values (already extracted from the model) under
+    /// `hashes[..=block_idx]`; no-op if the index says it's cached.
+    pub fn put_block(
+        &self,
+        hashes: &[BlockHash],
+        block_idx: usize,
+        kv_values: &[f32],
+        now_epoch: u64,
+    ) -> Result<bool> {
+        self.put_block_at(hashes, block_idx, kv_values, now_epoch, now_epoch)
+    }
+
+    /// §3.7 predictive placement: store for the LOS window of
+    /// `target_epoch` (>= now) so the chunks are already in place when the
+    /// hit is predicted to happen.
+    pub fn put_block_at(
+        &self,
+        hashes: &[BlockHash],
+        block_idx: usize,
+        kv_values: &[f32],
+        now_epoch: u64,
+        target_epoch: u64,
+    ) -> Result<bool> {
+        if self.config.use_radix_index
+            && self.index.lock().unwrap().get(&hashes[..=block_idx]).is_some()
+        {
+            return Ok(false);
+        }
+        self.put_block_at_forced(hashes, block_idx, kv_values, now_epoch, target_epoch)
+    }
+
+    /// Like [`Self::put_block_at`] but stores even when the index already
+    /// knows the block — the prefetcher uses this to *re-place* a block
+    /// for a different epoch's LOS window.
+    pub fn put_block_at_forced(
+        &self,
+        hashes: &[BlockHash],
+        block_idx: usize,
+        kv_values: &[f32],
+        now_epoch: u64,
+        target_epoch: u64,
+    ) -> Result<bool> {
+        let block = hashes[block_idx];
+        let payload = self.config.quantizer.encode(kv_values);
+        let n_chunks = chunk_count(payload.len(), self.config.chunk_size) as u32;
+        let header = encode_chunk_header(
+            self.config.quantizer.id(),
+            n_chunks,
+            payload.len() as u32,
+            target_epoch,
+        );
+        let chunks = split_chunks(&payload, self.config.chunk_size);
+        // map each chunk to its satellite under the *target* epoch layout
+        let write_center = if target_epoch >= now_epoch {
+            // future (or present) centre is west of the current one
+            let delta = (target_epoch - now_epoch) as i32;
+            self.torus.offset(self.transport.closest(), 0, -delta)
+        } else {
+            self.write_center_for_epoch(target_epoch, now_epoch)
+        };
+        let layout = self.config.strategy.initial_layout(&self.torus, write_center, self.config.n_servers);
+        // §3.1: "this allows for parallelism both in setting and getting".
+        // Chunks are striped over at most MAX_FANOUT worker threads (one
+        // thread per chunk costs more in spawns than it saves at in-proc
+        // latencies; see EXPERIMENTS.md §Perf).
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let n_workers = chunks.len().min(MAX_FANOUT).max(1);
+            let mut handles = Vec::with_capacity(n_workers);
+            for w in 0..n_workers {
+                let chunks = &chunks;
+                let layout = &layout;
+                let transport = &self.transport;
+                let n_servers = self.config.n_servers;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let mut i = w;
+                    while i < chunks.len() {
+                        let dest = layout[i % n_servers];
+                        let key = ChunkKey::new(block, i as u32);
+                        let mut data = Vec::with_capacity(CHUNK_HEADER_LEN + chunks[i].len());
+                        data.extend_from_slice(&header);
+                        data.extend_from_slice(chunks[i]);
+                        transport.set_chunk(dest, key, data)?;
+                        i += n_workers;
+                    }
+                    Ok(())
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            r?;
+        }
+        self.stats.blocks_stored.fetch_add(1, Ordering::Relaxed);
+        if let Some(local) = &self.local {
+            // write-through into the fast tier (values are what the
+            // engine will ask for on the next hit)
+            local.put(block, kv_values.to_vec());
+        }
+        self.stats.chunks_stored.fetch_add(n_chunks as u64, Ordering::Relaxed);
+        self.stats.bytes_stored.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        if self.config.use_radix_index {
+            self.index.lock().unwrap().insert(
+                &hashes[..=block_idx],
+                BlockMeta {
+                    num_chunks: n_chunks,
+                    kvc_len: payload.len() as u32,
+                    write_epoch: target_epoch,
+                    quantizer_id: self.config.quantizer.id(),
+                },
+            );
+        }
+        Ok(true)
+    }
+
+    // ------------------------------------------------------------ GET ---
+
+    /// Longest cached prefix (in blocks) of `hashes`.
+    pub fn lookup(&self, hashes: &[BlockHash], now_epoch: u64) -> Option<(usize, BlockMeta)> {
+        self.stats.lookups.fetch_add(1, Ordering::Relaxed);
+        let hit = if self.config.use_radix_index {
+            self.index.lock().unwrap().longest_cached_prefix(hashes)
+        } else {
+            self.distributed_lookup(hashes, now_epoch)
+        };
+        if hit.is_some() {
+            self.stats.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// §3.8 steps 3-6: binary search the hash list for the deepest cached
+    /// block, probing the constellation (no local state).
+    fn distributed_lookup(&self, hashes: &[BlockHash], now_epoch: u64) -> Option<(usize, BlockMeta)> {
+        let mut lo = 0usize; // count of blocks known cached
+        let mut hi = hashes.len(); // first count known NOT (exclusive)
+        let mut best: Option<(usize, BlockMeta)> = None;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2; // probe prefix of `mid` blocks
+            match self.probe_block(hashes[mid - 1], now_epoch) {
+                Some(meta) => {
+                    best = Some((mid, meta));
+                    lo = mid;
+                }
+                None => hi = mid - 1,
+            }
+        }
+        best
+    }
+
+    /// Probe for a block without local state (§3.8 step 8): ask the
+    /// nearest satellite which chunks it holds; "based on that the shift
+    /// from left to right in the chunk-to-server mapping is found".
+    ///
+    /// Because migration cycles the layout pattern *horizontally* within
+    /// its box, server 1 (and with it chunk 0) always sits somewhere on
+    /// the centre row — so when the nearest satellite holds nothing (fewer
+    /// chunks than servers), the probe walks the centre row outward, at
+    /// most `box_width` cheap Query round-trips.
+    fn probe_block(&self, block: BlockHash, now_epoch: u64) -> Option<BlockMeta> {
+        let center = self.transport.closest();
+        let half = (box_width(self.config.n_servers) as i32 - 1) / 2;
+        // centre first, then alternating east/west along the centre row
+        let mut offsets = vec![0i32];
+        for d in 1..=half {
+            offsets.push(d);
+            offsets.push(-d);
+        }
+        let _ = now_epoch;
+        for ds in offsets {
+            let sat = self.torus.offset(center, 0, ds);
+            let Ok(resp) = self.transport.request(sat, Request::Query { block }) else {
+                continue;
+            };
+            let Response::QueryOk { chunk_ids } = resp else { continue };
+            let Some(first) = chunk_ids.first().copied() else { continue };
+            // fetch that chunk to read the self-describing header
+            let data = self.transport.get_chunk(sat, ChunkKey::new(block, first)).ok()??;
+            let (qid, num_chunks, kvc_len, write_epoch) = decode_chunk_header(&data).ok()?;
+            return Some(BlockMeta { num_chunks, kvc_len, write_epoch, quantizer_id: qid });
+        }
+        None
+    }
+
+    /// Fetch the KV bytes of blocks `0..blocks` (all previously reported
+    /// cached) in parallel; returns the dequantized values per block.
+    /// Blocks that come back broken truncate the prefix (and are evicted
+    /// per policy).
+    pub fn fetch_prefix(
+        &self,
+        hashes: &[BlockHash],
+        blocks: usize,
+        now_epoch: u64,
+    ) -> Result<PrefixFetch> {
+        let mut kv_blocks = Vec::with_capacity(blocks);
+        for b in 0..blocks {
+            match self.fetch_block(hashes, b, now_epoch)? {
+                Some(kv) => kv_blocks.push(kv),
+                None => break, // truncated prefix
+            }
+        }
+        let got = kv_blocks.len();
+        Ok(PrefixFetch { blocks: got, kv_blocks })
+    }
+
+    /// Fetch one block's KV values; `None` if any chunk is missing.
+    pub fn fetch_block(
+        &self,
+        hashes: &[BlockHash],
+        block_idx: usize,
+        now_epoch: u64,
+    ) -> Result<Option<Vec<f32>>> {
+        let block = hashes[block_idx];
+        // fast-RAM tier first (§2 memory hierarchy)
+        if let Some(local) = &self.local {
+            if let Some(values) = local.get(&block) {
+                return Ok(Some(values));
+            }
+        }
+        let meta = if self.config.use_radix_index {
+            match self.index.lock().unwrap().get(&hashes[..=block_idx]) {
+                Some(m) => *m,
+                None => return Ok(None),
+            }
+        } else {
+            match self.probe_block(block, now_epoch) {
+                Some(m) => m,
+                None => return Ok(None),
+            }
+        };
+        let quantizer = Quantizer::from_id(
+            meta.quantizer_id,
+            match self.config.quantizer {
+                Quantizer::QuantoInt8 { group } | Quantizer::HqqInt8 { group } => group,
+                Quantizer::F32 => 32,
+            },
+        )
+        .ok_or_else(|| anyhow::anyhow!("unknown quantizer id {}", meta.quantizer_id))?;
+        // parallel chunk fan-out (§3.8 step 8: "all chunks can be queried
+        // in parallel"), striped over at most MAX_FANOUT threads; the
+        // current layout is computed once, not per chunk
+        let n_chunks = meta.num_chunks as usize;
+        let write_center = self.write_center_for_epoch(meta.write_epoch, now_epoch);
+        let layout = self.config.strategy.layout_at(
+            &self.torus,
+            write_center,
+            self.config.n_servers,
+            now_epoch - meta.write_epoch,
+        );
+        let n_workers = n_chunks.min(MAX_FANOUT).max(1);
+        let mut fetched: Vec<Option<Vec<u8>>> = vec![None; n_chunks];
+        let stripes: Vec<Vec<(usize, Option<Vec<u8>>)>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_workers);
+            for w in 0..n_workers {
+                let layout = &layout;
+                let transport = &self.transport;
+                let n_servers = self.config.n_servers;
+                handles.push(scope.spawn(move || {
+                    (w..n_chunks)
+                        .step_by(n_workers)
+                        .map(|i| {
+                            let dest = layout[i % n_servers];
+                            let key = ChunkKey::new(block, i as u32);
+                            (i, transport.get_chunk(dest, key).ok().flatten())
+                        })
+                        .collect()
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for stripe in stripes {
+            for (i, data) in stripe {
+                fetched[i] = data;
+            }
+        }
+        // strip headers, verify, reassemble
+        let mut payload = Vec::with_capacity(meta.kvc_len as usize);
+        let mut broken = false;
+        for part in &fetched {
+            match part {
+                Some(data) if data.len() > CHUNK_HEADER_LEN => {
+                    payload.extend_from_slice(&data[CHUNK_HEADER_LEN..])
+                }
+                _ => {
+                    broken = true;
+                    break;
+                }
+            }
+        }
+        if broken || payload.len() != meta.kvc_len as usize {
+            self.stats.broken_blocks.fetch_add(1, Ordering::Relaxed);
+            self.handle_broken_block(hashes, block_idx, &meta, now_epoch);
+            return Ok(None);
+        }
+        self.stats.blocks_fetched.fetch_add(1, Ordering::Relaxed);
+        self.stats.chunks_fetched.fetch_add(meta.num_chunks as u64, Ordering::Relaxed);
+        self.stats.bytes_fetched.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        let values = quantizer.decode(&payload)?;
+        if let Some(local) = &self.local {
+            local.put(block, values.clone());
+        }
+        Ok(Some(values))
+    }
+
+    /// §3.9 lazy eviction: "the lookup client will issue evictions when
+    /// chunks in a block are discovered to be missing."
+    fn handle_broken_block(&self, hashes: &[BlockHash], block_idx: usize, meta: &BlockMeta, now_epoch: u64) {
+        if let Some(local) = &self.local {
+            for h in &hashes[block_idx..] {
+                local.invalidate(h);
+            }
+        }
+        if self.config.use_radix_index {
+            // drop this prefix and every deeper one we know about
+            let mut index = self.index.lock().unwrap();
+            for end in block_idx..hashes.len() {
+                index.remove(&hashes[..=end]);
+            }
+        }
+        if self.config.eviction != EvictionPolicy::PeriodicScrub {
+            // tell the surviving replicas to drop their chunks
+            let block = hashes[block_idx];
+            for server in 0..self.config.n_servers.min(meta.num_chunks as usize) {
+                let sat = self.server_satellite(server, meta.write_epoch, now_epoch);
+                let _ = self.transport.request(
+                    sat,
+                    Request::Evict { block, gossip_ttl: 0 },
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------ ROTATION ----
+
+    /// The Migrate requests for one rotation epoch of this manager's
+    /// layout box (§3.4): each satellite of the exiting east column hands
+    /// its chunks to the entering west column, per plane.
+    pub fn migration_requests(&self, now_epoch: u64) -> Vec<(SatId, SatId)> {
+        if !self.config.strategy.migrates() {
+            return vec![];
+        }
+        let w = box_width(self.config.n_servers) as i32;
+        let half = (w - 1) / 2;
+        let old_center = self.transport.closest();
+        let new_center = self.torus.offset(old_center, 0, -1);
+        let _ = now_epoch;
+        let mut out = Vec::new();
+        for dp in -half..=half {
+            let from = self.torus.offset(old_center, dp, half);
+            let to = self.torus.offset(new_center, dp, -half);
+            out.push((from, to));
+        }
+        out
+    }
+
+    /// Advance one epoch: issue the migrations, then move the ground view.
+    pub fn advance_epoch(&self, now_epoch: u64) -> Result<u32> {
+        let reqs = self.migration_requests(now_epoch);
+        let mut moved = 0;
+        for (from, to) in reqs {
+            moved += self.transport.migrate(from, to)?;
+        }
+        self.transport.set_epoch(now_epoch + 1);
+        Ok(moved)
+    }
+
+    /// Number of chunks a block of `n_values` f32s will produce.
+    pub fn chunks_for_values(&self, n_values: usize) -> usize {
+        chunk_count(self.config.quantizer.encoded_len(n_values), self.config.chunk_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::los::LosGrid;
+    use crate::kvc::block::block_hashes;
+    use crate::net::transport::{GroundView, InProcTransport};
+    use crate::satellite::fleet::Fleet;
+    use crate::util::rng::XorShift64;
+
+    fn setup(config: KvcConfig) -> (Arc<Fleet>, KvcManager) {
+        let torus = Torus::new(15, 15);
+        let fleet = Arc::new(Fleet::new(torus, 10 << 20, config.eviction));
+        let center = SatId::new(7, 7);
+        let ground = GroundView::new(center, &LosGrid::new(center, 2, 2), torus.sats_per_plane);
+        let transport = Arc::new(InProcTransport::new(fleet.clone(), ground, None));
+        let manager = KvcManager::new(config, torus, transport);
+        (fleet, manager)
+    }
+
+    fn values(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect()
+    }
+
+    fn default_config() -> KvcConfig {
+        KvcConfig { n_servers: 9, chunk_size: 600, ..KvcConfig::default() }
+    }
+
+    #[test]
+    fn put_then_fetch_roundtrip() {
+        let (_fleet, m) = setup(default_config());
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let kv = values(2048, 1);
+        assert!(m.put_block(&hashes, 0, &kv, 0).unwrap());
+        // idempotent: second put is a no-op
+        assert!(!m.put_block(&hashes, 0, &kv, 0).unwrap());
+        let (blocks, meta) = m.lookup(&hashes, 0).unwrap();
+        assert_eq!(blocks, 1);
+        assert_eq!(meta.num_chunks as usize, m.chunks_for_values(2048));
+        let fetched = m.fetch_block(&hashes, 0, 0).unwrap().unwrap();
+        assert_eq!(fetched.len(), kv.len());
+        // int8 quantization error bound
+        let max_err = kv.iter().zip(&fetched).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_err < 0.05, "max_err={max_err}");
+    }
+
+    #[test]
+    fn prefix_fetch_multiple_blocks() {
+        let (_fleet, m) = setup(default_config());
+        let tokens: Vec<i32> = (0..128).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        let (blocks, _) = m.lookup(&hashes, 0).unwrap();
+        assert_eq!(blocks, 3);
+        let fetch = m.fetch_prefix(&hashes, blocks, 0).unwrap();
+        assert_eq!(fetch.blocks, 3);
+        assert_eq!(fetch.kv_blocks.len(), 3);
+    }
+
+    #[test]
+    fn distributed_lookup_matches_radix() {
+        let mut cfg = default_config();
+        let (_fleet, m) = setup(cfg);
+        let tokens: Vec<i32> = (0..160).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        // same manager, index disabled -> distributed binary search
+        cfg.use_radix_index = false;
+        let m2 = KvcManager::new(cfg, m.torus, m.transport.clone());
+        let (blocks, meta) = m2.lookup(&hashes, 0).unwrap();
+        assert_eq!(blocks, 3);
+        assert_eq!(meta.num_chunks as usize, m.chunks_for_values(2048));
+        // and it can fetch without any local state
+        let fetch = m2.fetch_prefix(&hashes, blocks, 0).unwrap();
+        assert_eq!(fetch.blocks, 3);
+    }
+
+    #[test]
+    fn diverging_prompt_hits_common_prefix_only() {
+        let (_fleet, m) = setup(default_config());
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        let mut tokens2 = tokens.clone();
+        tokens2[40] = 999; // diverge inside block 1
+        let hashes2 = block_hashes(&tokens2, 32);
+        let (blocks, _) = m.lookup(&hashes2, 0).unwrap();
+        assert_eq!(blocks, 1);
+    }
+
+    #[test]
+    fn migration_preserves_fetchability() {
+        let (fleet, m) = setup(default_config());
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let kv = values(2048, 9);
+        m.put_block(&hashes, 0, &kv, 0).unwrap();
+        // rotate one epoch: migrate, then the ground view moves
+        let moved = m.advance_epoch(0).unwrap();
+        assert!(moved > 0, "east column should hand over chunks");
+        assert_eq!(fleet.total_chunks() as u32, m.lookup(&hashes, 1).unwrap().1.num_chunks);
+        let fetched = m.fetch_block(&hashes, 0, 1).unwrap().unwrap();
+        assert_eq!(fetched.len(), kv.len());
+        // two more epochs
+        m.advance_epoch(1).unwrap();
+        m.advance_epoch(2).unwrap();
+        assert!(m.fetch_block(&hashes, 0, 3).unwrap().is_some());
+    }
+
+    #[test]
+    fn broken_block_truncates_prefix_and_lazy_evicts() {
+        let (fleet, m) = setup(KvcConfig { eviction: EvictionPolicy::Lazy, ..default_config() });
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        // sabotage: evict block 1's chunks directly on the satellites
+        for node in fleet.nodes() {
+            node_evict(node, hashes[1]);
+        }
+        let fetch = m.fetch_prefix(&hashes, 3, 0).unwrap();
+        assert_eq!(fetch.blocks, 1, "prefix truncates at the broken block");
+        assert_eq!(m.stats.broken_blocks.load(Ordering::Relaxed), 1);
+        // lazy eviction purged the index for blocks 1 and 2
+        let (blocks, _) = m.lookup(&hashes, 0).unwrap();
+        assert_eq!(blocks, 1);
+    }
+
+    fn node_evict(node: &Arc<crate::satellite::node::Node>, block: BlockHash) {
+        use crate::net::messages::Envelope;
+        let torus = Torus::new(15, 15);
+        let env = Envelope::new(node.id, 0);
+        node.handle(&torus, &env, &Request::Evict { block, gossip_ttl: 0 });
+    }
+
+    #[test]
+    fn predictive_placement_hits_at_future_epoch() {
+        let (_fleet, m) = setup(default_config());
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let kv = values(2048, 5);
+        // place for epoch 3 while we are at epoch 0
+        m.put_block_at(&hashes, 0, &kv, 0, 3).unwrap();
+        // jump the ground view to epoch 3 (satellites did not migrate
+        // because the block was pre-placed for that epoch)
+        m.transport.set_epoch(3);
+        let fetched = m.fetch_block(&hashes, 0, 3).unwrap().unwrap();
+        assert_eq!(fetched.len(), kv.len());
+        // every chunk was a direct-LOS access (entry == dest): hop count 0
+        // for the fetches of this block is not directly observable here,
+        // but fetch success at the future epoch is the §3.7 property.
+    }
+
+    #[test]
+    fn local_tier_short_circuits_the_constellation() {
+        let (_fleet, base) = setup(default_config());
+        let m = KvcManager::new(base.config, base.torus, base.transport.clone())
+            .with_local_tier(1 << 20);
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let kv = values(2048, 3);
+        m.put_block(&hashes, 0, &kv, 0).unwrap();
+        let before = m.transport().stats().requests.load(Ordering::Relaxed);
+        // served from RAM: no new transport requests
+        let fetched = m.fetch_block(&hashes, 0, 0).unwrap().unwrap();
+        assert_eq!(fetched, kv, "local tier stores decoded values exactly");
+        assert_eq!(m.transport().stats().requests.load(Ordering::Relaxed), before);
+        assert_eq!(m.local_tier().unwrap().stats.hits.load(Ordering::Relaxed), 1);
+        // invalidate -> falls back to the constellation (quantized copy)
+        m.local_tier().unwrap().invalidate(&hashes[0]);
+        let fetched2 = m.fetch_block(&hashes, 0, 0).unwrap().unwrap();
+        assert!(m.transport().stats().requests.load(Ordering::Relaxed) > before);
+        let max_err = kv.iter().zip(&fetched2).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_err < 0.05);
+        // ... and the miss refilled the tier
+        assert_eq!(m.local_tier().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn f32_and_hqq_quantizers_roundtrip() {
+        for q in [Quantizer::F32, Quantizer::HqqInt8 { group: 32 }] {
+            let (_fleet, m) = setup(KvcConfig { quantizer: q, ..default_config() });
+            let tokens: Vec<i32> = (0..32).collect();
+            let hashes = block_hashes(&tokens, 32);
+            let kv = values(1024, 11);
+            m.put_block(&hashes, 0, &kv, 0).unwrap();
+            let fetched = m.fetch_block(&hashes, 0, 0).unwrap().unwrap();
+            let max_err = kv.iter().zip(&fetched).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+            let bound = if q == Quantizer::F32 { 1e-9 } else { 0.05 };
+            assert!(max_err < bound, "{}: {max_err}", q.name());
+        }
+    }
+}

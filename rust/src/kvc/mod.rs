@@ -1,0 +1,22 @@
+//! The SkyMemory KVC protocol (paper §3): chained block hashing, chunking,
+//! quantization codecs, the local radix block index, eviction policies and
+//! the Get/Set manager.
+//!
+//! Layering: [`hash`]/[`block`]/[`chunk`]/[`quantize`] are pure codecs,
+//! [`radix`] is the §3.10 local index, [`eviction`] the §3.9 policies, and
+//! [`manager::KvcManager`] drives the §3.8 protocol over a
+//! [`crate::net::transport::Transport`].
+
+pub mod block;
+pub mod chunk;
+pub mod eviction;
+pub mod hash;
+pub mod manager;
+pub mod quantize;
+pub mod radix;
+pub mod tiered;
+
+pub use block::{block_hashes, BlockHash};
+pub use chunk::{split_chunks, ChunkKey};
+pub use manager::KvcManager;
+pub use quantize::Quantizer;

@@ -1,0 +1,327 @@
+//! KVC quantization codecs (§3.3: "The KVC can be implemented to be memory
+//! efficient by trading off accuracy using various quantization
+//! techniques"; §5 / Table 3 contrast an Optimum-Quanto 8-bit and an HQQ
+//! quantizer).
+//!
+//! We implement the two same-shaped codecs from scratch:
+//!
+//! * [`Quantizer::QuantoInt8`] — symmetric per-group int8 (scale only),
+//!   like optimum-quanto's weight/activation int8 path: fast, 4x smaller.
+//! * [`Quantizer::HqqInt8`] — asymmetric per-group int8 (scale +
+//!   zero-point, chosen by a few half-quadratic-style refinement sweeps),
+//!   like HQQ: slightly better reconstruction, more encode compute —
+//!   reproducing Table 3's "HQQ is slower end-to-end" behaviour.
+//!
+//! Groups are `group` consecutive f32s (the serving engine uses the head
+//! dimension), each stored as little-endian metadata followed by the
+//! quantized payload.
+
+use anyhow::{bail, Result};
+
+/// KVC value codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quantizer {
+    /// Raw little-endian f32 (no compression).
+    F32,
+    /// Symmetric per-group int8: `group` f32s -> 4-byte scale + `group` i8.
+    QuantoInt8 { group: usize },
+    /// Asymmetric per-group int8: scale + zero-point + `group` u8.
+    HqqInt8 { group: usize },
+}
+
+impl Quantizer {
+    /// Wire id (used by net::messages and the HTTP API).
+    pub fn id(&self) -> u8 {
+        match self {
+            Quantizer::F32 => 0,
+            Quantizer::QuantoInt8 { .. } => 1,
+            Quantizer::HqqInt8 { .. } => 2,
+        }
+    }
+
+    pub fn from_id(id: u8, group: usize) -> Option<Self> {
+        match id {
+            0 => Some(Quantizer::F32),
+            1 => Some(Quantizer::QuantoInt8 { group }),
+            2 => Some(Quantizer::HqqInt8 { group }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Quantizer::F32 => "f32",
+            Quantizer::QuantoInt8 { .. } => "quanto-int8",
+            Quantizer::HqqInt8 { .. } => "hqq-int8",
+        }
+    }
+
+    /// Encoded size for `n` f32 values.
+    pub fn encoded_len(&self, n: usize) -> usize {
+        match self {
+            Quantizer::F32 => 4 * n,
+            Quantizer::QuantoInt8 { group } => {
+                assert_eq!(n % group, 0);
+                (n / group) * (4 + group)
+            }
+            Quantizer::HqqInt8 { group } => {
+                assert_eq!(n % group, 0);
+                (n / group) * (8 + group)
+            }
+        }
+    }
+
+    pub fn encode(&self, values: &[f32]) -> Vec<u8> {
+        match self {
+            Quantizer::F32 => {
+                let mut out = Vec::with_capacity(4 * values.len());
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            Quantizer::QuantoInt8 { group } => {
+                assert!(*group > 0 && values.len() % group == 0, "len % group != 0");
+                let mut out = Vec::with_capacity(self.encoded_len(values.len()));
+                for g in values.chunks_exact(*group) {
+                    let amax = g.iter().fold(0f32, |m, v| m.max(v.abs()));
+                    let scale = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+                    // multiply by the inverse instead of dividing per
+                    // element (§Perf: ~1.6x on the encode hot path); the
+                    // amax/127 bound keeps |v * inv| <= 127 so the clamp
+                    // only guards the rounding edge
+                    let inv = 1.0 / scale;
+                    out.extend_from_slice(&scale.to_le_bytes());
+                    out.extend(g.iter().map(|v| {
+                        (v * inv).round().clamp(-127.0, 127.0) as i8 as u8
+                    }));
+                }
+                out
+            }
+            Quantizer::HqqInt8 { group } => {
+                assert!(*group > 0 && values.len() % group == 0, "len % group != 0");
+                let mut out = Vec::with_capacity(self.encoded_len(values.len()));
+                for g in values.chunks_exact(*group) {
+                    let (scale, zero) = hqq_fit(g);
+                    out.extend_from_slice(&scale.to_le_bytes());
+                    out.extend_from_slice(&zero.to_le_bytes());
+                    for v in g {
+                        out.push((v / scale + zero).round().clamp(0.0, 255.0) as u8);
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    pub fn decode(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        match self {
+            Quantizer::F32 => {
+                if bytes.len() % 4 != 0 {
+                    bail!("f32 payload length {} not a multiple of 4", bytes.len());
+                }
+                Ok(bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect())
+            }
+            Quantizer::QuantoInt8 { group } => {
+                let rec = 4 + group;
+                if bytes.len() % rec != 0 {
+                    bail!("quanto payload length {} not a multiple of {rec}", bytes.len());
+                }
+                let mut out = Vec::with_capacity((bytes.len() / rec) * group);
+                for r in bytes.chunks_exact(rec) {
+                    let scale = f32::from_le_bytes(r[..4].try_into().unwrap());
+                    for b in &r[4..] {
+                        out.push((*b as i8) as f32 * scale);
+                    }
+                }
+                Ok(out)
+            }
+            Quantizer::HqqInt8 { group } => {
+                let rec = 8 + group;
+                if bytes.len() % rec != 0 {
+                    bail!("hqq payload length {} not a multiple of {rec}", bytes.len());
+                }
+                let mut out = Vec::with_capacity((bytes.len() / rec) * group);
+                for r in bytes.chunks_exact(rec) {
+                    let scale = f32::from_le_bytes(r[..4].try_into().unwrap());
+                    let zero = f32::from_le_bytes(r[4..8].try_into().unwrap());
+                    for b in &r[8..] {
+                        out.push((*b as f32 - zero) * scale);
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Fit (scale, zero_point) for asymmetric u8 quantization with a few
+/// half-quadratic refinement sweeps (a scalar-prox flavour of HQQ: after
+/// the min/max init, alternate between re-quantizing and re-fitting scale
+/// and zero to minimize the l2 reconstruction error).
+fn hqq_fit(g: &[f32]) -> (f32, f32) {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for v in g {
+        lo = lo.min(*v);
+        hi = hi.max(*v);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return (1.0, 0.0);
+    }
+    if hi - lo < 1e-12 {
+        // constant group: encode exactly via the zero point
+        return (1.0, 128.0 - lo);
+    }
+    let mut scale = (hi - lo) / 255.0;
+    let mut zero = -lo / scale;
+    // refinement sweeps (this extra work is HQQ's encode-time cost)
+    for _ in 0..3 {
+        // quantize with current params
+        let q: Vec<f32> = g
+            .iter()
+            .map(|v| (v / scale + zero).round().clamp(0.0, 255.0))
+            .collect();
+        // re-fit scale, zero by least squares of v ~ scale*(q - zero)
+        let n = g.len() as f32;
+        let mean_q = q.iter().sum::<f32>() / n;
+        let mean_v = g.iter().sum::<f32>() / n;
+        let mut cov = 0f32;
+        let mut var = 0f32;
+        for (v, qq) in g.iter().zip(q.iter()) {
+            cov += (qq - mean_q) * (v - mean_v);
+            var += (qq - mean_q) * (qq - mean_q);
+        }
+        if var > 1e-12 && cov.abs() > 1e-12 {
+            scale = cov / var;
+            zero = mean_q - mean_v / scale;
+        }
+    }
+    (scale.max(1e-12), zero)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShift64::new(seed);
+        (0..n)
+            .map(|_| {
+                // Box-Muller-ish via sum of uniforms (Irwin–Hall), plenty
+                // Gaussian for codec testing
+                let s: f64 = (0..12).map(|_| rng.next_f64()).sum::<f64>() - 6.0;
+                s as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let v = randn(256, 1);
+        let q = Quantizer::F32;
+        assert_eq!(q.decode(&q.encode(&v)).unwrap(), v);
+        assert_eq!(q.encode(&v).len(), q.encoded_len(v.len()));
+    }
+
+    #[test]
+    fn quanto_roundtrip_accurate() {
+        let v = randn(32 * 64, 2);
+        let q = Quantizer::QuantoInt8 { group: 32 };
+        let enc = q.encode(&v);
+        assert_eq!(enc.len(), q.encoded_len(v.len()));
+        let dec = q.decode(&enc).unwrap();
+        let max_err = v
+            .iter()
+            .zip(&dec)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        let amax = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+        assert!(max_err <= amax / 127.0 + 1e-6, "max_err={max_err}");
+    }
+
+    #[test]
+    fn hqq_roundtrip_accurate_and_beats_or_matches_quanto_on_shifted_data() {
+        // asymmetric data is where zero-points pay off
+        let v: Vec<f32> = randn(32 * 64, 3).iter().map(|x| x + 5.0).collect();
+        let hqq = Quantizer::HqqInt8 { group: 32 };
+        let quanto = Quantizer::QuantoInt8 { group: 32 };
+        let mse = |q: &Quantizer| {
+            let dec = q.decode(&q.encode(&v)).unwrap();
+            v.iter().zip(&dec).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / v.len() as f32
+        };
+        let (eh, eq) = (mse(&hqq), mse(&quanto));
+        assert!(eh <= eq, "hqq {eh} should beat quanto {eq} on shifted data");
+        assert!(eh < 1e-2);
+    }
+
+    #[test]
+    fn compression_ratios() {
+        let n = 1024;
+        assert_eq!(Quantizer::F32.encoded_len(n), 4096);
+        // quanto: ~3.56x smaller at group 32
+        assert_eq!(Quantizer::QuantoInt8 { group: 32 }.encoded_len(n), 32 * 36);
+        // hqq: slightly larger metadata
+        assert_eq!(Quantizer::HqqInt8 { group: 32 }.encoded_len(n), 32 * 40);
+    }
+
+    #[test]
+    fn constant_and_zero_groups() {
+        for q in [
+            Quantizer::QuantoInt8 { group: 8 },
+            Quantizer::HqqInt8 { group: 8 },
+        ] {
+            let zeros = vec![0f32; 16];
+            let dec = q.decode(&q.encode(&zeros)).unwrap();
+            assert!(dec.iter().all(|v| v.abs() < 1e-6), "{:?}", q);
+            let consts = vec![3.5f32; 16];
+            let dec = q.decode(&q.encode(&consts)).unwrap();
+            for v in dec {
+                assert!((v - 3.5).abs() < 0.05, "{:?}: {v}", q);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_id_roundtrip() {
+        for q in [
+            Quantizer::F32,
+            Quantizer::QuantoInt8 { group: 32 },
+            Quantizer::HqqInt8 { group: 32 },
+        ] {
+            assert_eq!(Quantizer::from_id(q.id(), 32), Some(q));
+        }
+        assert_eq!(Quantizer::from_id(9, 32), None);
+    }
+
+    #[test]
+    fn corrupt_lengths_error() {
+        let q = Quantizer::QuantoInt8 { group: 32 };
+        assert!(q.decode(&[0u8; 35]).is_err());
+        assert!(Quantizer::F32.decode(&[0u8; 3]).is_err());
+        assert!(Quantizer::HqqInt8 { group: 32 }.decode(&[0u8; 41]).is_err());
+    }
+
+    #[test]
+    fn hqq_encode_slower_than_quanto() {
+        // Table 3's behaviour: the fancier quantizer costs more encode
+        // time.  Compare instruction-proxy: we just assert both complete
+        // and hqq does >= the work (3 refinement sweeps); timing is
+        // covered by the hotpath bench.
+        let v = randn(32 * 256, 4);
+        let t0 = std::time::Instant::now();
+        for _ in 0..20 {
+            Quantizer::QuantoInt8 { group: 32 }.encode(&v);
+        }
+        let tq = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        for _ in 0..20 {
+            Quantizer::HqqInt8 { group: 32 }.encode(&v);
+        }
+        let th = t0.elapsed();
+        assert!(th >= tq / 2, "hqq {th:?} vs quanto {tq:?}");
+    }
+}

@@ -1,0 +1,410 @@
+//! Local radix block index (§3.10).
+//!
+//! A compressed radix tree (patricia trie) over byte strings, built from
+//! scratch.  The KVC manager keys it with the concatenation of a prompt's
+//! chained block hashes, so a single longest-prefix walk answers "which is
+//! the deepest block already cached?" without touching the constellation
+//! (replacing the §3.8 distributed binary search), and the stored metadata
+//! (chunk count, write epoch, write centre) lets the client *compute*
+//! every chunk's current satellite (Fig. 10/11).
+
+/// Metadata stored per indexed block (§3.10: "total number of chunks and
+/// the time of setting the value").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockMeta {
+    /// Number of chunks the block's KVC was split into.
+    pub num_chunks: u32,
+    /// Total KVC byte length (for reassembly checks).
+    pub kvc_len: u32,
+    /// Rotation epoch at write time.
+    pub write_epoch: u64,
+    /// Quantizer wire id the payload was encoded with.
+    pub quantizer_id: u8,
+}
+
+struct Node<V> {
+    /// Compressed edge label from the parent.
+    label: Vec<u8>,
+    value: Option<V>,
+    children: Vec<Node<V>>,
+}
+
+impl<V> Node<V> {
+    fn new(label: Vec<u8>) -> Self {
+        Self { label, value: None, children: Vec::new() }
+    }
+
+    fn child_starting_with(&self, b: u8) -> Option<usize> {
+        self.children.iter().position(|c| c.label.first() == Some(&b))
+    }
+}
+
+/// A compressed radix tree mapping byte strings to values.
+pub struct RadixTree<V> {
+    root: Node<V>,
+    len: usize,
+}
+
+impl<V> Default for RadixTree<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn common_prefix(a: &[u8], b: &[u8]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+impl<V> RadixTree<V> {
+    pub fn new() -> Self {
+        Self { root: Node::new(Vec::new()), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert `key -> value`; returns the previous value if any.
+    pub fn insert(&mut self, key: &[u8], value: V) -> Option<V> {
+        let (node, inserted) = Self::insert_at(&mut self.root, key, value);
+        if inserted {
+            self.len += 1;
+        }
+        node
+    }
+
+    fn insert_at(node: &mut Node<V>, key: &[u8], value: V) -> (Option<V>, bool) {
+        if key.is_empty() {
+            let prev = node.value.replace(value);
+            let inserted = prev.is_none();
+            return (prev, inserted);
+        }
+        if let Some(i) = node.child_starting_with(key[0]) {
+            let child = &mut node.children[i];
+            let cp = common_prefix(&child.label, key);
+            if cp == child.label.len() {
+                // descend
+                return Self::insert_at(child, &key[cp..], value);
+            }
+            // split the edge
+            let new_child = Node::new(child.label[..cp].to_vec());
+            let mut old = std::mem::replace(child, new_child);
+            old.label = old.label[cp..].to_vec();
+            child.children.push(old);
+            if cp == key.len() {
+                child.value = Some(value);
+                return (None, true);
+            }
+            let mut leaf = Node::new(key[cp..].to_vec());
+            leaf.value = Some(value);
+            child.children.push(leaf);
+            (None, true)
+        } else {
+            let mut leaf = Node::new(key.to_vec());
+            leaf.value = Some(value);
+            node.children.push(leaf);
+            (None, true)
+        }
+    }
+
+    /// Exact lookup.
+    pub fn get(&self, key: &[u8]) -> Option<&V> {
+        let mut node = &self.root;
+        let mut rest = key;
+        loop {
+            if rest.is_empty() {
+                return node.value.as_ref();
+            }
+            let i = node.child_starting_with(rest[0])?;
+            let child = &node.children[i];
+            if rest.len() < child.label.len() || !rest.starts_with(&child.label) {
+                return None;
+            }
+            rest = &rest[child.label.len()..];
+            node = child;
+        }
+    }
+
+    /// Remove a key; returns its value.
+    pub fn remove(&mut self, key: &[u8]) -> Option<V> {
+        let removed = Self::remove_at(&mut self.root, key);
+        if removed.is_some() {
+            self.len -= 1;
+        }
+        removed
+    }
+
+    fn remove_at(node: &mut Node<V>, key: &[u8]) -> Option<V> {
+        if key.is_empty() {
+            return node.value.take();
+        }
+        let i = node.child_starting_with(key[0])?;
+        let child = &mut node.children[i];
+        if key.len() < child.label.len() || !key.starts_with(&child.label) {
+            return None;
+        }
+        let suffix = &key[child.label.len()..];
+        let out = Self::remove_at(child, suffix)?;
+        // prune / merge
+        if child.value.is_none() && child.children.is_empty() {
+            node.children.swap_remove(i);
+        } else if child.value.is_none() && child.children.len() == 1 {
+            let mut grand = child.children.pop().unwrap();
+            let mut label = std::mem::take(&mut child.label);
+            label.extend_from_slice(&grand.label);
+            grand.label = label;
+            node.children[i] = grand;
+        }
+        Some(out)
+    }
+
+    /// Longest prefix of `key` (at any byte boundary) that holds a value;
+    /// returns (prefix_len_bytes, value).
+    pub fn longest_prefix(&self, key: &[u8]) -> Option<(usize, &V)> {
+        let mut node = &self.root;
+        let mut consumed = 0;
+        let mut best: Option<(usize, &V)> = node.value.as_ref().map(|v| (0, v));
+        let mut rest = key;
+        while !rest.is_empty() {
+            let Some(i) = node.child_starting_with(rest[0]) else { break };
+            let child = &node.children[i];
+            if rest.len() < child.label.len() || !rest.starts_with(&child.label) {
+                break;
+            }
+            consumed += child.label.len();
+            rest = &rest[child.label.len()..];
+            node = child;
+            if let Some(v) = node.value.as_ref() {
+                best = Some((consumed, v));
+            }
+        }
+        best
+    }
+
+    /// Visit every (key, value) pair (keys materialized; test/debug aid).
+    pub fn iter_collect(&self) -> Vec<(Vec<u8>, &V)> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut stack = vec![(&self.root, Vec::new())];
+        while let Some((node, prefix)) = stack.pop() {
+            let mut key = prefix.clone();
+            key.extend_from_slice(&node.label);
+            if let Some(v) = node.value.as_ref() {
+                out.push((key.clone(), v));
+            }
+            for c in &node.children {
+                stack.push((c, key.clone()));
+            }
+        }
+        out
+    }
+}
+
+/// The §3.10 block index: a radix tree keyed by concatenated chained block
+/// hashes (32 bytes per block).  Because the hashes are chained, depth `k`
+/// in hash-key space equals "first k blocks cached".
+pub struct BlockIndex {
+    tree: RadixTree<BlockMeta>,
+}
+
+impl Default for BlockIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BlockIndex {
+    pub fn new() -> Self {
+        Self { tree: RadixTree::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tree.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tree.is_empty()
+    }
+
+    fn key_for(hashes: &[super::block::BlockHash]) -> Vec<u8> {
+        let mut key = Vec::with_capacity(32 * hashes.len());
+        for h in hashes {
+            key.extend_from_slice(h.as_bytes());
+        }
+        key
+    }
+
+    /// Record that the prefix ending at `hashes.last()` is cached.
+    pub fn insert(&mut self, hashes: &[super::block::BlockHash], meta: BlockMeta) {
+        assert!(!hashes.is_empty());
+        self.tree.insert(&Self::key_for(hashes), meta);
+    }
+
+    /// Longest cached prefix of the prompt's block-hash list: returns
+    /// (number_of_blocks, meta of the deepest cached block).
+    pub fn longest_cached_prefix(
+        &self,
+        hashes: &[super::block::BlockHash],
+    ) -> Option<(usize, BlockMeta)> {
+        let (bytes, meta) = self.tree.longest_prefix(&Self::key_for(hashes))?;
+        if bytes == 0 {
+            return None;
+        }
+        debug_assert_eq!(bytes % 32, 0, "index keys are whole hashes");
+        Some((bytes / 32, *meta))
+    }
+
+    /// Exact metadata for a prefix.
+    pub fn get(&self, hashes: &[super::block::BlockHash]) -> Option<&BlockMeta> {
+        self.tree.get(&Self::key_for(hashes))
+    }
+
+    /// Drop the entry for a prefix (lazy eviction propagation, §3.9/§3.10).
+    pub fn remove(&mut self, hashes: &[super::block::BlockHash]) -> Option<BlockMeta> {
+        self.tree.remove(&Self::key_for(hashes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvc::block::{block_hashes, BlockHash};
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut t = RadixTree::new();
+        assert_eq!(t.insert(b"romane", 1), None);
+        assert_eq!(t.insert(b"romanus", 2), None);
+        assert_eq!(t.insert(b"romulus", 3), None);
+        assert_eq!(t.insert(b"rubens", 4), None);
+        assert_eq!(t.insert(b"ruber", 5), None);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.get(b"romane"), Some(&1));
+        assert_eq!(t.get(b"romanus"), Some(&2));
+        assert_eq!(t.get(b"roman"), None);
+        assert_eq!(t.remove(b"romanus"), Some(2));
+        assert_eq!(t.get(b"romanus"), None);
+        assert_eq!(t.get(b"romane"), Some(&1));
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn overwrite_returns_previous() {
+        let mut t = RadixTree::new();
+        assert_eq!(t.insert(b"abc", 1), None);
+        assert_eq!(t.insert(b"abc", 2), Some(1));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(b"abc"), Some(&2));
+    }
+
+    #[test]
+    fn prefix_of_existing_key() {
+        let mut t = RadixTree::new();
+        t.insert(b"abcdef", 1);
+        t.insert(b"abc", 2); // splits the edge
+        assert_eq!(t.get(b"abc"), Some(&2));
+        assert_eq!(t.get(b"abcdef"), Some(&1));
+        assert_eq!(t.get(b"abcd"), None);
+    }
+
+    #[test]
+    fn longest_prefix_walk() {
+        let mut t = RadixTree::new();
+        t.insert(b"a", 1);
+        t.insert(b"abc", 2);
+        t.insert(b"abcde", 3);
+        assert_eq!(t.longest_prefix(b"abcdefgh"), Some((5, &3)));
+        assert_eq!(t.longest_prefix(b"abcd"), Some((3, &2)));
+        assert_eq!(t.longest_prefix(b"ab"), Some((1, &1)));
+        assert_eq!(t.longest_prefix(b"zz"), None);
+        t.remove(b"abcde");
+        assert_eq!(t.longest_prefix(b"abcdefgh"), Some((3, &2)));
+    }
+
+    #[test]
+    fn merge_after_remove_keeps_tree_consistent() {
+        let mut t = RadixTree::new();
+        t.insert(b"team", 1);
+        t.insert(b"test", 2);
+        t.insert(b"toast", 3);
+        t.remove(b"test");
+        assert_eq!(t.get(b"team"), Some(&1));
+        assert_eq!(t.get(b"toast"), Some(&3));
+        assert_eq!(t.len(), 2);
+        let mut keys: Vec<_> = t.iter_collect().into_iter().map(|(k, _)| k).collect();
+        keys.sort();
+        assert_eq!(keys, vec![b"team".to_vec(), b"toast".to_vec()]);
+    }
+
+    #[test]
+    fn many_random_keys() {
+        use crate::util::rng::XorShift64;
+        let mut rng = XorShift64::new(99);
+        let mut keys = std::collections::HashMap::new();
+        let mut t = RadixTree::new();
+        for i in 0..2000u32 {
+            let len = 1 + rng.next_range(12);
+            let key: Vec<u8> = (0..len).map(|_| (rng.next_range(4)) as u8).collect();
+            t.insert(&key, i);
+            keys.insert(key, i);
+        }
+        assert_eq!(t.len(), keys.len());
+        for (k, v) in &keys {
+            assert_eq!(t.get(k), Some(v));
+        }
+        // remove half, verify the rest
+        let all: Vec<_> = keys.keys().cloned().collect();
+        for k in all.iter().take(all.len() / 2) {
+            assert_eq!(t.remove(k), keys.remove(k));
+        }
+        for (k, v) in &keys {
+            assert_eq!(t.get(k), Some(v), "key {:?}", k);
+        }
+    }
+
+    fn meta(n: u32) -> BlockMeta {
+        BlockMeta { num_chunks: n, kvc_len: n * 6000, write_epoch: 0, quantizer_id: 1 }
+    }
+
+    #[test]
+    fn block_index_longest_cached_prefix() {
+        let tokens: Vec<i32> = (0..160).collect();
+        let hashes = block_hashes(&tokens, 32); // 5 blocks
+        let mut idx = BlockIndex::new();
+        idx.insert(&hashes[..2], meta(22));
+        idx.insert(&hashes[..4], meta(44));
+        let (blocks, m) = idx.longest_cached_prefix(&hashes).unwrap();
+        assert_eq!(blocks, 4);
+        assert_eq!(m.num_chunks, 44);
+        // a diverging prompt only matches the common prefix
+        let mut tokens2 = tokens.clone();
+        tokens2[100] = -1; // inside block 3
+        let hashes2 = block_hashes(&tokens2, 32);
+        let (blocks2, m2) = idx.longest_cached_prefix(&hashes2).unwrap();
+        assert_eq!(blocks2, 2);
+        assert_eq!(m2.num_chunks, 22);
+    }
+
+    #[test]
+    fn block_index_remove_for_lazy_eviction() {
+        let tokens: Vec<i32> = (0..64).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let mut idx = BlockIndex::new();
+        idx.insert(&hashes[..1], meta(1));
+        idx.insert(&hashes[..2], meta(2));
+        assert_eq!(idx.longest_cached_prefix(&hashes).unwrap().0, 2);
+        idx.remove(&hashes[..2]);
+        assert_eq!(idx.longest_cached_prefix(&hashes).unwrap().0, 1);
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn block_index_no_match() {
+        let hashes = block_hashes(&[1, 2, 3, 4], 2);
+        let idx = BlockIndex::new();
+        assert!(idx.longest_cached_prefix(&hashes).is_none());
+    }
+}

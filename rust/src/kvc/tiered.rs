@@ -1,0 +1,179 @@
+//! Local memory tier (§2: "A key-value cache can be stored in memory
+//! hierarchies and our solution can be integrated into a stack of both
+//! faster and slower memory").
+//!
+//! [`LocalTier`] is the fast-RAM level in front of the LEO level: the
+//! manager consults it before touching the constellation and refills it on
+//! every fetch/store, with its own LRU byte budget.  It stores *decoded*
+//! KV values (the form the engine consumes), trading host memory for the
+//! dequantize + network round-trip.
+
+use crate::kvc::block::BlockHash;
+use crate::kvc::eviction::LruTracker;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Tier statistics.
+#[derive(Debug, Default)]
+pub struct TierStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub inserts: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+struct Inner {
+    map: HashMap<BlockHash, Vec<f32>>,
+    lru: LruTracker<BlockHash>,
+    bytes_used: usize,
+}
+
+/// A bounded local block cache (thread-safe).
+pub struct LocalTier {
+    inner: Mutex<Inner>,
+    byte_budget: usize,
+    pub stats: TierStats,
+}
+
+impl LocalTier {
+    pub fn new(byte_budget: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { map: HashMap::new(), lru: LruTracker::new(), bytes_used: 0 }),
+            byte_budget,
+            stats: TierStats::default(),
+        }
+    }
+
+    pub fn byte_budget(&self) -> usize {
+        self.byte_budget
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.inner.lock().unwrap().bytes_used
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch a block's KV values (refreshes LRU).
+    pub fn get(&self, block: &BlockHash) -> Option<Vec<f32>> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(v) = inner.map.get(block).cloned() {
+            inner.lru.touch(block);
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            Some(v)
+        } else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Insert (or refresh) a block, evicting LRU entries over budget.
+    pub fn put(&self, block: BlockHash, values: Vec<f32>) {
+        let bytes = values.len() * 4;
+        if bytes > self.byte_budget {
+            return; // cannot ever fit
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(&block) {
+            inner.bytes_used -= old.len() * 4;
+            inner.lru.remove(&block);
+        }
+        while inner.bytes_used + bytes > self.byte_budget {
+            let Some(victim) = inner.lru.pop_lru() else { break };
+            if let Some(old) = inner.map.remove(&victim) {
+                inner.bytes_used -= old.len() * 4;
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.bytes_used += bytes;
+        inner.lru.touch(&block);
+        inner.map.insert(block, values);
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drop a block (propagated eviction).
+    pub fn invalidate(&self, block: &BlockHash) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(block) {
+            inner.bytes_used -= old.len() * 4;
+            inner.lru.remove(block);
+        }
+    }
+
+    /// Hit rate so far.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.stats.hits.load(Ordering::Relaxed) as f64;
+        let m = self.stats.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bh(b: u8) -> BlockHash {
+        BlockHash([b; 32])
+    }
+
+    #[test]
+    fn get_put_roundtrip() {
+        let t = LocalTier::new(1 << 20);
+        assert_eq!(t.get(&bh(1)), None);
+        t.put(bh(1), vec![1.0, 2.0]);
+        assert_eq!(t.get(&bh(1)), Some(vec![1.0, 2.0]));
+        assert_eq!(t.stats.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(t.stats.misses.load(Ordering::Relaxed), 1);
+        assert!((t.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_evicts_lru() {
+        let t = LocalTier::new(100); // 25 f32s
+        t.put(bh(1), vec![0.0; 10]);
+        t.put(bh(2), vec![0.0; 10]);
+        t.get(&bh(1)); // refresh 1
+        t.put(bh(3), vec![0.0; 10]); // evicts 2
+        assert!(t.get(&bh(1)).is_some());
+        assert!(t.get(&bh(2)).is_none());
+        assert!(t.get(&bh(3)).is_some());
+        assert_eq!(t.stats.evictions.load(Ordering::Relaxed), 1);
+        assert!(t.bytes_used() <= 100);
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let t = LocalTier::new(8);
+        t.put(bh(1), vec![0.0; 100]);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn overwrite_updates_bytes() {
+        let t = LocalTier::new(1000);
+        t.put(bh(1), vec![0.0; 100]);
+        t.put(bh(1), vec![0.0; 50]);
+        assert_eq!(t.bytes_used(), 200);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn invalidate_propagates_evictions() {
+        let t = LocalTier::new(1000);
+        t.put(bh(1), vec![1.0]);
+        t.invalidate(&bh(1));
+        assert_eq!(t.get(&bh(1)), None);
+        assert_eq!(t.bytes_used(), 0);
+    }
+}

@@ -1,0 +1,43 @@
+//! # SkyMemory
+//!
+//! A LEO-constellation-hosted key-value cache (KVC) for transformer
+//! inference, reproducing Sandholm et al., *"SkyMemory: A LEO Edge Cache for
+//! Transformer Inference Optimization and Scale Out"* (2025).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`constellation`] — orbital geometry (paper eqs. 1–4), the +GRID
+//!   2D-torus ISL topology with greedy routing, rotation/LOS models.
+//! * [`mapping`] — the paper's three chunk-to-server mappings
+//!   (rotation-aware, hop-aware, rotation-and-hop-aware) and migration.
+//! * [`kvc`] — the KVC protocol: chained block hashing, chunking,
+//!   quantization codecs, the local radix block index, eviction policies,
+//!   and the [`kvc::manager::KvcManager`] implementing §3.8 Get/Set.
+//! * [`net`] — CCSDS Space Packet Protocol framing, binary message codecs,
+//!   and the [`net::transport::Transport`] abstraction (in-proc, UDP,
+//!   simulated-latency).
+//! * [`satellite`] — the satellite node substrate (the paper's cFS stand-in):
+//!   chunk store with LRU, ISL forwarding, migration, eviction gossip.
+//! * [`sim`] — the §4 worst-case-latency simulator (Figure 16) plus
+//!   workload generation.
+//! * [`runtime`] — PJRT execution of the AOT artifacts (L2/L1 outputs):
+//!   HLO loading, weight upload, prefill/decode steps, tokenizer, sampler.
+//! * [`coordinator`] — the serving engine: prefix-cache-aware generation
+//!   loop, continuous scheduler, prefix-affinity router, HTTP API, metrics.
+//!
+//! Python (JAX + Pallas) is build-time only; the request path is pure rust.
+
+pub mod constellation;
+pub mod coordinator;
+pub mod kvc;
+pub mod mapping;
+pub mod net;
+pub mod repro;
+pub mod runtime;
+pub mod satellite;
+pub mod sim;
+pub mod util;
+
+pub use constellation::geometry::{Geometry, EARTH_RADIUS_KM, LIGHT_SPEED_KM_S};
+pub use constellation::topology::{SatId, Torus};
+pub use kvc::manager::KvcManager;

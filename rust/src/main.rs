@@ -1,0 +1,246 @@
+//! `skymemory` — the SkyMemory launcher.
+//!
+//! ```text
+//! skymemory serve      [--port 8080] [--workers 2] [--strategy rot-hop]
+//!                      [--quantizer quanto|hqq|f32] [--no-radix]
+//!                      [--link-latency] [--torus PLANESxSLOTS]
+//! skymemory generate   --prompt "..." [--max-tokens 30] [--no-cache] [--twice]
+//! skymemory satellite  [--torus 5x19] [--planes 0..5] [--budget-mb 64]
+//! skymemory simulate   [--strategy ...] [--altitude 550] [--servers 81]
+//!                      [--kvc-mb 21] [--proc-ms 2]
+//! skymemory repro      [--outdir results]
+//! ```
+//!
+//! (CLI parsing is hand-rolled: the offline build has no clap.)
+
+use anyhow::{anyhow, bail, Context, Result};
+use skymemory::constellation::geometry::Geometry;
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::coordinator::http::HttpServer;
+use skymemory::coordinator::{GenRequest, Stack, StackConfig};
+use skymemory::kvc::eviction::EvictionPolicy;
+use skymemory::kvc::quantize::Quantizer;
+use skymemory::mapping::Strategy;
+use skymemory::net::transport::LinkModel;
+use skymemory::sim::{worst_case_latency, SimConfig};
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            }
+            i += 1;
+        }
+        Self { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn parse_strategy(s: &str) -> Result<Strategy> {
+    match s {
+        "rot" | "rotation" | "rotation-aware" => Ok(Strategy::RotationAware),
+        "hop" | "hop-aware" => Ok(Strategy::HopAware),
+        "rot-hop" | "rotation-hop" | "rotation-and-hop-aware" => Ok(Strategy::RotationHopAware),
+        _ => bail!("unknown strategy {s} (rot | hop | rot-hop)"),
+    }
+}
+
+fn parse_quantizer(s: &str, group: usize) -> Result<Quantizer> {
+    match s {
+        "f32" => Ok(Quantizer::F32),
+        "quanto" => Ok(Quantizer::QuantoInt8 { group }),
+        "hqq" => Ok(Quantizer::HqqInt8 { group }),
+        _ => bail!("unknown quantizer {s} (f32 | quanto | hqq)"),
+    }
+}
+
+fn parse_torus(s: &str) -> Result<Torus> {
+    let (p, sl) = s.split_once('x').ok_or_else(|| anyhow!("torus format PLANESxSLOTS"))?;
+    Ok(Torus::new(p.parse()?, sl.parse()?))
+}
+
+fn stack_config(args: &Args) -> Result<StackConfig> {
+    let mut cfg = StackConfig::default();
+    if let Some(t) = args.get("torus") {
+        cfg.torus = parse_torus(t)?;
+        cfg.geometry = Geometry::new(550.0, cfg.torus.sats_per_plane, cfg.torus.planes);
+        cfg.initial_center = SatId::new(
+            (cfg.torus.planes / 2) as u16,
+            (cfg.torus.sats_per_plane / 2) as u16,
+        );
+    }
+    cfg.n_workers = args.get_or("workers", cfg.n_workers)?;
+    if let Some(s) = args.get("strategy") {
+        cfg.kvc.strategy = parse_strategy(s)?;
+    }
+    if let Some(q) = args.get("quantizer") {
+        cfg.kvc.quantizer = parse_quantizer(q, 32)?;
+    }
+    if args.has("no-radix") {
+        cfg.kvc.use_radix_index = false;
+    }
+    cfg.kvc.n_servers = args.get_or("servers", cfg.kvc.n_servers)?;
+    if args.has("link-latency") {
+        cfg.link = Some(LinkModel::laser_defaults(cfg.geometry));
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port: u16 = args.get_or("port", 8080)?;
+    let stack = Stack::build(stack_config(args)?)?;
+    let server = HttpServer::spawn(&format!("127.0.0.1:{port}"), stack.router.clone())?;
+    println!("skymemory serving on http://{}", server.addr);
+    println!("  POST /generate {{\"prompt\": \"...\", \"max_tokens\": 30}}");
+    println!("  GET  /metrics");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = args
+        .get("prompt")
+        .ok_or_else(|| anyhow!("--prompt required"))?
+        .to_string();
+    let stack = Stack::build(stack_config(args)?)?;
+    let req = GenRequest {
+        prompt,
+        max_new_tokens: args.get_or("max-tokens", 30)?,
+        use_cache: !args.has("no-cache"),
+        ..Default::default()
+    };
+    let runs = if args.has("twice") { 2 } else { 1 };
+    for i in 0..runs {
+        let r = stack.router.generate(req.clone())?;
+        println!(
+            "run {}: ttft {:.1} ms, total {:.1} ms, cached blocks {}, prefilled {}",
+            i + 1,
+            r.ttft_s * 1e3,
+            r.total_s * 1e3,
+            r.cached_blocks,
+            r.prefill_blocks
+        );
+        println!("  output: {:?}", r.text);
+    }
+    Ok(())
+}
+
+fn cmd_satellite(args: &Args) -> Result<()> {
+    let torus = parse_torus(args.get("torus").unwrap_or("5x19"))?;
+    let planes = match args.get("planes") {
+        Some(p) => {
+            let (a, b) = p.split_once("..").ok_or_else(|| anyhow!("--planes A..B"))?;
+            Some(a.parse::<usize>()?..b.parse::<usize>()?)
+        }
+        None => None,
+    };
+    let budget: usize = args.get_or("budget-mb", 64usize)? << 20;
+    let fleet =
+        skymemory::net::udp::UdpFleet::spawn(torus, budget, EvictionPolicy::Gossip, planes.clone())?;
+    println!(
+        "hosting {} satellites of a {}x{} constellation (planes {:?})",
+        fleet.book.len(),
+        torus.planes,
+        torus.sats_per_plane,
+        planes.unwrap_or(0..torus.planes),
+    );
+    for sat in torus.all() {
+        if let Some(addr) = fleet.book.get(sat) {
+            println!("  {sat} -> {addr}");
+        }
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = SimConfig {
+        strategy: parse_strategy(args.get("strategy").unwrap_or("rot-hop"))?,
+        altitude_km: args.get_or("altitude", 550.0)?,
+        n_servers: args.get_or("servers", 81)?,
+        kvc_bytes: args.get_or("kvc-mb", 21usize)? << 20,
+        chunk_processing_s: args.get_or("proc-ms", 2.0)? / 1e3,
+        ..Default::default()
+    };
+    let b = worst_case_latency(&cfg);
+    println!(
+        "{} h={}km servers={} kvc={}MB proc={}ms -> total {:.4}s (network {:.4}s over {} hops, processing {:.4}s, worst server {})",
+        cfg.strategy.name(),
+        cfg.altitude_km,
+        cfg.n_servers,
+        cfg.kvc_bytes >> 20,
+        cfg.chunk_processing_s * 1e3,
+        b.total_s,
+        b.network_s,
+        b.worst_hops,
+        b.processing_s,
+        b.worst_server
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let outdir = std::path::PathBuf::from(args.get("outdir").unwrap_or("results"));
+    let files = skymemory::repro::write_all(&outdir).context("writing results")?;
+    for f in &files {
+        println!("wrote {}", f.display());
+    }
+    print!("{}", skymemory::repro::fig16_summary());
+    println!("(table3: run `cargo run --release --example e2e_testbed`)");
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: skymemory <serve|generate|satellite|simulate|repro> [flags]\n\
+         see rust/src/main.rs header for per-command flags"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let args = Args::parse(&argv[1..]);
+    match argv[0].as_str() {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "satellite" => cmd_satellite(&args),
+        "simulate" => cmd_simulate(&args),
+        "repro" => cmd_repro(&args),
+        _ => usage(),
+    }
+}

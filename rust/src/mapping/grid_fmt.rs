@@ -1,0 +1,114 @@
+//! Render layouts as the paper's figure grids (Figures 4, 6, 13–15) for
+//! the `paper_figures` example and human inspection.
+
+use crate::constellation::topology::{SatId, Torus};
+
+/// Project a layout onto a `(2*half_planes+1) x (2*half_slots+1)` window
+/// around `center`; `None` marks cells without a server.
+pub fn project(
+    torus: &Torus,
+    layout: &[SatId],
+    center: SatId,
+    half_slots: usize,
+    half_planes: usize,
+) -> Vec<Vec<Option<u32>>> {
+    let w = 2 * half_slots + 1;
+    let h = 2 * half_planes + 1;
+    let mut out = vec![vec![None; w]; h];
+    for (i, sat) in layout.iter().enumerate() {
+        let (dp, ds) = torus.signed_offset(center, *sat);
+        if dp.unsigned_abs() as usize <= half_planes && ds.unsigned_abs() as usize <= half_slots {
+            let r = (dp + half_planes as i32) as usize;
+            let c = (ds + half_slots as i32) as usize;
+            // first server wins if several land in one cell (can only
+            // happen for drifted hop-aware views)
+            if out[r][c].is_none() {
+                out[r][c] = Some((i + 1) as u32);
+            }
+        }
+    }
+    out
+}
+
+/// Pretty-print a projected grid in the figures' style.
+pub fn to_string(grid: &[Vec<Option<u32>>]) -> String {
+    let width = grid
+        .iter()
+        .flatten()
+        .flatten()
+        .map(|v| v.to_string().len())
+        .max()
+        .unwrap_or(1);
+    let mut s = String::new();
+    for row in grid {
+        for (i, cell) in row.iter().enumerate() {
+            if i > 0 {
+                s.push(' ');
+            }
+            match cell {
+                Some(v) => s.push_str(&format!("{v:>width$}")),
+                None => s.push_str(&" ".repeat(width).replace(' ', ".").to_string()),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// CSV form (row per grid row, empty cells blank) for results/ files.
+pub fn to_csv(grid: &[Vec<Option<u32>>]) -> String {
+    grid.iter()
+        .map(|row| {
+            row.iter()
+                .map(|c| c.map(|v| v.to_string()).unwrap_or_default())
+                .collect::<Vec<_>>()
+                .join(",")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+        + "\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::Strategy;
+
+    #[test]
+    fn project_rot_hop_5x5_matches_golden() {
+        let torus = Torus::new(15, 15);
+        let c = SatId::new(8, 8);
+        let l = Strategy::RotationHopAware.initial_layout(&torus, c, 25);
+        let grid = project(&torus, &l, c, 2, 2);
+        let want = crate::mapping::rot_hop_aware::figure15_grid(25);
+        for (r, row) in want.iter().enumerate() {
+            for (cidx, v) in row.iter().enumerate() {
+                assert_eq!(grid[r][cidx], Some(*v));
+            }
+        }
+    }
+
+    #[test]
+    fn hop_aware_projection_has_empty_corners() {
+        let torus = Torus::new(15, 15);
+        let c = SatId::new(8, 8);
+        let l = Strategy::HopAware.initial_layout(&torus, c, 13); // rings 0-2
+        let grid = project(&torus, &l, c, 2, 2);
+        assert_eq!(grid[0][0], None, "diamond leaves corners empty");
+        assert_eq!(grid[2][2], Some(1));
+    }
+
+    #[test]
+    fn to_string_and_csv_render() {
+        let torus = Torus::new(15, 15);
+        let c = SatId::new(8, 8);
+        let l = Strategy::RotationHopAware.initial_layout(&torus, c, 9);
+        let grid = project(&torus, &l, c, 1, 1);
+        let s = to_string(&grid);
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains('1'));
+        let csv = to_csv(&grid);
+        assert_eq!(csv.trim().lines().count(), 3);
+        assert_eq!(csv.lines().next().unwrap().split(',').count(), 3);
+    }
+}

@@ -1,0 +1,128 @@
+//! Hop-aware mapping (§3.6, Figures 6/14): servers spiral out from a fixed
+//! satellite in concentric rings — breadth-first over the +GRID torus with
+//! neighbours pushed in N, E, S, W order.  Best when the LLM is hosted *on*
+//! that satellite (no migration: the host and the cache co-rotate).
+
+use super::bfs_order;
+use crate::constellation::topology::{SatId, Torus};
+
+/// Concentric-ring layout on the torus, unbounded (Fig. 6's "diamond").
+pub fn layout(torus: &Torus, center: SatId, n_servers: usize) -> Vec<SatId> {
+    assert!(
+        n_servers <= torus.len(),
+        "{n_servers} servers exceed the {}-satellite constellation",
+        torus.len()
+    );
+    bfs_order(torus, center, n_servers, |_| true)
+}
+
+/// The diamond as printed in Figure 14: a map from (slot_offset,
+/// plane_offset) relative to the centre to the 1-based server id.
+pub fn figure14_diamond(
+    torus: &Torus,
+    center: SatId,
+    n_servers: usize,
+) -> std::collections::HashMap<(i32, i32), u32> {
+    layout(torus, center, n_servers)
+        .into_iter()
+        .enumerate()
+        .map(|(i, sat)| {
+            let (dp, ds) = torus.signed_offset(center, sat);
+            ((ds, dp), (i + 1) as u32)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Torus, SatId) {
+        (Torus::new(15, 15), SatId::new(8, 8))
+    }
+
+    #[test]
+    fn figure14_golden_rings_1_and_2() {
+        // Derived in DESIGN.md from the published 5x5 grids:
+        // ring 1: N=2, E=3, S=4, W=5; ring 2: NN=6, NE=7, NW=8, EE=9,
+        // SE=10, SS=11, SW=12, WW=13.
+        let (torus, c) = setup();
+        let d = figure14_diamond(&torus, c, 25);
+        let expect = [
+            ((0, 0), 1),
+            ((0, -1), 2),
+            ((1, 0), 3),
+            ((0, 1), 4),
+            ((-1, 0), 5),
+            ((0, -2), 6),
+            ((1, -1), 7),
+            ((-1, -1), 8),
+            ((2, 0), 9),
+            ((1, 1), 10),
+            ((0, 2), 11),
+            ((-1, 1), 12),
+            ((-2, 0), 13),
+        ];
+        for ((ds, dp), id) in expect {
+            assert_eq!(d.get(&(ds, dp)), Some(&id), "offset ({ds},{dp})");
+        }
+    }
+
+    #[test]
+    fn figure14_golden_25_server_diamond() {
+        // The full Figure 14 5x5 diamond (paper page 20), rows top-down:
+        //             14
+        //         16   6  15
+        //     18   8   2   7  17
+        // 25  13   5   1   3   9  19
+        //     24  12   4  10  20
+        //         23  11  21
+        //             22
+        let (torus, c) = setup();
+        let d = figure14_diamond(&torus, c, 25);
+        let rows: [(&[u32], i32); 7] = [
+            (&[14], -3),
+            (&[16, 6, 15], -2),
+            (&[18, 8, 2, 7, 17], -1),
+            (&[25, 13, 5, 1, 3, 9, 19], 0),
+            (&[24, 12, 4, 10, 20], 1),
+            (&[23, 11, 21], 2),
+            (&[22], 3),
+        ];
+        for (row, dp) in rows {
+            let half = (row.len() as i32 - 1) / 2;
+            for (j, want) in row.iter().enumerate() {
+                let ds = j as i32 - half;
+                assert_eq!(d.get(&(ds, dp)), Some(want), "row dp={dp} ds={ds}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_sizes_follow_manhattan_counts() {
+        let (torus, c) = setup();
+        let l = layout(&torus, c, 41); // rings 0..4 on an open grid: 1+4+8+12+16
+        let ring_of = |i: usize| torus.hops(c, l[i]);
+        assert_eq!(ring_of(0), 0);
+        assert!((1..5).all(|i| ring_of(i) == 1));
+        assert!((5..13).all(|i| ring_of(i) == 2));
+        assert!((13..25).all(|i| ring_of(i) == 3));
+        assert!((25..41).all(|i| ring_of(i) == 4));
+    }
+
+    #[test]
+    fn wraps_on_small_torus() {
+        let torus = Torus::new(3, 3);
+        let l = layout(&torus, SatId::new(1, 1), 9);
+        assert_eq!(l.len(), 9);
+        let uniq: std::collections::HashSet<_> = l.iter().collect();
+        assert_eq!(uniq.len(), 9, "must cover the whole 3x3 torus");
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed")]
+    fn too_many_servers_panics() {
+        let torus = Torus::new(3, 3);
+        layout(&torus, SatId::new(0, 0), 10);
+    }
+}

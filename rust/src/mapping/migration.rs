@@ -1,0 +1,205 @@
+//! Rotation migration (§3.4, Figures 5/8/9): when the east column of a
+//! rotation-aware layout is about to leave LOS, its chunks are copied to
+//! the column entering on the west — per plane, in parallel.  A chunk on a
+//! satellite that remains inside the (moving) box never moves, so each
+//! epoch the layout *pattern* cyclically shifts one column within the box.
+//!
+//! Because rotation is deterministic, the layout after `k` epochs is a
+//! closed-form function of the write-time layout (paper Fig. 10: "rotations
+//! are predictable based on knowing the time of block creation") — no
+//! satellite needs to be asked where a chunk lives now.
+
+use crate::constellation::topology::{SatId, Torus};
+
+
+/// One chunk-column relocation of a migration epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationMove {
+    /// 1-based server id whose chunks move.
+    pub server: u32,
+    pub from: SatId,
+    pub to: SatId,
+}
+
+/// Closed-form layout after `epochs` west-shifts of a box of width
+/// `box_width` whose centre started at `write_center`.
+///
+/// For a server at write-time offset `(dp, ds)` from the write centre, the
+/// satellite it occupies after `k` epochs sits at offset
+/// `(dp, ((ds + half + k) mod w) - half)` from the *current* centre.
+pub fn shift_layout(
+    torus: &Torus,
+    initial: &[SatId],
+    write_center: SatId,
+    box_width: usize,
+    epochs: u64,
+) -> Vec<SatId> {
+    let w = box_width as i64;
+    let half = (box_width as i64 - 1) / 2;
+    // the centre wraps with the orbit; the pattern cycles with the box
+    let k_center = (epochs % torus.sats_per_plane as u64) as i32;
+    let k_box = (epochs % box_width as u64) as i64;
+    let current_center = torus.offset(write_center, 0, -k_center);
+    initial
+        .iter()
+        .map(|sat| {
+            let (dp, ds) = torus.signed_offset(write_center, *sat);
+            let eff = (ds as i64 + half + k_box).rem_euclid(w) - half;
+            torus.offset(current_center, dp, eff as i32)
+        })
+        .collect()
+}
+
+/// The chunk relocations needed to go from epoch `k` to `k + 1` for a
+/// migrating strategy: exactly the servers whose satellite leaves the box.
+pub fn migration_plan(
+    torus: &Torus,
+    strategy: super::Strategy,
+    write_center: SatId,
+    n_servers: usize,
+    from_epoch: u64,
+) -> Vec<MigrationMove> {
+    let before = strategy.layout_at(torus, write_center, n_servers, from_epoch);
+    let after = strategy.layout_at(torus, write_center, n_servers, from_epoch + 1);
+    before
+        .iter()
+        .zip(after.iter())
+        .enumerate()
+        .filter(|(_, (b, a))| b != a)
+        .map(|(i, (b, a))| MigrationMove { server: (i + 1) as u32, from: *b, to: *a })
+        .collect()
+}
+
+/// Group a migration plan by orbital plane — §3.4: "This can be done in
+/// parallel in each orbital plane."
+pub fn by_plane(plan: &[MigrationMove]) -> std::collections::BTreeMap<u16, Vec<MigrationMove>> {
+    let mut map: std::collections::BTreeMap<u16, Vec<MigrationMove>> = Default::default();
+    for m in plan {
+        map.entry(m.from.plane).or_default().push(*m);
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::Strategy;
+
+    fn setup() -> (Torus, SatId) {
+        (Torus::new(5, 5), SatId::new(2, 3)) // Fig 7/8: 5 planes x 5 slots
+    }
+
+    #[test]
+    fn figure8_migration_case() {
+        // Fig 8 (1-based figure coords -> our 0-based): centre is satellite
+        // 4 in plane 3 = (plane 2, slot 3).  Chunks 6, 3, 8 sit on slot 5
+        // (= slot index 4) in planes 2, 3, 4 (= 1, 2, 3) and migrate to
+        // slot 2 (= index 1), same planes.
+        let (torus, c) = setup();
+        let plan = migration_plan(&torus, Strategy::RotationHopAware, c, 9, 0);
+        assert_eq!(plan.len(), 3, "only the exiting column moves");
+        for m in &plan {
+            assert_eq!(m.from.slot, 4, "from the east column");
+            assert_eq!(m.to.slot, 1, "to the entering west column");
+            assert_eq!(m.from.plane, m.to.plane, "within the same plane");
+        }
+        // Exactly the paper's three servers: 6 at (5,2), 3 at (5,3), 8 at (5,4)
+        let mut servers: Vec<u32> = plan.iter().map(|m| m.server).collect();
+        servers.sort_unstable();
+        assert_eq!(servers, vec![3, 6, 8]);
+        let by = by_plane(&plan);
+        assert_eq!(by.len(), 3, "one parallel migration per plane");
+    }
+
+    #[test]
+    fn stayers_do_not_move() {
+        let (torus, c) = setup();
+        let before = Strategy::RotationHopAware.layout_at(&torus, c, 9, 0);
+        let after = Strategy::RotationHopAware.layout_at(&torus, c, 9, 1);
+        // servers whose satellite is NOT on the exiting column keep it
+        for (i, (b, a)) in before.iter().zip(after.iter()).enumerate() {
+            if b.slot != 4 {
+                assert_eq!(b, a, "server {} should not move", i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn layouts_remain_duplicate_free_over_time() {
+        let (torus, c) = setup();
+        for st in [Strategy::RotationAware, Strategy::RotationHopAware] {
+            for k in 0..12 {
+                let l = st.layout_at(&torus, c, 9, k);
+                let uniq: std::collections::HashSet<_> = l.iter().collect();
+                assert_eq!(uniq.len(), l.len(), "{:?} epoch {k}", st);
+            }
+        }
+    }
+
+    #[test]
+    fn full_wrap_restores_pattern() {
+        // The pattern restores when both the torus (5 slots) and the box
+        // (3 columns) complete whole cycles: lcm(5, 3) = 15 epochs.
+        let (torus, c) = setup();
+        let l0 = Strategy::RotationHopAware.layout_at(&torus, c, 9, 0);
+        let l15 = Strategy::RotationHopAware.layout_at(&torus, c, 9, 15);
+        assert_eq!(l0, l15);
+        // ... and a plain orbit wrap alone restores the *satellite set*
+        // but cycles the pattern inside the box.
+        let l5 = Strategy::RotationHopAware.layout_at(&torus, c, 9, 5);
+        let set0: std::collections::HashSet<_> = l0.iter().collect();
+        let set5: std::collections::HashSet<_> = l5.iter().collect();
+        assert_eq!(set0, set5);
+        assert_ne!(l0, l5);
+    }
+
+    #[test]
+    fn hop_aware_never_migrates() {
+        let (torus, c) = setup();
+        let plan = migration_plan(&torus, Strategy::HopAware, c, 9, 0);
+        assert!(plan.is_empty());
+        assert_eq!(
+            Strategy::HopAware.layout_at(&torus, c, 9, 0),
+            Strategy::HopAware.layout_at(&torus, c, 9, 7),
+        );
+    }
+
+    #[test]
+    fn rotation_aware_migrates_full_column_every_epoch() {
+        // a torus wider than the box, so a column really exits LOS
+        let torus = Torus::new(7, 9);
+        let c = SatId::new(3, 4);
+        let plan = migration_plan(&torus, Strategy::RotationAware, c, 25, 0);
+        // 5x5 box: the exiting column holds 5 servers
+        assert_eq!(plan.len(), 5);
+        for m in &plan {
+            assert_eq!(m.from.plane, m.to.plane);
+        }
+    }
+
+    #[test]
+    fn box_as_wide_as_torus_never_migrates() {
+        // 5x5 box on a 5-slot torus: nothing ever leaves LOS, so the
+        // migration plan is empty and the layout is epoch-invariant.
+        let (torus, c) = setup();
+        assert!(migration_plan(&torus, Strategy::RotationAware, c, 25, 0).is_empty());
+        assert_eq!(
+            Strategy::RotationAware.layout_at(&torus, c, 25, 0),
+            Strategy::RotationAware.layout_at(&torus, c, 25, 3),
+        );
+    }
+
+    #[test]
+    fn layout_at_is_consistent_with_chained_migrations() {
+        let (torus, c) = setup();
+        let st = Strategy::RotationHopAware;
+        let mut layout = st.layout_at(&torus, c, 25, 0);
+        for k in 0..7 {
+            let plan = migration_plan(&torus, st, c, 25, k);
+            for m in &plan {
+                layout[(m.server - 1) as usize] = m.to;
+            }
+            assert_eq!(layout, st.layout_at(&torus, c, 25, k + 1), "epoch {k}");
+        }
+    }
+}

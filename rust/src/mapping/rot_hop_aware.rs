@@ -1,0 +1,138 @@
+//! Rotation-and-hop-aware mapping (§3.7, Figures 7/8/15): concentric BFS
+//! rings like [`super::hop_aware`], but bounded by the square LOS box of
+//! side `ceil(sqrt(n_servers))` centred on the closest satellite.  The box
+//! migrates with the rotation (entering-west-column handoff), so chunks
+//! stay reachable in few hops from the ground host — the paper's best
+//! strategy in Figure 16.
+
+use super::{bfs_order, box_side};
+use crate::constellation::los::LosGrid;
+use crate::constellation::topology::{SatId, Torus};
+
+/// Bounded concentric-ring layout.
+pub fn layout(torus: &Torus, center: SatId, n_servers: usize) -> Vec<SatId> {
+    let grid = LosGrid::square_for_servers(center, n_servers);
+    layout_in_box(torus, &grid, n_servers)
+}
+
+/// Bounded BFS within an arbitrary LOS window.
+pub fn layout_in_box(torus: &Torus, grid: &LosGrid, n_servers: usize) -> Vec<SatId> {
+    assert!(
+        n_servers <= grid.cell_count().min(torus.len()),
+        "{n_servers} servers do not fit a {}x{} LOS box",
+        grid.width(),
+        grid.height()
+    );
+    bfs_order(torus, grid.center, n_servers, |s| grid.contains(torus, s))
+}
+
+/// The grid exactly as printed in Figure 15: `side x side` rows of 1-based
+/// server ids (row-major, north-west first).
+pub fn figure15_grid(n_servers: usize) -> Vec<Vec<u32>> {
+    let side = box_side(n_servers);
+    // A torus comfortably larger than the box so no wrap interferes.
+    let dim = (2 * side + 3).max(8);
+    let torus = Torus::new(dim, dim);
+    let center = SatId::new((dim / 2) as u16, (dim / 2) as u16);
+    let l = layout(&torus, center, n_servers);
+    let half = (side as i32 - 1) / 2;
+    let mut out = vec![vec![0u32; side]; side];
+    for (i, sat) in l.iter().enumerate() {
+        let (dp, ds) = torus.signed_offset(center, *sat);
+        out[(dp + half) as usize][(ds + half) as usize] = (i + 1) as u32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure15_golden_5x5() {
+        // Verbatim from the paper's Figure 15 (5x5 panel).
+        assert_eq!(
+            figure15_grid(25),
+            vec![
+                vec![23, 15, 6, 14, 22],
+                vec![17, 8, 2, 7, 16],
+                vec![13, 5, 1, 3, 9],
+                vec![21, 12, 4, 10, 18],
+                vec![25, 20, 11, 19, 24],
+            ]
+        );
+    }
+
+    #[test]
+    fn figure15_golden_7x7() {
+        // Verbatim from the paper's Figure 15 (7x7 panel).
+        assert_eq!(
+            figure15_grid(49),
+            vec![
+                vec![47, 39, 27, 14, 26, 38, 46],
+                vec![41, 29, 16, 6, 15, 28, 40],
+                vec![31, 18, 8, 2, 7, 17, 30],
+                vec![25, 13, 5, 1, 3, 9, 19],
+                vec![37, 24, 12, 4, 10, 20, 32],
+                vec![45, 36, 23, 11, 21, 33, 42],
+                vec![49, 44, 35, 22, 34, 43, 48],
+            ]
+        );
+    }
+
+    #[test]
+    fn figure15_golden_9x9() {
+        // Verbatim from the paper's Figure 15 (9x9 panel).
+        assert_eq!(
+            figure15_grid(81),
+            vec![
+                vec![79, 71, 59, 43, 26, 42, 58, 70, 78],
+                vec![73, 61, 45, 28, 14, 27, 44, 60, 72],
+                vec![63, 47, 30, 16, 6, 15, 29, 46, 62],
+                vec![49, 32, 18, 8, 2, 7, 17, 31, 48],
+                vec![41, 25, 13, 5, 1, 3, 9, 19, 33],
+                vec![57, 40, 24, 12, 4, 10, 20, 34, 50],
+                vec![69, 56, 39, 23, 11, 21, 35, 51, 64],
+                vec![77, 68, 55, 38, 22, 36, 52, 65, 74],
+                vec![81, 76, 67, 54, 37, 53, 66, 75, 80],
+            ]
+        );
+    }
+
+    #[test]
+    fn figure15_golden_3x3() {
+        // Verbatim from the paper's Figure 15 (3x3 panel).
+        assert_eq!(
+            figure15_grid(9),
+            vec![vec![7, 2, 6], vec![5, 1, 3], vec![9, 4, 8]],
+        );
+    }
+
+    #[test]
+    fn bounded_layout_stays_in_box() {
+        let torus = Torus::new(15, 15);
+        let c = SatId::new(8, 8);
+        for n in [9, 25, 49, 81] {
+            let side = box_side(n) as usize;
+            let half = side / 2;
+            for s in layout(&torus, c, n) {
+                assert!(torus.plane_distance(c, s) <= half);
+                assert!(torus.slot_distance(c, s) <= half);
+            }
+        }
+    }
+
+    #[test]
+    fn max_hops_lower_than_rotation_aware_tail() {
+        // The whole point of concentric numbering: low server ids sit close
+        // to the centre, so a partially-used layout (few chunks) stays
+        // near.  With 81 servers but only 20 used, the rot-hop max distance
+        // must be < the row-major max distance.
+        let torus = Torus::new(15, 15);
+        let c = SatId::new(8, 8);
+        let rh = layout(&torus, c, 81);
+        let ra = super::super::rotation_aware::layout(&torus, c, 81);
+        let max_d = |l: &[SatId]| l.iter().take(20).map(|s| torus.hops(c, *s)).max().unwrap();
+        assert!(max_d(&rh) < max_d(&ra), "{} vs {}", max_d(&rh), max_d(&ra));
+    }
+}

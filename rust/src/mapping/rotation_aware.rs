@@ -1,0 +1,125 @@
+//! Rotation-aware mapping (§3.5, Figures 4/5/13): servers are numbered
+//! left-to-right, top-to-bottom across the LOS grid.  Best when the ground
+//! host has reliable direct links to every LOS satellite; migration moves
+//! the exiting east column to the entering west column each epoch.
+
+use super::box_side;
+use crate::constellation::los::LosGrid;
+use crate::constellation::topology::{SatId, Torus};
+
+/// Row-major layout over the square `ceil(sqrt(n))` LOS box.
+pub fn layout(torus: &Torus, center: SatId, n_servers: usize) -> Vec<SatId> {
+    let grid = LosGrid::square_for_servers(center, n_servers);
+    layout_in_box(torus, &grid, n_servers)
+}
+
+/// Row-major layout over an arbitrary LOS window (e.g. the real,
+/// non-square visibility footprint of Fig. 4's 5x3 grid).
+pub fn layout_in_box(torus: &Torus, grid: &LosGrid, n_servers: usize) -> Vec<SatId> {
+    assert!(
+        n_servers <= grid.cell_count(),
+        "{n_servers} servers do not fit a {}x{} LOS grid",
+        grid.width(),
+        grid.height()
+    );
+    let mut cells = grid.cells_row_major(torus);
+    // Server 1 must be the closest satellite (§3.8 step 6). Row-major
+    // numbering puts the NW corner first; the paper's figures number the
+    // grid row-major and the protocol locates the rest from whichever
+    // server answers first, so we rotate the ordering so the centre cell
+    // is server 1 while preserving row-major succession — then truncate
+    // to the requested server count.
+    let centre_idx = cells.iter().position(|s| *s == grid.center);
+    if let Some(i) = centre_idx {
+        cells.rotate_left(i);
+    }
+    cells.truncate(n_servers);
+    cells
+}
+
+/// Row-major numbering exactly as printed in Figure 13 (NW corner = 1),
+/// used by the figure reproduction and the golden tests.
+pub fn figure13_grid(n_servers: usize) -> Vec<Vec<u32>> {
+    let side = box_side(n_servers);
+    let mut out = vec![vec![0u32; side]; side];
+    let mut id = 1u32;
+    for row in out.iter_mut() {
+        for cell in row.iter_mut() {
+            *cell = id;
+            id += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure13_golden_3x3() {
+        assert_eq!(
+            figure13_grid(9),
+            vec![vec![1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]
+        );
+    }
+
+    #[test]
+    fn figure13_golden_5x5() {
+        assert_eq!(
+            figure13_grid(25),
+            vec![
+                vec![1, 2, 3, 4, 5],
+                vec![6, 7, 8, 9, 10],
+                vec![11, 12, 13, 14, 15],
+                vec![16, 17, 18, 19, 20],
+                vec![21, 22, 23, 24, 25],
+            ]
+        );
+    }
+
+    #[test]
+    fn figure13_golden_7x7_and_9x9_corners() {
+        let g7 = figure13_grid(49);
+        assert_eq!(g7[0][0], 1);
+        assert_eq!(g7[0][6], 7);
+        assert_eq!(g7[6][0], 43);
+        assert_eq!(g7[6][6], 49);
+        let g9 = figure13_grid(81);
+        assert_eq!(g9[0], vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(g9[8][8], 81);
+    }
+
+    #[test]
+    fn layout_covers_los_box_row_major() {
+        let torus = Torus::new(15, 15);
+        let center = SatId::new(8, 8);
+        let l = layout(&torus, center, 9);
+        assert_eq!(l.len(), 9);
+        assert_eq!(l[0], center);
+        // all cells within the 3x3 box around centre
+        for s in &l {
+            assert!(torus.plane_distance(center, *s) <= 1);
+            assert!(torus.slot_distance(center, *s) <= 1);
+        }
+    }
+
+    #[test]
+    fn non_square_box_supported() {
+        let torus = Torus::new(15, 15);
+        let grid = LosGrid::new(SatId::new(8, 8), 2, 1); // 5 wide, 3 tall — Fig 4
+        let l = layout_in_box(&torus, &grid, 15);
+        assert_eq!(l.len(), 15);
+        let uniq: std::collections::HashSet<_> = l.iter().collect();
+        assert_eq!(uniq.len(), 15);
+        assert_eq!(l[0], SatId::new(8, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "do not fit")]
+    fn overflow_panics() {
+        let torus = Torus::new(15, 15);
+        let grid = LosGrid::new(SatId::new(8, 8), 1, 1);
+        layout_in_box(&torus, &grid, 10);
+    }
+}

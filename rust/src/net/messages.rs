@@ -1,0 +1,390 @@
+//! SkyMemory wire messages — the user data carried inside Space Packets.
+//!
+//! Every message starts with a fixed envelope so any satellite can route
+//! it without understanding the body:
+//!
+//! ```text
+//! offset  size  field
+//!      0     1  message kind
+//!      1     2  dest plane (LE)
+//!      3     2  dest slot (LE)
+//!      5     1  ttl (remaining hops; routing drops at 0)
+//!      6     8  request id (LE, client correlation)
+//!     14     6  reply-to: ipv4 (4) + port (2), zeros for in-proc
+//!     20     .  body (kind-specific)
+//! ```
+
+use crate::constellation::topology::SatId;
+use crate::kvc::block::BlockHash;
+use crate::kvc::chunk::ChunkKey;
+use anyhow::{bail, Result};
+use std::net::{Ipv4Addr, SocketAddr, SocketAddrV4};
+
+pub const ENVELOPE_LEN: usize = 20;
+/// Default routing TTL — generous for any torus we simulate.
+pub const DEFAULT_TTL: u8 = 64;
+
+/// Requests travel ground->constellation (and between satellites).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Store one chunk.
+    Set { key: ChunkKey, payload: Vec<u8> },
+    /// Fetch one chunk.
+    Get { key: ChunkKey },
+    /// Drop every chunk of a block; gossip `gossip_ttl` hops outward.
+    Evict { block: BlockHash, gossip_ttl: u8 },
+    /// Send all stored chunks to `to`, then drop them (rotation handoff).
+    Migrate { to: SatId },
+    /// Liveness/latency probe.
+    Ping,
+    /// Which chunks of `block` does this satellite hold?  (§3.8 step 8:
+    /// the nearest satellite "will return its chunk id and based on that
+    /// the shift ... is found" — the distributed, index-free lookup.)
+    Query { block: BlockHash },
+}
+
+/// Responses travel back to the reply-to address.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    SetOk,
+    GetOk { payload: Vec<u8> },
+    GetMiss,
+    EvictOk { dropped: u32 },
+    MigrateOk { moved: u32 },
+    Pong,
+    /// Chunk ids of the queried block held locally (possibly empty).
+    QueryOk { chunk_ids: Vec<u32> },
+    Error { code: u8 },
+}
+
+/// A routable message envelope.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Envelope {
+    pub dest: SatId,
+    pub ttl: u8,
+    pub req_id: u64,
+    pub reply_to: Option<SocketAddrV4>,
+}
+
+impl Envelope {
+    pub fn new(dest: SatId, req_id: u64) -> Self {
+        Self { dest, ttl: DEFAULT_TTL, req_id, reply_to: None }
+    }
+
+    pub fn with_reply_to(mut self, addr: SocketAddr) -> Self {
+        if let SocketAddr::V4(v4) = addr {
+            self.reply_to = Some(v4);
+        }
+        self
+    }
+}
+
+const K_SET: u8 = 1;
+const K_GET: u8 = 2;
+const K_EVICT: u8 = 3;
+const K_MIGRATE: u8 = 4;
+const K_PING: u8 = 5;
+const K_QUERY: u8 = 6;
+const K_SET_OK: u8 = 129;
+const K_GET_OK: u8 = 130;
+const K_GET_MISS: u8 = 131;
+const K_EVICT_OK: u8 = 132;
+const K_MIGRATE_OK: u8 = 133;
+const K_PONG: u8 = 134;
+const K_QUERY_OK: u8 = 135;
+const K_ERROR: u8 = 255;
+
+fn put_envelope(out: &mut Vec<u8>, kind: u8, env: &Envelope) {
+    out.push(kind);
+    out.extend_from_slice(&env.dest.plane.to_le_bytes());
+    out.extend_from_slice(&env.dest.slot.to_le_bytes());
+    out.push(env.ttl);
+    out.extend_from_slice(&env.req_id.to_le_bytes());
+    match env.reply_to {
+        Some(a) => {
+            out.extend_from_slice(&a.ip().octets());
+            out.extend_from_slice(&a.port().to_le_bytes());
+        }
+        None => out.extend_from_slice(&[0u8; 6]),
+    }
+}
+
+fn get_envelope(data: &[u8]) -> Result<(u8, Envelope)> {
+    if data.len() < ENVELOPE_LEN {
+        bail!("message shorter than envelope: {}", data.len());
+    }
+    let kind = data[0];
+    let plane = u16::from_le_bytes([data[1], data[2]]);
+    let slot = u16::from_le_bytes([data[3], data[4]]);
+    let ttl = data[5];
+    let req_id = u64::from_le_bytes(data[6..14].try_into().unwrap());
+    let ip = Ipv4Addr::new(data[14], data[15], data[16], data[17]);
+    let port = u16::from_le_bytes([data[18], data[19]]);
+    let reply_to = if ip.is_unspecified() && port == 0 {
+        None
+    } else {
+        Some(SocketAddrV4::new(ip, port))
+    };
+    Ok((kind, Envelope { dest: SatId::new(plane, slot), ttl, req_id, reply_to }))
+}
+
+/// Encode a request with its envelope.
+pub fn encode_request(env: &Envelope, req: &Request) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ENVELOPE_LEN + 64);
+    match req {
+        Request::Set { key, payload } => {
+            put_envelope(&mut out, K_SET, env);
+            out.extend_from_slice(&key.encode());
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        Request::Get { key } => {
+            put_envelope(&mut out, K_GET, env);
+            out.extend_from_slice(&key.encode());
+        }
+        Request::Evict { block, gossip_ttl } => {
+            put_envelope(&mut out, K_EVICT, env);
+            out.extend_from_slice(block.as_bytes());
+            out.push(*gossip_ttl);
+        }
+        Request::Migrate { to } => {
+            put_envelope(&mut out, K_MIGRATE, env);
+            out.extend_from_slice(&to.plane.to_le_bytes());
+            out.extend_from_slice(&to.slot.to_le_bytes());
+        }
+        Request::Ping => put_envelope(&mut out, K_PING, env),
+        Request::Query { block } => {
+            put_envelope(&mut out, K_QUERY, env);
+            out.extend_from_slice(block.as_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a request (returns its envelope too).
+pub fn decode_request(data: &[u8]) -> Result<(Envelope, Request)> {
+    let (kind, env) = get_envelope(data)?;
+    let body = &data[ENVELOPE_LEN..];
+    let req = match kind {
+        K_SET => {
+            if body.len() < 40 {
+                bail!("short Set body");
+            }
+            let key = ChunkKey::decode(&body[..36]).ok_or_else(|| anyhow::anyhow!("bad key"))?;
+            let len = u32::from_le_bytes(body[36..40].try_into().unwrap()) as usize;
+            if body.len() != 40 + len {
+                bail!("Set payload length mismatch");
+            }
+            Request::Set { key, payload: body[40..].to_vec() }
+        }
+        K_GET => {
+            let key = ChunkKey::decode(body).ok_or_else(|| anyhow::anyhow!("bad key"))?;
+            Request::Get { key }
+        }
+        K_EVICT => {
+            if body.len() != 33 {
+                bail!("bad Evict body");
+            }
+            let mut h = [0u8; 32];
+            h.copy_from_slice(&body[..32]);
+            Request::Evict { block: BlockHash(h), gossip_ttl: body[32] }
+        }
+        K_MIGRATE => {
+            if body.len() != 4 {
+                bail!("bad Migrate body");
+            }
+            let plane = u16::from_le_bytes([body[0], body[1]]);
+            let slot = u16::from_le_bytes([body[2], body[3]]);
+            Request::Migrate { to: SatId::new(plane, slot) }
+        }
+        K_PING => Request::Ping,
+        K_QUERY => {
+            if body.len() != 32 {
+                bail!("bad Query body");
+            }
+            let mut h = [0u8; 32];
+            h.copy_from_slice(body);
+            Request::Query { block: BlockHash(h) }
+        }
+        k => bail!("unknown request kind {k}"),
+    };
+    Ok((env, req))
+}
+
+/// Encode a response with the request's envelope (dest = requester side).
+pub fn encode_response(env: &Envelope, resp: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ENVELOPE_LEN + 16);
+    match resp {
+        Response::SetOk => put_envelope(&mut out, K_SET_OK, env),
+        Response::GetOk { payload } => {
+            put_envelope(&mut out, K_GET_OK, env);
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        Response::GetMiss => put_envelope(&mut out, K_GET_MISS, env),
+        Response::EvictOk { dropped } => {
+            put_envelope(&mut out, K_EVICT_OK, env);
+            out.extend_from_slice(&dropped.to_le_bytes());
+        }
+        Response::MigrateOk { moved } => {
+            put_envelope(&mut out, K_MIGRATE_OK, env);
+            out.extend_from_slice(&moved.to_le_bytes());
+        }
+        Response::Pong => put_envelope(&mut out, K_PONG, env),
+        Response::QueryOk { chunk_ids } => {
+            put_envelope(&mut out, K_QUERY_OK, env);
+            out.extend_from_slice(&(chunk_ids.len() as u16).to_le_bytes());
+            for id in chunk_ids {
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        Response::Error { code } => {
+            put_envelope(&mut out, K_ERROR, env);
+            out.push(*code);
+        }
+    }
+    out
+}
+
+/// Decode a response.
+pub fn decode_response(data: &[u8]) -> Result<(Envelope, Response)> {
+    let (kind, env) = get_envelope(data)?;
+    let body = &data[ENVELOPE_LEN..];
+    let resp = match kind {
+        K_SET_OK => Response::SetOk,
+        K_GET_OK => {
+            if body.len() < 4 {
+                bail!("short GetOk");
+            }
+            let len = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+            if body.len() != 4 + len {
+                bail!("GetOk payload length mismatch");
+            }
+            Response::GetOk { payload: body[4..].to_vec() }
+        }
+        K_GET_MISS => Response::GetMiss,
+        K_EVICT_OK => {
+            Response::EvictOk { dropped: u32::from_le_bytes(body.try_into()?) }
+        }
+        K_MIGRATE_OK => {
+            Response::MigrateOk { moved: u32::from_le_bytes(body.try_into()?) }
+        }
+        K_PONG => Response::Pong,
+        K_QUERY_OK => {
+            if body.len() < 2 {
+                bail!("short QueryOk");
+            }
+            let n = u16::from_le_bytes([body[0], body[1]]) as usize;
+            if body.len() != 2 + 4 * n {
+                bail!("QueryOk length mismatch");
+            }
+            let chunk_ids = body[2..]
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Response::QueryOk { chunk_ids }
+        }
+        K_ERROR => Response::Error { code: *body.first().unwrap_or(&0) },
+        k => bail!("unknown response kind {k}"),
+    };
+    Ok((env, resp))
+}
+
+/// Is this user-data a request (vs a response)?  Routing uses this to know
+/// whether an arriving packet needs handling or is a passing response.
+pub fn is_request(data: &[u8]) -> bool {
+    matches!(data.first(), Some(k) if *k < 128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> Envelope {
+        Envelope::new(SatId::new(3, 14), 0xDEAD_BEEF_0123)
+            .with_reply_to("10.0.0.7:9000".parse().unwrap())
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let key = ChunkKey::new(BlockHash([7u8; 32]), 21);
+        let cases = vec![
+            Request::Set { key, payload: vec![1, 2, 3, 4, 5] },
+            Request::Get { key },
+            Request::Evict { block: BlockHash([9u8; 32]), gossip_ttl: 3 },
+            Request::Migrate { to: SatId::new(1, 2) },
+            Request::Ping,
+            Request::Query { block: BlockHash([3u8; 32]) },
+        ];
+        for req in cases {
+            let e = env();
+            let bytes = encode_request(&e, &req);
+            assert!(is_request(&bytes));
+            let (e2, r2) = decode_request(&bytes).unwrap();
+            assert_eq!(e2, e);
+            assert_eq!(r2, req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let cases = vec![
+            Response::SetOk,
+            Response::GetOk { payload: vec![0xA; 6000] },
+            Response::GetMiss,
+            Response::EvictOk { dropped: 17 },
+            Response::MigrateOk { moved: 42 },
+            Response::Pong,
+            Response::QueryOk { chunk_ids: vec![] },
+            Response::QueryOk { chunk_ids: vec![0, 10, 20, u32::MAX] },
+            Response::Error { code: 2 },
+        ];
+        for resp in cases {
+            let e = env();
+            let bytes = encode_response(&e, &resp);
+            assert!(!is_request(&bytes));
+            let (e2, r2) = decode_response(&bytes).unwrap();
+            assert_eq!(e2, e);
+            assert_eq!(r2, resp);
+        }
+    }
+
+    #[test]
+    fn no_reply_to_encodes_zeros() {
+        let e = Envelope::new(SatId::new(0, 0), 1);
+        let bytes = encode_request(&e, &Request::Ping);
+        let (e2, _) = decode_request(&bytes).unwrap();
+        assert_eq!(e2.reply_to, None);
+    }
+
+    #[test]
+    fn corrupt_messages_rejected() {
+        assert!(decode_request(&[1, 2, 3]).is_err());
+        let e = env();
+        let mut bytes = encode_request(
+            &e,
+            &Request::Set {
+                key: ChunkKey::new(BlockHash([0; 32]), 0),
+                payload: vec![1, 2, 3],
+            },
+        );
+        bytes.truncate(bytes.len() - 1); // payload shorter than declared
+        assert!(decode_request(&bytes).is_err());
+        let mut bad = encode_request(&e, &Request::Ping);
+        bad[0] = 77; // unknown kind
+        assert!(decode_request(&bad).is_err());
+    }
+
+    #[test]
+    fn six_kb_chunk_fits_one_spp_packet() {
+        // the paper's chunk size must fit one Space Packet (<= 65536)
+        let key = ChunkKey::new(BlockHash([1; 32]), 0);
+        let req = Request::Set { key, payload: vec![0u8; 6000] };
+        let bytes = encode_request(&env(), &req);
+        assert!(bytes.len() <= 65536);
+        let framed =
+            crate::net::spp::frame(crate::net::spp::PacketType::Telecommand, 5, 0, &bytes);
+        let (_, body) = crate::net::spp::deframe(&framed).unwrap();
+        assert_eq!(decode_request(body).unwrap().1, req);
+    }
+}

@@ -1,0 +1,14 @@
+//! Networking substrate: CCSDS Space Packet Protocol framing ([`spp`]),
+//! the SkyMemory wire messages ([`messages`]), the [`transport::Transport`]
+//! abstraction the KVC manager drives, and the UDP implementation
+//! ([`udp`]) used by the real multi-process fleet.
+//!
+//! The paper's testbed speaks "CCSDS Space Packet Protocol over UDP" [1]
+//! between the LLM host and the cFS satellites; we do exactly that: every
+//! datagram is a Space Packet whose user data field carries one SkyMemory
+//! message.
+
+pub mod messages;
+pub mod spp;
+pub mod transport;
+pub mod udp;

@@ -1,0 +1,190 @@
+//! CCSDS Space Packet Protocol primary header (CCSDS 133.0-B-2), from
+//! scratch.  The paper's testbed frames all LLM <-> constellation traffic
+//! as Space Packets over UDP; we implement the 6-byte primary header:
+//!
+//! ```text
+//!  bits  3        1      1        11      2        14       16
+//!       +--------+------+--------+-------+--------+--------+------------+
+//!       |version | type | sechdr | APID  | seqflg | seqcnt | data len-1 |
+//!       +--------+------+--------+-------+--------+--------+------------+
+//! ```
+
+use anyhow::{bail, Result};
+
+/// Packet type bit: telecommand (request) or telemetry (response).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketType {
+    /// Ground -> satellite (or satellite->satellite request): TC = 1.
+    Telecommand,
+    /// Satellite -> ground response: TM = 0.
+    Telemetry,
+}
+
+/// A parsed Space Packet primary header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SppHeader {
+    pub packet_type: PacketType,
+    pub secondary_header: bool,
+    /// Application process id, 11 bits (we use the satellite's linear id).
+    pub apid: u16,
+    /// Sequence flags, 2 bits — always 0b11 (unsegmented) here.
+    pub sequence_flags: u8,
+    /// Packet sequence count, 14 bits.
+    pub sequence_count: u16,
+    /// User-data length in bytes (the header encodes `len - 1`).
+    pub data_len: usize,
+}
+
+pub const SPP_HEADER_LEN: usize = 6;
+pub const APID_MAX: u16 = 0x7FF;
+const SEQ_MAX: u16 = 0x3FFF;
+/// CCSDS version number (3 bits) — always 0 for Space Packets.
+const VERSION: u16 = 0;
+
+impl SppHeader {
+    pub fn new(packet_type: PacketType, apid: u16, sequence_count: u16, data_len: usize) -> Self {
+        assert!(apid <= APID_MAX, "APID is 11 bits");
+        assert!(data_len >= 1 && data_len <= 65536, "SPP user data is 1..=65536 bytes");
+        Self {
+            packet_type,
+            secondary_header: false,
+            apid,
+            sequence_flags: 0b11,
+            sequence_count: sequence_count & SEQ_MAX,
+            data_len,
+        }
+    }
+
+    /// Serialize the 6-byte primary header.
+    pub fn encode(&self) -> [u8; SPP_HEADER_LEN] {
+        let type_bit = match self.packet_type {
+            PacketType::Telecommand => 1u16,
+            PacketType::Telemetry => 0u16,
+        };
+        let word0: u16 = (VERSION << 13)
+            | (type_bit << 12)
+            | ((self.secondary_header as u16) << 11)
+            | (self.apid & APID_MAX);
+        let word1: u16 =
+            ((self.sequence_flags as u16 & 0b11) << 14) | (self.sequence_count & SEQ_MAX);
+        let word2: u16 = (self.data_len - 1) as u16;
+        let mut out = [0u8; SPP_HEADER_LEN];
+        out[0..2].copy_from_slice(&word0.to_be_bytes());
+        out[2..4].copy_from_slice(&word1.to_be_bytes());
+        out[4..6].copy_from_slice(&word2.to_be_bytes());
+        out
+    }
+
+    /// Parse a 6-byte primary header.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < SPP_HEADER_LEN {
+            bail!("short SPP header: {} bytes", bytes.len());
+        }
+        let word0 = u16::from_be_bytes([bytes[0], bytes[1]]);
+        let word1 = u16::from_be_bytes([bytes[2], bytes[3]]);
+        let word2 = u16::from_be_bytes([bytes[4], bytes[5]]);
+        let version = word0 >> 13;
+        if version != VERSION {
+            bail!("unsupported SPP version {version}");
+        }
+        Ok(Self {
+            packet_type: if word0 & (1 << 12) != 0 {
+                PacketType::Telecommand
+            } else {
+                PacketType::Telemetry
+            },
+            secondary_header: word0 & (1 << 11) != 0,
+            apid: word0 & APID_MAX,
+            sequence_flags: (word1 >> 14) as u8,
+            sequence_count: word1 & SEQ_MAX,
+            data_len: word2 as usize + 1,
+        })
+    }
+}
+
+/// Frame user data as one Space Packet.
+pub fn frame(packet_type: PacketType, apid: u16, seq: u16, user_data: &[u8]) -> Vec<u8> {
+    let header = SppHeader::new(packet_type, apid, seq, user_data.len());
+    let mut out = Vec::with_capacity(SPP_HEADER_LEN + user_data.len());
+    out.extend_from_slice(&header.encode());
+    out.extend_from_slice(user_data);
+    out
+}
+
+/// Split a datagram into (header, user data), validating the length field.
+pub fn deframe(datagram: &[u8]) -> Result<(SppHeader, &[u8])> {
+    let header = SppHeader::decode(datagram)?;
+    let body = &datagram[SPP_HEADER_LEN..];
+    if body.len() != header.data_len {
+        bail!("SPP length mismatch: header says {}, got {}", header.data_len, body.len());
+    }
+    Ok((header, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        for (pt, apid, seq, len) in [
+            (PacketType::Telecommand, 0u16, 0u16, 1usize),
+            (PacketType::Telemetry, 0x7FF, 0x3FFF, 65536),
+            (PacketType::Telecommand, 95, 1234, 6000),
+        ] {
+            let h = SppHeader::new(pt, apid, seq, len);
+            let dec = SppHeader::decode(&h.encode()).unwrap();
+            assert_eq!(h, dec);
+        }
+    }
+
+    #[test]
+    fn known_bit_layout() {
+        // TC packet, APID 3, unsegmented, seq 1, 2 bytes of data:
+        // word0 = 0b000_1_0_00000000011 = 0x1003
+        // word1 = 0b11_00000000000001  = 0xC001
+        // word2 = 0x0001
+        let h = SppHeader::new(PacketType::Telecommand, 3, 1, 2);
+        assert_eq!(h.encode(), [0x10, 0x03, 0xC0, 0x01, 0x00, 0x01]);
+    }
+
+    #[test]
+    fn frame_deframe_roundtrip() {
+        let data = vec![0xABu8; 6000];
+        let pkt = frame(PacketType::Telecommand, 42, 7, &data);
+        assert_eq!(pkt.len(), SPP_HEADER_LEN + 6000);
+        let (h, body) = deframe(&pkt).unwrap();
+        assert_eq!(h.apid, 42);
+        assert_eq!(h.sequence_count, 7);
+        assert_eq!(body, &data[..]);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let mut pkt = frame(PacketType::Telemetry, 1, 0, &[1, 2, 3]);
+        pkt.push(0); // trailing garbage
+        assert!(deframe(&pkt).is_err());
+        pkt.truncate(7); // truncated body
+        assert!(deframe(&pkt).is_err());
+    }
+
+    #[test]
+    fn short_and_bad_version_rejected() {
+        assert!(SppHeader::decode(&[0u8; 5]).is_err());
+        let mut bytes = SppHeader::new(PacketType::Telemetry, 1, 0, 1).encode();
+        bytes[0] |= 0b0110_0000; // version 3
+        assert!(SppHeader::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn sequence_count_wraps_at_14_bits() {
+        let h = SppHeader::new(PacketType::Telemetry, 1, SEQ_MAX + 5, 1);
+        assert_eq!(h.sequence_count, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_length_data_panics() {
+        SppHeader::new(PacketType::Telemetry, 1, 0, 0);
+    }
+}

@@ -1,0 +1,322 @@
+//! Transport abstraction the KVC manager drives (§3.8's "lookups always
+//! start at the nearest satellite"), with the in-process implementation.
+//!
+//! A transport answers one question: deliver this request to that
+//! satellite and give me the response.  The *entry* into the constellation
+//! is the transport's business: a LOS satellite is contacted directly
+//! (ground uplink), anything else goes up to the closest satellite and
+//! rides the ISL mesh.
+//!
+//! [`InProcTransport`] can optionally emulate link latency in wall-clock
+//! time (slant-range uplink + per-hop ISL + serialization delay) so the
+//! Table 3 end-to-end run shows the same *shape* as the paper's testbed
+//! without real radios.
+
+use crate::constellation::geometry::Geometry;
+use crate::constellation::los::LosGrid;
+use crate::constellation::topology::SatId;
+use crate::kvc::block::BlockHash;
+use crate::kvc::chunk::ChunkKey;
+use crate::net::messages::{Envelope, Request, Response};
+use crate::satellite::fleet::Fleet;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Link latency emulation for the in-proc transport.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    pub geometry: Geometry,
+    /// Serialization bandwidth of a link, bits/s (ISL FSO and uplink).
+    pub bandwidth_bps: f64,
+    /// Multiply emulated delays by this factor; 0.0 disables sleeping
+    /// (latency is still *accounted* in `sim_latency_ns`).
+    pub sleep_scale: f64,
+}
+
+impl LinkModel {
+    pub fn laser_defaults(geometry: Geometry) -> Self {
+        Self { geometry, bandwidth_bps: 1e9, sleep_scale: 1.0 }
+    }
+
+    /// One-way latency for a request entering at `entry` (ground uplink)
+    /// and traversing `hops` ISL hops carrying `bytes` of payload.
+    pub fn one_way_s(&self, entry_ground_cells: (usize, usize), hops: usize, bytes: usize) -> f64 {
+        let up = self
+            .geometry
+            .ground_latency_s(entry_ground_cells.0, entry_ground_cells.1);
+        let isl = hops as f64 * self.geometry.worst_hop_latency_s();
+        let serial = (bytes as f64 * 8.0) / self.bandwidth_bps;
+        up + isl + serial
+    }
+}
+
+/// Counters every transport keeps (exported to /metrics).
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    pub requests: AtomicU64,
+    pub misses: AtomicU64,
+    pub errors: AtomicU64,
+    pub isl_hops: AtomicU64,
+    /// Accumulated emulated network latency (ns), whether or not slept.
+    pub sim_latency_ns: AtomicU64,
+}
+
+/// A synchronous satellite-cache transport.  Thread-safe: the manager
+/// fans chunk operations out across threads (§3.1: "parallelism both in
+/// setting and getting a single KVC").
+pub trait Transport: Send + Sync {
+    /// Deliver a request to a satellite and await its response.
+    fn request(&self, dest: SatId, req: Request) -> Result<Response>;
+
+    /// The satellite currently closest to the ground host (lookup entry).
+    fn closest(&self) -> SatId;
+
+    /// Advance the ground model to rotation epoch `epoch` (the transport
+    /// updates its LOS window; satellites migrate separately).
+    fn set_epoch(&self, epoch: u64);
+
+    /// Current rotation epoch of the ground view.
+    fn epoch(&self) -> u64;
+
+    fn stats(&self) -> &TransportStats;
+
+    // --- conveniences ---------------------------------------------------
+
+    fn get_chunk(&self, dest: SatId, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        match self.request(dest, Request::Get { key })? {
+            Response::GetOk { payload } => Ok(Some(payload)),
+            Response::GetMiss => {
+                self.stats().misses.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+            r => bail!("unexpected response to Get: {r:?}"),
+        }
+    }
+
+    fn set_chunk(&self, dest: SatId, key: ChunkKey, payload: Vec<u8>) -> Result<()> {
+        match self.request(dest, Request::Set { key, payload })? {
+            Response::SetOk => Ok(()),
+            r => bail!("unexpected response to Set: {r:?}"),
+        }
+    }
+
+    fn evict_block(&self, dest: SatId, block: BlockHash, gossip_ttl: u8) -> Result<u32> {
+        match self.request(dest, Request::Evict { block, gossip_ttl })? {
+            Response::EvictOk { dropped } => Ok(dropped),
+            r => bail!("unexpected response to Evict: {r:?}"),
+        }
+    }
+
+    fn migrate(&self, from: SatId, to: SatId) -> Result<u32> {
+        match self.request(from, Request::Migrate { to })? {
+            Response::MigrateOk { moved } => Ok(moved),
+            r => bail!("unexpected response to Migrate: {r:?}"),
+        }
+    }
+
+    fn ping(&self, dest: SatId) -> Result<()> {
+        match self.request(dest, Request::Ping)? {
+            Response::Pong => Ok(()),
+            r => bail!("unexpected response to Ping: {r:?}"),
+        }
+    }
+}
+
+/// Ground-station view shared by transports: the rotating LOS window.
+pub struct GroundView {
+    initial_center: SatId,
+    half_slots: usize,
+    half_planes: usize,
+    epoch: RwLock<u64>,
+    sats_per_plane: usize,
+}
+
+impl GroundView {
+    pub fn new(initial_center: SatId, los: &LosGrid, sats_per_plane: usize) -> Self {
+        Self {
+            initial_center,
+            half_slots: los.half_slots,
+            half_planes: los.half_planes,
+            epoch: RwLock::new(0),
+            sats_per_plane,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.read().unwrap()
+    }
+
+    pub fn set_epoch(&self, e: u64) {
+        *self.epoch.write().unwrap() = e;
+    }
+
+    pub fn center(&self) -> SatId {
+        let e = self.epoch();
+        let slot = (self.initial_center.slot as i64 - e as i64)
+            .rem_euclid(self.sats_per_plane as i64) as u16;
+        SatId::new(self.initial_center.plane, slot)
+    }
+
+    pub fn los(&self) -> LosGrid {
+        LosGrid::new(self.center(), self.half_slots, self.half_planes)
+    }
+}
+
+/// In-process transport over a [`Fleet`].
+pub struct InProcTransport {
+    pub fleet: Arc<Fleet>,
+    pub ground: GroundView,
+    pub link: Option<LinkModel>,
+    stats: TransportStats,
+    req_counter: AtomicU64,
+}
+
+impl InProcTransport {
+    pub fn new(fleet: Arc<Fleet>, ground: GroundView, link: Option<LinkModel>) -> Self {
+        Self { fleet, ground, link, stats: TransportStats::default(), req_counter: AtomicU64::new(0) }
+    }
+
+    /// Entry satellite for a destination: direct if LOS, else the closest
+    /// satellite relays into the mesh.
+    fn entry_for(&self, dest: SatId) -> SatId {
+        let los = self.ground.los();
+        if los.contains(&self.fleet.torus, dest) {
+            dest
+        } else {
+            self.ground.center()
+        }
+    }
+
+    fn emulate_latency(&self, entry: SatId, hops: usize, bytes: usize) {
+        if let Some(link) = &self.link {
+            let center = self.ground.center();
+            let dp = self.fleet.torus.plane_distance(center, entry);
+            let ds = self.fleet.torus.slot_distance(center, entry);
+            // round trip: request up + response down
+            let s = 2.0 * link.one_way_s((ds, dp), hops, bytes);
+            self.stats
+                .sim_latency_ns
+                .fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+            if link.sleep_scale > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(s * link.sleep_scale));
+            }
+        }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn request(&self, dest: SatId, req: Request) -> Result<Response> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let req_id = self.req_counter.fetch_add(1, Ordering::Relaxed);
+        let entry = self.entry_for(dest);
+        let bytes = match &req {
+            Request::Set { payload, .. } => payload.len(),
+            _ => 64,
+        };
+        let env = Envelope::new(dest, req_id);
+        let (resp, hops) = self.fleet.deliver(entry, env, req);
+        self.stats.isl_hops.fetch_add(hops as u64, Ordering::Relaxed);
+        let resp_bytes = match &resp {
+            Response::GetOk { payload } => payload.len().max(bytes),
+            _ => bytes,
+        };
+        self.emulate_latency(entry, hops, resp_bytes);
+        if let Response::Error { code } = resp {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            bail!("satellite error code {code}");
+        }
+        Ok(resp)
+    }
+
+    fn closest(&self) -> SatId {
+        self.ground.center()
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.ground.set_epoch(epoch);
+    }
+
+    fn epoch(&self) -> u64 {
+        self.ground.epoch()
+    }
+
+    fn stats(&self) -> &TransportStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::topology::Torus;
+    use crate::kvc::eviction::EvictionPolicy;
+
+    fn transport(link: Option<LinkModel>) -> InProcTransport {
+        let torus = Torus::new(5, 19);
+        let fleet = Arc::new(Fleet::new(torus, 1 << 20, EvictionPolicy::Gossip));
+        let center = SatId::new(2, 9);
+        let los = LosGrid::new(center, 2, 2);
+        let ground = GroundView::new(center, &los, torus.sats_per_plane);
+        InProcTransport::new(fleet, ground, link)
+    }
+
+    fn key(b: u8, c: u32) -> ChunkKey {
+        ChunkKey::new(BlockHash([b; 32]), c)
+    }
+
+    #[test]
+    fn chunk_roundtrip_via_trait() {
+        let t = transport(None);
+        let dest = SatId::new(2, 10); // in LOS
+        t.set_chunk(dest, key(1, 0), vec![1, 2, 3]).unwrap();
+        assert_eq!(t.get_chunk(dest, key(1, 0)).unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(t.get_chunk(dest, key(1, 9)).unwrap(), None);
+        assert_eq!(t.stats().misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn los_destinations_enter_directly() {
+        let t = transport(None);
+        let in_los = SatId::new(1, 8);
+        t.ping(in_los).unwrap();
+        assert_eq!(t.stats().isl_hops.load(Ordering::Relaxed), 0, "direct uplink");
+        let far = SatId::new(4, 0);
+        t.ping(far).unwrap();
+        let hops = t.fleet.torus.hops(SatId::new(2, 9), far) as u64;
+        assert_eq!(t.stats().isl_hops.load(Ordering::Relaxed), hops);
+    }
+
+    #[test]
+    fn rotation_moves_the_entry_point() {
+        let t = transport(None);
+        assert_eq!(t.closest(), SatId::new(2, 9));
+        t.set_epoch(3);
+        assert_eq!(t.closest(), SatId::new(2, 6));
+        // wraps
+        t.set_epoch(19);
+        assert_eq!(t.closest(), SatId::new(2, 9));
+    }
+
+    #[test]
+    fn latency_accounting_without_sleeping() {
+        let g = Geometry::new(550.0, 19, 5);
+        let mut link = LinkModel::laser_defaults(g);
+        link.sleep_scale = 0.0;
+        let t = transport(Some(link));
+        let far = SatId::new(4, 0);
+        t.set_chunk(far, key(1, 0), vec![0u8; 6000]).unwrap();
+        let ns = t.stats().sim_latency_ns.load(Ordering::Relaxed);
+        assert!(ns > 1_000_000, "multi-hop + uplink should exceed 1 ms, got {ns} ns");
+    }
+
+    #[test]
+    fn eviction_via_trait() {
+        let t = transport(None);
+        let dest = SatId::new(2, 9);
+        t.set_chunk(dest, key(7, 0), vec![1]).unwrap();
+        assert_eq!(t.evict_block(dest, BlockHash([7; 32]), 0).unwrap(), 1);
+        assert_eq!(t.get_chunk(dest, key(7, 0)).unwrap(), None);
+    }
+}

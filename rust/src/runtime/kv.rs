@@ -1,0 +1,183 @@
+//! Host-side KV cache: the rust coordinator owns the cache bytes (it has
+//! to — they are what SkyMemory chunks and ships to the constellation),
+//! and PJRT receives them as per-call input buffers.
+//!
+//! Layout: one f32 tensor `[L, H, S, D]` per K and V, flattened row-major.
+//! A token block `b` occupies positions `[b*B, (b+1)*B)` of the `S` axis.
+
+use super::model_config::ModelDims;
+
+/// The engine's per-sequence KV cache.
+#[derive(Clone)]
+pub struct KvCache {
+    pub dims: ModelDims,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Tokens currently materialized in the cache.
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(dims: ModelDims) -> Self {
+        let n = dims.cache_elems();
+        Self { dims, k: vec![0.0; n], v: vec![0.0; n], len: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+        self.len = 0;
+    }
+
+    /// Write a new block tensor `[L, H, B, D]` (as returned by the model)
+    /// into the cache at token position `pos`.
+    pub fn write_new(&mut self, pos: usize, k_new: &[f32], v_new: &[f32], block_len: usize) {
+        let d = &self.dims;
+        assert!(pos + block_len <= d.max_seq, "cache overflow");
+        assert_eq!(k_new.len(), d.n_layers * d.n_heads * block_len * d.head_dim);
+        write_block(&mut self.k, k_new, d, pos, block_len);
+        write_block(&mut self.v, v_new, d, pos, block_len);
+        self.len = self.len.max(pos + block_len);
+    }
+
+    /// Write a fetched KVC payload (concat of K-block then V-block values,
+    /// each `[L, H, B, D]`) at block index `block_idx`.
+    pub fn write_block_payload(&mut self, block_idx: usize, payload: &[f32]) {
+        let d = &self.dims;
+        let half = d.block_kv_elems();
+        assert_eq!(payload.len(), 2 * half, "payload must be one block's K+V");
+        let pos = block_idx * d.block_tokens;
+        self.write_new(pos, &payload[..half], &payload[half..], d.block_tokens);
+    }
+
+    /// Extract one block's K+V as the KVC payload (inverse of
+    /// `write_block_payload`).
+    pub fn read_block_payload(&self, block_idx: usize) -> Vec<f32> {
+        let d = &self.dims;
+        let pos = block_idx * d.block_tokens;
+        let mut out = Vec::with_capacity(d.block_payload_elems());
+        read_block(&self.k, &mut out, d, pos, d.block_tokens);
+        read_block(&self.v, &mut out, d, pos, d.block_tokens);
+        out
+    }
+}
+
+/// Assemble a KVC payload directly from the model's per-block outputs
+/// (avoids a cache round-trip on the set path).
+pub fn payload_from_new(k_new: &[f32], v_new: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(k_new.len() + v_new.len());
+    out.extend_from_slice(k_new);
+    out.extend_from_slice(v_new);
+    out
+}
+
+fn write_block(cache: &mut [f32], block: &[f32], d: &ModelDims, pos: usize, block_len: usize) {
+    let row = d.head_dim;
+    for l in 0..d.n_layers {
+        for h in 0..d.n_heads {
+            let src_base = ((l * d.n_heads + h) * block_len) * row;
+            let dst_base = ((l * d.n_heads + h) * d.max_seq + pos) * row;
+            let n = block_len * row;
+            cache[dst_base..dst_base + n].copy_from_slice(&block[src_base..src_base + n]);
+        }
+    }
+}
+
+fn read_block(cache: &[f32], out: &mut Vec<f32>, d: &ModelDims, pos: usize, block_len: usize) {
+    let row = d.head_dim;
+    for l in 0..d.n_layers {
+        for h in 0..d.n_heads {
+            let src_base = ((l * d.n_heads + h) * d.max_seq + pos) * row;
+            out.extend_from_slice(&cache[src_base..src_base + block_len * row]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 3,
+            head_dim: 4,
+            d_ff: 512,
+            max_seq: 16,
+            block_tokens: 4,
+            kv_block_bytes: 2 * 2 * 3 * 4 * 4 * 4,
+        }
+    }
+
+    fn ramp(n: usize, base: f32) -> Vec<f32> {
+        (0..n).map(|i| base + i as f32).collect()
+    }
+
+    #[test]
+    fn write_then_read_block_roundtrip() {
+        let d = dims();
+        let mut cache = KvCache::new(d);
+        let half = d.block_kv_elems();
+        let payload = ramp(2 * half, 100.0);
+        cache.write_block_payload(2, &payload);
+        assert_eq!(cache.read_block_payload(2), payload);
+        assert_eq!(cache.len, 12);
+        // other blocks untouched (zero)
+        assert!(cache.read_block_payload(0).iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn write_new_places_rows_correctly() {
+        let d = dims();
+        let mut cache = KvCache::new(d);
+        let k_new = ramp(d.block_kv_elems(), 0.0);
+        let v_new = ramp(d.block_kv_elems(), 1000.0);
+        cache.write_new(4, &k_new, &v_new, d.block_tokens);
+        // spot-check: layer 1, head 2, token 1 within block, dim 3
+        let (l, h, t, dd) = (1usize, 2usize, 1usize, 3usize);
+        let src = ((l * d.n_heads + h) * d.block_tokens + t) * d.head_dim + dd;
+        let dst = ((l * d.n_heads + h) * d.max_seq + 4 + t) * d.head_dim + dd;
+        assert_eq!(cache.k[dst], k_new[src]);
+        assert_eq!(cache.v[dst], v_new[src]);
+    }
+
+    #[test]
+    fn payload_concat_matches_cache_readback() {
+        let d = dims();
+        let mut cache = KvCache::new(d);
+        let k_new = ramp(d.block_kv_elems(), 7.0);
+        let v_new = ramp(d.block_kv_elems(), -7.0);
+        cache.write_new(0, &k_new, &v_new, d.block_tokens);
+        assert_eq!(payload_from_new(&k_new, &v_new), cache.read_block_payload(0));
+    }
+
+    #[test]
+    fn partial_block_write() {
+        let d = dims();
+        let mut cache = KvCache::new(d);
+        let n = d.n_layers * d.n_heads * 2 * d.head_dim; // block_len = 2
+        cache.write_new(8, &ramp(n, 5.0), &ramp(n, 6.0), 2);
+        assert_eq!(cache.len, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache overflow")]
+    fn overflow_panics() {
+        let d = dims();
+        let mut cache = KvCache::new(d);
+        let n = d.block_kv_elems();
+        cache.write_new(14, &ramp(n, 0.0), &ramp(n, 0.0), d.block_tokens);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let d = dims();
+        let mut cache = KvCache::new(d);
+        cache.write_block_payload(0, &ramp(2 * d.block_kv_elems(), 1.0));
+        cache.reset();
+        assert_eq!(cache.len, 0);
+        assert!(cache.k.iter().all(|v| *v == 0.0));
+    }
+}

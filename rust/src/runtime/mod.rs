@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT artifacts the Python build path emitted
+//! (HLO text + weights.bin + model_config.json) and executes prefill /
+//! decode steps on the request path.  Python never runs here.
+//!
+//! * [`model_config`] — parses artifacts/model_config.json (the contract
+//!   with python/compile/aot.py).
+//! * [`pjrt`] — the PJRT CPU client wrapper: compile HLO text once, upload
+//!   weights once as device buffers, execute steps with per-call buffers.
+//! * [`kv`] — host-side KV-cache layout helpers ([L,H,S,D] flattening,
+//!   block read/write) shared by the engine and the KVC manager.
+//! * [`tokenizer`] / [`sampler`] — byte-level tokenizer and token sampling.
+
+pub mod kv;
+pub mod model_config;
+pub mod pjrt;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use model_config::{Artifacts, ModelDims};
+pub use pjrt::PjRtModel;

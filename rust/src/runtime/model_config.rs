@@ -1,0 +1,252 @@
+//! Parse artifacts/model_config.json — the build-time contract with
+//! python/compile/aot.py (model dimensions, weights manifest, artifact
+//! file names, positional argument order).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model dimensions (mirror of python/compile/config.py::ModelConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub block_tokens: usize,
+    /// f32 bytes of one block's (K, V): 2*L*H*block*D*4.
+    pub kv_block_bytes: usize,
+}
+
+impl ModelDims {
+    /// f32 element count of one KV cache tensor [L, H, S, D].
+    pub fn cache_elems(&self) -> usize {
+        self.n_layers * self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// f32 element count of one block's K (or V) tensor [L, H, B, D].
+    pub fn block_kv_elems(&self) -> usize {
+        self.n_layers * self.n_heads * self.block_tokens * self.head_dim
+    }
+
+    /// f32 values of one block's combined (K, V) payload.
+    pub fn block_payload_elems(&self) -> usize {
+        2 * self.block_kv_elems()
+    }
+
+    /// How many full blocks fit the cache.
+    pub fn max_blocks(&self) -> usize {
+        self.max_seq / self.block_tokens
+    }
+}
+
+/// One tensor of weights.bin.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+/// The loaded artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dims: ModelDims,
+    pub weights: Vec<WeightEntry>,
+    pub dir: PathBuf,
+    pub prefill_hlo: PathBuf,
+    pub decode_hlo: PathBuf,
+    pub weights_bin: PathBuf,
+}
+
+impl Artifacts {
+    /// Load and validate `<dir>/model_config.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let cfg_path = dir.join("model_config.json");
+        let text = std::fs::read_to_string(&cfg_path)
+            .with_context(|| format!("reading {cfg_path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing model_config.json")?;
+        let m = j.get("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+        let get = |k: &str| -> Result<usize> {
+            m.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing model.{k}"))
+        };
+        let dims = ModelDims {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            d_ff: get("d_ff")?,
+            max_seq: get("max_seq")?,
+            block_tokens: get("block_tokens")?,
+            kv_block_bytes: get("kv_block_bytes")?,
+        };
+        if dims.kv_block_bytes != dims.block_payload_elems() * 4 {
+            bail!("kv_block_bytes inconsistent with dims");
+        }
+        if dims.max_seq % dims.block_tokens != 0 {
+            bail!("max_seq must be a multiple of block_tokens");
+        }
+        let mut weights = Vec::new();
+        let mut expected_offset = 0usize;
+        for w in j
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing 'weights'"))?
+        {
+            let name = w
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("weight missing name"))?
+                .to_string();
+            let shape: Vec<usize> = w
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("{name}: bad shape")))
+                .collect::<Result<_>>()?;
+            let offset_bytes = w
+                .get("offset_bytes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: missing offset"))?;
+            let size_bytes = w
+                .get("size_bytes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: missing size"))?;
+            if offset_bytes != expected_offset {
+                bail!("{name}: non-contiguous manifest");
+            }
+            if size_bytes != 4 * shape.iter().product::<usize>() {
+                bail!("{name}: size/shape mismatch");
+            }
+            expected_offset += size_bytes;
+            weights.push(WeightEntry { name, shape, offset_bytes, size_bytes });
+        }
+        let arts = j.get("artifacts").ok_or_else(|| anyhow!("missing 'artifacts'"))?;
+        let prefill = arts
+            .get("prefill")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing artifacts.prefill"))?;
+        let decode = arts
+            .get("decode")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing artifacts.decode"))?;
+        Ok(Self {
+            dims,
+            prefill_hlo: dir.join(prefill),
+            decode_hlo: dir.join(decode),
+            weights_bin: dir.join("weights.bin"),
+            weights,
+            dir,
+        })
+    }
+
+    /// Total bytes weights.bin must have.
+    pub fn weights_len_bytes(&self) -> usize {
+        self.weights.iter().map(|w| w.size_bytes).sum()
+    }
+
+    /// Read weights.bin into per-tensor f32 vectors (manifest order).
+    pub fn read_weights(&self) -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+        let raw = std::fs::read(&self.weights_bin)
+            .with_context(|| format!("reading {:?}", self.weights_bin))?;
+        if raw.len() != self.weights_len_bytes() {
+            bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                raw.len(),
+                self.weights_len_bytes()
+            );
+        }
+        let mut out = Vec::with_capacity(self.weights.len());
+        for w in &self.weights {
+            let bytes = &raw[w.offset_bytes..w.offset_bytes + w.size_bytes];
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            out.push((w.shape.clone(), vals));
+        }
+        Ok(out)
+    }
+
+    /// SHA-256 of weights.bin, used as the model fingerprint for the KVC
+    /// chain root (§3.3: a changed parameter invalidates the cache).
+    pub fn weights_digest(&self) -> Result<[u8; 32]> {
+        let raw = std::fs::read(&self.weights_bin)?;
+        Ok(crate::kvc::hash::sha256(&raw))
+    }
+}
+
+/// Default artifacts dir: `$SKYMEMORY_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("SKYMEMORY_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_artifacts_dir().join("model_config.json").exists()
+    }
+
+    #[test]
+    fn loads_real_artifacts_when_present() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let a = Artifacts::load(default_artifacts_dir()).unwrap();
+        assert_eq!(a.dims.vocab, 256);
+        assert_eq!(a.dims.max_seq % a.dims.block_tokens, 0);
+        assert!(a.weights.len() > 10);
+        assert_eq!(a.weights[0].name, "wte");
+        let w = a.read_weights().unwrap();
+        assert_eq!(w.len(), a.weights.len());
+        assert_eq!(w[0].1.len(), a.dims.vocab * a.dims.d_model);
+        // digest is stable across calls
+        assert_eq!(a.weights_digest().unwrap(), a.weights_digest().unwrap());
+    }
+
+    #[test]
+    fn rejects_inconsistent_manifest() {
+        let dir = std::env::temp_dir().join(format!("skymem_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = r#"{
+          "model": {"vocab": 256, "d_model": 128, "n_layers": 4, "n_heads": 4,
+                    "head_dim": 32, "d_ff": 512, "max_seq": 256,
+                    "block_tokens": 32, "kv_block_bytes": 1},
+          "weights": [], "artifacts": {"prefill": "p", "decode": "d"}
+        }"#;
+        std::fs::write(dir.join("model_config.json"), bad).unwrap();
+        assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dims_arithmetic() {
+        let dims = ModelDims {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 32,
+            d_ff: 512,
+            max_seq: 256,
+            block_tokens: 32,
+            kv_block_bytes: 2 * 4 * 4 * 32 * 32 * 4,
+        };
+        assert_eq!(dims.cache_elems(), 4 * 4 * 256 * 32);
+        assert_eq!(dims.block_kv_elems(), 4 * 4 * 32 * 32);
+        assert_eq!(dims.block_payload_elems() * 4, dims.kv_block_bytes);
+        assert_eq!(dims.max_blocks(), 8);
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! HLO *text* (not serialized protos — see python/compile/aot.py) is
+//! parsed and compiled once per process; the weights are uploaded once as
+//! device buffers and reused by every call (the single biggest runtime
+//! optimization: ~3.3 MB of weights never cross the host/device boundary
+//! again).  Per step, only the tokens, the KV cache views and the position
+//! scalar are transferred.
+//!
+//! Positional argument contract (aot.py): `[weights..., tokens, k_cache,
+//! v_cache, pos]`; output is the tuple `(logits, k_new, v_new)`.
+
+use super::model_config::Artifacts;
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// One forward step's outputs.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// `[block, vocab]` flattened.
+    pub logits: Vec<f32>,
+    /// `[L, H, block, D]` flattened — the new block's keys.
+    pub k_new: Vec<f32>,
+    /// `[L, H, block, D]` flattened — the new block's values.
+    pub v_new: Vec<f32>,
+}
+
+/// The compiled model: prefill (one token block) + decode (one token).
+///
+/// NOT `Send`/`Sync` — the coordinator runs it on a dedicated executor
+/// thread (see `coordinator::executor`), which also matches how a real
+/// deployment pins one execution stream per accelerator.
+pub struct PjRtModel {
+    pub artifacts: Artifacts,
+    client: PjRtClient,
+    prefill: PjRtLoadedExecutable,
+    decode: PjRtLoadedExecutable,
+    weight_buffers: Vec<PjRtBuffer>,
+}
+
+impl PjRtModel {
+    /// Load artifacts, compile both executables, upload the weights.
+    pub fn load(artifacts: Artifacts) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let prefill = compile(&client, &artifacts.prefill_hlo)?;
+        let decode = compile(&client, &artifacts.decode_hlo)?;
+        let mut weight_buffers = Vec::with_capacity(artifacts.weights.len());
+        for (shape, values) in artifacts.read_weights()? {
+            weight_buffers.push(
+                client
+                    .buffer_from_host_buffer(&values, &shape, None)
+                    .context("uploading weight buffer")?,
+            );
+        }
+        Ok(Self { artifacts, client, prefill, decode, weight_buffers })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(Artifacts::load(super::model_config::default_artifacts_dir())?)
+    }
+
+    /// Run one block of `block_tokens` tokens through the model at cache
+    /// position `pos` (the cache holds `pos` valid tokens).
+    pub fn prefill(&self, tokens: &[i32], k: &[f32], v: &[f32], pos: usize) -> Result<StepOutput> {
+        let b = self.artifacts.dims.block_tokens;
+        if tokens.len() != b {
+            bail!("prefill expects exactly {b} tokens, got {}", tokens.len());
+        }
+        self.step(&self.prefill, tokens, k, v, pos)
+    }
+
+    /// Run a single token at cache position `pos`.
+    pub fn decode(&self, token: i32, k: &[f32], v: &[f32], pos: usize) -> Result<StepOutput> {
+        self.step(&self.decode, &[token], k, v, pos)
+    }
+
+    fn step(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        tokens: &[i32],
+        k: &[f32],
+        v: &[f32],
+        pos: usize,
+    ) -> Result<StepOutput> {
+        let d = &self.artifacts.dims;
+        if k.len() != d.cache_elems() || v.len() != d.cache_elems() {
+            bail!("cache size mismatch");
+        }
+        if pos + tokens.len() > d.max_seq {
+            bail!("pos {pos} + block {} exceeds max_seq {}", tokens.len(), d.max_seq);
+        }
+        let cache_dims = [d.n_layers, d.n_heads, d.max_seq, d.head_dim];
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
+        let k_buf = self.client.buffer_from_host_buffer(k, &cache_dims, None)?;
+        let v_buf = self.client.buffer_from_host_buffer(v, &cache_dims, None)?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(&[pos as i32], &[], None)?;
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.weight_buffers.len() + 4);
+        args.extend(self.weight_buffers.iter());
+        args.push(&tok_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&pos_buf);
+        let result = exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (logits, k_new, v_new) = tuple.to_tuple3()?;
+        Ok(StepOutput {
+            logits: logits.to_vec::<f32>()?,
+            k_new: k_new.to_vec::<f32>()?,
+            v_new: v_new.to_vec::<f32>()?,
+        })
+    }
+
+    /// Logits for the *last* token of a step output.
+    pub fn last_logits<'a>(&self, out: &'a StepOutput) -> &'a [f32] {
+        let v = self.artifacts.dims.vocab;
+        &out.logits[out.logits.len() - v..]
+    }
+}
+
+fn compile(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+}
+
+/// Keep Literal import used (Literal is part of the public xla API surface
+/// we exercise in tests).
+#[allow(unused)]
+fn _literal_probe() -> Literal {
+    Literal::scalar(0f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kv::KvCache;
+    use crate::runtime::model_config::default_artifacts_dir;
+    use crate::runtime::sampler::argmax;
+    use crate::runtime::tokenizer::ByteTokenizer;
+
+    fn model() -> Option<PjRtModel> {
+        if !default_artifacts_dir().join("model_config.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjRtModel::load_default().expect("model loads"))
+    }
+
+    #[test]
+    fn prefill_shapes_and_determinism() {
+        let Some(m) = model() else { return };
+        let d = m.artifacts.dims;
+        let cache = KvCache::new(d);
+        let tokens: Vec<i32> = (0..d.block_tokens as i32).collect();
+        let out1 = m.prefill(&tokens, &cache.k, &cache.v, 0).unwrap();
+        let out2 = m.prefill(&tokens, &cache.k, &cache.v, 0).unwrap();
+        assert_eq!(out1.logits.len(), d.block_tokens * d.vocab);
+        assert_eq!(out1.k_new.len(), d.block_kv_elems());
+        assert_eq!(out1.v_new.len(), d.block_kv_elems());
+        assert_eq!(out1.logits, out2.logits, "deterministic");
+        assert!(out1.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn decode_continues_prefill() {
+        let Some(m) = model() else { return };
+        let d = m.artifacts.dims;
+        let mut cache = KvCache::new(d);
+        let tok = ByteTokenizer;
+        let text = "the cache moves with the satellite ";
+        let tokens = tok.encode(text);
+        let block = &tokens[..d.block_tokens.min(tokens.len())];
+        let out = m.prefill(block, &cache.k, &cache.v, 0).unwrap();
+        cache.write_new(0, &out.k_new, &out.v_new, d.block_tokens);
+        // decode one token; logits must be finite and shaped [1, vocab]
+        let next = argmax(m.last_logits(&out));
+        let out2 = m.decode(next, &cache.k, &cache.v, d.block_tokens).unwrap();
+        assert_eq!(out2.logits.len(), d.vocab);
+        assert!(out2.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prefill_block_then_decode_matches_all_decode() {
+        // Cross-check the two executables against each other: feeding a
+        // block via prefill then decoding token t must equal feeding all
+        // tokens one-by-one via decode (same final logits).
+        let Some(m) = model() else { return };
+        let d = m.artifacts.dims;
+        let tok = ByteTokenizer;
+        let text = "a cache in the sky serves keys and values to the ground";
+        let tokens: Vec<i32> = tok.encode(text)[..d.block_tokens].to_vec();
+
+        // path A: prefill the whole block
+        let cache_a = KvCache::new(d);
+        let out_a = m.prefill(&tokens, &cache_a.k, &cache_a.v, 0).unwrap();
+        let last_a = m.last_logits(&out_a).to_vec();
+
+        // path B: decode token by token
+        let mut cache_b = KvCache::new(d);
+        let mut last_b = Vec::new();
+        for (i, t) in tokens.iter().enumerate() {
+            let out = m.decode(*t, &cache_b.k, &cache_b.v, i).unwrap();
+            cache_b.write_new(i, &out.k_new, &out.v_new, 1);
+            last_b = out.logits;
+        }
+        let max_err = last_a
+            .iter()
+            .zip(&last_b)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "prefill vs decode divergence: {max_err}");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let Some(m) = model() else { return };
+        let d = m.artifacts.dims;
+        let cache = KvCache::new(d);
+        assert!(m.prefill(&[1, 2, 3], &cache.k, &cache.v, 0).is_err());
+        assert!(m.decode(1, &cache.k[..10], &cache.v, 0).is_err());
+        assert!(m
+            .decode(1, &cache.k, &cache.v, d.max_seq)
+            .is_err());
+    }
+
+    #[test]
+    fn trained_model_prefers_text_like_bytes() {
+        // the build-time training should make letters/space far more
+        // likely than control bytes after a text prompt
+        let Some(m) = model() else { return };
+        let d = m.artifacts.dims;
+        let cache = KvCache::new(d);
+        let tok = ByteTokenizer;
+        let tokens = tok.encode("the satellite passes overhead every");
+        let out = m.prefill(&tokens[..d.block_tokens], &cache.k, &cache.v, 0).unwrap();
+        let logits = m.last_logits(&out);
+        let best = argmax(logits);
+        assert!(
+            (32..127).contains(&best),
+            "argmax byte {best} should be printable ASCII"
+        );
+    }
+}

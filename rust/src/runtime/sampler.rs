@@ -1,0 +1,131 @@
+//! Token sampling over the model's logits: greedy, temperature, top-k —
+//! deterministic via the crate's own RNG (no rand crate offline).
+
+use crate::util::rng::XorShift64;
+
+/// Sampling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    /// 0.0 => greedy argmax.
+    pub temperature: f32,
+    /// 0 => no top-k restriction.
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0, seed: 0x5eed }
+    }
+}
+
+/// A stateful sampler (one per sequence).
+pub struct Sampler {
+    cfg: SamplerConfig,
+    rng: XorShift64,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplerConfig) -> Self {
+        Self { cfg, rng: XorShift64::new(cfg.seed) }
+    }
+
+    /// Pick the next token from `logits`.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        assert!(!logits.is_empty());
+        if self.cfg.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // softmax over (optionally top-k) logits at the given temperature
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.cfg.top_k > 0 && self.cfg.top_k < logits.len() {
+            idx.sort_unstable_by(|a, b| logits[*b].total_cmp(&logits[*a]));
+            idx.truncate(self.cfg.top_k);
+        }
+        let max = idx.iter().map(|i| logits[*i]).fold(f32::NEG_INFINITY, f32::max);
+        let temp = self.cfg.temperature;
+        let weights: Vec<f64> =
+            idx.iter().map(|i| (((logits[*i] - max) / temp) as f64).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = self.rng.next_f64() * total;
+        for (w, i) in weights.iter().zip(&idx) {
+            if u < *w {
+                return *i as i32;
+            }
+            u -= w;
+        }
+        *idx.last().unwrap() as i32
+    }
+}
+
+/// Argmax with deterministic tie-breaking (lowest index).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, v) in logits.iter().enumerate() {
+        if *v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::new(SamplerConfig::default());
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(s.sample(&logits), 1);
+        assert_eq!(argmax(&[3.0, 3.0, 1.0]), 0, "tie -> lowest index");
+    }
+
+    #[test]
+    fn temperature_sampling_is_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 0, seed: 42 };
+        let a: Vec<i32> = {
+            let mut s = Sampler::new(cfg);
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut s = Sampler::new(cfg);
+            (0..20).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut logits = vec![0.0f32; 100];
+        logits[7] = 5.0;
+        logits[13] = 4.0;
+        let mut s = Sampler::new(SamplerConfig { temperature: 2.0, top_k: 2, seed: 1 });
+        for _ in 0..200 {
+            let t = s.sample(&logits);
+            assert!(t == 7 || t == 13, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let logits = vec![1.0f32, 0.9, 0.8, 0.7];
+        let mut s = Sampler::new(SamplerConfig { temperature: 10.0, top_k: 0, seed: 3 });
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seen.insert(s.sample(&logits));
+        }
+        assert!(seen.len() >= 3, "high temperature should visit most tokens");
+    }
+
+    #[test]
+    fn sharp_distribution_concentrates() {
+        let mut logits = vec![0.0f32; 8];
+        logits[5] = 100.0;
+        let mut s = Sampler::new(SamplerConfig { temperature: 0.5, top_k: 0, seed: 9 });
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 5);
+        }
+    }
+}

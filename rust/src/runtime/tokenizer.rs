@@ -1,0 +1,64 @@
+//! Byte-level tokenizer: token id == byte value (vocab 256).  The paper's
+//! testbed uses TinyLlama's SentencePiece tokenizer; a byte tokenizer
+//! preserves the property the protocol cares about (deterministic
+//! text -> token mapping shared by hashing and the model) with zero
+//! dependencies, and matches the byte-LM trained at build time.
+
+/// Byte-level tokenizer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    /// Stable identifier mixed into the KVC model fingerprint.
+    pub fn id(&self) -> &'static str {
+        "byte-v1"
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|b| *b as i32).collect()
+    }
+
+    /// Decode tokens back to text (lossy on invalid UTF-8 boundaries).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|t| (*t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = ByteTokenizer;
+        let text = "The satellite passes overhead.";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let t = ByteTokenizer;
+        let text = "héllo ☂ satellites";
+        let tokens = t.encode(text);
+        assert_eq!(tokens.len(), text.len()); // bytes, not chars
+        assert_eq!(t.decode(&tokens), text);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let t = ByteTokenizer;
+        for tok in t.encode("\u{0}\u{7f}émoji 🛰") {
+            assert!((0..256).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn empty() {
+        let t = ByteTokenizer;
+        assert!(t.encode("").is_empty());
+        assert_eq!(t.decode(&[]), "");
+    }
+}

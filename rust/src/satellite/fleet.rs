@@ -1,0 +1,207 @@
+//! In-process constellation: every satellite is a [`Node`] behind an
+//! `Arc`, and "packets" hop the +GRID mesh by counted routing steps.  This
+//! fleet backs the in-proc transport (fast, deterministic, used by tests,
+//! benches and the quickstart); the UDP fleet in [`crate::net::udp`] runs
+//! the identical node logic over real sockets.
+
+use crate::constellation::topology::{SatId, Torus};
+use crate::kvc::eviction::EvictionPolicy;
+use crate::net::messages::{Envelope, Request, Response};
+use crate::satellite::node::{Node, Outgoing};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Delivery report for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Delivery {
+    pub response_kind_ok: bool,
+    /// ISL hops the request traversed from the entry satellite.
+    pub isl_hops: usize,
+}
+
+/// An in-process constellation.
+pub struct Fleet {
+    pub torus: Torus,
+    nodes: Vec<Arc<Node>>,
+    /// Total ISL hops traversed (requests + side effects), for telemetry.
+    pub total_hops: AtomicU64,
+    /// Total side-effect messages delivered (gossip, migration sets).
+    pub side_effects: AtomicU64,
+}
+
+impl Fleet {
+    pub fn new(torus: Torus, byte_budget_per_sat: usize, policy: EvictionPolicy) -> Self {
+        let nodes = torus
+            .all()
+            .map(|id| Arc::new(Node::new(id, byte_budget_per_sat, policy)))
+            .collect();
+        Self { torus, nodes, total_hops: AtomicU64::new(0), side_effects: AtomicU64::new(0) }
+    }
+
+    pub fn node(&self, sat: SatId) -> &Arc<Node> {
+        &self.nodes[sat.linear(self.torus.sats_per_plane)]
+    }
+
+    pub fn nodes(&self) -> &[Arc<Node>] {
+        &self.nodes
+    }
+
+    /// Deliver `req` to `env.dest`, entering the constellation at `entry`
+    /// (the ground uplink satellite).  Returns the response and the ISL
+    /// hop count; side-effect sends (gossip, migration) are delivered
+    /// breadth-first in the background of the same call.
+    pub fn deliver(&self, entry: SatId, env: Envelope, req: Request) -> (Response, usize) {
+        let hops = self.torus.hops(entry, env.dest);
+        self.total_hops.fetch_add(hops as u64, Ordering::Relaxed);
+        if hops > env.ttl as usize {
+            // unreachable within TTL: routing drops the packet
+            return (Response::Error { code: 1 }, hops);
+        }
+        let dest = env.dest;
+        let (resp, outgoing) = self.node(dest).handle(&self.torus, &env, &req);
+        self.run_side_effects(dest, outgoing);
+        (resp, hops)
+    }
+
+    fn run_side_effects(&self, origin: SatId, outgoing: Vec<Outgoing>) {
+        let mut queue: VecDeque<(SatId, Outgoing)> =
+            outgoing.into_iter().map(|o| (origin, o)).collect();
+        // Bounded flood: TTLs inside Evict requests bound gossip; migration
+        // Sets generate no further sends; cap defensively anyway.
+        let mut budget = 100_000usize;
+        while let Some((from, o)) = queue.pop_front() {
+            if budget == 0 {
+                break;
+            }
+            budget -= 1;
+            self.side_effects.fetch_add(1, Ordering::Relaxed);
+            let hops = self.torus.hops(from, o.dest) as u64;
+            self.total_hops.fetch_add(hops, Ordering::Relaxed);
+            let env = Envelope::new(o.dest, 0);
+            let (_, next) = self.node(o.dest).handle(&self.torus, &env, &o.request);
+            for n in next {
+                queue.push_back((o.dest, n));
+            }
+        }
+    }
+
+    /// Execute a rotation migration plan (§3.4): one Migrate per moving
+    /// satellite, issued in parallel per plane in the real system — here
+    /// sequentially but order-independent.
+    pub fn migrate(&self, plan: &[crate::mapping::migration::MigrationMove]) -> u32 {
+        let mut moved = 0;
+        // Each satellite drains once even if it hosts several servers.
+        let mut seen: Vec<(SatId, SatId)> = Vec::new();
+        for m in plan {
+            if seen.contains(&(m.from, m.to)) {
+                continue;
+            }
+            seen.push((m.from, m.to));
+            let env = Envelope::new(m.from, 0);
+            let (resp, _) = self.deliver(m.from, env, Request::Migrate { to: m.to });
+            if let Response::MigrateOk { moved: n } = resp {
+                moved += n;
+            }
+        }
+        moved
+    }
+
+    /// Total chunks stored across the constellation.
+    pub fn total_chunks(&self) -> usize {
+        self.nodes.iter().map(|n| n.chunk_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvc::block::BlockHash;
+    use crate::kvc::chunk::ChunkKey;
+
+    fn key(b: u8, c: u32) -> ChunkKey {
+        ChunkKey::new(BlockHash([b; 32]), c)
+    }
+
+    fn fleet() -> Fleet {
+        Fleet::new(Torus::new(5, 19), 1 << 20, EvictionPolicy::Gossip)
+    }
+
+    #[test]
+    fn set_get_across_the_torus() {
+        let f = fleet();
+        let entry = SatId::new(2, 9);
+        let dest = SatId::new(4, 2);
+        let env = Envelope::new(dest, 1);
+        let (r, hops) =
+            f.deliver(entry, env.clone(), Request::Set { key: key(1, 0), payload: vec![9; 64] });
+        assert_eq!(r, Response::SetOk);
+        assert_eq!(hops, f.torus.hops(entry, dest));
+        let (r, _) = f.deliver(entry, env, Request::Get { key: key(1, 0) });
+        assert_eq!(r, Response::GetOk { payload: vec![9; 64] });
+    }
+
+    #[test]
+    fn gossip_eviction_reaches_neighborhood() {
+        let f = fleet();
+        let center = SatId::new(2, 9);
+        let block = BlockHash([5; 32]);
+        // store the same block's chunks on centre and a ring-2 neighbour
+        for (sat, c) in [(center, 0u32), (f.torus.north(center), 1), (f.torus.east(f.torus.east(center)), 2)] {
+            let env = Envelope::new(sat, 1);
+            f.deliver(sat, env, Request::Set { key: ChunkKey::new(block, c), payload: vec![1] });
+        }
+        assert_eq!(f.total_chunks(), 3);
+        // explicit eviction at the centre gossips outward (ttl 2 covers
+        // the ring-2 neighbour)
+        let env = Envelope::new(center, 2);
+        let (r, _) = f.deliver(center, env, Request::Evict { block, gossip_ttl: 2 });
+        assert!(matches!(r, Response::EvictOk { .. }));
+        assert_eq!(f.total_chunks(), 0, "gossip must purge the neighbourhood");
+        assert!(f.side_effects.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn migration_moves_chunks_between_sats() {
+        let f = fleet();
+        let from = SatId::new(1, 18);
+        let to = SatId::new(1, 15);
+        for c in 0..5u32 {
+            let env = Envelope::new(from, 1);
+            f.deliver(from, env, Request::Set { key: key(9, c), payload: vec![c as u8; 32] });
+        }
+        let plan = vec![crate::mapping::migration::MigrationMove { server: 1, from, to }];
+        let moved = f.migrate(&plan);
+        assert_eq!(moved, 5);
+        assert_eq!(f.node(from).chunk_count(), 0);
+        assert_eq!(f.node(to).chunk_count(), 5);
+        let env = Envelope::new(to, 2);
+        let (r, _) = f.deliver(to, env, Request::Get { key: key(9, 3) });
+        assert_eq!(r, Response::GetOk { payload: vec![3; 32] });
+    }
+
+    #[test]
+    fn duplicate_migration_targets_drain_once() {
+        let f = fleet();
+        let from = SatId::new(0, 0);
+        let to = SatId::new(0, 4);
+        let env = Envelope::new(from, 1);
+        f.deliver(from, env, Request::Set { key: key(1, 0), payload: vec![1] });
+        let plan = vec![
+            crate::mapping::migration::MigrationMove { server: 1, from, to },
+            crate::mapping::migration::MigrationMove { server: 4, from, to },
+        ];
+        assert_eq!(f.migrate(&plan), 1);
+    }
+
+    #[test]
+    fn hop_accounting() {
+        let f = fleet();
+        let entry = SatId::new(0, 0);
+        let dest = SatId::new(2, 5);
+        let before = f.total_hops.load(Ordering::Relaxed);
+        f.deliver(entry, Envelope::new(dest, 1), Request::Ping);
+        let after = f.total_hops.load(Ordering::Relaxed);
+        assert_eq!(after - before, f.torus.hops(entry, dest) as u64);
+    }
+}

@@ -1,0 +1,12 @@
+//! The satellite node substrate — the paper's cFS deployment stand-in.
+//!
+//! Each satellite runs a chunk [`store`] (hashtable + LRU, §3.9), and a
+//! [`node`] that handles SkyMemory requests, forwards packets along the
+//! +GRID mesh, gossips evictions, and hands its chunks over on rotation
+//! migration.  [`fleet`] assembles full constellations: in-process (one
+//! `Node` per satellite behind an `Arc`) or over UDP (one socket + thread
+//! per satellite, groupable into OS processes like the paper's 5 NUCs).
+
+pub mod fleet;
+pub mod node;
+pub mod store;

@@ -1,0 +1,255 @@
+//! Satellite node logic, transport-agnostic: handle a request against the
+//! local store, or produce the side-effect sends (eviction gossip,
+//! migration chunk transfers) the caller delivers.  Both the in-process
+//! fleet and the UDP fleet drive this same handler, so protocol behaviour
+//! is identical across transports (the paper's cFS app, minus cFS).
+
+use crate::constellation::topology::{SatId, Torus};
+use crate::kvc::eviction::EvictionPolicy;
+use crate::net::messages::{Envelope, Request, Response};
+use crate::satellite::store::{ChunkStore, StoreStats};
+use std::sync::Mutex;
+
+/// A side-effect message the node wants delivered to another satellite.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Outgoing {
+    pub dest: SatId,
+    pub request: Request,
+}
+
+/// One satellite.
+pub struct Node {
+    pub id: SatId,
+    store: Mutex<ChunkStore>,
+    pub policy: EvictionPolicy,
+}
+
+impl Node {
+    pub fn new(id: SatId, byte_budget: usize, policy: EvictionPolicy) -> Self {
+        Self { id, store: Mutex::new(ChunkStore::new(byte_budget)), policy }
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.store.lock().unwrap().stats
+    }
+
+    pub fn chunk_count(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.store.lock().unwrap().bytes_used()
+    }
+
+    /// Handle a request addressed to this node.  Returns the response and
+    /// any side-effect sends (gossip, migration transfers).
+    pub fn handle(&self, torus: &Torus, env: &Envelope, req: &Request) -> (Response, Vec<Outgoing>) {
+        debug_assert_eq!(env.dest, self.id);
+        match req {
+            Request::Set { key, payload } => {
+                let purged = self.store.lock().unwrap().set(*key, payload.clone());
+                let mut out = Vec::new();
+                if self.policy == EvictionPolicy::Gossip {
+                    for block in purged {
+                        // §3.9: "a simple gossip broadcast in all
+                        // directions is sufficient" — the eviction radius
+                        // covers the concentric neighbourhood.
+                        for nb in torus.neighbors(self.id) {
+                            out.push(Outgoing {
+                                dest: nb,
+                                request: Request::Evict { block, gossip_ttl: 2 },
+                            });
+                        }
+                    }
+                }
+                (Response::SetOk, out)
+            }
+            Request::Get { key } => {
+                let mut store = self.store.lock().unwrap();
+                match store.get(key) {
+                    Some(p) => (Response::GetOk { payload: p.clone() }, vec![]),
+                    None => (Response::GetMiss, vec![]),
+                }
+            }
+            Request::Evict { block, gossip_ttl } => {
+                let dropped = self.store.lock().unwrap().evict_block(*block);
+                let mut out = Vec::new();
+                if *gossip_ttl > 0 {
+                    for nb in torus.neighbors(self.id) {
+                        out.push(Outgoing {
+                            dest: nb,
+                            request: Request::Evict { block: *block, gossip_ttl: gossip_ttl - 1 },
+                        });
+                    }
+                }
+                (Response::EvictOk { dropped }, out)
+            }
+            Request::Migrate { to } => {
+                let chunks = self.store.lock().unwrap().drain_all();
+                let moved = chunks.len() as u32;
+                let out = chunks
+                    .into_iter()
+                    .map(|(key, payload)| Outgoing {
+                        dest: *to,
+                        request: Request::Set { key, payload },
+                    })
+                    .collect();
+                (Response::MigrateOk { moved }, out)
+            }
+            Request::Ping => (Response::Pong, vec![]),
+            Request::Query { block } => {
+                let store = self.store.lock().unwrap();
+                let mut chunk_ids = store
+                    .blocks_held()
+                    .remove(block)
+                    .unwrap_or_default();
+                chunk_ids.sort_unstable();
+                chunk_ids.truncate(512); // bound the response datagram
+                (Response::QueryOk { chunk_ids }, vec![])
+            }
+        }
+    }
+
+    /// Scrub pass (EvictionPolicy::PeriodicScrub): drop blocks whose local
+    /// chunk-id set looks incomplete given the striping arithmetic — a
+    /// block striped over `n_servers` with `num_chunks` total must give
+    /// this store either `floor` or `ceil` of `num_chunks / n_servers`
+    /// chunks with ids congruent mod `n_servers`; anything inconsistent is
+    /// partial garbage.  Without the block metadata we conservatively drop
+    /// blocks whose ids are NOT congruent modulo `n_servers`.
+    pub fn scrub(&self, n_servers: usize) -> u32 {
+        let mut store = self.store.lock().unwrap();
+        let mut dropped = 0;
+        for (block, ids) in store.blocks_held() {
+            if ids.len() > 1 {
+                let r = ids[0] as usize % n_servers;
+                if ids.iter().any(|i| *i as usize % n_servers != r) {
+                    dropped += store.evict_block(block);
+                }
+            }
+        }
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvc::block::BlockHash;
+    use crate::kvc::chunk::ChunkKey;
+
+    fn setup() -> (Torus, Node) {
+        let torus = Torus::new(5, 19);
+        let node = Node::new(SatId::new(2, 9), 1 << 16, EvictionPolicy::Gossip);
+        (torus, node)
+    }
+
+    fn key(b: u8, c: u32) -> ChunkKey {
+        ChunkKey::new(BlockHash([b; 32]), c)
+    }
+
+    fn env(node: &Node) -> Envelope {
+        Envelope::new(node.id, 7)
+    }
+
+    #[test]
+    fn set_then_get() {
+        let (t, n) = setup();
+        let (r, out) = n.handle(&t, &env(&n), &Request::Set { key: key(1, 0), payload: vec![5; 100] });
+        assert_eq!(r, Response::SetOk);
+        assert!(out.is_empty());
+        let (r, _) = n.handle(&t, &env(&n), &Request::Get { key: key(1, 0) });
+        assert_eq!(r, Response::GetOk { payload: vec![5; 100] });
+        let (r, _) = n.handle(&t, &env(&n), &Request::Get { key: key(1, 1) });
+        assert_eq!(r, Response::GetMiss);
+    }
+
+    #[test]
+    fn eviction_pressure_gossips_to_four_neighbors() {
+        let t = Torus::new(5, 19);
+        let n = Node::new(SatId::new(2, 9), 150, EvictionPolicy::Gossip);
+        let e = Envelope::new(n.id, 1);
+        n.handle(&t, &e, &Request::Set { key: key(1, 0), payload: vec![0; 100] });
+        let (_, out) = n.handle(&t, &e, &Request::Set { key: key(2, 0), payload: vec![0; 100] });
+        assert_eq!(out.len(), 4, "gossip to N,E,S,W");
+        for o in &out {
+            assert!(matches!(
+                o.request,
+                Request::Evict { block, gossip_ttl: 2 } if block == BlockHash([1; 32])
+            ));
+            assert!(t.neighbors(n.id).contains(&o.dest));
+        }
+    }
+
+    #[test]
+    fn lazy_policy_does_not_gossip() {
+        let t = Torus::new(5, 19);
+        let n = Node::new(SatId::new(2, 9), 150, EvictionPolicy::Lazy);
+        let e = Envelope::new(n.id, 1);
+        n.handle(&t, &e, &Request::Set { key: key(1, 0), payload: vec![0; 100] });
+        let (_, out) = n.handle(&t, &e, &Request::Set { key: key(2, 0), payload: vec![0; 100] });
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn evict_decrements_ttl() {
+        let (t, n) = setup();
+        n.handle(&t, &env(&n), &Request::Set { key: key(1, 0), payload: vec![1] });
+        let (r, out) = n.handle(
+            &t,
+            &env(&n),
+            &Request::Evict { block: BlockHash([1; 32]), gossip_ttl: 2 },
+        );
+        assert_eq!(r, Response::EvictOk { dropped: 1 });
+        assert_eq!(out.len(), 4);
+        for o in &out {
+            assert!(matches!(o.request, Request::Evict { gossip_ttl: 1, .. }));
+        }
+        // ttl 0 stops the flood
+        let (_, out) = n.handle(
+            &t,
+            &env(&n),
+            &Request::Evict { block: BlockHash([1; 32]), gossip_ttl: 0 },
+        );
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn migrate_hands_over_everything() {
+        let (t, n) = setup();
+        n.handle(&t, &env(&n), &Request::Set { key: key(1, 0), payload: vec![1] });
+        n.handle(&t, &env(&n), &Request::Set { key: key(2, 4), payload: vec![2] });
+        let target = SatId::new(2, 6);
+        let (r, out) = n.handle(&t, &env(&n), &Request::Migrate { to: target });
+        assert_eq!(r, Response::MigrateOk { moved: 2 });
+        assert_eq!(out.len(), 2);
+        for o in &out {
+            assert_eq!(o.dest, target);
+            assert!(matches!(o.request, Request::Set { .. }));
+        }
+        assert_eq!(n.chunk_count(), 0);
+    }
+
+    #[test]
+    fn scrub_drops_inconsistent_stripes() {
+        let (t, n) = setup();
+        let e = env(&n);
+        // block 1: ids 3 and 13 are congruent mod 10 — consistent
+        n.handle(&t, &e, &Request::Set { key: key(1, 3), payload: vec![1] });
+        n.handle(&t, &e, &Request::Set { key: key(1, 13), payload: vec![1] });
+        // block 2: ids 0 and 1 cannot both live here with 10 servers
+        n.handle(&t, &e, &Request::Set { key: key(2, 0), payload: vec![1] });
+        n.handle(&t, &e, &Request::Set { key: key(2, 1), payload: vec![1] });
+        let dropped = n.scrub(10);
+        assert_eq!(dropped, 2);
+        assert_eq!(n.chunk_count(), 2);
+    }
+
+    #[test]
+    fn ping_pong() {
+        let (t, n) = setup();
+        let (r, out) = n.handle(&t, &env(&n), &Request::Ping);
+        assert_eq!(r, Response::Pong);
+        assert!(out.is_empty());
+    }
+}

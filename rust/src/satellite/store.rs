@@ -1,0 +1,265 @@
+//! Per-satellite chunk store: a hashtable with an LRU byte budget (§3.9).
+//!
+//! "When there is memory pressure, the LRU chunk will be evicted ... As
+//! soon as one chunk is gone, the block it belongs to cannot be retrieved
+//! and must be purged."  Evicting one chunk therefore purges every local
+//! sibling of its block and reports the block hash so the node can gossip
+//! the eviction to the neighbourhood.
+
+use crate::kvc::block::BlockHash;
+use crate::kvc::chunk::ChunkKey;
+use crate::kvc::eviction::LruTracker;
+use std::collections::HashMap;
+
+/// Store statistics (exported via the node's telemetry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub sets: u64,
+    pub gets: u64,
+    pub hits: u64,
+    pub evicted_chunks: u64,
+    pub evicted_blocks: u64,
+}
+
+/// A bounded chunk store.
+pub struct ChunkStore {
+    map: HashMap<ChunkKey, Vec<u8>>,
+    lru: LruTracker<ChunkKey>,
+    bytes_used: usize,
+    byte_budget: usize,
+    pub stats: StoreStats,
+}
+
+impl ChunkStore {
+    /// `byte_budget` caps payload bytes held (metadata overhead ignored).
+    pub fn new(byte_budget: usize) -> Self {
+        Self {
+            map: HashMap::new(),
+            lru: LruTracker::new(),
+            bytes_used: 0,
+            byte_budget,
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn bytes_used(&self) -> usize {
+        self.bytes_used
+    }
+
+    pub fn byte_budget(&self) -> usize {
+        self.byte_budget
+    }
+
+    /// Store a chunk; returns the block hashes fully purged by LRU
+    /// pressure (to gossip).  Storing an existing key overwrites.
+    pub fn set(&mut self, key: ChunkKey, payload: Vec<u8>) -> Vec<BlockHash> {
+        self.stats.sets += 1;
+        if payload.len() > self.byte_budget {
+            // cannot ever fit; treat as an immediate eviction of itself
+            return vec![key.block];
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.bytes_used -= old.len();
+            self.lru.remove(&key);
+        }
+        let mut purged = Vec::new();
+        while self.bytes_used + payload.len() > self.byte_budget {
+            match self.evict_lru() {
+                Some(block) => {
+                    if !purged.contains(&block) {
+                        purged.push(block);
+                    }
+                }
+                None => break,
+            }
+        }
+        self.bytes_used += payload.len();
+        self.lru.touch(&key);
+        self.map.insert(key, payload);
+        purged
+    }
+
+    /// Fetch a chunk (refreshes LRU).
+    pub fn get(&mut self, key: &ChunkKey) -> Option<&Vec<u8>> {
+        self.stats.gets += 1;
+        if self.map.contains_key(key) {
+            self.stats.hits += 1;
+            self.lru.touch(key);
+            self.map.get(key)
+        } else {
+            None
+        }
+    }
+
+    /// Does the store hold a chunk (no LRU side effect)?
+    pub fn contains(&self, key: &ChunkKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Evict the LRU chunk *and* all local siblings of its block; returns
+    /// the purged block hash.
+    fn evict_lru(&mut self) -> Option<BlockHash> {
+        let victim = self.lru.pop_lru()?;
+        let block = victim.block;
+        if let Some(p) = self.map.remove(&victim) {
+            self.bytes_used -= p.len();
+            self.stats.evicted_chunks += 1;
+        }
+        self.purge_block_internal(block);
+        self.stats.evicted_blocks += 1;
+        Some(block)
+    }
+
+    fn purge_block_internal(&mut self, block: BlockHash) -> u32 {
+        let siblings: Vec<ChunkKey> =
+            self.map.keys().filter(|k| k.block == block).copied().collect();
+        let mut dropped = 0;
+        for k in siblings {
+            if let Some(p) = self.map.remove(&k) {
+                self.bytes_used -= p.len();
+                self.lru.remove(&k);
+                self.stats.evicted_chunks += 1;
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
+    /// Drop every chunk of `block` (explicit or gossiped eviction).
+    pub fn evict_block(&mut self, block: BlockHash) -> u32 {
+        let n = self.purge_block_internal(block);
+        if n > 0 {
+            self.stats.evicted_blocks += 1;
+        }
+        n
+    }
+
+    /// Take everything out (rotation migration handoff).
+    pub fn drain_all(&mut self) -> Vec<(ChunkKey, Vec<u8>)> {
+        self.bytes_used = 0;
+        while self.lru.pop_lru().is_some() {}
+        self.map.drain().collect()
+    }
+
+    /// Blocks present locally with their chunk ids (scrub support).
+    pub fn blocks_held(&self) -> HashMap<BlockHash, Vec<u32>> {
+        let mut out: HashMap<BlockHash, Vec<u32>> = HashMap::new();
+        for k in self.map.keys() {
+            out.entry(k.block).or_default().push(k.chunk_id);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(b: u8, c: u32) -> ChunkKey {
+        ChunkKey::new(BlockHash([b; 32]), c)
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut s = ChunkStore::new(1 << 20);
+        assert!(s.set(key(1, 0), vec![1, 2, 3]).is_empty());
+        assert_eq!(s.get(&key(1, 0)), Some(&vec![1, 2, 3]));
+        assert_eq!(s.get(&key(1, 1)), None);
+        assert_eq!(s.stats.hits, 1);
+        assert_eq!(s.stats.gets, 2);
+    }
+
+    #[test]
+    fn overwrite_updates_bytes() {
+        let mut s = ChunkStore::new(100);
+        s.set(key(1, 0), vec![0; 60]);
+        s.set(key(1, 0), vec![0; 40]);
+        assert_eq!(s.bytes_used(), 40);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn lru_pressure_purges_whole_block_locally() {
+        let mut s = ChunkStore::new(100);
+        // block 1 holds two chunks locally (40 bytes total)
+        s.set(key(1, 0), vec![0; 20]);
+        s.set(key(1, 5), vec![0; 20]);
+        s.set(key(2, 0), vec![0; 40]);
+        // 100 budget, 80 used; adding 40 more must evict LRU (block 1's
+        // chunk 0) AND its sibling chunk 5
+        let purged = s.set(key(3, 0), vec![0; 40]);
+        assert_eq!(purged, vec![BlockHash([1; 32])]);
+        assert!(!s.contains(&key(1, 0)));
+        assert!(!s.contains(&key(1, 5)));
+        assert!(s.contains(&key(2, 0)));
+        assert!(s.contains(&key(3, 0)));
+        assert_eq!(s.bytes_used(), 80);
+    }
+
+    #[test]
+    fn get_refreshes_lru() {
+        let mut s = ChunkStore::new(100);
+        s.set(key(1, 0), vec![0; 40]);
+        s.set(key(2, 0), vec![0; 40]);
+        s.get(&key(1, 0)); // block 1 now MRU
+        let purged = s.set(key(3, 0), vec![0; 40]);
+        assert_eq!(purged, vec![BlockHash([2; 32])]);
+        assert!(s.contains(&key(1, 0)));
+    }
+
+    #[test]
+    fn oversized_payload_rejected_as_self_eviction() {
+        let mut s = ChunkStore::new(10);
+        let purged = s.set(key(1, 0), vec![0; 100]);
+        assert_eq!(purged, vec![BlockHash([1; 32])]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn explicit_evict_block() {
+        let mut s = ChunkStore::new(1000);
+        s.set(key(1, 0), vec![0; 10]);
+        s.set(key(1, 7), vec![0; 10]);
+        s.set(key(2, 0), vec![0; 10]);
+        assert_eq!(s.evict_block(BlockHash([1; 32])), 2);
+        assert_eq!(s.evict_block(BlockHash([1; 32])), 0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes_used(), 10);
+    }
+
+    #[test]
+    fn drain_for_migration() {
+        let mut s = ChunkStore::new(1000);
+        s.set(key(1, 0), vec![1]);
+        s.set(key(2, 3), vec![2, 2]);
+        let mut all = s.drain_all();
+        all.sort_by_key(|(k, _)| *k);
+        assert_eq!(all.len(), 2);
+        assert!(s.is_empty());
+        assert_eq!(s.bytes_used(), 0);
+        // store remains usable after drain
+        s.set(key(3, 0), vec![0; 10]);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn blocks_held_groups_chunks() {
+        let mut s = ChunkStore::new(1000);
+        s.set(key(1, 0), vec![1]);
+        s.set(key(1, 9), vec![1]);
+        s.set(key(2, 4), vec![1]);
+        let held = s.blocks_held();
+        let mut b1 = held[&BlockHash([1; 32])].clone();
+        b1.sort_unstable();
+        assert_eq!(b1, vec![0, 9]);
+        assert_eq!(held[&BlockHash([2; 32])], vec![4]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Simulation configuration — paper Table 2, verbatim defaults:
+//!
+//! | Parameter             | Values     |
+//! |-----------------------|------------|
+//! | KVC_BYTES             | 2–21 MB    |
+//! | SERVERS               | 9–81       |
+//! | CHUNK_PROCESSING_TIME | 0.002–0.02 s |
+//! | ALTITUDE              | 160–2000 km |
+//! | MAX_SATELLITES        | 15         |
+//! | MAX_ORBS              | 15         |
+//! | CENTER_SATELLITE      | 8          |
+//! | CENTER_ORB            | 8          |
+
+use crate::constellation::geometry::Geometry;
+use crate::constellation::topology::{SatId, Torus};
+use crate::mapping::Strategy;
+
+/// One simulation point.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub strategy: Strategy,
+    /// Constellation altitude `h` (Table 2: 160–2000 km).
+    pub altitude_km: f64,
+    /// Virtual servers (Table 2: 9–81, the 3x3…9x9 grids of Figs 13–15).
+    pub n_servers: usize,
+    /// Total KVC bytes to place (Table 2: 2–21 MB).
+    pub kvc_bytes: usize,
+    /// Fixed chunk payload size (§3.1 / §5: 6 kB).
+    pub chunk_bytes: usize,
+    /// Per-chunk processing time at a satellite (Table 2: 2–20 ms).
+    pub chunk_processing_s: f64,
+    /// Torus dimensions (Table 2: 15x15).
+    pub max_satellites: usize,
+    pub max_orbs: usize,
+    /// Rotation epochs elapsed since the KVC was written.  Migrating
+    /// strategies re-centre; hop-aware pays this as extra distance.
+    pub drift_epochs: u64,
+    /// Half-extent (cells) of the *reliably* direct-uplink LOS box; cells
+    /// outside ride the ISL mesh from the closest satellite (§3.7).
+    pub reliable_los_half: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            strategy: Strategy::RotationHopAware,
+            altitude_km: 550.0,
+            n_servers: 81,
+            kvc_bytes: 21 << 20,
+            chunk_bytes: 6000,
+            chunk_processing_s: 0.002,
+            max_satellites: 15,
+            max_orbs: 15,
+            drift_epochs: 2,
+            reliable_los_half: 2, // ~a 5x5 direct window = the §2 "10-20 visible"
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn torus(&self) -> Torus {
+        Torus::new(self.max_orbs, self.max_satellites)
+    }
+
+    /// Table 2: CENTER_SATELLITE 8, CENTER_ORB 8 (1-based) -> (7, 7).
+    pub fn center(&self) -> SatId {
+        SatId::new((self.max_orbs / 2) as u16, (self.max_satellites / 2) as u16)
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        Geometry::new(self.altitude_km, self.max_satellites, self.max_orbs)
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.kvc_bytes.div_ceil(self.chunk_bytes)
+    }
+
+    /// Paper sweep axes (Figure 16).
+    pub fn altitude_sweep() -> Vec<f64> {
+        vec![160.0, 400.0, 550.0, 800.0, 1200.0, 1600.0, 2000.0]
+    }
+
+    pub fn server_sweep() -> Vec<usize> {
+        vec![9, 25, 49, 81]
+    }
+
+    pub fn processing_sweep() -> Vec<f64> {
+        vec![0.002, 0.02]
+    }
+
+    pub fn kvc_sweep() -> Vec<usize> {
+        vec![2 << 20, 21 << 20]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let c = SimConfig::default();
+        assert_eq!(c.max_satellites, 15);
+        assert_eq!(c.max_orbs, 15);
+        assert_eq!(c.center(), SatId::new(7, 7));
+        assert_eq!(c.chunk_bytes, 6000);
+        assert_eq!(c.torus().len(), 225);
+    }
+
+    #[test]
+    fn chunk_count_for_paper_sizes() {
+        let c = SimConfig { kvc_bytes: 2 << 20, ..Default::default() };
+        assert_eq!(c.n_chunks(), (2 * 1024 * 1024 + 5999) / 6000);
+        assert!(c.n_chunks() > c.n_servers, "paper regime: chunks >> servers");
+    }
+
+    #[test]
+    fn sweeps_cover_table2_ranges() {
+        let alts = SimConfig::altitude_sweep();
+        assert_eq!(*alts.first().unwrap(), 160.0);
+        assert_eq!(*alts.last().unwrap(), 2000.0);
+        assert_eq!(SimConfig::server_sweep(), vec![9, 25, 49, 81]);
+        assert_eq!(SimConfig::processing_sweep(), vec![0.002, 0.02]);
+    }
+}

@@ -1,0 +1,267 @@
+//! Worst-case KVC-retrieval latency (the Figure 16 model).
+//!
+//! All servers are contacted in parallel (§3.1), so the end-to-end time is
+//! the *max* over servers of:
+//!
+//! ```text
+//!   RTT(server)                    — direct slant-range uplink (eq. 4) if
+//!                                    the satellite is inside the reliable
+//!                                    LOS box; otherwise up to the closest
+//!                                    satellite and greedy +GRID hops at
+//!                                    the eq. (1) worst-case hop latency
+//! + chunks_on(server) * t_proc     — chunks are striped `id mod n`, so a
+//!                                    server serializes its own chunks
+//! ```
+//!
+//! Migrating strategies are evaluated at their migrated layout; hop-aware
+//! keeps its write-time layout, so after `drift_epochs` the ground centre
+//! has moved east and every access pays the extra distance — exactly the
+//! §3.6 trade the paper's Figure 16 penalizes.
+
+use super::config::SimConfig;
+use crate::constellation::topology::SatId;
+
+/// Per-point result with the component split (for the figure and tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Max total across servers — the headline number.
+    pub total_s: f64,
+    /// Network RTT of the worst server.
+    pub network_s: f64,
+    /// Serialized chunk processing of the worst server.
+    pub processing_s: f64,
+    /// ISL hops of the worst server's route.
+    pub worst_hops: usize,
+    pub worst_server: usize,
+}
+
+/// Compute the worst-case retrieval latency for one configuration.
+pub fn worst_case_latency(cfg: &SimConfig) -> LatencyBreakdown {
+    let torus = cfg.torus();
+    let geo = cfg.geometry();
+    let n = cfg.n_servers;
+    let n_chunks = cfg.n_chunks();
+    // Current ground centre.  The KVC was written `drift_epochs` ago when
+    // the centre was `drift_epochs` slots east.
+    let current_center = cfg.center();
+    let write_center = torus.offset(current_center, 0, cfg.drift_epochs as i32);
+    let layout =
+        cfg.strategy
+            .layout_at(&torus, write_center, n, cfg.drift_epochs);
+
+    let t_hop = geo.worst_hop_latency_s();
+    let mut worst = LatencyBreakdown {
+        total_s: 0.0,
+        network_s: 0.0,
+        processing_s: 0.0,
+        worst_hops: 0,
+        worst_server: 0,
+    };
+    for (idx, sat) in layout.iter().enumerate() {
+        // chunks on this server: ceil/floor of n_chunks / n
+        let chunks_here = n_chunks / n + usize::from(idx < n_chunks % n);
+        if chunks_here == 0 {
+            continue;
+        }
+        let (rtt, hops) = access_rtt(cfg, &torus, &geo, current_center, *sat, t_hop);
+        let processing = chunks_here as f64 * cfg.chunk_processing_s;
+        let total = rtt + processing;
+        if total > worst.total_s {
+            worst = LatencyBreakdown {
+                total_s: total,
+                network_s: rtt,
+                processing_s: processing,
+                worst_hops: hops,
+                worst_server: idx + 1,
+            };
+        }
+    }
+    worst
+}
+
+/// Ground round-trip to a satellite: direct slant if inside the reliable
+/// LOS box, else up to the closest satellite plus greedy ISL hops.
+fn access_rtt(
+    cfg: &SimConfig,
+    torus: &crate::constellation::topology::Torus,
+    geo: &crate::constellation::geometry::Geometry,
+    center: SatId,
+    sat: SatId,
+    t_hop: f64,
+) -> (f64, usize) {
+    let (dp, ds) = torus.signed_offset(center, sat);
+    let within_los = dp.unsigned_abs() as usize <= cfg.reliable_los_half
+        && ds.unsigned_abs() as usize <= cfg.reliable_los_half;
+    if within_los {
+        let one_way = geo.ground_latency_s(ds.unsigned_abs() as usize, dp.unsigned_abs() as usize);
+        (2.0 * one_way, 0)
+    } else {
+        let hops = torus.hops(center, sat);
+        let one_way = geo.ground_latency_s(0, 0) + hops as f64 * t_hop;
+        (2.0 * one_way, hops)
+    }
+}
+
+/// One Figure 16 sweep row.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub strategy: &'static str,
+    pub altitude_km: f64,
+    pub n_servers: usize,
+    pub kvc_bytes: usize,
+    pub chunk_processing_s: f64,
+    pub latency: LatencyBreakdown,
+}
+
+/// The full Figure 16 sweep: strategies x altitudes x servers x processing
+/// x KVC sizes.
+pub fn figure16_sweep() -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    for strategy in crate::mapping::Strategy::ALL {
+        for &altitude_km in &SimConfig::altitude_sweep() {
+            for &n_servers in &SimConfig::server_sweep() {
+                for &chunk_processing_s in &SimConfig::processing_sweep() {
+                    for &kvc_bytes in &SimConfig::kvc_sweep() {
+                        let cfg = SimConfig {
+                            strategy,
+                            altitude_km,
+                            n_servers,
+                            kvc_bytes,
+                            chunk_processing_s,
+                            ..Default::default()
+                        };
+                        rows.push(SweepRow {
+                            strategy: strategy.name(),
+                            altitude_km,
+                            n_servers,
+                            kvc_bytes,
+                            chunk_processing_s,
+                            latency: worst_case_latency(&cfg),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::Strategy;
+
+    fn cfg(strategy: Strategy) -> SimConfig {
+        SimConfig { strategy, ..Default::default() }
+    }
+
+    #[test]
+    fn headline_shape_rot_hop_wins() {
+        // Fig 16: "the hop- and rotation-aware approach results in lower
+        // latency than the hop-aware and the rotation-aware approaches
+        // across different altitudes".
+        for alt in SimConfig::altitude_sweep() {
+            let mut c = cfg(Strategy::RotationHopAware);
+            c.altitude_km = alt;
+            let rh = worst_case_latency(&c).total_s;
+            c.strategy = Strategy::RotationAware;
+            let ra = worst_case_latency(&c).total_s;
+            c.strategy = Strategy::HopAware;
+            let ha = worst_case_latency(&c).total_s;
+            assert!(rh <= ra + 1e-12, "alt {alt}: rot+hop {rh} vs rot {ra}");
+            assert!(rh <= ha + 1e-12, "alt {alt}: rot+hop {rh} vs hop {ha}");
+        }
+    }
+
+    #[test]
+    fn headline_shape_8x_servers_90pct_reduction() {
+        // Fig 16: "An 8x increase in servers results in about 90%
+        // reduction in latency" (processing-dominated regime: the larger
+        // chunk processing time of the Table 2 range).
+        let mut c = cfg(Strategy::RotationHopAware);
+        c.chunk_processing_s = 0.02;
+        c.n_servers = 9;
+        let small = worst_case_latency(&c).total_s;
+        c.n_servers = 81;
+        let large = worst_case_latency(&c).total_s;
+        let reduction = 1.0 - large / small;
+        assert!(
+            (0.80..=0.95).contains(&reduction),
+            "9 -> 81 servers reduced latency by {:.1}% (small {small:.3}s, large {large:.3}s)",
+            100.0 * reduction
+        );
+    }
+
+    #[test]
+    fn more_servers_reduce_latency_for_all_strategies() {
+        for st in Strategy::ALL {
+            let mut prev = f64::INFINITY;
+            for n in SimConfig::server_sweep() {
+                let mut c = cfg(st);
+                c.n_servers = n;
+                let l = worst_case_latency(&c).total_s;
+                assert!(l < prev, "{}: {n} servers: {l} !< {prev}", st.name());
+                prev = l;
+            }
+        }
+    }
+
+    #[test]
+    fn altitude_raises_latency() {
+        for st in Strategy::ALL {
+            let mut lo = cfg(st);
+            lo.altitude_km = 160.0;
+            let mut hi = cfg(st);
+            hi.altitude_km = 2000.0;
+            assert!(
+                worst_case_latency(&hi).total_s > worst_case_latency(&lo).total_s,
+                "{}",
+                st.name()
+            );
+        }
+    }
+
+    #[test]
+    fn hop_aware_degrades_with_drift() {
+        let mut c = cfg(Strategy::HopAware);
+        c.drift_epochs = 0;
+        let fresh = worst_case_latency(&c).total_s;
+        c.drift_epochs = 4;
+        let stale = worst_case_latency(&c).total_s;
+        assert!(stale > fresh, "drift must cost hop-aware: {fresh} vs {stale}");
+        // migrating strategies are (near-)drift-invariant: the box stays
+        // centred; only the chunk-count alignment cycles inside it.
+        let mut m = cfg(Strategy::RotationHopAware);
+        m.drift_epochs = 0;
+        let a = worst_case_latency(&m).total_s;
+        m.drift_epochs = 4;
+        let b = worst_case_latency(&m).total_s;
+        assert!((a - b).abs() / a < 0.05, "{a} vs {b}");
+    }
+
+    #[test]
+    fn processing_dominates_at_paper_scale() {
+        // 21 MB / 6 kB = 3670 chunks over 81 servers at 20 ms each ≈ 0.9 s
+        // of serialized processing — far above the network terms.
+        let mut c = cfg(Strategy::RotationHopAware);
+        c.chunk_processing_s = 0.02;
+        let b = worst_case_latency(&c);
+        assert!(b.processing_s > 5.0 * b.network_s, "{b:?}");
+    }
+
+    #[test]
+    fn breakdown_components_sum() {
+        let c = cfg(Strategy::RotationAware);
+        let b = worst_case_latency(&c);
+        assert!((b.total_s - b.network_s - b.processing_s).abs() < 1e-12);
+        assert!(b.worst_server >= 1 && b.worst_server <= c.n_servers);
+    }
+
+    #[test]
+    fn sweep_covers_all_cells() {
+        let rows = figure16_sweep();
+        // 3 strategies x 7 altitudes x 4 server counts x 2 procs x 2 sizes
+        assert_eq!(rows.len(), 3 * 7 * 4 * 2 * 2);
+        assert!(rows.iter().all(|r| r.latency.total_s > 0.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! The §4 simulator: "we implemented a simulator that computes the
+//! worst-case latency based on the distance equation 1, and the chunk
+//! farthest away" — plus the workload generator used by the serving
+//! benches.
+
+pub mod config;
+pub mod latency;
+pub mod workload;
+
+pub use config::SimConfig;
+pub use latency::{worst_case_latency, LatencyBreakdown};

@@ -1,0 +1,112 @@
+//! Serving workload generator: prompts with shared prefixes, modelled on
+//! the vLLM prefix-caching benchmark the paper's §5 validation uses (a
+//! fixed document context + varying questions).
+
+use crate::util::rng::XorShift64;
+
+/// Workload configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadConfig {
+    /// Number of distinct shared contexts ("documents").
+    pub n_contexts: usize,
+    /// Characters per context (>= a few blocks to make caching matter).
+    pub context_chars: usize,
+    /// Distinct question suffixes per context.
+    pub n_questions: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self { n_contexts: 4, context_chars: 128, n_questions: 8, seed: 7 }
+    }
+}
+
+const WORDS: &[&str] = &[
+    "satellite", "orbit", "cache", "chunk", "block", "hash", "token", "laser", "link", "ground",
+    "plane", "mesh", "torus", "hop", "memory", "model", "prompt", "prefix", "inference", "sky",
+];
+
+/// Deterministic prose of at least `chars` characters.
+pub fn synth_text(rng: &mut XorShift64, chars: usize) -> String {
+    let mut s = String::with_capacity(chars + 16);
+    while s.len() < chars {
+        if !s.is_empty() {
+            s.push(' ');
+        }
+        s.push_str(WORDS[rng.next_range(WORDS.len())]);
+    }
+    s.truncate(chars);
+    s
+}
+
+/// A generated request.
+#[derive(Debug, Clone)]
+pub struct WorkloadItem {
+    pub prompt: String,
+    pub context_id: usize,
+}
+
+/// Generate `n` requests: each picks a context (round-robin) and appends
+/// one of its question suffixes, so requests sharing a context share a
+/// multi-block prefix — the paper's repeated-context regime.
+pub fn generate(cfg: &WorkloadConfig, n: usize) -> Vec<WorkloadItem> {
+    let mut rng = XorShift64::new(cfg.seed);
+    let contexts: Vec<String> =
+        (0..cfg.n_contexts).map(|_| synth_text(&mut rng, cfg.context_chars)).collect();
+    let questions: Vec<String> = (0..cfg.n_questions)
+        .map(|i| format!(" q{i}: {}?", synth_text(&mut rng, 12)))
+        .collect();
+    (0..n)
+        .map(|i| {
+            let context_id = i % cfg.n_contexts;
+            let q = &questions[rng.next_range(questions.len())];
+            WorkloadItem { prompt: format!("{}{}", contexts[context_id], q), context_id }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = WorkloadConfig::default();
+        let a = generate(&cfg, 10);
+        let b = generate(&cfg, 10);
+        assert_eq!(
+            a.iter().map(|x| &x.prompt).collect::<Vec<_>>(),
+            b.iter().map(|x| &x.prompt).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn shared_prefixes_within_context() {
+        let cfg = WorkloadConfig { n_contexts: 2, ..Default::default() };
+        let items = generate(&cfg, 8);
+        let same: Vec<_> = items.iter().filter(|i| i.context_id == 0).collect();
+        assert!(same.len() >= 2);
+        let prefix_len = cfg.context_chars;
+        let p0 = &same[0].prompt[..prefix_len];
+        for it in &same {
+            assert_eq!(&it.prompt[..prefix_len], p0);
+        }
+    }
+
+    #[test]
+    fn contexts_differ() {
+        let cfg = WorkloadConfig::default();
+        let items = generate(&cfg, cfg.n_contexts);
+        let p0 = &items[0].prompt[..cfg.context_chars];
+        let p1 = &items[1].prompt[..cfg.context_chars];
+        assert_ne!(p0, p1);
+    }
+
+    #[test]
+    fn lengths_respected() {
+        let mut rng = XorShift64::new(1);
+        let t = synth_text(&mut rng, 100);
+        assert_eq!(t.len(), 100);
+    }
+}

@@ -1,0 +1,148 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable in
+//! the offline build): warmup, timed iterations, mean / p50 / p95 / p99,
+//! and a stable one-line report format the bench binaries print.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<6} mean={:>12?} p50={:>12?} p95={:>12?} p99={:>12?} min={:>12?} max={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.p99, self.min, self.max
+        )
+    }
+
+    /// Throughput line for a known per-iteration workload size.
+    pub fn throughput(&self, bytes_per_iter: usize) -> String {
+        let bps = bytes_per_iter as f64 / self.mean.as_secs_f64();
+        format!("{:<44} {:>10.1} MiB/s", self.name, bps / (1024.0 * 1024.0))
+    }
+}
+
+/// A tiny harness: `Bencher::new("name").run(|| work())`.
+pub struct Bencher {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    max_iters: usize,
+}
+
+impl Bencher {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 1_000_000,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Run the closure repeatedly and collect statistics.
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        Self::summarize(self.name, samples)
+    }
+
+    fn summarize(name: String, mut samples: Vec<Duration>) -> BenchResult {
+        assert!(!samples.is_empty(), "no samples collected");
+        samples.sort_unstable();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((iters as f64 * p) as usize).min(iters - 1)];
+        BenchResult {
+            name,
+            iters,
+            mean: total / iters as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[iters - 1],
+        }
+    }
+}
+
+/// Record externally-collected samples (e.g. end-to-end request latencies).
+pub fn summarize(name: impl Into<String>, samples: Vec<Duration>) -> BenchResult {
+    Bencher::summarize(name.into(), samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let r = Bencher::new("noop")
+            .warmup(Duration::from_millis(5))
+            .measure(Duration::from_millis(20))
+            .run(|| {
+                std::hint::black_box(1 + 1);
+            });
+        assert!(r.iters > 100);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95 && r.p95 <= r.p99 && r.p99 <= r.max);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn summarize_external_samples() {
+        let samples = vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+            Duration::from_millis(10),
+        ];
+        let r = summarize("ext", samples);
+        assert_eq!(r.iters, 4);
+        assert_eq!(r.min, Duration::from_millis(1));
+        assert_eq!(r.max, Duration::from_millis(10));
+        assert_eq!(r.p50, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn throughput_format() {
+        let r = summarize("x", vec![Duration::from_secs(1)]);
+        let line = r.throughput(1024 * 1024);
+        assert!(line.contains("1.0 MiB/s"), "{line}");
+    }
+}

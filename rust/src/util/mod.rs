@@ -1,0 +1,8 @@
+//! Shared utilities built from scratch for the offline environment:
+//! deterministic RNG, JSON codec, and a micro-benchmark harness (the
+//! crates a networked build would use — rand, serde_json, criterion — are
+//! not available offline; see DESIGN.md).
+
+pub mod bench;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,14 @@
+/// Deterministic xorshift64* RNG (no external rand dependency).
+#[derive(Debug, Clone)]
+pub struct XorShift64 { state: u64 }
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self { Self { state: seed.max(1) } }
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12; x ^= x << 25; x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    pub fn next_f64(&mut self) -> f64 { (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64 }
+    pub fn next_range(&mut self, n: usize) -> usize { (self.next_u64() % n.max(1) as u64) as usize }
+}

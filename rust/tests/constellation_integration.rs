@@ -1,0 +1,128 @@
+//! Integration: geometry + topology + rotation + LOS + mappings working
+//! together across rotation epochs — the constellation substrate as the
+//! protocol consumes it.
+
+use skymemory::constellation::geometry::Geometry;
+use skymemory::constellation::los::LosGrid;
+use skymemory::constellation::rotation::RotationModel;
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::mapping::migration::{by_plane, migration_plan};
+use skymemory::mapping::{box_width, Strategy};
+
+#[test]
+fn rotation_model_drives_los_and_layouts_consistently() {
+    let geo = Geometry::new(550.0, 19, 5);
+    let torus = Torus::new(5, 19);
+    let model = RotationModel::new(geo, SatId::new(2, 9));
+    let period = model.epoch_period_s();
+
+    for epoch in 0..25u64 {
+        let t = epoch as f64 * period + 1.0;
+        let center = model.center_at(t);
+        assert_eq!(center, model.center_at_epoch(epoch));
+        let los = LosGrid::new(center, 2, 2);
+        assert!(los.contains(&torus, center));
+        for st in Strategy::ALL {
+            let layout = st.initial_layout(&torus, center, 10);
+            let uniq: std::collections::HashSet<_> = layout.iter().collect();
+            assert_eq!(uniq.len(), 10);
+            for sat in &layout {
+                assert!(torus.contains(*sat));
+                let route = torus.route(center, *sat);
+                assert_eq!(route.len(), torus.hops(center, *sat));
+            }
+        }
+    }
+}
+
+#[test]
+fn migration_chain_tracks_rotation_for_a_full_orbit() {
+    let torus = Torus::new(5, 19);
+    let write_center = SatId::new(2, 9);
+    let st = Strategy::RotationHopAware;
+    let n = 10;
+    let mut layout = st.layout_at(&torus, write_center, n, 0);
+    for epoch in 0..19u64 {
+        let plan = migration_plan(&torus, st, write_center, n, epoch);
+        for m in &plan {
+            layout[(m.server - 1) as usize] = m.to;
+        }
+        assert_eq!(layout, st.layout_at(&torus, write_center, n, epoch + 1), "epoch {epoch}");
+        // §3.4: migrations are parallel per plane, one handoff pair each
+        for (_, moves) in by_plane(&plan) {
+            let froms: std::collections::HashSet<_> = moves.iter().map(|m| m.from).collect();
+            let tos: std::collections::HashSet<_> = moves.iter().map(|m| m.to).collect();
+            assert_eq!(froms.len(), 1);
+            assert_eq!(tos.len(), 1);
+        }
+    }
+}
+
+#[test]
+fn layouts_stay_within_los_reach_of_moving_center() {
+    let torus = Torus::new(7, 21);
+    let write_center = SatId::new(3, 10);
+    for st in [Strategy::RotationAware, Strategy::RotationHopAware] {
+        for n in [9usize, 10, 16, 25] {
+            let half = (box_width(n) - 1) / 2;
+            for epoch in 0..40u64 {
+                let current_center = torus.offset(write_center, 0, -(epoch as i32));
+                for sat in st.layout_at(&torus, write_center, n, epoch) {
+                    let (dp, ds) = torus.signed_offset(current_center, sat);
+                    assert!(
+                        dp.unsigned_abs() as usize <= half && ds.unsigned_abs() as usize <= half,
+                        "{:?} n={n} epoch={epoch}: {sat} outside box (dp={dp}, ds={ds})",
+                        st
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hop_aware_drift_grows_monotonically() {
+    let torus = Torus::new(15, 15);
+    let write_center = SatId::new(7, 7);
+    let layout = Strategy::HopAware.layout_at(&torus, write_center, 13, 0);
+    let mut prev_max = 0;
+    for epoch in 0..5u64 {
+        let current = torus.offset(write_center, 0, -(epoch as i32));
+        let max_hops = layout.iter().map(|s| torus.hops(current, *s)).max().unwrap();
+        assert!(max_hops >= prev_max, "epoch {epoch}");
+        prev_max = max_hops;
+    }
+    assert!(prev_max >= 2 + 4, "after 4 epochs the diamond edge is 4 east");
+}
+
+#[test]
+fn visibility_window_matches_epoch_period() {
+    let geo = Geometry::new(550.0, 19, 5);
+    let model = RotationModel::new(geo, SatId::new(0, 0));
+    let minutes = model.epoch_period_s() / 60.0;
+    assert!((3.0..10.0).contains(&minutes), "{minutes} min");
+}
+
+#[test]
+fn eq1_eq2_consistency_with_torus_dims() {
+    let geo = Geometry::new(550.0, 19, 5);
+    let torus = Torus::new(geo.planes, geo.sats_per_plane);
+    assert_eq!(torus.len(), 95);
+    assert!(geo.worst_hop_latency_s() >= geo.intra_plane_latency_s());
+    assert!(geo.worst_hop_latency_s() >= geo.inter_plane_latency_s());
+}
+
+#[test]
+fn predictive_placement_center_is_exact() {
+    // §3.7: "the set of satellites in the LOS at that future time is known
+    // exactly" — the centre computed for a future epoch must equal the
+    // centre the rotation model reports once that time arrives.
+    let geo = Geometry::new(550.0, 19, 5);
+    let model = RotationModel::new(geo, SatId::new(2, 9));
+    let p = model.epoch_period_s();
+    for future_epoch in [1u64, 3, 10, 19, 40] {
+        let predicted = model.center_at_epoch(future_epoch);
+        let arrived = model.center_at(future_epoch as f64 * p + 0.5 * p);
+        assert_eq!(predicted, arrived);
+    }
+}

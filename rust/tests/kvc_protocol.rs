@@ -1,0 +1,232 @@
+//! Integration: the full §3.8 protocol over an in-process constellation —
+//! multi-block prompts, all strategies and quantizers, rotation with
+//! migration, eviction pressure, and failure injection.
+
+use skymemory::constellation::los::LosGrid;
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::kvc::block::block_hashes;
+use skymemory::kvc::eviction::EvictionPolicy;
+use skymemory::kvc::manager::{KvcConfig, KvcManager};
+use skymemory::kvc::quantize::Quantizer;
+use skymemory::mapping::Strategy;
+use skymemory::net::transport::{GroundView, InProcTransport, Transport};
+use skymemory::satellite::fleet::Fleet;
+use skymemory::util::rng::XorShift64;
+use std::sync::Arc;
+
+fn setup(mut cfg: KvcConfig, sat_budget: usize) -> (Arc<Fleet>, KvcManager) {
+    cfg.chunk_size = 600;
+    let torus = Torus::new(15, 15);
+    let fleet = Arc::new(Fleet::new(torus, sat_budget, cfg.eviction));
+    let center = SatId::new(7, 7);
+    let ground = GroundView::new(center, &LosGrid::new(center, 2, 2), torus.sats_per_plane);
+    let transport = Arc::new(InProcTransport::new(fleet.clone(), ground, None));
+    (fleet.clone(), KvcManager::new(cfg, torus, transport))
+}
+
+fn values(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = XorShift64::new(seed);
+    (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect()
+}
+
+#[test]
+fn every_strategy_and_quantizer_roundtrips_through_orbit() {
+    for strategy in Strategy::ALL {
+        for quantizer in [
+            Quantizer::F32,
+            Quantizer::QuantoInt8 { group: 32 },
+            Quantizer::HqqInt8 { group: 32 },
+        ] {
+            let (_fleet, m) = setup(
+                KvcConfig { strategy, quantizer, n_servers: 10, ..KvcConfig::default() },
+                10 << 20,
+            );
+            let tokens: Vec<i32> = (0..160).map(|i| i % 251).collect();
+            let hashes = block_hashes(&tokens, 32);
+            for b in 0..hashes.len() {
+                m.put_block(&hashes, b, &values(4096, b as u64), 0).unwrap();
+            }
+            let (blocks, _) = m.lookup(&hashes, 0).unwrap();
+            assert_eq!(blocks, 5, "{} {}", strategy.name(), quantizer.name());
+            let fetch = m.fetch_prefix(&hashes, blocks, 0).unwrap();
+            assert_eq!(fetch.blocks, 5);
+            for (i, kv) in fetch.kv_blocks.iter().enumerate() {
+                let orig = values(4096, i as u64);
+                let max_err = orig
+                    .iter()
+                    .zip(kv)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                let bound = if quantizer == Quantizer::F32 { 1e-9 } else { 0.06 };
+                assert!(max_err < bound, "{} block {i}: {max_err}", quantizer.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_survives_many_rotation_epochs() {
+    let (_fleet, m) = setup(KvcConfig { n_servers: 9, ..KvcConfig::default() }, 10 << 20);
+    let tokens: Vec<i32> = (0..96).collect();
+    let hashes = block_hashes(&tokens, 32);
+    for b in 0..3 {
+        m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+    }
+    for epoch in 0..8u64 {
+        m.advance_epoch(epoch).unwrap();
+        let fetch = m.fetch_prefix(&hashes, 3, epoch + 1).unwrap();
+        assert_eq!(fetch.blocks, 3, "epoch {}", epoch + 1);
+    }
+}
+
+#[test]
+fn blocks_written_at_different_epochs_coexist() {
+    let (_fleet, m) = setup(KvcConfig { n_servers: 9, ..KvcConfig::default() }, 10 << 20);
+    let tokens: Vec<i32> = (0..128).collect();
+    let hashes = block_hashes(&tokens, 32);
+    m.put_block(&hashes, 0, &values(2048, 0), 0).unwrap();
+    m.advance_epoch(0).unwrap();
+    m.put_block(&hashes, 1, &values(2048, 1), 1).unwrap();
+    m.advance_epoch(1).unwrap();
+    m.put_block(&hashes, 2, &values(2048, 2), 2).unwrap();
+    // all three blocks fetchable at epoch 2 despite different write epochs
+    let fetch = m.fetch_prefix(&hashes, 3, 2).unwrap();
+    assert_eq!(fetch.blocks, 3);
+}
+
+#[test]
+fn eviction_pressure_truncates_but_never_corrupts() {
+    // tiny satellite budgets force LRU evictions; fetches must either
+    // return correct data or honestly report a miss — never garbage
+    let (_fleet, m) = setup(
+        KvcConfig { n_servers: 9, eviction: EvictionPolicy::Gossip, ..KvcConfig::default() },
+        3_000, // each sat holds only ~4 chunks of ~620B -> heavy LRU churn
+    );
+    let mut all_hashes = Vec::new();
+    for p in 0i32..12 {
+        let tokens: Vec<i32> = (0..64).map(|i| i * (p + 1)).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0usize..2 {
+            m.put_block(&hashes, b, &values(2048, (p as usize * 2 + b) as u64), 0).unwrap();
+        }
+        all_hashes.push(hashes);
+    }
+    let mut hits = 0;
+    for (p, hashes) in all_hashes.iter().enumerate() {
+        if let Some((blocks, _)) = m.lookup(hashes, 0) {
+            let fetch = m.fetch_prefix(hashes, blocks, 0).unwrap();
+            for (b, kv) in fetch.kv_blocks.iter().enumerate() {
+                let orig = values(2048, (p * 2 + b) as u64);
+                let max_err = orig
+                    .iter()
+                    .zip(kv)
+                    .map(|(a, x)| (a - x).abs())
+                    .fold(0f32, f32::max);
+                assert!(max_err < 0.06, "prompt {p} block {b} corrupted: {max_err}");
+                hits += 1;
+            }
+        }
+    }
+    // some content must have been evicted AND some must survive
+    assert!(hits > 0, "everything evicted");
+    assert!(hits < 24, "nothing evicted — budget not exercised");
+}
+
+#[test]
+fn lazy_eviction_cleans_index_after_sabotage() {
+    let (fleet, m) = setup(
+        KvcConfig { n_servers: 9, eviction: EvictionPolicy::Lazy, ..KvcConfig::default() },
+        10 << 20,
+    );
+    let tokens: Vec<i32> = (0..96).collect();
+    let hashes = block_hashes(&tokens, 32);
+    for b in 0..3 {
+        m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+    }
+    // knock out block 2 everywhere (simulate satellite memory loss)
+    use skymemory::net::messages::{Envelope, Request};
+    for node in fleet.nodes() {
+        let env = Envelope::new(node.id, 0);
+        node.handle(&fleet.torus, &env, &Request::Evict { block: hashes[2], gossip_ttl: 0 });
+    }
+    let fetch = m.fetch_prefix(&hashes, 3, 0).unwrap();
+    assert_eq!(fetch.blocks, 2);
+    // the index forgot the broken prefix: next lookup stops at 2 blocks
+    assert_eq!(m.lookup(&hashes, 0).unwrap().0, 2);
+    // and a re-put repairs it
+    m.put_block(&hashes, 2, &values(2048, 2), 0).unwrap();
+    assert_eq!(m.fetch_prefix(&hashes, 3, 0).unwrap().blocks, 3);
+}
+
+#[test]
+fn distributed_and_radix_lookup_agree_under_rotation() {
+    let cfg = KvcConfig { n_servers: 9, ..KvcConfig::default() };
+    let (_fleet, m) = setup(cfg, 10 << 20);
+    let tokens: Vec<i32> = (0..128).collect();
+    let hashes = block_hashes(&tokens, 32);
+    for b in 0..4 {
+        m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+    }
+    let mut no_radix = cfg;
+    no_radix.use_radix_index = false;
+    no_radix.chunk_size = 600;
+    let m2 = KvcManager::new(no_radix, Torus::new(15, 15), m.transport().clone());
+    assert_eq!(m.lookup(&hashes, 0).unwrap().0, m2.lookup(&hashes, 0).unwrap().0);
+    // after one migration epoch both still agree
+    m.advance_epoch(0).unwrap();
+    assert_eq!(m.lookup(&hashes, 1).unwrap().0, 4);
+    let fetch2 = m2.fetch_prefix(&hashes, 4, 1).unwrap();
+    assert_eq!(fetch2.blocks, 4, "distributed path must survive migration");
+}
+
+#[test]
+fn gossip_eviction_propagates_to_siblings() {
+    let (fleet, m) = setup(
+        KvcConfig { n_servers: 9, eviction: EvictionPolicy::Gossip, ..KvcConfig::default() },
+        10 << 20,
+    );
+    let tokens: Vec<i32> = (0..32).collect();
+    let hashes = block_hashes(&tokens, 32);
+    m.put_block(&hashes, 0, &values(4096, 7), 0).unwrap();
+    let before = fleet.total_chunks();
+    assert!(before > 1);
+    // explicit eviction at the centre with the configured gossip radius
+    let center = m.transport().closest();
+    m.transport().evict_block(center, hashes[0], 2).unwrap();
+    assert_eq!(fleet.total_chunks(), 0, "gossip radius 2 covers the 3x3 layout");
+}
+
+#[test]
+fn prefetcher_preplaces_hot_blocks_for_future_epochs() {
+    // §3.7 end to end: record traffic, pre-place for epoch+1 from the
+    // local RAM tier, advance the ground view WITHOUT migrating, and the
+    // hot block is already sitting on the new LOS window.
+    use skymemory::coordinator::prefetch::Prefetcher;
+    let cfg = KvcConfig { n_servers: 9, chunk_size: 600, ..KvcConfig::default() };
+    let torus = Torus::new(15, 15);
+    let fleet = Arc::new(Fleet::new(torus, 10 << 20, cfg.eviction));
+    let center = SatId::new(7, 7);
+    let ground = GroundView::new(center, &LosGrid::new(center, 2, 2), torus.sats_per_plane);
+    let transport = Arc::new(InProcTransport::new(fleet.clone(), ground, None));
+    let m = KvcManager::new(cfg, torus, transport).with_local_tier(1 << 20);
+
+    let tokens: Vec<i32> = (0..64).collect();
+    let hashes = block_hashes(&tokens, 32);
+    for b in 0..2 {
+        m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+    }
+    let p = Prefetcher::new(0.5, 8);
+    for _ in 0..5 {
+        p.record(&hashes, 2);
+    }
+    assert_eq!(p.tracked(), 2);
+    let placed = p.preplace(&m, 0, 1).unwrap();
+    assert_eq!(placed, 2, "both hot blocks re-placed from the RAM tier");
+    // jump the ground view an epoch ahead with NO satellite migration:
+    // the predictive copies make the fetch work anyway
+    m.transport().set_epoch(1);
+    m.local_tier().unwrap().invalidate(&hashes[0]);
+    m.local_tier().unwrap().invalidate(&hashes[1]);
+    let fetch = m.fetch_prefix(&hashes, 2, 1).unwrap();
+    assert_eq!(fetch.blocks, 2);
+}

@@ -1,0 +1,324 @@
+//! Property-based tests over the coordinator invariants (routing,
+//! batching, state).  The offline build has no proptest crate, so this is
+//! a from-scratch property harness: deterministic XorShift-driven random
+//! cases with failure seeds printed for reproduction.
+
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::kvc::block::{block_hashes, BlockHash};
+use skymemory::kvc::chunk::{chunk_count, join_chunks, split_chunks};
+use skymemory::kvc::eviction::LruTracker;
+use skymemory::kvc::quantize::Quantizer;
+use skymemory::kvc::radix::RadixTree;
+use skymemory::mapping::{box_width, Strategy};
+use skymemory::net::messages::{
+    decode_request, decode_response, encode_request, encode_response, Envelope, Request, Response,
+};
+use skymemory::satellite::store::ChunkStore;
+use skymemory::util::rng::XorShift64;
+
+const CASES: u64 = 300;
+
+fn rand_torus(rng: &mut XorShift64) -> Torus {
+    Torus::new(2 + rng.next_range(14), 2 + rng.next_range(20))
+}
+
+fn rand_sat(rng: &mut XorShift64, t: &Torus) -> SatId {
+    SatId::new(rng.next_range(t.planes) as u16, rng.next_range(t.sats_per_plane) as u16)
+}
+
+#[test]
+fn prop_greedy_route_always_realizes_min_hops() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 1);
+        let t = rand_torus(&mut rng);
+        let a = rand_sat(&mut rng, &t);
+        let b = rand_sat(&mut rng, &t);
+        let route = t.route(a, b);
+        assert_eq!(route.len(), t.hops(a, b), "seed {seed}: {a} -> {b}");
+        let mut prev = a;
+        for s in route {
+            assert!(t.neighbors(prev).contains(&s), "seed {seed}: non-neighbor step");
+            prev = s;
+        }
+        assert_eq!(prev, b, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_layouts_unique_cover_and_start_at_center() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 10_000);
+        let t = rand_torus(&mut rng);
+        let c = rand_sat(&mut rng, &t);
+        let max_n = t.len().min(box_width(t.len()) * box_width(t.len()));
+        let n = 1 + rng.next_range(max_n.min(81));
+        for st in Strategy::ALL {
+            // bounded strategies need the box to fit inside the torus
+            let w = box_width(n);
+            if st != Strategy::HopAware && (w > t.planes || w > t.sats_per_plane) {
+                continue;
+            }
+            let layout = st.initial_layout(&t, c, n);
+            assert_eq!(layout.len(), n, "seed {seed} {:?}", st);
+            assert_eq!(layout[0], c, "seed {seed} {:?}: server 1 must be closest", st);
+            let uniq: std::collections::HashSet<_> = layout.iter().collect();
+            assert_eq!(uniq.len(), n, "seed {seed} {:?}: duplicates", st);
+        }
+    }
+}
+
+#[test]
+fn prop_migration_closed_form_equals_chained_plans() {
+    for seed in 0..150 {
+        let mut rng = XorShift64::new(seed + 20_000);
+        let t = Torus::new(3 + rng.next_range(10), 7 + rng.next_range(14));
+        let c = rand_sat(&mut rng, &t);
+        let n = 1 + rng.next_range(25);
+        let w = box_width(n);
+        if w + 1 >= t.sats_per_plane || w > t.planes {
+            continue;
+        }
+        let st = if rng.next_range(2) == 0 {
+            Strategy::RotationAware
+        } else {
+            Strategy::RotationHopAware
+        };
+        let mut layout = st.layout_at(&t, c, n, 0);
+        for epoch in 0..6u64 {
+            let plan = skymemory::mapping::migration::migration_plan(&t, st, c, n, epoch);
+            for m in &plan {
+                layout[(m.server - 1) as usize] = m.to;
+            }
+            assert_eq!(
+                layout,
+                st.layout_at(&t, c, n, epoch + 1),
+                "seed {seed} {:?} epoch {epoch}",
+                st
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_block_hash_prefix_property() {
+    // two token streams agree on their chained hashes exactly as far as
+    // their common block-aligned prefix
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 30_000);
+        let bs = 1 + rng.next_range(16);
+        let len = bs * (1 + rng.next_range(8));
+        let mut a: Vec<i32> = (0..len).map(|_| rng.next_range(1000) as i32).collect();
+        let mut b = a.clone();
+        let flip = rng.next_range(len);
+        b[flip] = a[flip].wrapping_add(1);
+        let ha = block_hashes(&a, bs);
+        let hb = block_hashes(&b, bs);
+        let flip_block = flip / bs;
+        for i in 0..ha.len() {
+            if i < flip_block {
+                assert_eq!(ha[i], hb[i], "seed {seed} block {i}");
+            } else {
+                assert_ne!(ha[i], hb[i], "seed {seed} block {i}");
+            }
+        }
+        // restoring the token restores all hashes
+        a[flip] = b[flip];
+        assert_eq!(block_hashes(&a, bs), hb);
+    }
+}
+
+#[test]
+fn prop_chunk_split_join_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 40_000);
+        let len = rng.next_range(40_000);
+        let chunk = 1 + rng.next_range(8192);
+        let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let chunks = split_chunks(&data, chunk);
+        assert_eq!(chunks.len(), chunk_count(len, chunk), "seed {seed}");
+        let owned: Vec<Option<Vec<u8>>> = chunks.iter().map(|c| Some(c.to_vec())).collect();
+        assert_eq!(join_chunks(&owned, len).unwrap(), data, "seed {seed}");
+        // dropping any one chunk breaks the join
+        if !owned.is_empty() {
+            let mut broken = owned.clone();
+            let victim = rng.next_range(broken.len());
+            broken[victim] = None;
+            assert!(join_chunks(&broken, len).is_none(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_quantizers_bounded_error() {
+    for seed in 0..100 {
+        let mut rng = XorShift64::new(seed + 50_000);
+        let group = [8, 16, 32, 64][rng.next_range(4)];
+        let n = group * (1 + rng.next_range(64));
+        let scale = 10f32.powi(rng.next_range(5) as i32 - 2);
+        let v: Vec<f32> = (0..n)
+            .map(|_| (rng.next_f64() as f32 - 0.5) * scale)
+            .collect();
+        for q in [Quantizer::QuantoInt8 { group }, Quantizer::HqqInt8 { group }] {
+            let dec = q.decode(&q.encode(&v)).unwrap();
+            assert_eq!(dec.len(), v.len());
+            let amax = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+            let bound = amax / 100.0 + 1e-6; // ~1% of range for int8
+            for (a, b) in v.iter().zip(&dec) {
+                assert!((a - b).abs() <= bound, "seed {seed} {}: {a} vs {b}", q.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_radix_tree_matches_hashmap_model() {
+    for seed in 0..100 {
+        let mut rng = XorShift64::new(seed + 60_000);
+        let mut tree = RadixTree::new();
+        let mut model = std::collections::HashMap::new();
+        for op in 0..400 {
+            let len = 1 + rng.next_range(10);
+            let key: Vec<u8> = (0..len).map(|_| rng.next_range(3) as u8).collect();
+            match rng.next_range(3) {
+                0 | 1 => {
+                    assert_eq!(
+                        tree.insert(&key, op),
+                        model.insert(key.clone(), op),
+                        "seed {seed} op {op}"
+                    );
+                }
+                _ => {
+                    assert_eq!(tree.remove(&key), model.remove(&key), "seed {seed} op {op}");
+                }
+            }
+            assert_eq!(tree.len(), model.len());
+        }
+        // spot-check longest_prefix against the model
+        for _ in 0..50 {
+            let len = 1 + rng.next_range(12);
+            let key: Vec<u8> = (0..len).map(|_| rng.next_range(3) as u8).collect();
+            let expect = (0..=key.len())
+                .rev()
+                .find_map(|l| model.get(&key[..l]).map(|v| (l, *v)));
+            let got = tree.longest_prefix(&key).map(|(l, v)| (l, *v));
+            assert_eq!(got, expect, "seed {seed} key {key:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_lru_matches_reference_model() {
+    for seed in 0..100 {
+        let mut rng = XorShift64::new(seed + 70_000);
+        let mut lru = LruTracker::new();
+        let mut model: Vec<u32> = Vec::new(); // front = MRU
+        for _ in 0..500 {
+            let key = rng.next_range(30) as u32;
+            match rng.next_range(4) {
+                0..=1 => {
+                    lru.touch(&key);
+                    model.retain(|k| *k != key);
+                    model.insert(0, key);
+                }
+                2 => {
+                    let got = lru.pop_lru();
+                    let want = model.pop();
+                    assert_eq!(got, want, "seed {seed}");
+                }
+                _ => {
+                    let got = lru.remove(&key);
+                    let had = model.iter().any(|k| *k == key);
+                    model.retain(|k| *k != key);
+                    assert_eq!(got, had, "seed {seed}");
+                }
+            }
+            assert_eq!(lru.len(), model.len(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_store_never_exceeds_budget() {
+    for seed in 0..60 {
+        let mut rng = XorShift64::new(seed + 80_000);
+        let budget = 500 + rng.next_range(5000);
+        let mut store = ChunkStore::new(budget);
+        for op in 0..300 {
+            let block = BlockHash([rng.next_range(6) as u8; 32]);
+            let key = skymemory::kvc::chunk::ChunkKey::new(block, rng.next_range(20) as u32);
+            let size = 1 + rng.next_range(budget);
+            store.set(key, vec![0xAB; size]);
+            assert!(
+                store.bytes_used() <= budget,
+                "seed {seed} op {op}: {} > {budget}",
+                store.bytes_used()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_message_codecs_roundtrip_random() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 90_000);
+        let env = Envelope::new(
+            SatId::new(rng.next_range(100) as u16, rng.next_range(100) as u16),
+            rng.next_u64(),
+        );
+        let block = BlockHash([(rng.next_u64() & 0xFF) as u8; 32]);
+        let key = skymemory::kvc::chunk::ChunkKey::new(block, rng.next_u64() as u32);
+        let req = match rng.next_range(6) {
+            0 => Request::Ping,
+            1 => Request::Get { key },
+            2 => Request::Set {
+                key,
+                payload: (0..rng.next_range(7000)).map(|_| rng.next_u64() as u8).collect(),
+            },
+            3 => Request::Evict { block, gossip_ttl: rng.next_range(8) as u8 },
+            4 => Request::Migrate {
+                to: SatId::new(rng.next_range(50) as u16, rng.next_range(50) as u16),
+            },
+            _ => Request::Query { block },
+        };
+        let bytes = encode_request(&env, &req);
+        let (e2, r2) = decode_request(&bytes).unwrap();
+        assert_eq!((e2, r2), (env.clone(), req), "seed {seed}");
+
+        let resp = match rng.next_range(5) {
+            0 => Response::SetOk,
+            1 => Response::GetOk {
+                payload: (0..rng.next_range(7000)).map(|_| rng.next_u64() as u8).collect(),
+            },
+            2 => Response::GetMiss,
+            3 => Response::QueryOk {
+                chunk_ids: (0..rng.next_range(64)).map(|_| rng.next_u64() as u32).collect(),
+            },
+            _ => Response::EvictOk { dropped: rng.next_u64() as u32 },
+        };
+        let bytes = encode_response(&env, &resp);
+        let (e3, r3) = decode_response(&bytes).unwrap();
+        assert_eq!((e3, r3), (env, resp), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_decode_rejects_random_corruption() {
+    // flip random bytes in valid messages: decode must error or return a
+    // different-but-valid message, never panic
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 95_000);
+        let env = Envelope::new(SatId::new(1, 2), 42);
+        let req = Request::Set {
+            key: skymemory::kvc::chunk::ChunkKey::new(BlockHash([7; 32]), 3),
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        let mut bytes = encode_request(&env, &req);
+        let n_flips = 1 + rng.next_range(4);
+        for _ in 0..n_flips {
+            let i = rng.next_range(bytes.len());
+            bytes[i] ^= 1 << rng.next_range(8);
+        }
+        let _ = decode_request(&bytes); // must not panic
+        let _ = decode_response(&bytes);
+    }
+}

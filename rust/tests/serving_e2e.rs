@@ -1,0 +1,182 @@
+//! Integration: the full serving stack — PJRT model, router, HTTP API —
+//! with the constellation cache in the loop.  Skipped when artifacts/ has
+//! not been built (`make artifacts`).
+
+use skymemory::coordinator::http::{client, HttpServer};
+use skymemory::coordinator::{GenRequest, Stack, StackConfig};
+use skymemory::util::json::Json;
+
+fn artifacts_present() -> bool {
+    skymemory::runtime::model_config::default_artifacts_dir()
+        .join("model_config.json")
+        .exists()
+}
+
+fn stack() -> Stack {
+    Stack::build(StackConfig::default()).expect("stack builds")
+}
+
+#[test]
+fn warm_request_restores_prefix_from_orbit() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let stack = stack();
+    let req = GenRequest {
+        prompt: "The ground station sees ten or twenty satellites at once. The nearest \
+                 one is the center of the map."
+            .into(),
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    let cold = stack.router.generate(req.clone()).unwrap();
+    assert_eq!(cold.cached_blocks, 0);
+    assert!(cold.prefill_blocks >= 3);
+    let warm = stack.router.generate(req.clone()).unwrap();
+    assert_eq!(warm.cached_blocks, cold.prefill_blocks);
+    assert_eq!(warm.prefill_blocks, 0);
+    // identical greedy output with and without the cache (numerical
+    // equivalence through quantization holds at greedy argmax)
+    assert_eq!(cold.text, warm.text, "cache changed the generation");
+    // cache bypass still works
+    let mut nocache = req;
+    nocache.use_cache = false;
+    let r = stack.router.generate(nocache).unwrap();
+    assert_eq!(r.cached_blocks, 0);
+    assert_eq!(r.text, cold.text);
+}
+
+#[test]
+fn diverging_prompts_share_prefix_blocks() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let stack = stack();
+    let base = "A transformer reads a prompt as a sequence of tokens, and for every \
+                token it stores a key and a value in every layer.";
+    let r1 = stack
+        .router
+        .generate(GenRequest { prompt: format!("{base} What is stored?"), max_new_tokens: 4, ..Default::default() })
+        .unwrap();
+    assert!(r1.prefill_blocks >= 3);
+    let r2 = stack
+        .router
+        .generate(GenRequest { prompt: format!("{base} Why does it help?"), max_new_tokens: 4, ..Default::default() })
+        .unwrap();
+    // the shared context blocks come from orbit; only the divergent tail
+    // is recomputed
+    assert!(r2.cached_blocks >= 3, "{:?}", r2);
+    assert!(r2.prefill_blocks <= 1);
+}
+
+#[test]
+fn http_api_serves_and_reports_metrics() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let stack = stack();
+    let server = HttpServer::spawn("127.0.0.1:0", stack.router.clone()).unwrap();
+    let body = r#"{"prompt": "the cache moves with the satellite and the ground", "max_tokens": 6}"#;
+    let (status, resp) = client::post(server.addr, "/generate", body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("generated_tokens").and_then(Json::as_usize), Some(6));
+    assert!(j.get("ttft_s").and_then(Json::as_f64).unwrap() > 0.0);
+    // again: now served from cache
+    let (_, resp2) = client::post(server.addr, "/generate", body).unwrap();
+    let j2 = Json::parse(&resp2).unwrap();
+    assert!(j2.get("cached_blocks").and_then(Json::as_usize).unwrap() > 0);
+
+    let (ms, metrics) = client::get(server.addr, "/metrics").unwrap();
+    assert_eq!(ms, 200);
+    assert!(metrics.contains("skymemory_requests_total 2"));
+    assert!(metrics.contains("skymemory_cache_blocks_hit"));
+
+    let (hs, health) = client::get(server.addr, "/healthz").unwrap();
+    assert_eq!((hs, health.as_str()), (200, "ok\n"));
+    let (nf, _) = client::get(server.addr, "/nope").unwrap();
+    assert_eq!(nf, 404);
+    let (bad, _) = client::post(server.addr, "/generate", "not json").unwrap();
+    assert_eq!(bad, 400);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_requests_across_workers() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let stack = stack();
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        rxs.push(stack.router.submit(GenRequest {
+            prompt: format!("satellite number {i} holds a shard of the cache in orbit"),
+            max_new_tokens: 5,
+            ..Default::default()
+        }));
+    }
+    for rx in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.tokens.len(), 5);
+    }
+    assert_eq!(
+        stack
+            .metrics
+            .requests_total
+            .load(std::sync::atomic::Ordering::Relaxed),
+        6
+    );
+}
+
+#[test]
+fn oversized_prompt_rejected_cleanly() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let stack = stack();
+    let req = GenRequest {
+        prompt: "x".repeat(400), // > max_seq
+        max_new_tokens: 8,
+        ..Default::default()
+    };
+    assert!(stack.router.generate(req).is_err());
+    // the engine remains usable afterwards (slot was freed)
+    let ok = stack.router.generate(GenRequest {
+        prompt: "short prompt".into(),
+        max_new_tokens: 3,
+        ..Default::default()
+    });
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn rotation_driver_keeps_cache_hot_across_epochs() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let stack = stack();
+    let req = GenRequest {
+        prompt: "memory is a hierarchy and the sky is one of its levels, registers, \
+                 cache, host memory, flash, disk, network, orbit"
+            .into(),
+        max_new_tokens: 4,
+        ..Default::default()
+    };
+    let cold = stack.router.generate(req.clone()).unwrap();
+    assert!(cold.prefill_blocks >= 3);
+    // drive 3 rotation epochs at 120 ms each
+    let stop = stack.spawn_rotation_driver(std::time::Duration::from_millis(120));
+    std::thread::sleep(std::time::Duration::from_millis(450));
+    let _ = stop.send(());
+    let epoch = stack.manager.transport_epoch();
+    assert!(epoch >= 3, "driver advanced only to epoch {epoch}");
+    // post-rotation request still hits the migrated cache
+    let warm = stack.router.generate(req).unwrap();
+    assert_eq!(warm.cached_blocks, cold.prefill_blocks, "{warm:?}");
+}
