@@ -102,7 +102,8 @@ fn table3(outdir: &std::path::Path) -> anyhow::Result<()> {
 fn serving_run(outdir: &std::path::Path) -> anyhow::Result<()> {
     println!("\n=== batched serving over the constellation cache ===");
     let stack = build_stack(Quantizer::QuantoInt8 { group: 32 }, LINK_SCALE)?;
-    let wl = WorkloadConfig { n_contexts: 4, context_chars: 160, n_questions: 6, seed: 42 };
+    let wl =
+        WorkloadConfig { n_contexts: 4, context_chars: 160, n_questions: 6, seed: 42, ..Default::default() };
     let items = gen_workload(&wl, 32);
     let t0 = Instant::now();
     // submit everything (router fans across workers), then collect

@@ -48,7 +48,8 @@ fn main() -> anyhow::Result<()> {
     println!("serving on http://{}", server.addr);
 
     // batched client load over HTTP
-    let wl = WorkloadConfig { n_contexts: 3, context_chars: 130, n_questions: 5, seed: 11 };
+    let wl =
+        WorkloadConfig { n_contexts: 3, context_chars: 130, n_questions: 5, seed: 11, ..Default::default() };
     let items = gen_workload(&wl, 24);
     let t0 = Instant::now();
     let mut handles = Vec::new();

@@ -1,0 +1,44 @@
+//! Bench harness for the scenario subsystem: times one full end-to-end
+//! run of every built-in scenario (fleet construction, workload serving,
+//! per-epoch migration and failure injection included), then uses the
+//! micro-bench harness on the small paper shape to expose run-to-run
+//! variance of the hot loop.
+
+use skymemory::sim::harness::run_scenario;
+use skymemory::sim::scenario::ScenarioSpec;
+use skymemory::util::bench::Bencher;
+use std::time::{Duration, Instant};
+
+fn main() {
+    println!("=== scenario end-to-end timings (seed 42) ===");
+    for spec in ScenarioSpec::builtin(42) {
+        let t0 = Instant::now();
+        let report = run_scenario(&spec);
+        let wall = t0.elapsed();
+        println!(
+            "{:<16} {:>5} sats  {:>2} epochs  {:>4} reqs  hit {:>6.1}%  \
+             migrated {:>6}  blackholed {:>4}  isl {:>9} hop-bytes  wall {:?}",
+            report.name,
+            spec.torus().len(),
+            report.epochs,
+            report.requests,
+            100.0 * report.block_hit_rate,
+            report.migrated_chunks,
+            report.blackholed_requests,
+            report.isl_bytes,
+            wall
+        );
+    }
+
+    println!("\n=== paper-19x5 repeatability (micro-bench) ===");
+    let mut small = ScenarioSpec::paper_19x5(42);
+    small.epochs = 2;
+    small.requests_per_epoch = 8;
+    let r = Bencher::new("run_scenario paper-19x5 (2 epochs x 8 reqs)")
+        .warmup(Duration::from_millis(50))
+        .measure(Duration::from_millis(500))
+        .run(|| {
+            std::hint::black_box(run_scenario(&small));
+        });
+    println!("{}", r.report());
+}

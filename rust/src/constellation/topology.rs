@@ -155,6 +155,11 @@ impl Torus {
         self.plane_distance(from, to) + self.slot_distance(from, to)
     }
 
+    /// Are `a` and `b` joined by a single +GRID ISL?
+    pub fn are_neighbors(&self, a: SatId, b: SatId) -> bool {
+        self.hops(a, b) == 1
+    }
+
     /// The §4 greedy next-step rule, verbatim: prefer the strictly shorter
     /// vertical direction, then the strictly shorter horizontal one.
     pub fn next_step(&self, from: SatId, to: SatId) -> Step {

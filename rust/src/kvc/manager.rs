@@ -113,6 +113,37 @@ pub struct KvcStats {
     pub broken_blocks: AtomicU64,
 }
 
+/// A plain-value copy of [`KvcStats`] (for reports and deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvcStatsSnapshot {
+    pub lookups: u64,
+    pub prefix_hits: u64,
+    pub blocks_fetched: u64,
+    pub blocks_stored: u64,
+    pub chunks_fetched: u64,
+    pub chunks_stored: u64,
+    pub bytes_fetched: u64,
+    pub bytes_stored: u64,
+    pub broken_blocks: u64,
+}
+
+impl KvcStats {
+    pub fn snapshot(&self) -> KvcStatsSnapshot {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        KvcStatsSnapshot {
+            lookups: ld(&self.lookups),
+            prefix_hits: ld(&self.prefix_hits),
+            blocks_fetched: ld(&self.blocks_fetched),
+            blocks_stored: ld(&self.blocks_stored),
+            chunks_fetched: ld(&self.chunks_fetched),
+            chunks_stored: ld(&self.chunks_stored),
+            bytes_fetched: ld(&self.bytes_fetched),
+            bytes_stored: ld(&self.bytes_stored),
+            broken_blocks: ld(&self.broken_blocks),
+        }
+    }
+}
+
 /// Result of a prefix fetch.
 #[derive(Debug)]
 pub struct PrefixFetch {

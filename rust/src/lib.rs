@@ -14,12 +14,20 @@
 //!   quantization codecs, the local radix block index, eviction policies,
 //!   and the [`kvc::manager::KvcManager`] implementing §3.8 Get/Set.
 //! * [`net`] — CCSDS Space Packet Protocol framing, binary message codecs,
-//!   and the [`net::transport::Transport`] abstraction (in-proc, UDP,
-//!   simulated-latency).
+//!   the [`net::transport::Transport`] abstraction (in-proc, UDP,
+//!   simulated-latency), and the failure-injecting
+//!   [`net::faults::FaultyTransport`] decorator.
 //! * [`satellite`] — the satellite node substrate (the paper's cFS stand-in):
 //!   chunk store with LRU, ISL forwarding, migration, eviction gossip.
-//! * [`sim`] — the §4 worst-case-latency simulator (Figure 16) plus
-//!   workload generation.
+//! * [`sim`] — the §4 worst-case-latency simulator (Figure 16), workload
+//!   generation, and the deterministic scenario subsystem
+//!   ([`sim::scenario`] + [`sim::harness`]): named, seed-driven
+//!   end-to-end runs — the paper's 19x5 testbed, a Starlink-like 72x22
+//!   mega-shell, a Kuiper-like 34x34 shell — sweeping rotation epochs
+//!   with migration, eviction pressure and injected failures (satellite
+//!   loss, ISL outage, ground-station handover via
+//!   [`net::faults::FaultyTransport`]), emitting byte-stable metrics
+//!   JSON.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (L2/L1 outputs):
 //!   HLO loading, weight upload, prefill/decode steps, tokenizer, sampler.
 //! * [`coordinator`] — the serving engine: prefix-cache-aware generation

@@ -8,6 +8,8 @@
 //! skymemory satellite  [--torus 5x19] [--planes 0..5] [--budget-mb 64]
 //! skymemory simulate   [--strategy ...] [--altitude 550] [--servers 81]
 //!                      [--kvc-mb 21] [--proc-ms 2]
+//! skymemory scenario   [--name paper-19x5|starlink-shell|kuiper-shell]
+//!                      [--seed 42]
 //! skymemory repro      [--outdir results]
 //! ```
 //!
@@ -66,12 +68,7 @@ impl Args {
 }
 
 fn parse_strategy(s: &str) -> Result<Strategy> {
-    match s {
-        "rot" | "rotation" | "rotation-aware" => Ok(Strategy::RotationAware),
-        "hop" | "hop-aware" => Ok(Strategy::HopAware),
-        "rot-hop" | "rotation-hop" | "rotation-and-hop-aware" => Ok(Strategy::RotationHopAware),
-        _ => bail!("unknown strategy {s} (rot | hop | rot-hop)"),
-    }
+    Strategy::from_name(s).ok_or_else(|| anyhow!("unknown strategy {s} (rot | hop | rot-hop)"))
 }
 
 fn parse_quantizer(s: &str, group: usize) -> Result<Quantizer> {
@@ -210,6 +207,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_scenario(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let specs = match args.get("name") {
+        Some(name) => vec![skymemory::sim::scenario::ScenarioSpec::by_name(name, seed)
+            .ok_or_else(|| anyhow!("unknown scenario {name} (paper-19x5 | starlink-shell | kuiper-shell)"))?],
+        None => skymemory::sim::scenario::ScenarioSpec::builtin(seed),
+    };
+    for spec in specs {
+        let report = skymemory::sim::harness::run_scenario(&spec);
+        println!("{}", report.to_json_string());
+    }
+    Ok(())
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
     let outdir = std::path::PathBuf::from(args.get("outdir").unwrap_or("results"));
     let files = skymemory::repro::write_all(&outdir).context("writing results")?;
@@ -223,7 +234,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: skymemory <serve|generate|satellite|simulate|repro> [flags]\n\
+        "usage: skymemory <serve|generate|satellite|simulate|scenario|repro> [flags]\n\
          see rust/src/main.rs header for per-command flags"
     );
     std::process::exit(2)
@@ -240,6 +251,7 @@ fn main() -> Result<()> {
         "generate" => cmd_generate(&args),
         "satellite" => cmd_satellite(&args),
         "simulate" => cmd_simulate(&args),
+        "scenario" => cmd_scenario(&args),
         "repro" => cmd_repro(&args),
         _ => usage(),
     }

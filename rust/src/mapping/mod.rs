@@ -51,6 +51,18 @@ impl Strategy {
         }
     }
 
+    /// Parse a strategy name (canonical or the CLI short forms).
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        match name {
+            "rot" | "rotation" | "rotation-aware" => Some(Strategy::RotationAware),
+            "hop" | "hop-aware" => Some(Strategy::HopAware),
+            "rot-hop" | "rotation-hop" | "rotation-and-hop-aware" => {
+                Some(Strategy::RotationHopAware)
+            }
+            _ => None,
+        }
+    }
+
     /// Does this mapping migrate chunks to follow the ground host?
     pub fn migrates(&self) -> bool {
         !matches!(self, Strategy::HopAware)

@@ -1,0 +1,283 @@
+//! Failure injection at the transport boundary.
+//!
+//! [`FaultyTransport`] wraps any [`Transport`] and blackholes requests
+//! whose destination satellite has been lost, or whose greedy +GRID route
+//! from the ground entry point crosses a failed ISL or a lost satellite.
+//! Blackholed requests surface as transport errors, which the KVC manager
+//! already treats as chunk misses (a missing chunk breaks its block, the
+//! prefix truncates, and the lazy-eviction path cleans up) — exactly the
+//! degradation mode §3.9 describes for real satellite loss.
+//!
+//! Entry modelling mirrors [`super::transport::InProcTransport`]: a
+//! destination inside the reliable-LOS window is uplinked directly (only
+//! its own liveness matters); anything else enters at the closest
+//! satellite and rides the mesh, so every intermediate hop matters.
+//!
+//! The fault set is dynamic — the scenario harness injects satellite
+//! losses and ISL outages per rotation epoch and heals outages on a
+//! deterministic schedule.
+
+use crate::constellation::topology::{SatId, Torus};
+use crate::net::messages::{Request, Response};
+use crate::net::transport::{Transport, TransportStats};
+use anyhow::{bail, Result};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Counters of injected-failure impact.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Requests dropped because the destination satellite is lost.
+    pub dead_destination: AtomicU64,
+    /// Requests dropped because the route crossed a failed link/satellite.
+    pub broken_route: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn blackholed(&self) -> u64 {
+        self.dead_destination.load(Ordering::Relaxed)
+            + self.broken_route.load(Ordering::Relaxed)
+    }
+}
+
+/// An undirected ISL edge in canonical (smaller-endpoint-first) order.
+fn edge(a: SatId, b: SatId) -> (SatId, SatId) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// A transport decorator that injects satellite and link failures.
+pub struct FaultyTransport {
+    inner: Arc<dyn Transport>,
+    torus: Torus,
+    /// Reliable-LOS half extents (slots, planes) for direct-uplink entry.
+    los_half_slots: usize,
+    los_half_planes: usize,
+    failed_sats: RwLock<HashSet<SatId>>,
+    failed_links: RwLock<HashSet<(SatId, SatId)>>,
+    pub fault_stats: FaultStats,
+}
+
+impl FaultyTransport {
+    pub fn new(
+        inner: Arc<dyn Transport>,
+        torus: Torus,
+        los_half_slots: usize,
+        los_half_planes: usize,
+    ) -> Self {
+        Self {
+            inner,
+            torus,
+            los_half_slots,
+            los_half_planes,
+            failed_sats: RwLock::new(HashSet::new()),
+            failed_links: RwLock::new(HashSet::new()),
+            fault_stats: FaultStats::default(),
+        }
+    }
+
+    /// Mark a satellite as lost (all traffic to or through it fails).
+    pub fn fail_satellite(&self, sat: SatId) {
+        self.failed_sats.write().unwrap().insert(sat);
+    }
+
+    /// Bring a satellite back (e.g. a replacement launch).
+    pub fn restore_satellite(&self, sat: SatId) {
+        self.failed_sats.write().unwrap().remove(&sat);
+    }
+
+    /// Take down the ISL between two (neighbouring) satellites.
+    pub fn fail_link(&self, a: SatId, b: SatId) {
+        debug_assert!(self.torus.are_neighbors(a, b), "ISL outage needs a real edge");
+        self.failed_links.write().unwrap().insert(edge(a, b));
+    }
+
+    /// Restore a failed ISL.
+    pub fn restore_link(&self, a: SatId, b: SatId) {
+        self.failed_links.write().unwrap().remove(&edge(a, b));
+    }
+
+    pub fn failed_satellites(&self) -> usize {
+        self.failed_sats.read().unwrap().len()
+    }
+
+    /// Is `sat` currently marked lost?
+    pub fn is_satellite_failed(&self, sat: SatId) -> bool {
+        self.failed_sats.read().unwrap().contains(&sat)
+    }
+
+    pub fn failed_links(&self) -> usize {
+        self.failed_links.read().unwrap().len()
+    }
+
+    pub fn clear_faults(&self) {
+        self.failed_sats.write().unwrap().clear();
+        self.failed_links.write().unwrap().clear();
+    }
+
+    /// Is `dest` reachable from the current ground entry point?
+    fn check_reachable(&self, dest: SatId) -> Reach {
+        let sats = self.failed_sats.read().unwrap();
+        if sats.contains(&dest) {
+            return Reach::DeadDestination;
+        }
+        let center = self.inner.closest();
+        let (dp, ds) = self.torus.signed_offset(center, dest);
+        let direct = dp.unsigned_abs() as usize <= self.los_half_planes
+            && ds.unsigned_abs() as usize <= self.los_half_slots;
+        if direct {
+            // direct ground uplink: no mesh traversal
+            return Reach::Ok;
+        }
+        let links = self.failed_links.read().unwrap();
+        if sats.is_empty() && links.is_empty() {
+            return Reach::Ok;
+        }
+        // a lost entry satellite cannot relay into the mesh
+        if sats.contains(&center) {
+            return Reach::BrokenRoute;
+        }
+        let mut prev = center;
+        for hop in self.torus.route(center, dest) {
+            if links.contains(&edge(prev, hop)) {
+                return Reach::BrokenRoute;
+            }
+            // intermediate dead satellites cannot forward; the final hop
+            // was already checked as the destination
+            if hop != dest && sats.contains(&hop) {
+                return Reach::BrokenRoute;
+            }
+            prev = hop;
+        }
+        Reach::Ok
+    }
+}
+
+enum Reach {
+    Ok,
+    DeadDestination,
+    BrokenRoute,
+}
+
+impl Transport for FaultyTransport {
+    fn request(&self, dest: SatId, req: Request) -> Result<Response> {
+        match self.check_reachable(dest) {
+            Reach::Ok => self.inner.request(dest, req),
+            Reach::DeadDestination => {
+                self.fault_stats.dead_destination.fetch_add(1, Ordering::Relaxed);
+                bail!("injected fault: satellite {dest} is lost")
+            }
+            Reach::BrokenRoute => {
+                self.fault_stats.broken_route.fetch_add(1, Ordering::Relaxed);
+                bail!("injected fault: no route to {dest}")
+            }
+        }
+    }
+
+    fn closest(&self) -> SatId {
+        self.inner.closest()
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.inner.set_epoch(epoch);
+    }
+
+    fn epoch(&self) -> u64 {
+        self.inner.epoch()
+    }
+
+    fn stats(&self) -> &TransportStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::los::LosGrid;
+    use crate::kvc::block::BlockHash;
+    use crate::kvc::chunk::ChunkKey;
+    use crate::kvc::eviction::EvictionPolicy;
+    use crate::net::transport::{GroundView, InProcTransport};
+    use crate::satellite::fleet::Fleet;
+
+    fn faulty() -> (Arc<InProcTransport>, FaultyTransport) {
+        let torus = Torus::new(5, 19);
+        let fleet = Arc::new(Fleet::new(torus, 1 << 20, EvictionPolicy::Gossip));
+        let center = SatId::new(2, 9);
+        let ground = GroundView::new(center, &LosGrid::new(center, 2, 2), torus.sats_per_plane);
+        let inner = Arc::new(InProcTransport::new(fleet, ground, None));
+        let faulty = FaultyTransport::new(inner.clone(), torus, 2, 2);
+        (inner, faulty)
+    }
+
+    fn key(b: u8) -> ChunkKey {
+        ChunkKey::new(BlockHash([b; 32]), 0)
+    }
+
+    #[test]
+    fn healthy_requests_pass_through() {
+        let (_inner, t) = faulty();
+        let dest = SatId::new(2, 10);
+        t.set_chunk(dest, key(1), vec![1, 2, 3]).unwrap();
+        assert_eq!(t.get_chunk(dest, key(1)).unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(t.fault_stats.blackholed(), 0);
+    }
+
+    #[test]
+    fn dead_destination_blackholes() {
+        let (_inner, t) = faulty();
+        let dest = SatId::new(2, 10);
+        t.set_chunk(dest, key(1), vec![1]).unwrap();
+        t.fail_satellite(dest);
+        assert!(t.get_chunk(dest, key(1)).is_err());
+        assert!(t.set_chunk(dest, key(2), vec![2]).is_err());
+        assert_eq!(t.fault_stats.dead_destination.load(Ordering::Relaxed), 2);
+        t.restore_satellite(dest);
+        assert_eq!(t.get_chunk(dest, key(1)).unwrap(), Some(vec![1]));
+    }
+
+    #[test]
+    fn link_outage_blocks_mesh_routes_but_not_direct_uplink() {
+        let (_inner, t) = faulty();
+        // a far destination (outside the 5x5 LOS window): the route
+        // leaves the centre northward first
+        let center = SatId::new(2, 9);
+        let far = SatId::new(0, 3);
+        let first_hop = t.torus.route(center, far)[0];
+        t.fail_link(center, first_hop);
+        assert!(t.ping(far).is_err(), "mesh route crosses the dead link");
+        // destinations inside the LOS window uplink directly
+        let near = SatId::new(1, 9);
+        assert!(t.ping(near).is_ok());
+        t.restore_link(center, first_hop);
+        assert!(t.ping(far).is_ok());
+    }
+
+    #[test]
+    fn dead_intermediate_breaks_the_route() {
+        let (_inner, t) = faulty();
+        let far = SatId::new(2, 0); // straight west along plane 2, outside LOS
+        let center = SatId::new(2, 9);
+        let mid = t.torus.route(center, far)[1];
+        t.fail_satellite(mid);
+        assert!(t.ping(far).is_err());
+        assert_eq!(t.fault_stats.broken_route.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn clear_faults_heals_everything() {
+        let (_inner, t) = faulty();
+        t.fail_satellite(SatId::new(0, 0));
+        t.fail_link(SatId::new(2, 9), SatId::new(2, 10));
+        assert_eq!(t.failed_satellites(), 1);
+        assert_eq!(t.failed_links(), 1);
+        t.clear_faults();
+        assert_eq!(t.failed_satellites(), 0);
+        assert_eq!(t.failed_links(), 0);
+    }
+}

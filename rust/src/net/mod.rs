@@ -8,6 +8,7 @@
 //! datagram is a Space Packet whose user data field carries one SkyMemory
 //! message.
 
+pub mod faults;
 pub mod messages;
 pub mod spp;
 pub mod transport;

@@ -59,6 +59,10 @@ pub struct TransportStats {
     pub misses: AtomicU64,
     pub errors: AtomicU64,
     pub isl_hops: AtomicU64,
+    /// Payload bytes carried over ISL links, weighted by hop count
+    /// (request + response bytes x hops — the mesh-capacity figure the
+    /// scenario harness reports as "bytes on ISL").
+    pub isl_bytes: AtomicU64,
     /// Accumulated emulated network latency (ns), whether or not slept.
     pub sim_latency_ns: AtomicU64,
 }
@@ -126,7 +130,9 @@ pub trait Transport: Send + Sync {
 
 /// Ground-station view shared by transports: the rotating LOS window.
 pub struct GroundView {
-    initial_center: SatId,
+    /// Centre satellite in the epoch-0 frame (rotation subtracts the
+    /// epoch from its slot); a ground-station handover rebases it.
+    base_center: RwLock<SatId>,
     half_slots: usize,
     half_planes: usize,
     epoch: RwLock<u64>,
@@ -136,7 +142,7 @@ pub struct GroundView {
 impl GroundView {
     pub fn new(initial_center: SatId, los: &LosGrid, sats_per_plane: usize) -> Self {
         Self {
-            initial_center,
+            base_center: RwLock::new(initial_center),
             half_slots: los.half_slots,
             half_planes: los.half_planes,
             epoch: RwLock::new(0),
@@ -153,10 +159,24 @@ impl GroundView {
     }
 
     pub fn center(&self) -> SatId {
+        let base = *self.base_center.read().unwrap();
         let e = self.epoch();
-        let slot = (self.initial_center.slot as i64 - e as i64)
+        let slot =
+            (base.slot as i64 - e as i64).rem_euclid(self.sats_per_plane as i64) as u16;
+        SatId::new(base.plane, slot)
+    }
+
+    /// Ground-station handover: re-home the view so that `new_center` is
+    /// the satellite overhead *at the current epoch*.  Rotation continues
+    /// from there (the centre keeps sliding one slot west per epoch).
+    /// Chunk layouts written under the old ground station are not
+    /// re-mapped — the failure-injection scenarios use exactly that
+    /// locality loss.
+    pub fn handover(&self, new_center: SatId) {
+        let e = self.epoch();
+        let slot = (new_center.slot as i64 + e as i64)
             .rem_euclid(self.sats_per_plane as i64) as u16;
-        SatId::new(self.initial_center.plane, slot)
+        *self.base_center.write().unwrap() = SatId::new(new_center.plane, slot);
     }
 
     pub fn los(&self) -> LosGrid {
@@ -222,6 +242,9 @@ impl Transport for InProcTransport {
             Response::GetOk { payload } => payload.len().max(bytes),
             _ => bytes,
         };
+        self.stats
+            .isl_bytes
+            .fetch_add(hops as u64 * (bytes + resp_bytes) as u64, Ordering::Relaxed);
         self.emulate_latency(entry, hops, resp_bytes);
         if let Response::Error { code } = resp {
             self.stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -297,6 +320,19 @@ mod tests {
         // wraps
         t.set_epoch(19);
         assert_eq!(t.closest(), SatId::new(2, 9));
+    }
+
+    #[test]
+    fn ground_handover_rebases_then_keeps_rotating() {
+        let t = transport(None);
+        t.set_epoch(4);
+        assert_eq!(t.closest(), SatId::new(2, 5));
+        // handover to a station under plane 4
+        t.ground.handover(SatId::new(4, 11));
+        assert_eq!(t.closest(), SatId::new(4, 11), "new centre at current epoch");
+        // rotation continues from the new home
+        t.set_epoch(6);
+        assert_eq!(t.closest(), SatId::new(4, 9));
     }
 
     #[test]

@@ -151,6 +151,19 @@ pub fn fig16_summary() -> String {
     out
 }
 
+/// The scenario-harness reports: every built-in scenario (the paper's
+/// 19x5 testbed plus the Starlink- and Kuiper-like mega shells) run at a
+/// fixed seed, one metrics-JSON line each.  Deterministic: re-running
+/// produces byte-identical output.
+pub fn scenarios() -> String {
+    let mut out = String::new();
+    for spec in crate::sim::scenario::ScenarioSpec::builtin(42) {
+        let report = crate::sim::harness::run_scenario(&spec);
+        let _ = writeln!(out, "{}", report.to_json_string());
+    }
+    out
+}
+
 /// Table 2: the simulation configuration actually used.
 pub fn table2() -> String {
     let c = crate::sim::SimConfig::default();
@@ -171,7 +184,7 @@ pub fn table2() -> String {
 /// into `outdir`; returns the file list.
 pub fn write_all(outdir: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {
     std::fs::create_dir_all(outdir)?;
-    let items: [(&str, String); 7] = [
+    let items: [(&str, String); 8] = [
         ("table1.csv", table1()),
         ("fig1_fig2.csv", fig1_fig2()),
         ("fig13.txt", fig13()),
@@ -179,6 +192,7 @@ pub fn write_all(outdir: &std::path::Path) -> std::io::Result<Vec<std::path::Pat
         ("fig15.txt", fig15()),
         ("fig16.csv", fig16()),
         ("table2.csv", table2()),
+        ("scenarios.json", scenarios()),
     ];
     let mut written = Vec::new();
     for (name, content) in items {
@@ -241,11 +255,20 @@ mod tests {
     fn write_all_creates_files() {
         let dir = std::env::temp_dir().join(format!("skymem_repro_{}", std::process::id()));
         let files = write_all(&dir).unwrap();
-        assert_eq!(files.len(), 7);
+        assert_eq!(files.len(), 8);
         for f in &files {
             assert!(f.exists());
             assert!(std::fs::metadata(f).unwrap().len() > 10);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scenarios_artifact_has_one_line_per_builtin() {
+        let text = scenarios();
+        assert_eq!(text.trim().lines().count(), 3);
+        for name in ["paper-19x5", "starlink-shell", "kuiper-shell"] {
+            assert!(text.contains(name), "{name} missing");
+        }
     }
 }

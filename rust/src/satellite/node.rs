@@ -41,6 +41,16 @@ impl Node {
         self.store.lock().unwrap().bytes_used()
     }
 
+    /// Drop every stored chunk — failure injection for satellite loss (a
+    /// lost or rebooted satellite comes back with empty RAM, or never).
+    /// Returns the number of chunks lost.
+    pub fn clear(&self) -> u32 {
+        let mut store = self.store.lock().unwrap();
+        let n = store.len() as u32;
+        store.drain_all();
+        n
+    }
+
     /// Handle a request addressed to this node.  Returns the response and
     /// any side-effect sends (gossip, migration transfers).
     pub fn handle(&self, torus: &Torus, env: &Envelope, req: &Request) -> (Response, Vec<Outgoing>) {

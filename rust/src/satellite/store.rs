@@ -142,11 +142,16 @@ impl ChunkStore {
         n
     }
 
-    /// Take everything out (rotation migration handoff).
+    /// Take everything out (rotation migration handoff), in key order —
+    /// `HashMap` iteration order is randomly seeded, and the handoff's
+    /// downstream Set order feeds the receiver's LRU, so sorting here
+    /// keeps whole simulation runs reproducible.
     pub fn drain_all(&mut self) -> Vec<(ChunkKey, Vec<u8>)> {
         self.bytes_used = 0;
         while self.lru.pop_lru().is_some() {}
-        self.map.drain().collect()
+        let mut out: Vec<(ChunkKey, Vec<u8>)> = self.map.drain().collect();
+        out.sort_unstable_by_key(|(k, _)| *k);
+        out
     }
 
     /// Blocks present locally with their chunk ids (scrub support).

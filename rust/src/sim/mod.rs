@@ -1,11 +1,24 @@
 //! The §4 simulator: "we implemented a simulator that computes the
 //! worst-case latency based on the distance equation 1, and the chunk
 //! farthest away" — plus the workload generator used by the serving
-//! benches.
+//! benches, and the deterministic end-to-end scenario subsystem:
+//!
+//! * [`config`]/[`latency`] — the closed-form Figure 16 model.
+//! * [`workload`] — shared-prefix prompt generation.
+//! * [`scenario`] — named, seed-driven scenario specs (the paper's 19x5
+//!   testbed, a Starlink-like 72x22 mega-shell, a Kuiper-like 34x34
+//!   shell) with failure-injection plans.
+//! * [`harness`] — runs a scenario end to end over the real protocol
+//!   stack (fleet + mapping + migration + KVC manager) and emits a
+//!   byte-stable metrics JSON report.
 
 pub mod config;
+pub mod harness;
 pub mod latency;
+pub mod scenario;
 pub mod workload;
 
 pub use config::SimConfig;
+pub use harness::{run_scenario, ScenarioReport};
 pub use latency::{worst_case_latency, LatencyBreakdown};
+pub use scenario::{FailureKind, FailurePlan, ScenarioSpec};

@@ -1,0 +1,361 @@
+//! Named, reproducible end-to-end scenarios.
+//!
+//! A [`ScenarioSpec`] fully determines one simulation run: constellation
+//! shape and altitude, mapping strategy, KVC configuration, workload, the
+//! rotation-epoch schedule, and a deterministic failure-injection plan
+//! (satellite loss, ISL outage, ground-station handover).  The same spec
+//! and seed always produce byte-identical metrics JSON — the harness
+//! ([`super::harness`]) is careful to avoid every source of run-to-run
+//! nondeterminism (hash-map iteration order, wall-clock time, thread
+//! scheduling observable at block granularity).
+//!
+//! Three scenarios ship built in:
+//!
+//! * `paper-19x5` — the paper's NUC-testbed shape (§5): 5 planes x 19
+//!   satellites at 550 km, 9 virtual servers, heavy per-satellite memory
+//!   pressure so LRU eviction and gossip stay exercised.
+//! * `starlink-shell` — a mega-constellation shell of 72 planes x 22
+//!   satellites (Starlink's 550 km shell), 25 servers, with recurring
+//!   satellite losses, ISL outages and a ground-station handover.
+//! * `kuiper-shell` — 34 planes x 34 satellites at 630 km (Kuiper's
+//!   first shell), 49 servers, moderate failure pressure.
+
+use crate::constellation::geometry::Geometry;
+use crate::constellation::topology::{SatId, Torus};
+use crate::kvc::eviction::EvictionPolicy;
+use crate::kvc::manager::KvcConfig;
+use crate::kvc::quantize::Quantizer;
+use crate::mapping::{box_width, Strategy};
+use crate::sim::workload::WorkloadConfig;
+
+/// The failure classes the harness can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A satellite disappears: its store is wiped and all traffic to or
+    /// through it fails for the rest of the run.
+    SatelliteLoss,
+    /// One ISL goes dark for a bounded number of epochs.
+    IslOutage,
+    /// The ground host switches to a different ground station; the LOS
+    /// window re-homes and pre-handover chunk locality is lost.
+    GroundHandover,
+}
+
+/// Deterministic, seed-driven failure schedule.  Failures start after the
+/// first epoch (epoch 0 populates the cache cleanly), and are sampled
+/// from the scenario RNG so the same seed yields the same plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailurePlan {
+    /// Satellites lost at the start of each epoch (permanent).
+    pub sat_losses_per_epoch: usize,
+    /// ISL outages injected at the start of each epoch.
+    pub isl_outages_per_epoch: usize,
+    /// Epochs after which an injected ISL outage heals.
+    pub isl_outage_heal_epochs: u64,
+    /// Ground-station handover every `k` epochs (0 = never).
+    pub handover_every_epochs: u64,
+}
+
+impl FailurePlan {
+    /// No failures at all.
+    pub const NONE: FailurePlan = FailurePlan {
+        sat_losses_per_epoch: 0,
+        isl_outages_per_epoch: 0,
+        isl_outage_heal_epochs: 1,
+        handover_every_epochs: 0,
+    };
+
+    pub fn is_none(&self) -> bool {
+        self.sat_losses_per_epoch == 0
+            && self.isl_outages_per_epoch == 0
+            && self.handover_every_epochs == 0
+    }
+}
+
+/// A fully-specified simulation scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Orbital planes (`N`).
+    pub planes: usize,
+    /// Satellites per plane (`M`).
+    pub sats_per_plane: usize,
+    pub altitude_km: f64,
+    pub strategy: Strategy,
+    /// Virtual servers the KVC stripes over.
+    pub n_servers: usize,
+    /// Tokens per hash block.
+    pub block_tokens: usize,
+    /// Chunk payload bytes.
+    pub chunk_size: usize,
+    pub quantizer: Quantizer,
+    pub eviction: EvictionPolicy,
+    /// Per-satellite store budget, bytes (small values create eviction
+    /// pressure).
+    pub sat_budget_bytes: usize,
+    /// f32 values of one block's KV payload (must be a multiple of the
+    /// quantizer group; sized so a block spans >= `n_servers` chunks and
+    /// the stripe really fans out).
+    pub kv_values_per_block: usize,
+    /// Rotation epochs to sweep (with migration between epochs).
+    pub epochs: u64,
+    pub requests_per_epoch: usize,
+    pub workload: WorkloadConfig,
+    pub failures: FailurePlan,
+    pub seed: u64,
+}
+
+impl ScenarioSpec {
+    pub fn torus(&self) -> Torus {
+        Torus::new(self.planes, self.sats_per_plane)
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        Geometry::new(self.altitude_km, self.sats_per_plane, self.planes)
+    }
+
+    /// The ground host starts under the middle of the grid.
+    pub fn initial_center(&self) -> SatId {
+        SatId::new((self.planes / 2) as u16, (self.sats_per_plane / 2) as u16)
+    }
+
+    pub fn kvc_config(&self) -> KvcConfig {
+        KvcConfig {
+            block_tokens: self.block_tokens,
+            chunk_size: self.chunk_size,
+            n_servers: self.n_servers,
+            strategy: self.strategy,
+            quantizer: self.quantizer,
+            eviction: self.eviction,
+            use_radix_index: true,
+            gossip_ttl: 2,
+        }
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.epochs as usize * self.requests_per_epoch
+    }
+
+    /// Sanity-check the spec's internal consistency (box fits the torus,
+    /// quantizer grouping divides the block payload, ...).  Panics with a
+    /// descriptive message on misuse; the built-in specs always pass.
+    pub fn validate(&self) {
+        let w = box_width(self.n_servers);
+        assert!(
+            w <= self.planes && w <= self.sats_per_plane,
+            "{}: {}x{} LOS box does not fit a {}x{} torus",
+            self.name,
+            w,
+            w,
+            self.planes,
+            self.sats_per_plane
+        );
+        if let Quantizer::QuantoInt8 { group } | Quantizer::HqqInt8 { group } = self.quantizer {
+            assert!(
+                self.kv_values_per_block % group == 0,
+                "{}: kv_values_per_block must be a multiple of the group",
+                self.name
+            );
+        }
+        assert!(self.epochs >= 1 && self.requests_per_epoch >= 1, "{}: empty run", self.name);
+    }
+
+    // --- built-in scenarios ---------------------------------------------
+
+    /// The paper's 19x5 NUC-testbed shape (§5) with tight per-satellite
+    /// budgets: exercises migration, LRU eviction pressure and gossip,
+    /// plus light failure injection.
+    pub fn paper_19x5(seed: u64) -> ScenarioSpec {
+        ScenarioSpec {
+            name: "paper-19x5".into(),
+            planes: 5,
+            sats_per_plane: 19,
+            altitude_km: 550.0,
+            strategy: Strategy::RotationHopAware,
+            n_servers: 9,
+            block_tokens: 32,
+            chunk_size: 600,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Gossip,
+            // each block encodes to ~9.2 kB over 16 chunks; the busiest
+            // satellites carry ~30 kB of hot-set chunks, and the one-shot
+            // scan traffic (every 5th request) pushes them over budget so
+            // LRU eviction (and its gossip) stays continuously exercised
+            // while the hot contexts keep hitting
+            sat_budget_bytes: 48 << 10,
+            kv_values_per_block: 8192,
+            epochs: 6,
+            requests_per_epoch: 24,
+            workload: WorkloadConfig {
+                n_contexts: 4,
+                context_chars: 192,
+                n_questions: 6,
+                scan_every: 5,
+                seed,
+            },
+            failures: FailurePlan {
+                sat_losses_per_epoch: 1,
+                isl_outages_per_epoch: 1,
+                isl_outage_heal_epochs: 2,
+                handover_every_epochs: 0,
+            },
+            seed,
+        }
+    }
+
+    /// A Starlink-like mega-constellation shell: 72 planes x 22 sats at
+    /// 550 km (1584 satellites), 25 servers, with satellite losses, ISL
+    /// outages and a mid-run ground-station handover.
+    pub fn starlink_shell(seed: u64) -> ScenarioSpec {
+        ScenarioSpec {
+            name: "starlink-shell".into(),
+            planes: 72,
+            sats_per_plane: 22,
+            altitude_km: 550.0,
+            strategy: Strategy::RotationHopAware,
+            n_servers: 25,
+            block_tokens: 32,
+            chunk_size: 600,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Lazy,
+            // busiest satellites hold ~43 kB of hot chunks; scan traffic
+            // (every 6th request) overflows the 64 kB budget -> eviction
+            sat_budget_bytes: 64 << 10,
+            // 16384 f32 -> ~18.4 kB quantized -> 31 chunks > 25 servers
+            kv_values_per_block: 16384,
+            epochs: 5,
+            requests_per_epoch: 30,
+            workload: WorkloadConfig {
+                n_contexts: 5,
+                context_chars: 224,
+                n_questions: 8,
+                scan_every: 6,
+                seed,
+            },
+            failures: FailurePlan {
+                sat_losses_per_epoch: 2,
+                isl_outages_per_epoch: 2,
+                isl_outage_heal_epochs: 2,
+                handover_every_epochs: 3,
+            },
+            seed,
+        }
+    }
+
+    /// A Kuiper-like shell: 34 planes x 34 sats at 630 km (1156
+    /// satellites), 49 servers, moderate failure pressure.
+    pub fn kuiper_shell(seed: u64) -> ScenarioSpec {
+        ScenarioSpec {
+            name: "kuiper-shell".into(),
+            planes: 34,
+            sats_per_plane: 34,
+            altitude_km: 630.0,
+            strategy: Strategy::RotationHopAware,
+            n_servers: 49,
+            block_tokens: 32,
+            chunk_size: 360,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Lazy,
+            // busiest satellites hold ~21 kB of hot chunks; scan traffic
+            // (every 6th request) overflows the 32 kB budget -> eviction
+            sat_budget_bytes: 32 << 10,
+            // 16384 f32 -> ~18.4 kB quantized -> 52 chunks over the
+            // 49-way stripe
+            kv_values_per_block: 16384,
+            epochs: 4,
+            requests_per_epoch: 24,
+            workload: WorkloadConfig {
+                n_contexts: 4,
+                context_chars: 224,
+                n_questions: 6,
+                scan_every: 6,
+                seed,
+            },
+            failures: FailurePlan {
+                sat_losses_per_epoch: 1,
+                isl_outages_per_epoch: 2,
+                isl_outage_heal_epochs: 2,
+                handover_every_epochs: 0,
+            },
+            seed,
+        }
+    }
+
+    /// All built-in scenarios, paper shape first.
+    pub fn builtin(seed: u64) -> Vec<ScenarioSpec> {
+        vec![
+            ScenarioSpec::paper_19x5(seed),
+            ScenarioSpec::starlink_shell(seed),
+            ScenarioSpec::kuiper_shell(seed),
+        ]
+    }
+
+    /// Look up a built-in scenario by name.
+    pub fn by_name(name: &str, seed: u64) -> Option<ScenarioSpec> {
+        match name {
+            "paper-19x5" => Some(ScenarioSpec::paper_19x5(seed)),
+            "starlink-shell" => Some(ScenarioSpec::starlink_shell(seed)),
+            "kuiper-shell" => Some(ScenarioSpec::kuiper_shell(seed)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_validate() {
+        let specs = ScenarioSpec::builtin(7);
+        assert_eq!(specs.len(), 3);
+        for s in &specs {
+            s.validate();
+            assert!(s.torus().len() >= s.n_servers);
+            assert!(s.total_requests() > 0);
+        }
+    }
+
+    #[test]
+    fn starlink_is_a_mega_constellation() {
+        let s = ScenarioSpec::starlink_shell(1);
+        assert!(s.planes >= 70, "acceptance: >= 70-plane shell");
+        assert!(s.torus().len() > 1500);
+        assert!(!s.failures.is_none(), "mega scenario must inject failures");
+    }
+
+    #[test]
+    fn by_name_roundtrips() {
+        for s in ScenarioSpec::builtin(3) {
+            let again = ScenarioSpec::by_name(&s.name, 3).unwrap();
+            assert_eq!(again.name, s.name);
+            assert_eq!(again.planes, s.planes);
+        }
+        assert!(ScenarioSpec::by_name("no-such-shell", 3).is_none());
+    }
+
+    #[test]
+    fn paper_spec_matches_testbed_shape() {
+        let s = ScenarioSpec::paper_19x5(1);
+        assert_eq!((s.planes, s.sats_per_plane), (5, 19));
+        assert_eq!(s.initial_center(), SatId::new(2, 9));
+        assert_eq!(s.geometry().planes, 5);
+    }
+
+    #[test]
+    fn stripes_fan_out_across_all_servers() {
+        // each built-in spec must produce at least n_servers chunks per
+        // block, so a single block exercises the whole stripe
+        for s in ScenarioSpec::builtin(1) {
+            let payload = s.quantizer.encoded_len(s.kv_values_per_block);
+            let chunks = payload.div_ceil(s.chunk_size);
+            assert!(
+                chunks >= s.n_servers,
+                "{}: {} chunks < {} servers",
+                s.name,
+                chunks,
+                s.n_servers
+            );
+        }
+    }
+}

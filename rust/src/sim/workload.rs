@@ -13,12 +13,17 @@ pub struct WorkloadConfig {
     pub context_chars: usize,
     /// Distinct question suffixes per context.
     pub n_questions: usize,
+    /// Every `k`-th request uses a fresh one-shot context instead of a
+    /// shared one (0 = never): cold "scan" traffic that pollutes the
+    /// cache and keeps LRU eviction pressure realistic without thrashing
+    /// the hot set.
+    pub scan_every: usize,
     pub seed: u64,
 }
 
 impl Default for WorkloadConfig {
     fn default() -> Self {
-        Self { n_contexts: 4, context_chars: 128, n_questions: 8, seed: 7 }
+        Self { n_contexts: 4, context_chars: 128, n_questions: 8, scan_every: 0, seed: 7 }
     }
 }
 
@@ -49,7 +54,9 @@ pub struct WorkloadItem {
 
 /// Generate `n` requests: each picks a context (round-robin) and appends
 /// one of its question suffixes, so requests sharing a context share a
-/// multi-block prefix — the paper's repeated-context regime.
+/// multi-block prefix — the paper's repeated-context regime.  With
+/// `scan_every > 0`, every `k`-th request instead carries a fresh
+/// one-shot context (cold traffic that is never revisited).
 pub fn generate(cfg: &WorkloadConfig, n: usize) -> Vec<WorkloadItem> {
     let mut rng = XorShift64::new(cfg.seed);
     let contexts: Vec<String> =
@@ -59,8 +66,16 @@ pub fn generate(cfg: &WorkloadConfig, n: usize) -> Vec<WorkloadItem> {
         .collect();
     (0..n)
         .map(|i| {
-            let context_id = i % cfg.n_contexts;
             let q = &questions[rng.next_range(questions.len())];
+            if cfg.scan_every > 0 && (i + 1) % cfg.scan_every == 0 {
+                // one-shot scan: unique context id, never repeated
+                let text = synth_text(&mut rng, cfg.context_chars);
+                return WorkloadItem {
+                    prompt: format!("{text}{q}"),
+                    context_id: cfg.n_contexts + i,
+                };
+            }
+            let context_id = i % cfg.n_contexts;
             WorkloadItem { prompt: format!("{}{}", contexts[context_id], q), context_id }
         })
         .collect()
@@ -108,5 +123,32 @@ mod tests {
         let mut rng = XorShift64::new(1);
         let t = synth_text(&mut rng, 100);
         assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn scan_requests_are_one_shot() {
+        let cfg = WorkloadConfig { scan_every: 3, ..Default::default() };
+        let items = generate(&cfg, 12);
+        let scans: Vec<_> = items.iter().filter(|i| i.context_id >= cfg.n_contexts).collect();
+        assert_eq!(scans.len(), 4, "every 3rd request is a scan");
+        // scan contexts are unique (no shared prefixes between scans)
+        let prefix = cfg.context_chars;
+        for (a, i) in scans.iter().enumerate() {
+            for j in &scans[a + 1..] {
+                assert_ne!(&i.prompt[..prefix], &j.prompt[..prefix]);
+            }
+        }
+        // hot requests still share their context prefixes
+        let hot: Vec<_> = items.iter().filter(|i| i.context_id == 0).collect();
+        assert!(hot.len() >= 2);
+        for h in &hot {
+            assert_eq!(&h.prompt[..prefix], &hot[0].prompt[..prefix]);
+        }
+        // scans are deterministic per seed too
+        let again = generate(&cfg, 12);
+        assert_eq!(
+            items.iter().map(|x| &x.prompt).collect::<Vec<_>>(),
+            again.iter().map(|x| &x.prompt).collect::<Vec<_>>()
+        );
     }
 }

@@ -100,6 +100,91 @@ fn prop_migration_closed_form_equals_chained_plans() {
 }
 
 #[test]
+fn prop_route_length_matches_hops_symmetric_under_wraparound() {
+    // torus routing: the greedy route always realizes exactly `hops`
+    // steps, hop distance is symmetric, and both are invariant under
+    // wrap-around translation of the endpoints (full-axis translations
+    // are the identity).
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 100_000);
+        let t = rand_torus(&mut rng);
+        let a = rand_sat(&mut rng, &t);
+        let b = rand_sat(&mut rng, &t);
+        assert_eq!(t.route(a, b).len(), t.hops(a, b), "seed {seed}: {a} -> {b}");
+        assert_eq!(t.hops(a, b), t.hops(b, a), "seed {seed}: symmetry");
+        assert_eq!(t.route(b, a).len(), t.route(a, b).len(), "seed {seed}");
+        // a full-axis translation wraps to the identity
+        assert_eq!(t.offset(a, t.planes as i32, t.sats_per_plane as i32), a, "seed {seed}");
+        // arbitrary translations (including wrapping ones) preserve the
+        // metric and the realized route length
+        let dp = rng.next_range(2 * t.planes) as i32 - t.planes as i32;
+        let ds = rng.next_range(2 * t.sats_per_plane) as i32 - t.sats_per_plane as i32;
+        let (ta, tb) = (t.offset(a, dp, ds), t.offset(b, dp, ds));
+        assert_eq!(t.hops(ta, tb), t.hops(a, b), "seed {seed}: translation invariance");
+        assert_eq!(t.route(ta, tb).len(), t.route(a, b).len(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_chained_hash_prefix_stability_across_quantizers() {
+    // two prompts sharing a block-aligned token prefix share exactly that
+    // prefix of chained hashes; and for every quantizer variant, a shared
+    // value prefix (group-aligned) yields an identical encoded prefix, so
+    // the stored chunk stream of a shared prefix is identical no matter
+    // which codec the deployment picked.
+    for seed in 0..100 {
+        let mut rng = XorShift64::new(seed + 110_000);
+        let bs = 1 + rng.next_range(12);
+        let shared_blocks = 1 + rng.next_range(6);
+        let tail_blocks = 1 + rng.next_range(4);
+        let shared: Vec<i32> =
+            (0..shared_blocks * bs).map(|_| rng.next_range(1 << 16) as i32).collect();
+        let mut a = shared.clone();
+        let mut b = shared.clone();
+        a.extend((0..tail_blocks * bs).map(|_| rng.next_range(1 << 16) as i32));
+        b.extend((0..tail_blocks * bs).map(|_| rng.next_range(1 << 16) as i32));
+        b[shared.len()] = a[shared.len()].wrapping_add(1); // tails diverge at once
+        let ha = block_hashes(&a, bs);
+        let hb = block_hashes(&b, bs);
+        assert_eq!(
+            &ha[..shared_blocks],
+            &hb[..shared_blocks],
+            "seed {seed}: shared token prefix must share hash prefix"
+        );
+        for i in shared_blocks..ha.len() {
+            assert_ne!(ha[i], hb[i], "seed {seed} block {i}: diverged chains must differ");
+        }
+
+        let group = 32usize;
+        let n_groups = 2 + rng.next_range(6);
+        let vals: Vec<f32> =
+            (0..group * n_groups).map(|_| (rng.next_f64() as f32 - 0.5) * 3.0).collect();
+        let prefix_groups = 1 + rng.next_range(n_groups);
+        for q in [
+            Quantizer::F32,
+            Quantizer::QuantoInt8 { group },
+            Quantizer::HqqInt8 { group },
+        ] {
+            let bytes_per_group = match q {
+                Quantizer::F32 => 4 * group,
+                Quantizer::QuantoInt8 { .. } => 4 + group,
+                Quantizer::HqqInt8 { .. } => 8 + group,
+            };
+            let full = q.encode(&vals);
+            assert_eq!(full, q.encode(&vals), "seed {seed} {}: deterministic", q.name());
+            let prefix = q.encode(&vals[..prefix_groups * group]);
+            assert_eq!(prefix.len(), prefix_groups * bytes_per_group, "seed {seed}");
+            assert_eq!(
+                &full[..prefix.len()],
+                &prefix[..],
+                "seed {seed} {}: shared values must share encoded prefix",
+                q.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_block_hash_prefix_property() {
     // two token streams agree on their chained hashes exactly as far as
     // their common block-aligned prefix

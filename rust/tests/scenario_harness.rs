@@ -1,0 +1,109 @@
+//! Integration: the deterministic scenario harness — golden determinism
+//! of the metrics JSON, mega-constellation completion under failure
+//! injection, and the spec registry.
+
+use skymemory::sim::harness::{run_scenario, ScenarioReport};
+use skymemory::sim::scenario::{FailurePlan, ScenarioSpec};
+
+/// Golden property: the same seed must produce byte-identical metrics
+/// JSON for the paper testbed shape, run-to-run in the same process.
+#[test]
+fn paper_19x5_fixed_seed_is_byte_identical() {
+    let spec = ScenarioSpec::paper_19x5(1234);
+    let a: ScenarioReport = run_scenario(&spec);
+    let b: ScenarioReport = run_scenario(&spec);
+    assert_eq!(a, b, "reports must be structurally identical");
+    let (ja, jb) = (a.to_json_string(), b.to_json_string());
+    assert_eq!(ja, jb, "metrics JSON must be byte-identical");
+    // and the run really exercised the machinery
+    assert!(a.requests > 0);
+    assert!(a.migrated_chunks > 0, "rotation must migrate chunks: {a:?}");
+    assert!(a.kvc.blocks_stored > 0);
+    assert!(a.isl_hops > 0);
+}
+
+#[test]
+fn paper_19x5_eviction_pressure_is_real() {
+    // the paper spec's one-shot scan traffic is sized to overflow the
+    // per-satellite budget: LRU eviction must actually occur on the
+    // satellites, while the hot contexts keep hitting
+    let r = run_scenario(&ScenarioSpec::paper_19x5(7));
+    assert!(r.evicted_blocks > 0, "no eviction pressure observed: {r:?}");
+    assert!(r.evicted_chunks >= r.evicted_blocks);
+    assert!(r.block_hit_rate > 0.0, "{r:?}");
+}
+
+/// Acceptance: the >= 70-plane mega-constellation completes with failure
+/// injection enabled and still serves a nonzero hit rate.
+#[test]
+fn starlink_shell_nonzero_hit_rate_under_failures() {
+    let spec = ScenarioSpec::starlink_shell(99);
+    assert!(spec.planes >= 70);
+    assert!(!spec.failures.is_none());
+    let r = run_scenario(&spec);
+    assert!(r.sat_losses > 0, "losses must be injected: {r:?}");
+    assert!(r.isl_outages > 0, "outages must be injected: {r:?}");
+    assert!(r.handovers > 0, "a ground handover must occur: {r:?}");
+    assert!(r.block_hit_rate > 0.0, "cache must survive failures: {r:?}");
+    assert!(r.blocks_hit > 0);
+}
+
+#[test]
+fn starlink_shell_is_deterministic_with_failures() {
+    let spec = ScenarioSpec::starlink_shell(2024);
+    let a = run_scenario(&spec).to_json_string();
+    let b = run_scenario(&spec).to_json_string();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn kuiper_shell_completes_and_reports() {
+    let r = run_scenario(&ScenarioSpec::kuiper_shell(5));
+    assert_eq!(r.planes, 34);
+    assert_eq!(r.sats_per_plane, 34);
+    assert!(r.requests > 0);
+    assert!(r.block_hit_rate > 0.0, "{r:?}");
+    assert!(r.analytic_worst_case_s > 0.0);
+}
+
+#[test]
+fn failure_plan_actually_changes_the_run() {
+    // same workload and seed, with and without the failure plan: the
+    // failure-free run must see no injected damage, the failure run must
+    let seed = 31;
+    let with = run_scenario(&ScenarioSpec::paper_19x5(seed));
+    let mut spec = ScenarioSpec::paper_19x5(seed);
+    spec.failures = FailurePlan::NONE;
+    let without = run_scenario(&spec);
+    assert_eq!(with.requests, without.requests, "same workload either way");
+    assert_eq!(without.sat_losses + without.isl_outages + without.handovers, 0);
+    assert_eq!(without.blackholed_requests, 0);
+    assert_eq!(without.failed_writes, 0);
+    assert!(with.sat_losses > 0);
+    assert!(without.block_hit_rate > 0.3, "clean run must hit well: {without:?}");
+}
+
+#[test]
+fn seeds_change_the_numbers_but_not_the_shape() {
+    let a = run_scenario(&ScenarioSpec::paper_19x5(1));
+    let b = run_scenario(&ScenarioSpec::paper_19x5(2));
+    assert_ne!(
+        a.to_json_string(),
+        b.to_json_string(),
+        "different seeds must explore different runs"
+    );
+    assert_eq!(a.requests, b.requests);
+    assert_eq!((a.planes, a.sats_per_plane), (b.planes, b.sats_per_plane));
+}
+
+#[test]
+fn registry_covers_all_builtins() {
+    let specs = ScenarioSpec::builtin(8);
+    assert_eq!(specs.len(), 3);
+    for spec in &specs {
+        spec.validate();
+        let found = ScenarioSpec::by_name(&spec.name, 8).expect("by_name finds builtin");
+        assert_eq!(found.planes, spec.planes);
+    }
+    assert!(ScenarioSpec::by_name("not-a-scenario", 8).is_none());
+}

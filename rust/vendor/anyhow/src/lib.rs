@@ -1,0 +1,209 @@
+//! A minimal, API-compatible subset of the `anyhow` crate, vendored for
+//! the offline build environment (no crates.io access).  Covers exactly
+//! what this repository uses: [`Error`], [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension trait
+//! with `context` / `with_context` on both `Result` and `Option`.
+//!
+//! Representation: an error is a chain of human-readable messages, newest
+//! context first.  `Display` prints the newest message (matching anyhow);
+//! `Debug` prints the full chain with a `Caused by:` section.
+
+use std::fmt;
+
+/// A dynamic error: a message plus the chain of underlying causes.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently attached) message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The full cause chain, outermost first.
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, colon-separated (like anyhow)
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket conversion every `?` site relies on.  Mirrors anyhow: legal
+// only because `Error` itself does NOT implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(|| ...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file/anywhere")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn blanket_from_and_context() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_message(), "reading config");
+        assert!(e.chain_messages().len() >= 2);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is not allowed");
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative input -2");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn result_with_anyhow_error_recontexts() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+}
