@@ -1,14 +1,15 @@
 //! Run every built-in scenario — the paper's 19x5 testbed, the
-//! Starlink-like 72x22 mega-shell and the Kuiper-like 34x34 shell — twice
-//! each, verify the metrics JSON is byte-identical across the two runs
-//! (the determinism contract), and print the reports.
+//! Starlink-like 72x22 mega-shell, the Kuiper-like 34x34 shell, and the
+//! federated dual-shell (Starlink + Kuiper) run — twice each, verify the
+//! metrics JSON is byte-identical across the two runs (the determinism
+//! contract), and print the reports.
 //!
 //! ```text
 //! cargo run --release --example scenario_sweep
 //! ```
 
-use skymemory::sim::harness::run_scenario;
-use skymemory::sim::scenario::ScenarioSpec;
+use skymemory::sim::harness::{run_federated_scenario, run_scenario};
+use skymemory::sim::scenario::{FederatedScenarioSpec, ScenarioSpec};
 
 fn main() {
     let seed = match std::env::args().nth(1).and_then(|a| a.parse().ok()) {
@@ -36,6 +37,26 @@ fn main() {
         );
         assert!(deterministic, "{}: metrics JSON differed between runs", spec.name);
     }
+    // the federated dual-shell scenario holds the same contract
+    let fed = FederatedScenarioSpec::federated_dual_shell(seed);
+    let t0 = std::time::Instant::now();
+    let first = run_federated_scenario(&fed).to_json_string();
+    let second = run_federated_scenario(&fed).to_json_string();
+    let deterministic = first == second;
+    all_deterministic &= deterministic;
+    println!("{first}");
+    println!(
+        "# {}: {} shells ({} sats total), {} epochs, {} requests; \
+         deterministic across two runs: {} ({:.2?} for both runs)",
+        fed.name,
+        fed.shells.len(),
+        fed.shells.iter().map(|s| s.torus().len()).sum::<usize>(),
+        fed.epochs,
+        fed.total_requests(),
+        deterministic,
+        t0.elapsed()
+    );
+    assert!(deterministic, "{}: metrics JSON differed between runs", fed.name);
     assert!(all_deterministic);
     println!("# all scenarios deterministic: same seed -> identical metrics JSON");
 }

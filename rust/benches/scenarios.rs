@@ -4,8 +4,8 @@
 //! micro-bench harness on the small paper shape to expose run-to-run
 //! variance of the hot loop.
 
-use skymemory::sim::harness::run_scenario;
-use skymemory::sim::scenario::ScenarioSpec;
+use skymemory::sim::harness::{run_federated_scenario, run_scenario};
+use skymemory::sim::scenario::{FederatedScenarioSpec, ScenarioSpec};
 use skymemory::util::bench::Bencher;
 use std::time::{Duration, Instant};
 
@@ -27,6 +27,36 @@ fn main() {
             report.blackholed_requests,
             report.isl_bytes,
             wall
+        );
+    }
+
+    println!("\n=== federated dual-shell end-to-end (seed 42) ===");
+    let fed = FederatedScenarioSpec::federated_dual_shell(42);
+    let t0 = Instant::now();
+    let report = run_federated_scenario(&fed);
+    let wall = t0.elapsed();
+    println!(
+        "{:<20} {:>5} sats  {:>2} epochs  {:>4} reqs  hit {:>6.1}%  \
+         handovers {:>4}  inter-shell {:>8} B  spill {:>4}  wall {:?}",
+        report.name,
+        fed.shells.iter().map(|s| s.torus().len()).sum::<usize>(),
+        report.epochs,
+        report.requests,
+        100.0 * report.block_hit_rate,
+        report.handovers,
+        report.inter_shell_bytes,
+        report.spillovers,
+        wall
+    );
+    for sh in &report.shells {
+        println!(
+            "  {:<14} {:>5} sats  stored {:>5}  hit {:>6.1}%  evicted {:>5}  failed sats {:>4}",
+            sh.name,
+            sh.planes * sh.sats_per_plane,
+            sh.blocks_stored,
+            100.0 * sh.hit_rate,
+            sh.evicted_chunks,
+            sh.failed_satellites
         );
     }
 

@@ -1,0 +1,682 @@
+//! The federated KVC manager: §3.8 Get/Set fan-out over shell-qualified
+//! layouts.
+//!
+//! Every block is homed on exactly one shell, chosen by the
+//! [`PlacementPolicy`] at Set time (cheapest shell first, spillover on
+//! saturation or failure).  Within its home shell a block uses the
+//! standard chunk-to-server striping over the shell's own
+//! [`crate::mapping::Strategy`] layout — chunk `i` goes to
+//! `FedSatId { shell, layout[i % n] }` — so the single-shell rotation
+//! arithmetic (write-epoch shift, §3.4 migration) applies unchanged per
+//! shell.
+//!
+//! Unlike [`crate::kvc::manager::KvcManager`], chunk I/O here is issued
+//! sequentially rather than over a `MAX_FANOUT` thread pool: the
+//! federated harness accounts link latency instead of sleeping, so
+//! per-chunk ordering is the simplest way to keep whole runs strictly
+//! deterministic.  Parallel fan-out parity is a roadmap item and would
+//! matter on a sleeping/real transport, where sequential Gets pay
+//! `n_chunks` round trips instead of `n_chunks / MAX_FANOUT`.
+//!
+//! Handover: when a shell's layout box degrades below the placement
+//! threshold, [`FederatedKvcManager::evacuate_shell`] drains the box's
+//! surviving satellites to the same relative cells of a healthy shell over
+//! the inter-shell links and re-homes the affected blocks (proactive
+//! handover; cell offsets are preserved, so the rotation arithmetic keeps
+//! working on the new shell).  Blocks whose chunks were already lost heal
+//! reactively: the broken fetch drops them from the index, and the next
+//! Set re-places them on whichever shell placement now prefers.
+
+use crate::constellation::topology::SatId;
+use crate::federation::placement::{cheapest_index, shell_cost, PlacementPolicy, ShellCandidate};
+use crate::federation::transport::FederatedTransport;
+use crate::federation::{FedSatId, ShellId};
+use crate::kvc::block::BlockHash;
+use crate::kvc::chunk::{chunk_count, split_chunks, ChunkKey};
+use crate::kvc::manager::{encode_chunk_header, KvcConfig, CHUNK_HEADER_LEN};
+use crate::kvc::quantize::Quantizer;
+use crate::kvc::radix::BlockMeta;
+use crate::mapping::box_width;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Where a block lives and how to reassemble it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FedBlockMeta {
+    pub shell: ShellId,
+    pub meta: BlockMeta,
+}
+
+/// Per-shell manager counters.
+#[derive(Debug, Default)]
+pub struct ShellCounters {
+    pub blocks_stored: AtomicU64,
+    pub fetch_attempts: AtomicU64,
+    pub blocks_hit: AtomicU64,
+    /// Encoded payload bytes of the blocks currently homed here by
+    /// placement or evacuation (headers excluded; moved between shells on
+    /// evacuation, not debited on LRU eviction).
+    pub placed_bytes: AtomicU64,
+}
+
+/// Federation-wide manager counters.
+#[derive(Debug, Default)]
+pub struct FedStats {
+    /// Blocks placed off the cheapest shell (saturation or failure).
+    pub spillovers: AtomicU64,
+    /// Blocks re-homed by proactive cross-shell evacuation.
+    pub proactive_handover_blocks: AtomicU64,
+    /// Blocks re-homed reactively: broken on one shell, re-stored on
+    /// another.
+    pub reactive_rehomed_blocks: AtomicU64,
+    /// Fetches that found a chunk missing (prefix truncation).
+    pub broken_blocks: AtomicU64,
+}
+
+/// Summary of one shell evacuation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvacSummary {
+    pub chunks_moved: u32,
+    pub bytes_moved: u64,
+    pub blocks_rehomed: u64,
+}
+
+/// The shell-aware KVC manager.
+pub struct FederatedKvcManager {
+    pub config: KvcConfig,
+    pub placement: PlacementPolicy,
+    transport: Arc<FederatedTransport>,
+    /// Block -> home shell + reassembly metadata.  Chained hashes commit
+    /// to the whole prefix, so one entry per block hash suffices (no radix
+    /// walk needed; prefix length is a `take_while` over the hash list).
+    /// BTreeMap: deterministic iteration for evacuation order.
+    index: Mutex<BTreeMap<BlockHash, FedBlockMeta>>,
+    /// Last known home of blocks dropped as broken, to count reactive
+    /// re-homing on their next Set.
+    tombstones: Mutex<BTreeMap<BlockHash, ShellId>>,
+    shell_counters: Vec<ShellCounters>,
+    /// Static per-shell placement cost (pure function of geometry and the
+    /// server count), computed once at construction.
+    shell_costs: Vec<f64>,
+    pub stats: FedStats,
+}
+
+impl FederatedKvcManager {
+    pub fn new(
+        config: KvcConfig,
+        transport: Arc<FederatedTransport>,
+        placement: PlacementPolicy,
+    ) -> Self {
+        assert!(config.n_servers >= 1);
+        let w = box_width(config.n_servers);
+        for link in transport.links() {
+            let t = &link.shell.torus;
+            assert!(
+                w <= t.planes && w <= t.sats_per_plane,
+                "{}: {w}x{w} layout box does not fit a {}x{} torus",
+                link.shell.name,
+                t.planes,
+                t.sats_per_plane
+            );
+        }
+        let shell_counters = (0..transport.n_shells()).map(|_| ShellCounters::default()).collect();
+        let shell_costs = transport
+            .links()
+            .iter()
+            .map(|l| shell_cost(&l.shell.geometry, config.n_servers))
+            .collect();
+        Self {
+            config,
+            placement,
+            transport,
+            index: Mutex::new(BTreeMap::new()),
+            tombstones: Mutex::new(BTreeMap::new()),
+            shell_counters,
+            shell_costs,
+            stats: FedStats::default(),
+        }
+    }
+
+    pub fn transport(&self) -> &Arc<FederatedTransport> {
+        &self.transport
+    }
+
+    pub fn shell_counters(&self) -> &[ShellCounters] {
+        &self.shell_counters
+    }
+
+    /// Blocks currently indexed (federation-wide).
+    pub fn indexed_blocks(&self) -> usize {
+        self.index.lock().unwrap().len()
+    }
+
+    /// Current home shell of a block, if indexed.
+    pub fn home_of(&self, block: &BlockHash) -> Option<ShellId> {
+        self.index.lock().unwrap().get(block).map(|e| e.shell)
+    }
+
+    /// Live fraction of `shell`'s current layout box (the placement
+    /// eligibility signal).
+    pub fn box_live_fraction(&self, shell: ShellId) -> f64 {
+        let link = self.transport.link(shell);
+        let torus = link.shell.torus;
+        let center = self.transport.closest(shell);
+        let half = (box_width(self.config.n_servers) as i32 - 1) / 2;
+        let mut live = 0usize;
+        let mut total = 0usize;
+        for dp in -half..=half {
+            for ds in -half..=half {
+                total += 1;
+                if !link.faults.is_satellite_failed(torus.offset(center, dp, ds)) {
+                    live += 1;
+                }
+            }
+        }
+        live as f64 / total as f64
+    }
+
+    fn candidates(&self) -> Vec<ShellCandidate> {
+        (0..self.transport.n_shells())
+            .map(|i| ShellCandidate {
+                shell: i as ShellId,
+                cost_s: self.shell_costs[i],
+                live_fraction: self.box_live_fraction(i as ShellId),
+                placed_bytes: self.shell_counters[i].placed_bytes.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// The federation's static primary shell (cheapest by cost alone —
+    /// answered from the cached costs, no torus scans).
+    pub fn primary_shell(&self) -> ShellId {
+        cheapest_index(&self.shell_costs).expect("federation has shells") as ShellId
+    }
+
+    /// The cheapest currently-live shell other than `exclude`, if any.
+    pub fn cheapest_live_shell_excluding(&self, exclude: ShellId) -> Option<ShellId> {
+        let mut best: Option<(ShellId, f64)> = None;
+        for c in self.candidates() {
+            if c.shell == exclude || c.live_fraction < self.placement.min_live_fraction {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, cost)) => c.cost_s < cost,
+            };
+            if better {
+                best = Some((c.shell, c.cost_s));
+            }
+        }
+        best.map(|(s, _)| s)
+    }
+
+    // ------------------------------------------------------------ SET ---
+
+    /// Store one block's KV values on the shell placement chooses; no-op
+    /// if the block is already indexed.  Returns the home shell.
+    pub fn put_block(
+        &self,
+        hashes: &[BlockHash],
+        block_idx: usize,
+        kv_values: &[f32],
+        now_epoch: u64,
+    ) -> Result<ShellId> {
+        let block = hashes[block_idx];
+        if let Some(e) = self.index.lock().unwrap().get(&block) {
+            return Ok(e.shell);
+        }
+        let cands = self.candidates();
+        let chosen = self.placement.choose(&cands).expect("federation has shells");
+        let primary = self.placement.primary(&cands).expect("federation has shells");
+        let shell = cands[chosen].shell;
+        let payload = self.config.quantizer.encode(kv_values);
+        let meta = self.store_payload(shell, block, &payload, now_epoch)?;
+        if chosen != primary {
+            self.stats.spillovers.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(old_home) = self.tombstones.lock().unwrap().remove(&block) {
+            if old_home != shell {
+                self.stats.reactive_rehomed_blocks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.index.lock().unwrap().insert(block, FedBlockMeta { shell, meta });
+        Ok(shell)
+    }
+
+    /// Stripe an encoded payload over `shell`'s current layout.
+    fn store_payload(
+        &self,
+        shell: ShellId,
+        block: BlockHash,
+        payload: &[u8],
+        now_epoch: u64,
+    ) -> Result<BlockMeta> {
+        let n_chunks = chunk_count(payload.len(), self.config.chunk_size) as u32;
+        let header = encode_chunk_header(
+            self.config.quantizer.id(),
+            n_chunks,
+            payload.len() as u32,
+            now_epoch,
+        );
+        let torus = self.transport.shell(shell).torus;
+        let center = self.transport.closest(shell);
+        let layout = self.config.strategy.initial_layout(&torus, center, self.config.n_servers);
+        for (i, chunk) in split_chunks(payload, self.config.chunk_size).iter().enumerate() {
+            let dest = FedSatId::new(shell, layout[i % self.config.n_servers]);
+            let mut data = Vec::with_capacity(CHUNK_HEADER_LEN + chunk.len());
+            data.extend_from_slice(&header);
+            data.extend_from_slice(chunk);
+            self.transport.set_chunk(dest, ChunkKey::new(block, i as u32), data)?;
+        }
+        let counters = &self.shell_counters[shell as usize];
+        counters.blocks_stored.fetch_add(1, Ordering::Relaxed);
+        counters.placed_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        Ok(BlockMeta {
+            num_chunks: n_chunks,
+            kvc_len: payload.len() as u32,
+            write_epoch: now_epoch,
+            quantizer_id: self.config.quantizer.id(),
+        })
+    }
+
+    // ------------------------------------------------------------ GET ---
+
+    /// Longest cached prefix (in blocks) of `hashes`: chained hashes make
+    /// this a plain `take_while` over the federation index.
+    pub fn lookup(&self, hashes: &[BlockHash]) -> usize {
+        let index = self.index.lock().unwrap();
+        hashes.iter().take_while(|h| index.contains_key(h)).count()
+    }
+
+    /// The shell-qualified layout of a block's servers at `now_epoch`.
+    fn layout_for(&self, shell: ShellId, write_epoch: u64, now_epoch: u64) -> Vec<SatId> {
+        let torus = self.transport.shell(shell).torus;
+        let delta = (now_epoch - write_epoch) as i32;
+        // the centre slides one slot west per epoch; the write-time centre
+        // was `delta` slots east of the current one
+        let write_center = torus.offset(self.transport.closest(shell), 0, delta);
+        self.config.strategy.layout_at(
+            &torus,
+            write_center,
+            self.config.n_servers,
+            now_epoch - write_epoch,
+        )
+    }
+
+    fn fetch_payload(
+        &self,
+        shell: ShellId,
+        block: BlockHash,
+        meta: &BlockMeta,
+        now_epoch: u64,
+    ) -> Option<Vec<u8>> {
+        let layout = self.layout_for(shell, meta.write_epoch, now_epoch);
+        let mut payload = Vec::with_capacity(meta.kvc_len as usize);
+        for i in 0..meta.num_chunks as usize {
+            let dest = FedSatId::new(shell, layout[i % self.config.n_servers]);
+            match self.transport.get_chunk(dest, ChunkKey::new(block, i as u32)) {
+                Ok(Some(data)) if data.len() > CHUNK_HEADER_LEN => {
+                    payload.extend_from_slice(&data[CHUNK_HEADER_LEN..])
+                }
+                _ => return None,
+            }
+        }
+        if payload.len() == meta.kvc_len as usize {
+            Some(payload)
+        } else {
+            None
+        }
+    }
+
+    /// Fetch one block's KV values from its home shell; `None` if the
+    /// block is unknown or broken (broken blocks are dropped and lazily
+    /// evicted, and their home is remembered for re-homing stats).
+    pub fn fetch_block(
+        &self,
+        hashes: &[BlockHash],
+        block_idx: usize,
+        now_epoch: u64,
+    ) -> Result<Option<Vec<f32>>> {
+        let block = hashes[block_idx];
+        let Some(entry) = self.index.lock().unwrap().get(&block).copied() else {
+            return Ok(None);
+        };
+        let counters = &self.shell_counters[entry.shell as usize];
+        counters.fetch_attempts.fetch_add(1, Ordering::Relaxed);
+        match self.fetch_payload(entry.shell, block, &entry.meta, now_epoch) {
+            Some(payload) => {
+                counters.blocks_hit.fetch_add(1, Ordering::Relaxed);
+                let group = match self.config.quantizer {
+                    Quantizer::QuantoInt8 { group } | Quantizer::HqqInt8 { group } => group,
+                    Quantizer::F32 => 32,
+                };
+                let quantizer = Quantizer::from_id(entry.meta.quantizer_id, group).ok_or_else(
+                    || anyhow::anyhow!("unknown quantizer id {}", entry.meta.quantizer_id),
+                )?;
+                Ok(Some(quantizer.decode(&payload)?))
+            }
+            None => {
+                self.drop_broken(block, &entry, now_epoch);
+                Ok(None)
+            }
+        }
+    }
+
+    /// §3.9 lazy eviction, federated: drop the broken block from the
+    /// index, remember its home for re-homing stats, and tell the
+    /// surviving replicas on its home shell to purge.
+    fn drop_broken(&self, block: BlockHash, entry: &FedBlockMeta, now_epoch: u64) {
+        self.stats.broken_blocks.fetch_add(1, Ordering::Relaxed);
+        self.index.lock().unwrap().remove(&block);
+        self.tombstones.lock().unwrap().insert(block, entry.shell);
+        let layout = self.layout_for(entry.shell, entry.meta.write_epoch, now_epoch);
+        let servers = self.config.n_servers.min(entry.meta.num_chunks as usize);
+        for sat in layout.iter().take(servers) {
+            let _ = self.transport.evict_block(FedSatId::new(entry.shell, *sat), block);
+        }
+    }
+
+    /// Fetch blocks `0..blocks` in order; returns how many were served
+    /// before the prefix truncated.
+    pub fn fetch_prefix(
+        &self,
+        hashes: &[BlockHash],
+        blocks: usize,
+        now_epoch: u64,
+    ) -> Result<usize> {
+        let mut got = 0;
+        for b in 0..blocks {
+            match self.fetch_block(hashes, b, now_epoch)? {
+                Some(_) => got += 1,
+                None => break,
+            }
+        }
+        Ok(got)
+    }
+
+    // ------------------------------------------------------ ROTATION ----
+
+    /// §3.4 intra-shell rotation migration for one shell: the exiting east
+    /// column hands its chunks to the entering west column, per plane
+    /// (the same handoff pairs the single-shell manager issues).
+    pub fn migration_requests(&self, shell: ShellId) -> Vec<(SatId, SatId)> {
+        if !self.config.strategy.migrates() {
+            return vec![];
+        }
+        let torus = self.transport.shell(shell).torus;
+        crate::mapping::migration::rotation_handoff_pairs(
+            &torus,
+            self.transport.closest(shell),
+            self.config.n_servers,
+        )
+    }
+
+    // ------------------------------------------------------ HANDOVER ----
+
+    /// Proactive inter-shell handover: drain every cell of `from`'s
+    /// current layout box to the same relative cell of `to`'s box (over
+    /// the inter-shell links) and re-home `from`'s blocks onto `to`.
+    /// Because cell offsets relative to the (lockstep-rotating) centres
+    /// are preserved, the write-epoch layout arithmetic keeps resolving
+    /// every surviving chunk on the new shell.
+    pub fn evacuate_shell(&self, from: ShellId, to: ShellId, _now_epoch: u64) -> EvacSummary {
+        assert_ne!(from, to, "evacuation needs a distinct target shell");
+        let src_torus = self.transport.shell(from).torus;
+        let dst_torus = self.transport.shell(to).torus;
+        let src_center = self.transport.closest(from);
+        let dst_center = self.transport.closest(to);
+        let half = (box_width(self.config.n_servers) as i32 - 1) / 2;
+        let mut chunks_moved = 0u32;
+        let mut bytes_moved = 0u64;
+        for dp in -half..=half {
+            for ds in -half..=half {
+                let s = FedSatId::new(from, src_torus.offset(src_center, dp, ds));
+                let d = FedSatId::new(to, dst_torus.offset(dst_center, dp, ds));
+                let (m, b) = self.transport.migrate_cross_shell(s, d);
+                chunks_moved += m;
+                bytes_moved += b;
+            }
+        }
+        let mut rehomed = 0u64;
+        let mut rehomed_bytes = 0u64;
+        for entry in self.index.lock().unwrap().values_mut() {
+            if entry.shell == from {
+                entry.shell = to;
+                rehomed += 1;
+                rehomed_bytes += entry.meta.kvc_len as u64;
+            }
+        }
+        self.stats.proactive_handover_blocks.fetch_add(rehomed, Ordering::Relaxed);
+        // move the placement accounting with the blocks (payload-byte
+        // convention, matching store_payload; every rehomed block was
+        // credited to `from` when stored, so the debit cannot underflow)
+        self.shell_counters[from as usize].placed_bytes.fetch_sub(rehomed_bytes, Ordering::Relaxed);
+        self.shell_counters[to as usize].placed_bytes.fetch_add(rehomed_bytes, Ordering::Relaxed);
+        EvacSummary { chunks_moved, bytes_moved, blocks_rehomed: rehomed }
+    }
+
+    /// Number of chunks a block of `n_values` f32s will produce.
+    pub fn chunks_for_values(&self, n_values: usize) -> usize {
+        self.config.chunks_for_values(n_values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::geometry::Geometry;
+    use crate::constellation::los::LosGrid;
+    use crate::constellation::topology::Torus;
+    use crate::federation::transport::ShellLink;
+    use crate::federation::Shell;
+    use crate::kvc::block::block_hashes;
+    use crate::kvc::eviction::EvictionPolicy;
+    use crate::net::faults::FaultyTransport;
+    use crate::net::transport::{GroundView, InProcTransport, Transport};
+    use crate::satellite::fleet::Fleet;
+    use crate::util::rng::XorShift64;
+
+    fn shell_link(id: ShellId, name: &str, planes: usize, slots: usize, alt: f64) -> ShellLink {
+        let torus = Torus::new(planes, slots);
+        let geometry = Geometry::new(alt, slots, planes);
+        let shell = Shell::new(id, name, torus, geometry);
+        let center = SatId::new((planes / 2) as u16, (slots / 2) as u16);
+        let fleet = Arc::new(Fleet::new(torus, 10 << 20, EvictionPolicy::Lazy));
+        let los = LosGrid::new(center, 2, (planes / 2).min(2));
+        let ground = GroundView::new(center, &los, torus.sats_per_plane);
+        let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, None));
+        let faults =
+            Arc::new(FaultyTransport::new(inproc.clone(), torus, los.half_slots, los.half_planes));
+        ShellLink { shell, fleet, inproc, faults }
+    }
+
+    /// Two small shells; the denser second one ("b-630") is cheaper and
+    /// therefore primary.
+    fn manager() -> FederatedKvcManager {
+        let transport = Arc::new(FederatedTransport::new(vec![
+            shell_link(0, "a-550", 9, 11, 550.0),
+            shell_link(1, "b-630", 15, 15, 630.0),
+        ]));
+        let config = KvcConfig { n_servers: 9, chunk_size: 600, ..KvcConfig::default() };
+        FederatedKvcManager::new(config, transport, PlacementPolicy::default())
+    }
+
+    fn values(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect()
+    }
+
+    #[test]
+    fn put_then_fetch_roundtrip_on_primary() {
+        let m = manager();
+        let primary = m.primary_shell();
+        assert_eq!(primary, 1, "the denser 15x15 shell should be cheapest");
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let kv = values(2048, 1);
+        let home = m.put_block(&hashes, 0, &kv, 0).unwrap();
+        assert_eq!(home, primary);
+        assert_eq!(m.lookup(&hashes), 1);
+        let fetched = m.fetch_block(&hashes, 0, 0).unwrap().unwrap();
+        assert_eq!(fetched.len(), kv.len());
+        let max_err =
+            kv.iter().zip(&fetched).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_err < 0.05, "max_err={max_err}");
+        // idempotent: a second put keeps the home and stores nothing new
+        let stored = m.shell_counters()[home as usize].blocks_stored.load(Ordering::Relaxed);
+        assert_eq!(m.put_block(&hashes, 0, &kv, 0).unwrap(), home);
+        assert_eq!(
+            m.shell_counters()[home as usize].blocks_stored.load(Ordering::Relaxed),
+            stored
+        );
+    }
+
+    #[test]
+    fn prefix_lookup_spans_shells() {
+        let m = manager();
+        let tokens: Vec<i32> = (0..128).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        // force block 1 onto the other shell by re-homing its index entry
+        // is not possible from outside; instead verify the walk truncates
+        // at the first unknown block
+        assert_eq!(m.lookup(&hashes), 3);
+        assert_eq!(m.fetch_prefix(&hashes, 3, 0).unwrap(), 3);
+        let mut tokens2 = tokens.clone();
+        tokens2[40] = 999; // diverge inside block 1
+        let hashes2 = block_hashes(&tokens2, 32);
+        assert_eq!(m.lookup(&hashes2), 1);
+    }
+
+    #[test]
+    fn dead_primary_box_spills_to_secondary() {
+        let m = manager();
+        let primary = m.primary_shell();
+        let other = 1 - primary;
+        // kill the primary's whole layout box
+        let link = m.transport().link(primary);
+        let center = link.faults.closest();
+        for dp in -1..=1 {
+            for ds in -1..=1 {
+                link.faults.fail_satellite(link.shell.torus.offset(center, dp, ds));
+            }
+        }
+        assert!(m.box_live_fraction(primary) < 0.2);
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let home = m.put_block(&hashes, 0, &values(2048, 3), 0).unwrap();
+        assert_eq!(home, other, "placement must spill off the dead shell");
+        assert_eq!(m.stats.spillovers.load(Ordering::Relaxed), 1);
+        assert!(m.fetch_block(&hashes, 0, 0).unwrap().is_some());
+    }
+
+    #[test]
+    fn rotation_migration_keeps_blocks_fetchable_per_shell() {
+        let m = manager();
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let kv = values(2048, 9);
+        let home = m.put_block(&hashes, 0, &kv, 0).unwrap();
+        // run one epoch of migration on every shell, then advance
+        let mut moved = 0;
+        for s in 0..m.transport().n_shells() as ShellId {
+            for (from, to) in m.migration_requests(s) {
+                moved += m.transport().link(s).faults.migrate(from, to).unwrap();
+            }
+        }
+        m.transport().set_epoch_all(1);
+        assert!(moved > 0, "the east column should hand over chunks");
+        let fetched = m.fetch_block(&hashes, 0, 1).unwrap().unwrap();
+        assert_eq!(fetched.len(), kv.len());
+        assert_eq!(m.home_of(&hashes[0]), Some(home));
+    }
+
+    #[test]
+    fn evacuation_rehomes_and_keeps_blocks_fetchable() {
+        let m = manager();
+        let primary = m.primary_shell();
+        let other = 1 - primary;
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        let before = m.transport().link(other).fleet.total_chunks();
+        let summary = m.evacuate_shell(primary, other, 0);
+        assert_eq!(summary.blocks_rehomed, 3);
+        assert!(summary.chunks_moved > 0);
+        assert!(summary.bytes_moved > 0);
+        assert!(m.transport().link(other).fleet.total_chunks() > before);
+        assert_eq!(m.transport().link(primary).fleet.total_chunks(), 0);
+        // now kill the evacuated shell entirely: data must still serve
+        let link = m.transport().link(primary);
+        for sat in link.shell.torus.all() {
+            link.faults.fail_satellite(sat);
+        }
+        for b in 0..3 {
+            assert_eq!(m.home_of(&hashes[b]), Some(other));
+            assert!(m.fetch_block(&hashes, b, 0).unwrap().is_some(), "block {b}");
+        }
+        assert!(
+            m.transport().stats.inter_shell_bytes.load(Ordering::Relaxed) >= summary.bytes_moved
+        );
+    }
+
+    #[test]
+    fn evacuation_survives_rotation_afterwards() {
+        let m = manager();
+        let primary = m.primary_shell();
+        let other = 1 - primary;
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        m.put_block(&hashes, 0, &values(2048, 7), 0).unwrap();
+        m.evacuate_shell(primary, other, 0);
+        // rotate two epochs with per-shell migration on the new home
+        for e in 0..2u64 {
+            for (from, to) in m.migration_requests(other) {
+                m.transport().link(other).faults.migrate(from, to).unwrap();
+            }
+            m.transport().set_epoch_all(e + 1);
+        }
+        assert!(m.fetch_block(&hashes, 0, 2).unwrap().is_some());
+    }
+
+    #[test]
+    fn broken_block_truncates_and_counts_reactive_rehome() {
+        let m = manager();
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        let home = m.home_of(&hashes[1]).unwrap();
+        // sabotage block 1 everywhere on its home shell
+        for node in m.transport().link(home).fleet.nodes() {
+            let torus = m.transport().shell(home).torus;
+            let env = crate::net::messages::Envelope::new(node.id, 0);
+            node.handle(
+                &torus,
+                &env,
+                &crate::net::messages::Request::Evict { block: hashes[1], gossip_ttl: 0 },
+            );
+        }
+        assert_eq!(m.fetch_prefix(&hashes, 3, 0).unwrap(), 1, "prefix truncates");
+        assert_eq!(m.stats.broken_blocks.load(Ordering::Relaxed), 1);
+        assert_eq!(m.lookup(&hashes), 1, "broken block left the index");
+        // re-store while the home shell's box is dead: reactive re-home
+        let link = m.transport().link(home);
+        let center = link.faults.closest();
+        for dp in -1..=1 {
+            for ds in -1..=1 {
+                link.faults.fail_satellite(link.shell.torus.offset(center, dp, ds));
+            }
+        }
+        let new_home = m.put_block(&hashes, 1, &values(2048, 1), 0).unwrap();
+        assert_ne!(new_home, home);
+        assert_eq!(m.stats.reactive_rehomed_blocks.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,228 @@
+//! Multi-shell federation: several constellation shells at different
+//! altitudes acting as one cache.
+//!
+//! Real deployments layer multiple Walker shells (Starlink's 550 km shell,
+//! Kuiper's 630 km shell); the paper's protocol assumes one.  This module
+//! federates the KVC across shells:
+//!
+//! * [`Shell`] — one named shell: an existing [`Torus`] + [`Geometry`] at
+//!   its own altitude and shape.
+//! * [`FedSatId`] — a shell-qualified satellite address
+//!   (`{ShellId, SatId}`).
+//! * [`FederatedConstellation`] — the shell set plus the two inter-shell
+//!   link models: a ground relay (down from one shell, back up to the
+//!   other) and a nearest-neighbour cross-shell hop (the closest satellite
+//!   of the other shell is at most half a grid cell away horizontally and
+//!   the altitude gap away vertically), both with altitude-correct
+//!   latency from [`Geometry`].
+//! * [`placement`] — the shell-aware placement policy: each block goes to
+//!   the cheapest shell by uplink+hop cost, spilling over when the primary
+//!   shell's layout box is saturated or failed.
+//! * [`transport`] — [`transport::FederatedTransport`]: routes Get/Set to
+//!   the addressed shell (each shell keeps its own
+//!   [`crate::net::faults::FaultyTransport`] decorator, so failure
+//!   injection composes) and carries cross-shell chunk evacuations.
+//! * [`manager`] — [`manager::FederatedKvcManager`]: the §3.8 Get/Set
+//!   fan-out over shell-qualified layouts, with inter-shell handover of
+//!   hot chunks when a whole shell degrades.
+
+pub mod manager;
+pub mod placement;
+pub mod transport;
+
+use crate::constellation::geometry::{Geometry, LIGHT_SPEED_KM_S};
+use crate::constellation::topology::{SatId, Torus};
+
+/// Index of a shell within its federation (dense, assignment order).
+pub type ShellId = u8;
+
+/// One constellation shell of a federation.
+#[derive(Debug, Clone)]
+pub struct Shell {
+    pub id: ShellId,
+    pub name: String,
+    pub torus: Torus,
+    pub geometry: Geometry,
+}
+
+impl Shell {
+    pub fn new(id: ShellId, name: &str, torus: Torus, geometry: Geometry) -> Self {
+        assert_eq!(torus.planes, geometry.planes, "{name}: torus/geometry plane mismatch");
+        assert_eq!(
+            torus.sats_per_plane, geometry.sats_per_plane,
+            "{name}: torus/geometry slot mismatch"
+        );
+        Self { id, name: name.to_string(), torus, geometry }
+    }
+
+    pub fn altitude_km(&self) -> f64 {
+        self.geometry.altitude_km
+    }
+}
+
+/// A shell-qualified satellite address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FedSatId {
+    pub shell: ShellId,
+    pub sat: SatId,
+}
+
+impl FedSatId {
+    pub fn new(shell: ShellId, sat: SatId) -> Self {
+        Self { shell, sat }
+    }
+}
+
+impl std::fmt::Display for FedSatId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(sh{},p{},s{})", self.shell, self.sat.plane, self.sat.slot)
+    }
+}
+
+/// A federation of constellation shells with its inter-shell link models.
+///
+/// A federation normally holds two or more shells; a single-shell
+/// federation is allowed so no-federation baselines can run through the
+/// same harness.
+#[derive(Debug, Clone)]
+pub struct FederatedConstellation {
+    shells: Vec<Shell>,
+    /// Serialization bandwidth of inter-shell links, bits/s.
+    pub inter_shell_bandwidth_bps: f64,
+}
+
+impl FederatedConstellation {
+    pub fn new(shells: Vec<Shell>) -> Self {
+        assert!(!shells.is_empty(), "a federation needs at least one shell");
+        for (i, s) in shells.iter().enumerate() {
+            assert_eq!(s.id as usize, i, "shell ids must be dense and in order");
+        }
+        Self { shells, inter_shell_bandwidth_bps: 1e9 }
+    }
+
+    pub fn n_shells(&self) -> usize {
+        self.shells.len()
+    }
+
+    pub fn shells(&self) -> &[Shell] {
+        &self.shells
+    }
+
+    pub fn shell(&self, id: ShellId) -> &Shell {
+        &self.shells[id as usize]
+    }
+
+    /// Total satellites across every shell.
+    pub fn len(&self) -> usize {
+        self.shells.iter().map(|s| s.torus.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// One-way latency of the ground-relay inter-shell link: down the
+    /// slant range of shell `a`'s overhead satellite, back up to shell
+    /// `b`'s (a bent pipe through the ground station).
+    pub fn ground_relay_latency_s(&self, a: ShellId, b: ShellId) -> f64 {
+        self.shell(a).geometry.ground_latency_s(0, 0)
+            + self.shell(b).geometry.ground_latency_s(0, 0)
+    }
+
+    /// One-way latency of the nearest-neighbour cross-shell hop: the
+    /// closest satellite of the other shell is at most half the coarser
+    /// shell's grid spacing away horizontally and the altitude gap away
+    /// vertically.
+    pub fn cross_shell_hop_latency_s(&self, a: ShellId, b: ShellId) -> f64 {
+        let (ga, gb) = (&self.shell(a).geometry, &self.shell(b).geometry);
+        let d_alt = (ga.altitude_km - gb.altitude_km).abs();
+        let spacing = ga
+            .intra_plane_distance_km()
+            .max(ga.inter_plane_distance_km())
+            .max(gb.intra_plane_distance_km())
+            .max(gb.inter_plane_distance_km());
+        let horizontal = spacing / 2.0;
+        (d_alt * d_alt + horizontal * horizontal).sqrt() / LIGHT_SPEED_KM_S
+    }
+
+    /// One-way inter-shell latency: the cheaper of ground relay and the
+    /// direct cross-shell hop.
+    pub fn inter_shell_latency_s(&self, a: ShellId, b: ShellId) -> f64 {
+        self.ground_relay_latency_s(a, b).min(self.cross_shell_hop_latency_s(a, b))
+    }
+
+    /// One-way inter-shell transfer latency for `bytes` of payload.
+    pub fn transfer_latency_s(&self, a: ShellId, b: ShellId, bytes: usize) -> f64 {
+        self.inter_shell_latency_s(a, b) + (bytes as f64 * 8.0) / self.inter_shell_bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dual() -> FederatedConstellation {
+        FederatedConstellation::new(vec![
+            Shell::new(0, "starlink-550", Torus::new(72, 22), Geometry::new(550.0, 22, 72)),
+            Shell::new(1, "kuiper-630", Torus::new(34, 34), Geometry::new(630.0, 34, 34)),
+        ])
+    }
+
+    #[test]
+    fn federation_counts_every_shell() {
+        let f = dual();
+        assert_eq!(f.n_shells(), 2);
+        assert_eq!(f.len(), 72 * 22 + 34 * 34);
+        assert_eq!(f.shell(0).name, "starlink-550");
+        assert_eq!(f.shell(1).altitude_km(), 630.0);
+    }
+
+    #[test]
+    fn fed_sat_id_orders_by_shell_first() {
+        let a = FedSatId::new(0, SatId::new(9, 9));
+        let b = FedSatId::new(1, SatId::new(0, 0));
+        assert!(a < b);
+        assert_eq!(format!("{a}"), "(sh0,p9,s9)");
+    }
+
+    #[test]
+    fn cross_shell_hop_beats_ground_relay_for_adjacent_shells() {
+        // 550 vs 630 km: the 80 km vertical hop (plus half a cell of
+        // horizontal offset) is shorter than going all the way down and
+        // back up.
+        let f = dual();
+        let hop = f.cross_shell_hop_latency_s(0, 1);
+        let relay = f.ground_relay_latency_s(0, 1);
+        assert!(hop < relay, "hop {hop} vs relay {relay}");
+        assert_eq!(f.inter_shell_latency_s(0, 1), hop);
+        // both are in the LEO laser band (sub-10 ms)
+        assert!(hop > 0.0 && hop < 10e-3);
+        assert!(relay > 0.0 && relay < 10e-3);
+    }
+
+    #[test]
+    fn inter_shell_latency_is_symmetric() {
+        let f = dual();
+        assert!((f.inter_shell_latency_s(0, 1) - f.inter_shell_latency_s(1, 0)).abs() < 1e-15);
+        assert!(
+            (f.transfer_latency_s(0, 1, 6000) - f.transfer_latency_s(1, 0, 6000)).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    fn transfer_latency_grows_with_bytes() {
+        let f = dual();
+        assert!(f.transfer_latency_s(0, 1, 1 << 20) > f.transfer_latency_s(0, 1, 64));
+    }
+
+    #[test]
+    fn single_shell_federation_allowed_for_baselines() {
+        let f = FederatedConstellation::new(vec![Shell::new(
+            0,
+            "solo",
+            Torus::new(5, 19),
+            Geometry::new(550.0, 19, 5),
+        )]);
+        assert_eq!(f.n_shells(), 1);
+    }
+}

@@ -1,0 +1,184 @@
+//! Shell-aware chunk placement.
+//!
+//! Each block's virtual servers go to one shell; the policy picks the
+//! cheapest shell by uplink+hop cost and spills over when the primary
+//! shell's layout box is saturated (byte budget) or failed (live fraction
+//! of its box below threshold).  Costs are pure functions of a shell's
+//! [`Geometry`] and the server count, so the primary shell of a federation
+//! is a static property; eligibility is dynamic (failures, load).
+
+use crate::constellation::geometry::Geometry;
+use crate::federation::ShellId;
+use crate::mapping::box_width;
+
+/// Expected retrieval cost of hosting one block on a shell, seconds: the
+/// round-trip slant uplink to the farthest cell of the layout box plus the
+/// ISL hops a mesh entry would pay to the box edge.  Lower is better;
+/// denser, lower shells win.
+pub fn shell_cost(geometry: &Geometry, n_servers: usize) -> f64 {
+    let half = box_width(n_servers) / 2;
+    2.0 * geometry.ground_latency_s(half, half) + half as f64 * geometry.worst_hop_latency_s()
+}
+
+/// Index of the smallest cost, ties to the lowest index — the one argmin
+/// every "primary shell" computation shares (spec, manager and policy
+/// must all agree on which shell is primary).
+pub fn cheapest_index(costs: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, c) in costs.iter().enumerate() {
+        let better = match best {
+            None => true,
+            Some(b) => *c < costs[b],
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// A shell's placement-relevant state at decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct ShellCandidate {
+    pub shell: ShellId,
+    /// Static cost from [`shell_cost`].
+    pub cost_s: f64,
+    /// Fraction of the shell's current layout-box cells that are live.
+    pub live_fraction: f64,
+    /// Bytes this policy has already placed on the shell.
+    pub placed_bytes: u64,
+}
+
+/// The spillover policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementPolicy {
+    /// A shell is eligible only while at least this fraction of its layout
+    /// box is live.
+    pub min_live_fraction: f64,
+    /// Soft per-shell byte budget; above it, placement spills to the next
+    /// cheapest shell (0 = unlimited).
+    pub spill_budget_bytes: u64,
+}
+
+impl Default for PlacementPolicy {
+    fn default() -> Self {
+        Self { min_live_fraction: 0.6, spill_budget_bytes: 0 }
+    }
+}
+
+impl PlacementPolicy {
+    fn alive(&self, c: &ShellCandidate) -> bool {
+        c.live_fraction >= self.min_live_fraction
+    }
+
+    fn under_budget(&self, c: &ShellCandidate) -> bool {
+        self.spill_budget_bytes == 0 || c.placed_bytes < self.spill_budget_bytes
+    }
+
+    /// Pick the index of the shell to place the next block on:
+    /// cheapest-first among live, under-budget shells; then live shells
+    /// regardless of budget; then (best effort) the most-live shell.
+    /// Deterministic: ties resolve to the lowest index.
+    pub fn choose(&self, candidates: &[ShellCandidate]) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let argmin_cost = |keep: &dyn Fn(&ShellCandidate) -> bool| -> Option<usize> {
+            let mut best: Option<usize> = None;
+            for (i, c) in candidates.iter().enumerate() {
+                if !keep(c) {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => c.cost_s < candidates[b].cost_s,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            best
+        };
+        argmin_cost(&|c| self.alive(c) && self.under_budget(c))
+            .or_else(|| argmin_cost(&|c| self.alive(c)))
+            .or_else(|| {
+                let mut best = 0;
+                for (i, c) in candidates.iter().enumerate().skip(1) {
+                    if c.live_fraction > candidates[best].live_fraction {
+                        best = i;
+                    }
+                }
+                Some(best)
+            })
+    }
+
+    /// The index the policy would pick ignoring liveness and budget: the
+    /// federation's static primary shell.
+    pub fn primary(&self, candidates: &[ShellCandidate]) -> Option<usize> {
+        let costs: Vec<f64> = candidates.iter().map(|c| c.cost_s).collect();
+        cheapest_index(&costs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(shell: ShellId, cost_s: f64, live_fraction: f64, placed_bytes: u64) -> ShellCandidate {
+        ShellCandidate { shell, cost_s, live_fraction, placed_bytes }
+    }
+
+    #[test]
+    fn cheapest_live_shell_wins() {
+        let p = PlacementPolicy::default();
+        let c = [cand(0, 0.020, 1.0, 0), cand(1, 0.017, 1.0, 0)];
+        assert_eq!(p.choose(&c), Some(1));
+        assert_eq!(p.primary(&c), Some(1));
+    }
+
+    #[test]
+    fn failed_primary_spills_to_secondary() {
+        let p = PlacementPolicy::default();
+        let c = [cand(0, 0.020, 1.0, 0), cand(1, 0.017, 0.0, 0)];
+        assert_eq!(p.choose(&c), Some(0), "dead box disqualifies the cheap shell");
+        assert_eq!(p.primary(&c), Some(1), "primary is a static property");
+    }
+
+    #[test]
+    fn saturated_primary_spills_then_relaxes() {
+        let p = PlacementPolicy { spill_budget_bytes: 1000, ..Default::default() };
+        let over = [cand(0, 0.020, 1.0, 0), cand(1, 0.017, 1.0, 1000)];
+        assert_eq!(p.choose(&over), Some(0), "over-budget primary spills");
+        // every shell over budget: budget relaxes, liveness still binds
+        let all_over = [cand(0, 0.020, 1.0, 2000), cand(1, 0.017, 1.0, 1000)];
+        assert_eq!(p.choose(&all_over), Some(1));
+    }
+
+    #[test]
+    fn best_effort_when_everything_is_degraded() {
+        let p = PlacementPolicy::default();
+        let c = [cand(0, 0.020, 0.2, 0), cand(1, 0.017, 0.4, 0)];
+        assert_eq!(p.choose(&c), Some(1), "most-live shell as last resort");
+        assert_eq!(p.choose(&[]), None);
+    }
+
+    #[test]
+    fn cheapest_index_breaks_ties_low() {
+        assert_eq!(cheapest_index(&[]), None);
+        assert_eq!(cheapest_index(&[0.3]), Some(0));
+        assert_eq!(cheapest_index(&[0.3, 0.1, 0.2]), Some(1));
+        assert_eq!(cheapest_index(&[0.2, 0.1, 0.1]), Some(1), "ties resolve low");
+    }
+
+    #[test]
+    fn denser_lower_shell_is_cheaper() {
+        use crate::constellation::geometry::Geometry;
+        // Kuiper's 34-sat planes have shorter chords than Starlink's
+        // 22-sat planes, which dominates the 80 km altitude advantage.
+        let starlink = Geometry::new(550.0, 22, 72);
+        let kuiper = Geometry::new(630.0, 34, 34);
+        assert!(shell_cost(&kuiper, 9) < shell_cost(&starlink, 9));
+        // more servers -> a wider box -> strictly higher cost
+        assert!(shell_cost(&kuiper, 25) > shell_cost(&kuiper, 9));
+    }
+}

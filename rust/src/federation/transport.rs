@@ -1,0 +1,252 @@
+//! Shell-qualified transport: routes Get/Set to the addressed shell and
+//! carries cross-shell chunk evacuations.
+//!
+//! Each shell keeps its whole single-shell stack — a
+//! [`Fleet`], an [`InProcTransport`] with its own rotating
+//! [`crate::net::transport::GroundView`], and a
+//! [`crate::net::faults::FaultyTransport`] decorator — so failure
+//! injection composes per shell: killing one shell's satellites blackholes
+//! only that shell's traffic, and the federation layer above decides where
+//! to re-home the affected chunks.
+//!
+//! Intra-shell requests pay the shell's own (accounted) link latency;
+//! cross-shell transfers additionally pay the federation's inter-shell
+//! link latency ([`FederatedConstellation::transfer_latency_s`]) into
+//! `inter_shell_latency_ns`.
+
+use crate::federation::{FedSatId, FederatedConstellation, Shell, ShellId};
+use crate::kvc::block::BlockHash;
+use crate::kvc::chunk::ChunkKey;
+use crate::net::faults::FaultyTransport;
+use crate::net::messages::{Request, Response};
+use crate::net::transport::{InProcTransport, Transport};
+use crate::satellite::fleet::Fleet;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Counters of inter-shell activity.
+#[derive(Debug, Default)]
+pub struct FedTransportStats {
+    /// Chunk transfers carried over inter-shell links.
+    pub inter_shell_chunks: AtomicU64,
+    /// Payload bytes carried over inter-shell links.
+    pub inter_shell_bytes: AtomicU64,
+    /// Accounted inter-shell link latency (ns), never slept.
+    pub inter_shell_latency_ns: AtomicU64,
+}
+
+/// One shell's full single-shell stack.
+pub struct ShellLink {
+    pub shell: Shell,
+    pub fleet: Arc<Fleet>,
+    pub inproc: Arc<InProcTransport>,
+    pub faults: Arc<FaultyTransport>,
+}
+
+/// The federation-wide transport.
+pub struct FederatedTransport {
+    constellation: FederatedConstellation,
+    links: Vec<ShellLink>,
+    pub stats: FedTransportStats,
+}
+
+impl FederatedTransport {
+    pub fn new(links: Vec<ShellLink>) -> Self {
+        let constellation =
+            FederatedConstellation::new(links.iter().map(|l| l.shell.clone()).collect());
+        Self { constellation, links, stats: FedTransportStats::default() }
+    }
+
+    pub fn constellation(&self) -> &FederatedConstellation {
+        &self.constellation
+    }
+
+    pub fn n_shells(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn shell(&self, id: ShellId) -> &Shell {
+        &self.links[id as usize].shell
+    }
+
+    pub fn link(&self, id: ShellId) -> &ShellLink {
+        &self.links[id as usize]
+    }
+
+    pub fn links(&self) -> &[ShellLink] {
+        &self.links
+    }
+
+    /// The satellite of `shell` currently closest to the ground host.
+    pub fn closest(&self, shell: ShellId) -> crate::constellation::topology::SatId {
+        self.links[shell as usize].faults.closest()
+    }
+
+    /// Advance every shell's ground view to `epoch` (the shells rotate in
+    /// lockstep: one slot-shift per epoch each).
+    pub fn set_epoch_all(&self, epoch: u64) {
+        for l in &self.links {
+            l.faults.set_epoch(epoch);
+        }
+    }
+
+    /// Total accounted network latency across the federation: every
+    /// shell's emulated link time plus the inter-shell links.
+    pub fn total_latency_ns(&self) -> u64 {
+        let intra: u64 = self
+            .links
+            .iter()
+            .map(|l| l.inproc.stats().sim_latency_ns.load(Ordering::Relaxed))
+            .sum();
+        intra + self.stats.inter_shell_latency_ns.load(Ordering::Relaxed)
+    }
+
+    /// Requests blackholed by fault injection, summed over every shell.
+    pub fn total_blackholed(&self) -> u64 {
+        self.links.iter().map(|l| l.faults.fault_stats.blackholed()).sum()
+    }
+
+    fn checked_link(&self, shell: ShellId) -> Result<&ShellLink> {
+        self.links
+            .get(shell as usize)
+            .ok_or_else(|| anyhow::anyhow!("no such shell {shell}"))
+    }
+
+    /// Route a request to the addressed shell's (fault-decorated) stack.
+    pub fn request(&self, dest: FedSatId, req: Request) -> Result<Response> {
+        self.checked_link(dest.shell)?.faults.request(dest.sat, req)
+    }
+
+    // Shell-qualified conveniences, delegating to the addressed shell's
+    // [`Transport`] so response handling and the per-shell stats (miss
+    // counters, emulated latency) stay identical to the single-shell path.
+
+    pub fn get_chunk(&self, dest: FedSatId, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        self.checked_link(dest.shell)?.faults.get_chunk(dest.sat, key)
+    }
+
+    pub fn set_chunk(&self, dest: FedSatId, key: ChunkKey, payload: Vec<u8>) -> Result<()> {
+        self.checked_link(dest.shell)?.faults.set_chunk(dest.sat, key, payload)
+    }
+
+    pub fn evict_block(&self, dest: FedSatId, block: BlockHash) -> Result<u32> {
+        self.checked_link(dest.shell)?.faults.evict_block(dest.sat, block, 0)
+    }
+
+    /// Evacuate one satellite's entire chunk store across shells: drain
+    /// the source node and re-Set everything (original keys and headers)
+    /// on the target satellite of the other shell, over the inter-shell
+    /// link.  Deterministic: the drain is key-sorted.  Returns (chunks
+    /// moved, payload bytes moved); chunks the target rejects are dropped
+    /// (the block they belong to heals reactively).
+    pub fn migrate_cross_shell(&self, from: FedSatId, to: FedSatId) -> (u32, u64) {
+        debug_assert_ne!(from.shell, to.shell, "cross-shell migrate needs two shells");
+        let chunks = self.links[from.shell as usize].fleet.node(from.sat).drain_chunks();
+        let mut moved = 0u32;
+        let mut bytes = 0u64;
+        for (key, payload) in chunks {
+            let len = payload.len();
+            if self.links[to.shell as usize].faults.set_chunk(to.sat, key, payload).is_ok() {
+                moved += 1;
+                bytes += len as u64;
+            }
+        }
+        if moved > 0 {
+            self.stats.inter_shell_chunks.fetch_add(moved as u64, Ordering::Relaxed);
+            self.stats.inter_shell_bytes.fetch_add(bytes, Ordering::Relaxed);
+            let s = self.constellation.transfer_latency_s(from.shell, to.shell, bytes as usize);
+            self.stats.inter_shell_latency_ns.fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+        }
+        (moved, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::geometry::Geometry;
+    use crate::constellation::los::LosGrid;
+    use crate::constellation::topology::{SatId, Torus};
+    use crate::kvc::eviction::EvictionPolicy;
+    use crate::net::transport::GroundView;
+
+    fn shell_link(id: ShellId, name: &str, planes: usize, slots: usize, alt: f64) -> ShellLink {
+        let torus = Torus::new(planes, slots);
+        let geometry = Geometry::new(alt, slots, planes);
+        let shell = Shell::new(id, name, torus, geometry);
+        let center = SatId::new((planes / 2) as u16, (slots / 2) as u16);
+        let fleet = Arc::new(Fleet::new(torus, 1 << 20, EvictionPolicy::Lazy));
+        let los = LosGrid::new(center, 2, (planes / 2).min(2));
+        let ground = GroundView::new(center, &los, torus.sats_per_plane);
+        let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, None));
+        let faults =
+            Arc::new(FaultyTransport::new(inproc.clone(), torus, los.half_slots, los.half_planes));
+        ShellLink { shell, fleet, inproc, faults }
+    }
+
+    fn dual() -> FederatedTransport {
+        FederatedTransport::new(vec![
+            shell_link(0, "a-550", 9, 11, 550.0),
+            shell_link(1, "b-630", 7, 9, 630.0),
+        ])
+    }
+
+    fn key(b: u8, c: u32) -> ChunkKey {
+        ChunkKey::new(BlockHash([b; 32]), c)
+    }
+
+    #[test]
+    fn requests_route_to_the_addressed_shell() {
+        let t = dual();
+        let d0 = FedSatId::new(0, SatId::new(4, 5));
+        let d1 = FedSatId::new(1, SatId::new(3, 4));
+        t.set_chunk(d0, key(1, 0), vec![1, 2]).unwrap();
+        t.set_chunk(d1, key(1, 0), vec![9, 9, 9]).unwrap();
+        // same key, different shells: independent stores
+        assert_eq!(t.get_chunk(d0, key(1, 0)).unwrap(), Some(vec![1, 2]));
+        assert_eq!(t.get_chunk(d1, key(1, 0)).unwrap(), Some(vec![9, 9, 9]));
+        assert_eq!(t.link(0).fleet.total_chunks(), 1);
+        assert_eq!(t.link(1).fleet.total_chunks(), 1);
+        assert!(t.request(FedSatId::new(7, SatId::new(0, 0)), Request::Ping).is_err());
+    }
+
+    #[test]
+    fn shell_faults_stay_per_shell() {
+        let t = dual();
+        let sat = SatId::new(4, 5);
+        t.link(0).faults.fail_satellite(sat);
+        assert!(t.get_chunk(FedSatId::new(0, sat), key(2, 0)).is_err());
+        // the same coordinates on the other shell still answer
+        assert_eq!(t.get_chunk(FedSatId::new(1, SatId::new(3, 4)), key(2, 0)).unwrap(), None);
+        assert_eq!(t.total_blackholed(), 1);
+    }
+
+    #[test]
+    fn cross_shell_migrate_moves_and_accounts() {
+        let t = dual();
+        let from = FedSatId::new(0, SatId::new(4, 5));
+        let to = FedSatId::new(1, SatId::new(3, 4));
+        t.set_chunk(from, key(3, 0), vec![7; 100]).unwrap();
+        t.set_chunk(from, key(3, 1), vec![8; 50]).unwrap();
+        let (moved, bytes) = t.migrate_cross_shell(from, to);
+        assert_eq!(moved, 2);
+        assert_eq!(bytes, 150);
+        assert_eq!(t.get_chunk(to, key(3, 1)).unwrap(), Some(vec![8; 50]));
+        assert_eq!(t.link(0).fleet.node(from.sat).chunk_count(), 0);
+        assert_eq!(t.stats.inter_shell_chunks.load(Ordering::Relaxed), 2);
+        assert_eq!(t.stats.inter_shell_bytes.load(Ordering::Relaxed), 150);
+        assert!(t.stats.inter_shell_latency_ns.load(Ordering::Relaxed) > 0);
+        assert!(t.total_latency_ns() >= t.stats.inter_shell_latency_ns.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn epochs_advance_every_shell_in_lockstep() {
+        let t = dual();
+        let c0 = t.closest(0);
+        let c1 = t.closest(1);
+        t.set_epoch_all(2);
+        assert_eq!(t.closest(0), t.shell(0).torus.offset(c0, 0, -2));
+        assert_eq!(t.closest(1), t.shell(1).torus.offset(c1, 0, -2));
+    }
+}

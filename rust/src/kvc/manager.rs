@@ -43,7 +43,14 @@ const CHUNK_VERSION: u8 = 1;
 /// thread per chunk wastes more on spawns than parallel RTTs save).
 const MAX_FANOUT: usize = 8;
 
-fn encode_chunk_header(quantizer_id: u8, num_chunks: u32, kvc_len: u32, write_epoch: u64) -> [u8; CHUNK_HEADER_LEN] {
+/// Encode the self-describing chunk header (shared with the federated
+/// manager, which stores the same wire format across shells).
+pub fn encode_chunk_header(
+    quantizer_id: u8,
+    num_chunks: u32,
+    kvc_len: u32,
+    write_epoch: u64,
+) -> [u8; CHUNK_HEADER_LEN] {
     let mut h = [0u8; CHUNK_HEADER_LEN];
     h[0] = CHUNK_VERSION;
     h[1] = quantizer_id;
@@ -53,7 +60,8 @@ fn encode_chunk_header(quantizer_id: u8, num_chunks: u32, kvc_len: u32, write_ep
     h
 }
 
-fn decode_chunk_header(data: &[u8]) -> Result<(u8, u32, u32, u64)> {
+/// Decode a chunk header: (quantizer id, num chunks, kvc len, write epoch).
+pub fn decode_chunk_header(data: &[u8]) -> Result<(u8, u32, u32, u64)> {
     if data.len() < CHUNK_HEADER_LEN || data[0] != CHUNK_VERSION {
         bail!("bad chunk header");
     }
@@ -96,6 +104,14 @@ impl Default for KvcConfig {
             use_radix_index: true,
             gossip_ttl: 2,
         }
+    }
+}
+
+impl KvcConfig {
+    /// Number of chunks a block of `n_values` f32s will produce under
+    /// this configuration's quantizer and chunk size.
+    pub fn chunks_for_values(&self, n_values: usize) -> usize {
+        chunk_count(self.quantizer.encoded_len(n_values), self.chunk_size)
     }
 }
 
@@ -564,18 +580,12 @@ impl KvcManager {
         if !self.config.strategy.migrates() {
             return vec![];
         }
-        let w = box_width(self.config.n_servers) as i32;
-        let half = (w - 1) / 2;
-        let old_center = self.transport.closest();
-        let new_center = self.torus.offset(old_center, 0, -1);
         let _ = now_epoch;
-        let mut out = Vec::new();
-        for dp in -half..=half {
-            let from = self.torus.offset(old_center, dp, half);
-            let to = self.torus.offset(new_center, dp, -half);
-            out.push((from, to));
-        }
-        out
+        crate::mapping::migration::rotation_handoff_pairs(
+            &self.torus,
+            self.transport.closest(),
+            self.config.n_servers,
+        )
     }
 
     /// Advance one epoch: issue the migrations, then move the ground view.
@@ -591,7 +601,7 @@ impl KvcManager {
 
     /// Number of chunks a block of `n_values` f32s will produce.
     pub fn chunks_for_values(&self, n_values: usize) -> usize {
-        chunk_count(self.config.quantizer.encoded_len(n_values), self.config.chunk_size)
+        self.config.chunks_for_values(n_values)
     }
 }
 

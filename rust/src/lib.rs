@@ -17,17 +17,26 @@
 //!   the [`net::transport::Transport`] abstraction (in-proc, UDP,
 //!   simulated-latency), and the failure-injecting
 //!   [`net::faults::FaultyTransport`] decorator.
+//! * [`federation`] — multi-shell federation: named [`federation::Shell`]s
+//!   at their own altitudes, shell-qualified addresses
+//!   ([`federation::FedSatId`]), inter-shell links (ground relay and
+//!   nearest-neighbour cross-shell hop), cost-based shell placement with
+//!   spillover ([`federation::placement`]), the shell-routing
+//!   [`federation::transport::FederatedTransport`], and the
+//!   [`federation::manager::FederatedKvcManager`] with inter-shell
+//!   handover of hot chunks under whole-shell degradation.
 //! * [`satellite`] — the satellite node substrate (the paper's cFS stand-in):
 //!   chunk store with LRU, ISL forwarding, migration, eviction gossip.
 //! * [`sim`] — the §4 worst-case-latency simulator (Figure 16), workload
 //!   generation, and the deterministic scenario subsystem
 //!   ([`sim::scenario`] + [`sim::harness`]): named, seed-driven
 //!   end-to-end runs — the paper's 19x5 testbed, a Starlink-like 72x22
-//!   mega-shell, a Kuiper-like 34x34 shell — sweeping rotation epochs
-//!   with migration, eviction pressure and injected failures (satellite
-//!   loss, ISL outage, ground-station handover via
+//!   mega-shell, a Kuiper-like 34x34 shell, and the federated
+//!   `federated-dual-shell` scenario — sweeping rotation epochs with
+//!   migration, eviction pressure and injected failures (satellite loss,
+//!   ISL outage, ground-station handover, whole-shell degradation via
 //!   [`net::faults::FaultyTransport`]), emitting byte-stable metrics
-//!   JSON.
+//!   JSON; plus the [`sim::diff`] scenario-diff tool.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (L2/L1 outputs):
 //!   HLO loading, weight upload, prefill/decode steps, tokenizer, sampler.
 //! * [`coordinator`] — the serving engine: prefix-cache-aware generation
@@ -37,6 +46,7 @@
 
 pub mod constellation;
 pub mod coordinator;
+pub mod federation;
 pub mod kvc;
 pub mod mapping;
 pub mod net;
@@ -48,4 +58,5 @@ pub mod util;
 
 pub use constellation::geometry::{Geometry, EARTH_RADIUS_KM, LIGHT_SPEED_KM_S};
 pub use constellation::topology::{SatId, Torus};
+pub use federation::{FedSatId, FederatedConstellation, Shell, ShellId};
 pub use kvc::manager::KvcManager;

@@ -8,8 +8,10 @@
 //! skymemory satellite  [--torus 5x19] [--planes 0..5] [--budget-mb 64]
 //! skymemory simulate   [--strategy ...] [--altitude 550] [--servers 81]
 //!                      [--kvc-mb 21] [--proc-ms 2]
-//! skymemory scenario   [--name paper-19x5|starlink-shell|kuiper-shell]
-//!                      [--seed 42]
+//! skymemory scenario   [--name paper-19x5|starlink-shell|kuiper-shell|
+//!                              federated-dual-shell] [--seed 42]
+//! skymemory scenario   --diff <a.json> <b.json>   (nonzero exit on regression)
+//! skymemory federate   [--seed 42] [--baseline]
 //! skymemory repro      [--outdir results]
 //! ```
 //!
@@ -28,11 +30,15 @@ use skymemory::sim::{worst_case_latency, SimConfig};
 
 struct Args {
     flags: std::collections::HashMap<String, String>,
+    /// Bare (non-flag) arguments, in order — e.g. the second file of
+    /// `scenario --diff a.json b.json`.
+    positionals: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Self {
         let mut flags = std::collections::HashMap::new();
+        let mut positionals = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -45,10 +51,12 @@ impl Args {
                 } else {
                     flags.insert(name.to_string(), "true".to_string());
                 }
+            } else {
+                positionals.push(a.clone());
             }
             i += 1;
         }
-        Self { flags }
+        Self { flags, positionals }
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -208,15 +216,67 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
+    if let Some(a_path) = args.get("diff") {
+        let b_path = args
+            .positionals
+            .first()
+            .ok_or_else(|| anyhow!("usage: skymemory scenario --diff <a.json> <b.json>"))?;
+        let a = std::fs::read_to_string(a_path).with_context(|| format!("reading {a_path}"))?;
+        let b = std::fs::read_to_string(b_path).with_context(|| format!("reading {b_path}"))?;
+        let report = skymemory::sim::diff::diff_metrics(&a, &b)?;
+        print!("{}", report.render());
+        if report.has_regressions() {
+            std::process::exit(1);
+        }
+        return Ok(());
+    }
     let seed: u64 = args.get_or("seed", 42u64)?;
-    let specs = match args.get("name") {
-        Some(name) => vec![skymemory::sim::scenario::ScenarioSpec::by_name(name, seed)
-            .ok_or_else(|| anyhow!("unknown scenario {name} (paper-19x5 | starlink-shell | kuiper-shell)"))?],
-        None => skymemory::sim::scenario::ScenarioSpec::builtin(seed),
-    };
-    for spec in specs {
-        let report = skymemory::sim::harness::run_scenario(&spec);
-        println!("{}", report.to_json_string());
+    match args.get("name") {
+        Some(name) => {
+            if let Some(spec) = skymemory::sim::scenario::ScenarioSpec::by_name(name, seed) {
+                println!("{}", skymemory::sim::harness::run_scenario(&spec).to_json_string());
+            } else if let Some(spec) =
+                skymemory::sim::scenario::FederatedScenarioSpec::by_name(name, seed)
+            {
+                println!(
+                    "{}",
+                    skymemory::sim::harness::run_federated_scenario(&spec).to_json_string()
+                );
+            } else {
+                bail!(
+                    "unknown scenario {name} (paper-19x5 | starlink-shell | kuiper-shell | federated-dual-shell)"
+                );
+            }
+        }
+        None => {
+            for spec in skymemory::sim::scenario::ScenarioSpec::builtin(seed) {
+                println!("{}", skymemory::sim::harness::run_scenario(&spec).to_json_string());
+            }
+            let fed = skymemory::sim::scenario::FederatedScenarioSpec::federated_dual_shell(seed);
+            println!("{}", skymemory::sim::harness::run_federated_scenario(&fed).to_json_string());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_federate(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let spec = skymemory::sim::scenario::FederatedScenarioSpec::federated_dual_shell(seed);
+    let report = skymemory::sim::harness::run_federated_scenario(&spec);
+    println!("{}", report.to_json_string());
+    if args.has("baseline") {
+        let base = skymemory::sim::harness::run_federated_scenario(&spec.baseline_single_shell());
+        println!("{}", base.to_json_string());
+        println!(
+            "# federation hit rate {:.3} vs single-shell baseline {:.3} ({} handovers, {} inter-shell bytes)",
+            report.block_hit_rate, base.block_hit_rate, report.handovers, report.inter_shell_bytes
+        );
+        // acceptance gate: surviving the primary-shell kill is the whole
+        // point — a federation that does not out-hit the baseline failed
+        if report.block_hit_rate <= base.block_hit_rate {
+            eprintln!("# FAIL: federation does not beat the no-federation baseline");
+            std::process::exit(1);
+        }
     }
     Ok(())
 }
@@ -234,7 +294,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: skymemory <serve|generate|satellite|simulate|scenario|repro> [flags]\n\
+        "usage: skymemory <serve|generate|satellite|simulate|scenario|federate|repro> [flags]\n\
          see rust/src/main.rs header for per-command flags"
     );
     std::process::exit(2)
@@ -252,6 +312,7 @@ fn main() -> Result<()> {
         "satellite" => cmd_satellite(&args),
         "simulate" => cmd_simulate(&args),
         "scenario" => cmd_scenario(&args),
+        "federate" => cmd_federate(&args),
         "repro" => cmd_repro(&args),
         _ => usage(),
     }

@@ -50,6 +50,25 @@ pub fn shift_layout(
         .collect()
 }
 
+/// The §3.4 per-epoch rotation handoff pairs for a layout box of
+/// `n_servers` centred on `center`: each satellite of the exiting east
+/// column hands its chunks to the matching satellite of the entering
+/// west column, per plane.  Shared by the single-shell and federated KVC
+/// managers so their rotation semantics cannot diverge.
+pub fn rotation_handoff_pairs(
+    torus: &Torus,
+    center: SatId,
+    n_servers: usize,
+) -> Vec<(SatId, SatId)> {
+    let half = (super::box_width(n_servers) as i32 - 1) / 2;
+    let new_center = torus.offset(center, 0, -1);
+    let mut out = Vec::with_capacity(2 * half as usize + 1);
+    for dp in -half..=half {
+        out.push((torus.offset(center, dp, half), torus.offset(new_center, dp, -half)));
+    }
+    out
+}
+
 /// The chunk relocations needed to go from epoch `k` to `k + 1` for a
 /// migrating strategy: exactly the servers whose satellite leaves the box.
 pub fn migration_plan(

@@ -270,6 +270,86 @@ mod tests {
     }
 
     #[test]
+    fn isl_outage_heals_on_schedule() {
+        // emulate the harness's heal bookkeeping: two outages injected at
+        // different epochs, each healing `heal_epochs` later
+        let (_inner, t) = faulty();
+        let center = SatId::new(2, 9);
+        let far = SatId::new(2, 0); // westward along plane 2, outside LOS
+        let route = t.torus.route(center, far);
+        let heal_epochs = 2u64;
+        let mut active: Vec<(u64, SatId, SatId)> = Vec::new();
+        // epoch 1: first hop goes dark
+        active.push((1 + heal_epochs, center, route[0]));
+        t.fail_link(center, route[0]);
+        assert!(t.ping(far).is_err());
+        // epoch 2: a second, disjoint outage further down the route
+        active.push((2 + heal_epochs, route[1], route[2]));
+        t.fail_link(route[1], route[2]);
+        assert_eq!(t.failed_links(), 2);
+        for epoch in 3..=4u64 {
+            active.retain(|(heal_at, a, b)| {
+                if *heal_at <= epoch {
+                    t.restore_link(*a, *b);
+                    false
+                } else {
+                    true
+                }
+            });
+            if epoch == 3 {
+                // the first outage healed, the second still blocks
+                assert_eq!(t.failed_links(), 1);
+                assert!(t.ping(far).is_err(), "route still crosses the second outage");
+            } else {
+                assert_eq!(t.failed_links(), 0);
+                assert!(t.ping(far).is_ok(), "fully healed by epoch 4");
+            }
+        }
+    }
+
+    #[test]
+    fn blackholing_is_route_aware() {
+        // a lost satellite only blackholes destinations whose greedy
+        // route crosses it — traffic routed elsewhere is untouched
+        let (_inner, t) = faulty();
+        let center = SatId::new(2, 9);
+        let west_far = SatId::new(2, 0);
+        let east_far = SatId::new(2, 15);
+        let mid = t.torus.route(center, west_far)[1];
+        t.fail_satellite(mid);
+        assert!(t.ping(west_far).is_err(), "route west crosses the lost satellite");
+        assert!(t.ping(east_far).is_ok(), "route east never touches it");
+        assert_eq!(t.fault_stats.broken_route.load(Ordering::Relaxed), 1);
+        // the lost satellite itself is a dead destination, not a broken route
+        assert!(t.ping(mid).is_err());
+        assert_eq!(t.fault_stats.dead_destination.load(Ordering::Relaxed), 1);
+        t.restore_satellite(mid);
+        assert!(t.ping(west_far).is_ok());
+    }
+
+    #[test]
+    fn los_window_bypasses_a_broken_mesh() {
+        // sever every ISL out of the entry satellite: the mesh is gone,
+        // but destinations inside the reliable-LOS window still uplink
+        // directly (entry modelling mirrors InProcTransport)
+        let (_inner, t) = faulty();
+        let center = SatId::new(2, 9);
+        for nb in t.torus.neighbors(center) {
+            t.fail_link(center, nb);
+        }
+        // corner of the 5x5 LOS window: reachable without the mesh
+        let in_los = SatId::new(0, 7);
+        assert!(t.ping(in_los).is_ok(), "direct uplink ignores ISL state");
+        // one column past the window: must ride the dead mesh
+        let outside = SatId::new(0, 6);
+        assert!(t.ping(outside).is_err());
+        // a dead satellite inside the window is still unreachable: the
+        // bypass skips the mesh, not the destination's own liveness
+        t.fail_satellite(in_los);
+        assert!(t.ping(in_los).is_err());
+    }
+
+    #[test]
     fn clear_faults_heals_everything() {
         let (_inner, t) = faulty();
         t.fail_satellite(SatId::new(0, 0));

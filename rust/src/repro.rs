@@ -152,15 +152,17 @@ pub fn fig16_summary() -> String {
 }
 
 /// The scenario-harness reports: every built-in scenario (the paper's
-/// 19x5 testbed plus the Starlink- and Kuiper-like mega shells) run at a
-/// fixed seed, one metrics-JSON line each.  Deterministic: re-running
-/// produces byte-identical output.
+/// 19x5 testbed, the Starlink- and Kuiper-like mega shells, and the
+/// federated dual-shell run) at a fixed seed, one metrics-JSON line
+/// each.  Deterministic: re-running produces byte-identical output.
 pub fn scenarios() -> String {
     let mut out = String::new();
     for spec in crate::sim::scenario::ScenarioSpec::builtin(42) {
         let report = crate::sim::harness::run_scenario(&spec);
         let _ = writeln!(out, "{}", report.to_json_string());
     }
+    let fed = crate::sim::scenario::FederatedScenarioSpec::federated_dual_shell(42);
+    let _ = writeln!(out, "{}", crate::sim::harness::run_federated_scenario(&fed).to_json_string());
     out
 }
 
@@ -266,8 +268,8 @@ mod tests {
     #[test]
     fn scenarios_artifact_has_one_line_per_builtin() {
         let text = scenarios();
-        assert_eq!(text.trim().lines().count(), 3);
-        for name in ["paper-19x5", "starlink-shell", "kuiper-shell"] {
+        assert_eq!(text.trim().lines().count(), 4);
+        for name in ["paper-19x5", "starlink-shell", "kuiper-shell", "federated-dual-shell"] {
             assert!(text.contains(name), "{name} missing");
         }
     }

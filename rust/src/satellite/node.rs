@@ -5,6 +5,7 @@
 //! is identical across transports (the paper's cFS app, minus cFS).
 
 use crate::constellation::topology::{SatId, Torus};
+use crate::kvc::chunk::ChunkKey;
 use crate::kvc::eviction::EvictionPolicy;
 use crate::net::messages::{Envelope, Request, Response};
 use crate::satellite::store::{ChunkStore, StoreStats};
@@ -49,6 +50,14 @@ impl Node {
         let n = store.len() as u32;
         store.drain_all();
         n
+    }
+
+    /// Take every stored chunk out, key-sorted (deterministic) — the
+    /// evacuation drain used by cross-shell handover, where the receiving
+    /// satellite lives on a *different* torus and the in-fleet
+    /// [`Request::Migrate`] side-effect delivery cannot reach it.
+    pub fn drain_chunks(&self) -> Vec<(ChunkKey, Vec<u8>)> {
+        self.store.lock().unwrap().drain_all()
     }
 
     /// Handle a request addressed to this node.  Returns the response and

@@ -1,0 +1,362 @@
+//! Scenario-diff: compare two scenario metrics JSON files and report
+//! per-metric deltas, flagging regressions.
+//!
+//! A metrics file holds one JSON object per line (the format
+//! `skymemory scenario`, `repro::scenarios` and the sweep example emit);
+//! objects pair up by their `"name"` field.  Nested objects (`kvc`,
+//! `shells[i]`) are flattened with dotted keys.  Direction-aware keys
+//! decide what counts as a regression: hit rates falling or latencies /
+//! failure counters rising; everything else is reported as a neutral
+//! delta.  `skymemory scenario --diff a.json b.json` exits nonzero when
+//! regressions are found, so the tool gates CI runs across commits.
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Metrics where *bigger* is better (suffix match on flattened keys).
+const HIGHER_BETTER: &[&str] =
+    &["block_hit_rate", "hit_rate", "blocks_hit", "prefix_hits", "blocks_fetched"];
+
+/// Metrics where *smaller* is better (suffix match on flattened keys).
+const LOWER_BETTER: &[&str] = &[
+    "net_mean_ms",
+    "net_p50_ms",
+    "net_p99_ms",
+    "net_worst_ms",
+    "failed_writes",
+    "failed_migrations",
+    "blackholed_requests",
+    "broken_blocks",
+    "evicted_blocks",
+    "evicted_chunks",
+];
+
+/// Comparison tolerance: deltas at or below this are noise, not changes.
+const EPS: f64 = 1e-9;
+
+/// One metric's before/after pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricDelta {
+    /// Scenario name the metric belongs to.
+    pub scenario: String,
+    /// Flattened metric key (e.g. `kvc.prefix_hits`, `shells.1.hit_rate`).
+    pub key: String,
+    pub a: f64,
+    pub b: f64,
+    pub regression: bool,
+}
+
+impl MetricDelta {
+    pub fn delta(&self) -> f64 {
+        self.b - self.a
+    }
+}
+
+/// The full comparison of two metrics files.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DiffReport {
+    /// Metrics whose value changed (beyond tolerance), in deterministic
+    /// (scenario, key) order.
+    pub deltas: Vec<MetricDelta>,
+    /// Scenarios present on only one side.  A scenario that disappears
+    /// from the second file is a regression for the same reason a
+    /// dropped metric key is: the gate cannot be passed by deletion.
+    pub only_in_a: Vec<String>,
+    pub only_in_b: Vec<String>,
+    /// (scenario, key) pairs present in the first file but not the second
+    /// — a dropped direction-tracked metric counts as a regression (a
+    /// file cannot pass the gate by deleting its bad numbers).
+    pub keys_only_in_a: Vec<(String, String)>,
+    /// (scenario, key) pairs present only in the second file.
+    pub keys_only_in_b: Vec<(String, String)>,
+}
+
+impl DiffReport {
+    pub fn has_regressions(&self) -> bool {
+        self.deltas.iter().any(|d| d.regression)
+            || self.keys_only_in_a.iter().any(|(_, k)| direction(k).is_some())
+            || !self.only_in_a.is_empty()
+    }
+
+    pub fn regressions(&self) -> impl Iterator<Item = &MetricDelta> {
+        self.deltas.iter().filter(|d| d.regression)
+    }
+
+    /// Human-readable rendering, one line per changed metric.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for name in &self.only_in_a {
+            let _ = writeln!(out, "! {name}: only in the first file");
+        }
+        for name in &self.only_in_b {
+            let _ = writeln!(out, "+ {name}: only in the second file");
+        }
+        for (scenario, key) in &self.keys_only_in_a {
+            let marker = if direction(key).is_some() { "!" } else { "-" };
+            let _ = writeln!(out, "{marker} {scenario}/{key}: missing in the second file");
+        }
+        for (scenario, key) in &self.keys_only_in_b {
+            let _ = writeln!(out, "+ {scenario}/{key}: only in the second file");
+        }
+        for d in &self.deltas {
+            let marker = if d.regression { "!" } else { " " };
+            let _ = writeln!(
+                out,
+                "{marker} {}/{}: {} -> {} ({:+})",
+                d.scenario,
+                d.key,
+                d.a,
+                d.b,
+                d.delta()
+            );
+        }
+        let nothing = self.deltas.is_empty()
+            && self.only_in_a.is_empty()
+            && self.only_in_b.is_empty()
+            && self.keys_only_in_a.is_empty()
+            && self.keys_only_in_b.is_empty();
+        if nothing {
+            out.push_str("no differences\n");
+        } else {
+            let regressions = self.regressions().count()
+                + self.keys_only_in_a.iter().filter(|(_, k)| direction(k).is_some()).count()
+                + self.only_in_a.len();
+            let _ =
+                writeln!(out, "{} metrics changed, {} regressions", self.deltas.len(), regressions);
+        }
+        out
+    }
+}
+
+fn direction(key: &str) -> Option<bool> {
+    // Some(true) = higher is better, Some(false) = lower is better
+    let leaf = key.rsplit('.').next().unwrap_or(key);
+    if HIGHER_BETTER.contains(&leaf) {
+        Some(true)
+    } else if LOWER_BETTER.contains(&leaf) {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// Flatten a JSON value into (dotted key, number) pairs; strings and
+/// booleans are skipped (the `name` key is the pairing handle, not a
+/// metric).
+fn flatten(prefix: &str, j: &Json, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Num(v) => out.push((prefix.to_string(), *v)),
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let key = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(&key, v, out);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                flatten(&format!("{prefix}.{i}"), v, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Parse one metrics file: one JSON object per nonempty line, keyed by its
+/// `"name"` (falling back to the line number).  A name that repeats
+/// within a file (e.g. the same scenario at several seeds) gets a `#k`
+/// occurrence suffix, so pairing across files stays positional per name
+/// instead of silently comparing everything against the first occurrence.
+fn parse_metrics(text: &str) -> Result<Vec<(String, Vec<(String, f64)>)>> {
+    let mut out: Vec<(String, Vec<(String, f64)>)> = Vec::new();
+    let mut seen: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        if !matches!(j, Json::Obj(_)) {
+            bail!("line {}: expected a JSON object", i + 1);
+        }
+        let base = j
+            .get("name")
+            .and_then(|n| n.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("line-{}", i + 1));
+        let count = seen.entry(base.clone()).or_insert(0);
+        *count += 1;
+        let name = if *count == 1 { base } else { format!("{base}#{count}") };
+        let mut flat = Vec::new();
+        flatten("", &j, &mut flat);
+        out.push((name, flat));
+    }
+    Ok(out)
+}
+
+/// Diff two metrics files (the raw text of each).
+pub fn diff_metrics(a_text: &str, b_text: &str) -> Result<DiffReport> {
+    let a = parse_metrics(a_text)?;
+    let b = parse_metrics(b_text)?;
+    let mut report = DiffReport::default();
+    for (name, _) in &a {
+        if !b.iter().any(|(n, _)| n == name) {
+            report.only_in_a.push(name.clone());
+        }
+    }
+    for (name, _) in &b {
+        if !a.iter().any(|(n, _)| n == name) {
+            report.only_in_b.push(name.clone());
+        }
+    }
+    for (name, a_flat) in &a {
+        let Some((_, b_flat)) = b.iter().find(|(n, _)| n == name) else { continue };
+        for (key, _) in b_flat {
+            if !a_flat.iter().any(|(k, _)| k == key) {
+                report.keys_only_in_b.push((name.clone(), key.clone()));
+            }
+        }
+        for (key, av) in a_flat {
+            let Some((_, bv)) = b_flat.iter().find(|(k, _)| k == key) else {
+                report.keys_only_in_a.push((name.clone(), key.clone()));
+                continue;
+            };
+            let delta = bv - av;
+            if delta.abs() <= EPS {
+                continue;
+            }
+            let regression = match direction(key) {
+                Some(true) => delta < -EPS,
+                Some(false) => delta > EPS,
+                None => false,
+            };
+            report.deltas.push(MetricDelta {
+                scenario: name.clone(),
+                key: key.clone(),
+                a: *av,
+                b: *bv,
+                regression,
+            });
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: &str = r#"{"name":"s1","block_hit_rate":0.8,"net_p99_ms":12.5,"requests":100,"kvc":{"prefix_hits":40}}"#;
+
+    #[test]
+    fn identical_files_have_no_differences() {
+        let r = diff_metrics(A, A).unwrap();
+        assert!(r.deltas.is_empty());
+        assert!(!r.has_regressions());
+        assert_eq!(r.render(), "no differences\n");
+    }
+
+    #[test]
+    fn hit_rate_drop_is_a_regression() {
+        let b = A.replace("0.8", "0.7");
+        let r = diff_metrics(A, &b).unwrap();
+        assert!(r.has_regressions());
+        let reg: Vec<_> = r.regressions().collect();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg[0].key, "block_hit_rate");
+        assert!(r.render().contains("! s1/block_hit_rate: 0.8 -> 0.7"));
+    }
+
+    #[test]
+    fn latency_rise_is_a_regression_and_improvement_is_not() {
+        let worse = A.replace("12.5", "99.5");
+        assert!(diff_metrics(A, &worse).unwrap().has_regressions());
+        let better = A.replace("12.5", "2.5");
+        let r = diff_metrics(A, &better).unwrap();
+        assert_eq!(r.deltas.len(), 1, "the improvement is still reported");
+        assert!(!r.has_regressions());
+    }
+
+    #[test]
+    fn neutral_metrics_change_without_regressing() {
+        let b = A.replace("\"requests\":100", "\"requests\":120");
+        let r = diff_metrics(A, &b).unwrap();
+        assert_eq!(r.deltas.len(), 1);
+        assert_eq!(r.deltas[0].key, "requests");
+        assert!(!r.has_regressions());
+    }
+
+    #[test]
+    fn nested_keys_flatten_with_direction() {
+        let b = A.replace("\"prefix_hits\":40", "\"prefix_hits\":10");
+        let r = diff_metrics(A, &b).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.deltas[0].key, "kvc.prefix_hits");
+    }
+
+    #[test]
+    fn shell_arrays_flatten_by_index() {
+        let a = r#"{"name":"fed","shells":[{"hit_rate":0.9},{"hit_rate":0.5}]}"#;
+        let b = r#"{"name":"fed","shells":[{"hit_rate":0.9},{"hit_rate":0.2}]}"#;
+        let r = diff_metrics(a, b).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.deltas[0].key, "shells.1.hit_rate");
+    }
+
+    #[test]
+    fn dropped_tracked_metric_is_a_regression() {
+        // deleting a bad number cannot pass the gate
+        let b = A.replace("\"block_hit_rate\":0.8,", "");
+        let r = diff_metrics(A, &b).unwrap();
+        assert_eq!(r.keys_only_in_a, vec![("s1".to_string(), "block_hit_rate".to_string())]);
+        assert!(r.has_regressions());
+        assert!(r.render().contains("! s1/block_hit_rate: missing in the second file"));
+        // dropping an untracked metric is reported but does not regress
+        let b2 = A.replace("\"requests\":100,", "");
+        let r2 = diff_metrics(A, &b2).unwrap();
+        assert!(!r2.has_regressions());
+        assert!(r2.render().contains("- s1/requests: missing in the second file"));
+        // a brand-new metric on the right side is listed too
+        let r3 = diff_metrics(&b2, A).unwrap();
+        assert_eq!(r3.keys_only_in_b, vec![("s1".to_string(), "requests".to_string())]);
+        assert!(!r3.has_regressions());
+    }
+
+    #[test]
+    fn mismatched_scenarios_are_listed_and_drops_regress() {
+        let b = r#"{"name":"s2","block_hit_rate":0.8}"#;
+        let r = diff_metrics(A, b).unwrap();
+        assert_eq!(r.only_in_a, vec!["s1"]);
+        assert_eq!(r.only_in_b, vec!["s2"]);
+        assert!(r.has_regressions(), "a dropped scenario cannot pass the gate");
+        assert!(r.render().contains("! s1: only in the first file"));
+        // a purely-added scenario is fine
+        let both = format!("{A}\n{b}\n");
+        let r2 = diff_metrics(A, &both).unwrap();
+        assert_eq!(r2.only_in_b, vec!["s2"]);
+        assert!(!r2.has_regressions());
+    }
+
+    #[test]
+    fn duplicate_names_pair_positionally() {
+        // two runs of the same scenario per file: second pairs with second
+        let a = format!("{A}\n{}\n", A.replace("0.8", "0.6"));
+        let b = format!("{A}\n{}\n", A.replace("0.8", "0.5"));
+        let r = diff_metrics(&a, &b).unwrap();
+        let reg: Vec<_> = r.regressions().collect();
+        assert_eq!(reg.len(), 1, "{r:?}");
+        assert_eq!(reg[0].scenario, "s1#2");
+        assert_eq!((reg[0].a, reg[0].b), (0.6, 0.5));
+        // an extra occurrence on one side surfaces as a missing scenario
+        let r2 = diff_metrics(&a, A).unwrap();
+        assert_eq!(r2.only_in_a, vec!["s1#2"]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_skipped_and_garbage_rejected() {
+        let with_comments = format!("# a sweep header\n\n{A}\n");
+        assert!(diff_metrics(&with_comments, A).unwrap().deltas.is_empty());
+        assert!(diff_metrics("not json", A).is_err());
+        assert!(diff_metrics("[1,2]", A).is_err());
+    }
+}

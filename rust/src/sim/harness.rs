@@ -18,14 +18,18 @@
 
 use crate::constellation::los::LosGrid;
 use crate::constellation::topology::{SatId, Torus};
+use crate::federation::manager::{EvacSummary, FederatedKvcManager};
+use crate::federation::transport::{FederatedTransport, ShellLink};
+use crate::federation::{Shell, ShellId};
 use crate::kvc::block::{block_hashes, BlockHash};
 use crate::kvc::manager::{KvcManager, KvcStatsSnapshot};
+use crate::mapping::box_width;
 use crate::net::faults::FaultyTransport;
 use crate::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
 use crate::satellite::fleet::Fleet;
 use crate::sim::config::SimConfig;
 use crate::sim::latency::worst_case_latency;
-use crate::sim::scenario::ScenarioSpec;
+use crate::sim::scenario::{FailurePlan, FederatedScenarioSpec, ScenarioSpec, ShellSpec};
 use crate::sim::workload;
 use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::XorShift64;
@@ -164,6 +168,71 @@ fn pick_live_satellite(
     None
 }
 
+/// One epoch of a random [`FailurePlan`] against one shell's stack: heal
+/// expired ISL outages, inject satellite losses and new outages, and
+/// (per plan) re-home the ground station.  Shared by the single-shell
+/// and federated harnesses so the injection semantics cannot diverge.
+/// Returns the (satellite losses, ISL outages, ground handovers)
+/// injected this epoch.
+#[allow(clippy::too_many_arguments)]
+fn inject_failures_epoch(
+    rng: &mut XorShift64,
+    torus: &Torus,
+    fleet: &Fleet,
+    faults: &FaultyTransport,
+    ground: &GroundView,
+    plan: &FailurePlan,
+    active_outages: &mut Vec<(u64, SatId, SatId)>,
+    epoch: u64,
+) -> (u64, u64, u64) {
+    let (mut losses, mut outages, mut handovers) = (0u64, 0u64, 0u64);
+    active_outages.retain(|(heal_at, a, b)| {
+        if *heal_at <= epoch {
+            faults.restore_link(*a, *b);
+            false
+        } else {
+            true
+        }
+    });
+    for _ in 0..plan.sat_losses_per_epoch {
+        if let Some(sat) = pick_live_satellite(rng, torus, faults, ground.center()) {
+            fleet.node(sat).clear();
+            faults.fail_satellite(sat);
+            losses += 1;
+        }
+    }
+    for _ in 0..plan.isl_outages_per_epoch {
+        // draw an edge that is not already dark, so overlapping outages
+        // never share a heal entry
+        for _ in 0..8 {
+            let a = sat_at(torus, rng.next_range(torus.len()));
+            let b = torus.neighbors(a)[rng.next_range(4)];
+            if active_outages.iter().any(|(_, x, y)| (*x == a && *y == b) || (*x == b && *y == a))
+            {
+                continue;
+            }
+            faults.fail_link(a, b);
+            active_outages.push((epoch + plan.isl_outage_heal_epochs, a, b));
+            outages += 1;
+            break;
+        }
+    }
+    if plan.handover_every_epochs > 0 && epoch % plan.handover_every_epochs == 0 {
+        let cur = ground.center();
+        for _ in 0..32 {
+            let dp = rng.next_range(5) as i32 - 2;
+            let ds = rng.next_range(7) as i32 - 3;
+            let target = torus.offset(cur, dp, ds);
+            if !faults.is_satellite_failed(target) {
+                ground.handover(target);
+                handovers += 1;
+                break;
+            }
+        }
+    }
+    (losses, outages, handovers)
+}
+
 fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
@@ -172,23 +241,45 @@ fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
     sorted[idx]
 }
 
-/// The §4 closed-form worst case for this scenario's shape (reported next
-/// to the measured numbers so scale-out claims stay anchored to Fig. 16).
-fn analytic_worst_case_s(spec: &ScenarioSpec) -> f64 {
-    let blocks_per_prompt = (spec.workload.context_chars / spec.block_tokens).max(1);
+/// The §4 closed-form worst case for one constellation shape (reported
+/// next to the measured numbers so scale-out claims stay anchored to
+/// Fig. 16).  Shared by the single-shell and per-federated-shell reports.
+#[allow(clippy::too_many_arguments)]
+fn analytic_shape_worst_case_s(
+    strategy: crate::mapping::Strategy,
+    altitude_km: f64,
+    planes: usize,
+    sats_per_plane: usize,
+    n_servers: usize,
+    kvc_bytes: usize,
+    chunk_bytes: usize,
+) -> f64 {
     let cfg = SimConfig {
-        strategy: spec.strategy,
-        altitude_km: spec.altitude_km,
-        n_servers: spec.n_servers,
-        kvc_bytes: spec.quantizer.encoded_len(spec.kv_values_per_block) * blocks_per_prompt,
-        chunk_bytes: spec.chunk_size,
+        strategy,
+        altitude_km,
+        n_servers,
+        kvc_bytes,
+        chunk_bytes,
         chunk_processing_s: 0.002,
-        max_satellites: spec.sats_per_plane,
-        max_orbs: spec.planes,
+        max_satellites: sats_per_plane,
+        max_orbs: planes,
         drift_epochs: 1,
         reliable_los_half: LOS_HALF,
     };
     worst_case_latency(&cfg).total_s
+}
+
+fn analytic_worst_case_s(spec: &ScenarioSpec) -> f64 {
+    let blocks_per_prompt = (spec.workload.context_chars / spec.block_tokens).max(1);
+    analytic_shape_worst_case_s(
+        spec.strategy,
+        spec.altitude_km,
+        spec.planes,
+        spec.sats_per_plane,
+        spec.n_servers,
+        spec.quantizer.encoded_len(spec.kv_values_per_block) * blocks_per_prompt,
+        spec.chunk_size,
+    )
 }
 
 /// Run one scenario end to end and return its metrics report.
@@ -230,54 +321,19 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     for epoch in 0..spec.epochs {
         // --- failure injection (epoch 0 populates the cache cleanly) ----
         if epoch > 0 && !spec.failures.is_none() {
-            let plan = spec.failures;
-            active_outages.retain(|(heal_at, a, b)| {
-                if *heal_at <= epoch {
-                    faults.restore_link(*a, *b);
-                    false
-                } else {
-                    true
-                }
-            });
-            for _ in 0..plan.sat_losses_per_epoch {
-                if let Some(sat) =
-                    pick_live_satellite(&mut rng, &torus, &faults, inproc.ground.center())
-                {
-                    fleet.node(sat).clear();
-                    faults.fail_satellite(sat);
-                    sat_losses += 1;
-                }
-            }
-            for _ in 0..plan.isl_outages_per_epoch {
-                // draw an edge that is not already dark, so overlapping
-                // outages never share a heal entry
-                for _ in 0..8 {
-                    let a = sat_at(&torus, rng.next_range(torus.len()));
-                    let b = torus.neighbors(a)[rng.next_range(4)];
-                    if active_outages.iter().any(|(_, x, y)| {
-                        (*x == a && *y == b) || (*x == b && *y == a)
-                    }) {
-                        continue;
-                    }
-                    faults.fail_link(a, b);
-                    active_outages.push((epoch + plan.isl_outage_heal_epochs, a, b));
-                    isl_outages += 1;
-                    break;
-                }
-            }
-            if plan.handover_every_epochs > 0 && epoch % plan.handover_every_epochs == 0 {
-                let cur = inproc.ground.center();
-                for _ in 0..32 {
-                    let dp = rng.next_range(5) as i32 - 2;
-                    let ds = rng.next_range(7) as i32 - 3;
-                    let target = torus.offset(cur, dp, ds);
-                    if !faults.is_satellite_failed(target) {
-                        inproc.ground.handover(target);
-                        handovers += 1;
-                        break;
-                    }
-                }
-            }
+            let (l, o, h) = inject_failures_epoch(
+                &mut rng,
+                &torus,
+                &fleet,
+                &faults,
+                &inproc.ground,
+                &spec.failures,
+                &mut active_outages,
+                epoch,
+            );
+            sat_losses += l;
+            isl_outages += o;
+            handovers += h;
         }
 
         // --- serve this epoch's slice of the workload -------------------
@@ -376,6 +432,381 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     }
 }
 
+// ======================================================================
+// Federated scenarios
+// ======================================================================
+
+/// Per-shell slice of a federated report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederatedShellReport {
+    pub name: String,
+    pub planes: usize,
+    pub sats_per_plane: usize,
+    pub altitude_km: f64,
+    /// Blocks homed on this shell by placement (stores only; handover
+    /// re-homing is reported federation-wide).
+    pub blocks_stored: u64,
+    /// Block fetches attempted against / served by this shell.
+    pub fetch_attempts: u64,
+    pub blocks_hit: u64,
+    pub hit_rate: f64,
+    pub placed_bytes: u64,
+    pub isl_hops: u64,
+    pub isl_bytes: u64,
+    pub evicted_chunks: u64,
+    pub evicted_blocks: u64,
+    pub failed_satellites: u64,
+    pub analytic_worst_case_s: f64,
+}
+
+impl FederatedShellReport {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("planes", n(self.planes as f64)),
+            ("sats_per_plane", n(self.sats_per_plane as f64)),
+            ("altitude_km", n(self.altitude_km)),
+            ("blocks_stored", n(self.blocks_stored as f64)),
+            ("fetch_attempts", n(self.fetch_attempts as f64)),
+            ("blocks_hit", n(self.blocks_hit as f64)),
+            ("hit_rate", n(self.hit_rate)),
+            ("placed_bytes", n(self.placed_bytes as f64)),
+            ("isl_hops", n(self.isl_hops as f64)),
+            ("isl_bytes", n(self.isl_bytes as f64)),
+            ("evicted_chunks", n(self.evicted_chunks as f64)),
+            ("evicted_blocks", n(self.evicted_blocks as f64)),
+            ("failed_satellites", n(self.failed_satellites as f64)),
+            ("analytic_worst_case_s", n(self.analytic_worst_case_s)),
+        ])
+    }
+}
+
+/// Metrics of one federated scenario run; renders to byte-stable JSON
+/// exactly like [`ScenarioReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederatedScenarioReport {
+    pub name: String,
+    pub seed: u64,
+    pub epochs: u64,
+    pub n_servers: usize,
+    /// Name of the static primary shell (cheapest by placement cost).
+    pub primary_shell: String,
+    pub primary_kill_epoch: u64,
+    pub requests: u64,
+    pub blocks_requested: u64,
+    pub blocks_hit: u64,
+    pub block_hit_rate: f64,
+    pub failed_writes: u64,
+    /// Blocks placed off the cheapest shell (saturation/failure spill).
+    pub spillovers: u64,
+    /// Proactive + reactive inter-shell re-homings.
+    pub handovers: u64,
+    pub proactive_handover_blocks: u64,
+    pub reactive_rehomed_blocks: u64,
+    /// Chunks / payload bytes carried over the inter-shell links.
+    pub inter_shell_chunks: u64,
+    pub inter_shell_bytes: u64,
+    pub broken_blocks: u64,
+    pub migrated_chunks: u64,
+    pub failed_migrations: u64,
+    pub sat_losses: u64,
+    pub isl_outages: u64,
+    /// Ground-station handovers on the primary shell
+    /// ([`crate::sim::scenario::FailurePlan::handover_every_epochs`]).
+    pub ground_handovers: u64,
+    /// Satellites of the primary's layout-box kill band.
+    pub box_killed_sats: u64,
+    pub blackholed_requests: u64,
+    pub net_mean_ms: f64,
+    pub net_p50_ms: f64,
+    pub net_p99_ms: f64,
+    pub net_worst_ms: f64,
+    pub shells: Vec<FederatedShellReport>,
+}
+
+impl FederatedScenarioReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("seed", n(self.seed as f64)),
+            ("epochs", n(self.epochs as f64)),
+            ("n_servers", n(self.n_servers as f64)),
+            ("primary_shell", s(&self.primary_shell)),
+            ("primary_kill_epoch", n(self.primary_kill_epoch as f64)),
+            ("requests", n(self.requests as f64)),
+            ("blocks_requested", n(self.blocks_requested as f64)),
+            ("blocks_hit", n(self.blocks_hit as f64)),
+            ("block_hit_rate", n(self.block_hit_rate)),
+            ("failed_writes", n(self.failed_writes as f64)),
+            ("spillovers", n(self.spillovers as f64)),
+            ("handovers", n(self.handovers as f64)),
+            ("proactive_handover_blocks", n(self.proactive_handover_blocks as f64)),
+            ("reactive_rehomed_blocks", n(self.reactive_rehomed_blocks as f64)),
+            ("inter_shell_chunks", n(self.inter_shell_chunks as f64)),
+            ("inter_shell_bytes", n(self.inter_shell_bytes as f64)),
+            ("broken_blocks", n(self.broken_blocks as f64)),
+            ("migrated_chunks", n(self.migrated_chunks as f64)),
+            ("failed_migrations", n(self.failed_migrations as f64)),
+            ("sat_losses", n(self.sat_losses as f64)),
+            ("isl_outages", n(self.isl_outages as f64)),
+            ("ground_handovers", n(self.ground_handovers as f64)),
+            ("box_killed_sats", n(self.box_killed_sats as f64)),
+            ("blackholed_requests", n(self.blackholed_requests as f64)),
+            ("net_mean_ms", n(self.net_mean_ms)),
+            ("net_p50_ms", n(self.net_p50_ms)),
+            ("net_p99_ms", n(self.net_p99_ms)),
+            ("net_worst_ms", n(self.net_worst_ms)),
+            ("shells", Json::Arr(self.shells.iter().map(|sh| sh.to_json()).collect())),
+        ])
+    }
+
+    /// The canonical byte-stable rendering of this report.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// The §4 closed-form worst case for one shell of a federated scenario.
+fn fed_shell_analytic(spec: &FederatedScenarioSpec, ss: &ShellSpec) -> f64 {
+    let blocks_per_prompt = (spec.workload.context_chars / spec.block_tokens).max(1);
+    analytic_shape_worst_case_s(
+        spec.strategy,
+        ss.altitude_km,
+        ss.planes,
+        ss.sats_per_plane,
+        spec.n_servers,
+        spec.quantizer.encoded_len(spec.kv_values_per_block) * blocks_per_prompt,
+        spec.chunk_size,
+    )
+}
+
+/// Build one shell's full single-shell stack for a federated run.
+fn build_shell_link(id: ShellId, ss: &ShellSpec, spec: &FederatedScenarioSpec) -> ShellLink {
+    let torus = ss.torus();
+    let geometry = ss.geometry();
+    let shell = Shell::new(id, &ss.name, torus, geometry);
+    let center0 = ss.initial_center();
+    let fleet = Arc::new(Fleet::new(torus, spec.sat_budget_bytes, spec.eviction));
+    let los = LosGrid::new(center0, LOS_HALF, LOS_HALF.min(ss.planes / 2));
+    let ground = GroundView::new(center0, &los, torus.sats_per_plane);
+    let mut link = LinkModel::laser_defaults(geometry);
+    link.sleep_scale = 0.0; // account latency, never sleep
+    let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, Some(link)));
+    let faults =
+        Arc::new(FaultyTransport::new(inproc.clone(), torus, los.half_slots, los.half_planes));
+    ShellLink { shell, fleet, inproc, faults }
+}
+
+/// Run one federated scenario end to end: multi-shell placement with
+/// spillover, random failures on the primary shell, the mid-run
+/// layout-box kill with proactive inter-shell evacuation, per-shell §3.4
+/// rotation migration, and per-shell metrics.  Deterministic: the same
+/// spec (same seed) produces byte-identical metrics JSON.
+pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenarioReport {
+    spec.validate();
+    let links: Vec<ShellLink> = spec
+        .shells
+        .iter()
+        .enumerate()
+        .map(|(i, ss)| build_shell_link(i as ShellId, ss, spec))
+        .collect();
+    let transport = Arc::new(FederatedTransport::new(links));
+    let manager = FederatedKvcManager::new(spec.kvc_config(), transport.clone(), spec.placement());
+    let primary = manager.primary_shell();
+    debug_assert_eq!(primary as usize, spec.primary_shell_index());
+
+    let mut rng = XorShift64::new(spec.seed ^ 0x5EED_FEDE_0A11_0F02);
+    let items = workload::generate(&spec.workload, spec.total_requests());
+
+    let mut blocks_requested = 0u64;
+    let mut blocks_hit = 0u64;
+    let mut failed_writes = 0u64;
+    let mut migrated_chunks = 0u64;
+    let mut failed_migrations = 0u64;
+    let mut sat_losses = 0u64;
+    let mut isl_outages = 0u64;
+    let mut ground_handovers = 0u64;
+    let mut box_killed_sats = 0u64;
+    let mut request_net_ns: Vec<u64> = Vec::with_capacity(items.len());
+    // (heal_at_epoch, a, b) for active ISL outages on the primary shell
+    let mut active_outages: Vec<(u64, SatId, SatId)> = Vec::new();
+    let half = (box_width(spec.n_servers) as i32 - 1) / 2;
+
+    for epoch in 0..spec.epochs {
+        // --- random failures on the primary shell (epoch 0 stays clean) -
+        if epoch > 0 && !spec.failures.is_none() {
+            let link = transport.link(primary);
+            let (l, o, h) = inject_failures_epoch(
+                &mut rng,
+                &link.shell.torus,
+                &link.fleet,
+                &link.faults,
+                &link.inproc.ground,
+                &spec.failures,
+                &mut active_outages,
+                epoch,
+            );
+            sat_losses += l;
+            isl_outages += o;
+            ground_handovers += h;
+        }
+
+        // --- scheduled whole-box kill: evacuate first, then go dark -----
+        if spec.primary_kill_epoch > 0 && epoch == spec.primary_kill_epoch {
+            if let Some(target) = manager.cheapest_live_shell_excluding(primary) {
+                // proactive handover: counted in the manager/transport
+                // stats (proactive_handover_blocks, inter_shell_*)
+                let _: EvacSummary = manager.evacuate_shell(primary, target, epoch);
+            }
+            let link = transport.link(primary);
+            let torus = link.shell.torus;
+            let center = transport.closest(primary);
+            // the box slides one slot west per epoch: kill the whole band
+            // it will sweep so the primary stays dark until the run ends
+            let remaining = (spec.epochs - epoch) as i32;
+            for dp in -half..=half {
+                for ds in (-half - remaining)..=half {
+                    let sat = torus.offset(center, dp, ds);
+                    if !link.faults.is_satellite_failed(sat) {
+                        link.fleet.node(sat).clear();
+                        link.faults.fail_satellite(sat);
+                        box_killed_sats += 1;
+                    }
+                }
+            }
+        }
+
+        // --- serve this epoch's slice of the workload -------------------
+        let lo = epoch as usize * spec.requests_per_epoch;
+        let hi = lo + spec.requests_per_epoch;
+        for item in &items[lo..hi] {
+            let tokens: Vec<i32> = item.prompt.bytes().map(|b| b as i32).collect();
+            let hashes = block_hashes(&tokens, spec.block_tokens);
+            if hashes.is_empty() {
+                continue;
+            }
+            blocks_requested += hashes.len() as u64;
+            let before_ns = transport.total_latency_ns();
+            let cached = manager.lookup(&hashes);
+            let fetched = if cached > 0 {
+                manager.fetch_prefix(&hashes, cached, epoch).unwrap_or(0)
+            } else {
+                0
+            };
+            blocks_hit += fetched as u64;
+            for b in fetched..hashes.len() {
+                let kv = block_values(&hashes[b], spec.kv_values_per_block);
+                if manager.put_block(&hashes, b, &kv, epoch).is_err() {
+                    failed_writes += 1;
+                }
+            }
+            let after_ns = transport.total_latency_ns();
+            request_net_ns.push(after_ns.saturating_sub(before_ns));
+        }
+
+        // --- rotate every shell: §3.4 migration, then the views move ----
+        for sid in 0..spec.shells.len() {
+            let sid = sid as ShellId;
+            let link = transport.link(sid);
+            for (from, to) in manager.migration_requests(sid) {
+                if link.faults.is_satellite_failed(to) {
+                    failed_migrations += 1;
+                    continue;
+                }
+                match link.faults.migrate(from, to) {
+                    Ok(moved) => migrated_chunks += moved as u64,
+                    Err(_) => failed_migrations += 1,
+                }
+            }
+        }
+        transport.set_epoch_all(epoch + 1);
+    }
+
+    let requests = request_net_ns.len() as u64;
+    let total_ns: u64 = request_net_ns.iter().sum();
+    let mut sorted_ns = request_net_ns;
+    sorted_ns.sort_unstable();
+    let to_ms = |ns: u64| ns as f64 / 1e6;
+
+    let shells = spec
+        .shells
+        .iter()
+        .enumerate()
+        .map(|(i, ss)| {
+            let link = transport.link(i as ShellId);
+            let counters = &manager.shell_counters()[i];
+            let (mut evicted_chunks, mut evicted_blocks) = (0u64, 0u64);
+            for node in link.fleet.nodes() {
+                let st = node.stats();
+                evicted_chunks += st.evicted_chunks;
+                evicted_blocks += st.evicted_blocks;
+            }
+            let fetch_attempts = counters.fetch_attempts.load(Ordering::Relaxed);
+            let hits = counters.blocks_hit.load(Ordering::Relaxed);
+            FederatedShellReport {
+                name: ss.name.clone(),
+                planes: ss.planes,
+                sats_per_plane: ss.sats_per_plane,
+                altitude_km: ss.altitude_km,
+                blocks_stored: counters.blocks_stored.load(Ordering::Relaxed),
+                fetch_attempts,
+                blocks_hit: hits,
+                hit_rate: if fetch_attempts == 0 {
+                    0.0
+                } else {
+                    hits as f64 / fetch_attempts as f64
+                },
+                placed_bytes: counters.placed_bytes.load(Ordering::Relaxed),
+                isl_hops: link.inproc.stats().isl_hops.load(Ordering::Relaxed),
+                isl_bytes: link.inproc.stats().isl_bytes.load(Ordering::Relaxed),
+                evicted_chunks,
+                evicted_blocks,
+                failed_satellites: link.faults.failed_satellites() as u64,
+                analytic_worst_case_s: fed_shell_analytic(spec, ss),
+            }
+        })
+        .collect();
+
+    let proactive = manager.stats.proactive_handover_blocks.load(Ordering::Relaxed);
+    let reactive = manager.stats.reactive_rehomed_blocks.load(Ordering::Relaxed);
+    FederatedScenarioReport {
+        name: spec.name.clone(),
+        seed: spec.seed,
+        epochs: spec.epochs,
+        n_servers: spec.n_servers,
+        primary_shell: spec.shells[primary as usize].name.clone(),
+        primary_kill_epoch: spec.primary_kill_epoch,
+        requests,
+        blocks_requested,
+        blocks_hit,
+        block_hit_rate: if blocks_requested == 0 {
+            0.0
+        } else {
+            blocks_hit as f64 / blocks_requested as f64
+        },
+        failed_writes,
+        spillovers: manager.stats.spillovers.load(Ordering::Relaxed),
+        handovers: proactive + reactive,
+        proactive_handover_blocks: proactive,
+        reactive_rehomed_blocks: reactive,
+        inter_shell_chunks: transport.stats.inter_shell_chunks.load(Ordering::Relaxed),
+        inter_shell_bytes: transport.stats.inter_shell_bytes.load(Ordering::Relaxed),
+        broken_blocks: manager.stats.broken_blocks.load(Ordering::Relaxed),
+        migrated_chunks,
+        failed_migrations,
+        sat_losses,
+        isl_outages,
+        ground_handovers,
+        box_killed_sats,
+        blackholed_requests: transport.total_blackholed(),
+        net_mean_ms: if requests == 0 { 0.0 } else { to_ms(total_ns / requests) },
+        net_p50_ms: to_ms(percentile_ns(&sorted_ns, 0.50)),
+        net_p99_ms: to_ms(percentile_ns(&sorted_ns, 0.99)),
+        net_worst_ms: to_ms(sorted_ns.last().copied().unwrap_or(0)),
+        shells,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -432,6 +863,81 @@ mod tests {
         let r = run_scenario(&spec);
         assert!(r.migrated_chunks > 0, "{r:?}");
         assert_eq!(r.failed_migrations, 0);
+    }
+
+    /// A scaled-down federation that runs in milliseconds: two small
+    /// shells, 4 epochs, kill at epoch 2.
+    fn tiny_fed(seed: u64) -> FederatedScenarioSpec {
+        let mut spec = FederatedScenarioSpec::federated_dual_shell(seed);
+        spec.shells[0] =
+            ShellSpec { name: "a-550".into(), planes: 9, sats_per_plane: 19, altitude_km: 550.0 };
+        spec.shells[1] =
+            ShellSpec { name: "b-630".into(), planes: 7, sats_per_plane: 17, altitude_km: 630.0 };
+        spec.epochs = 4;
+        spec.requests_per_epoch = 8;
+        spec.primary_kill_epoch = 2;
+        spec
+    }
+
+    #[test]
+    fn federated_same_seed_same_report() {
+        let spec = tiny_fed(11);
+        let a = run_federated_scenario(&spec);
+        let b = run_federated_scenario(&spec);
+        assert_eq!(a, b);
+        assert_eq!(a.to_json_string(), b.to_json_string());
+    }
+
+    #[test]
+    fn federated_kill_hands_over_to_the_secondary() {
+        let spec = tiny_fed(5);
+        let r = run_federated_scenario(&spec);
+        assert!(r.requests > 0);
+        assert!(r.box_killed_sats > 0, "the primary box must go dark: {r:?}");
+        assert!(r.handovers > 0, "hot blocks must re-home: {r:?}");
+        assert!(r.proactive_handover_blocks > 0, "{r:?}");
+        assert!(r.inter_shell_bytes > 0, "evacuation rides the inter-shell links: {r:?}");
+        assert!(r.block_hit_rate > 0.0, "{r:?}");
+        // both shells served fetches by the end of the run
+        assert_eq!(r.shells.len(), 2);
+        let primary = r.shells.iter().find(|sh| sh.name == r.primary_shell).unwrap();
+        let secondary = r.shells.iter().find(|sh| sh.name != r.primary_shell).unwrap();
+        assert!(primary.blocks_stored > 0);
+        assert!(secondary.blocks_hit > 0, "post-kill hits come from the secondary: {r:?}");
+    }
+
+    #[test]
+    fn federated_beats_the_single_shell_baseline() {
+        let spec = tiny_fed(9);
+        let fed = run_federated_scenario(&spec);
+        let base = run_federated_scenario(&spec.baseline_single_shell());
+        assert_eq!(fed.requests, base.requests, "same workload either way");
+        assert!(
+            fed.block_hit_rate > base.block_hit_rate,
+            "federation must out-hit the dead single shell: {} vs {}",
+            fed.block_hit_rate,
+            base.block_hit_rate
+        );
+        assert_eq!(base.handovers, 0, "nowhere to hand over to");
+        assert_eq!(base.inter_shell_bytes, 0);
+    }
+
+    #[test]
+    fn federated_report_json_has_per_shell_metrics() {
+        let r = run_federated_scenario(&tiny_fed(2));
+        let j = r.to_json_string();
+        for key in [
+            "\"primary_shell\"",
+            "\"handovers\"",
+            "\"inter_shell_bytes\"",
+            "\"spillovers\"",
+            "\"shells\"",
+            "\"hit_rate\"",
+            "\"placed_bytes\"",
+            "\"analytic_worst_case_s\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
     }
 
     #[test]

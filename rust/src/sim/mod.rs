@@ -7,18 +7,23 @@
 //! * [`workload`] — shared-prefix prompt generation.
 //! * [`scenario`] — named, seed-driven scenario specs (the paper's 19x5
 //!   testbed, a Starlink-like 72x22 mega-shell, a Kuiper-like 34x34
-//!   shell) with failure-injection plans.
+//!   shell, and the federated dual-shell scenario) with
+//!   failure-injection plans.
 //! * [`harness`] — runs a scenario end to end over the real protocol
-//!   stack (fleet + mapping + migration + KVC manager) and emits a
-//!   byte-stable metrics JSON report.
+//!   stack (fleet + mapping + migration + KVC manager; for federated
+//!   scenarios, the [`crate::federation`] stack) and emits a byte-stable
+//!   metrics JSON report.
+//! * [`diff`] — the scenario-diff tool: per-metric deltas between two
+//!   metrics JSON files with regression detection.
 
 pub mod config;
+pub mod diff;
 pub mod harness;
 pub mod latency;
 pub mod scenario;
 pub mod workload;
 
 pub use config::SimConfig;
-pub use harness::{run_scenario, ScenarioReport};
+pub use harness::{run_federated_scenario, run_scenario, FederatedScenarioReport, ScenarioReport};
 pub use latency::{worst_case_latency, LatencyBreakdown};
-pub use scenario::{FailureKind, FailurePlan, ScenarioSpec};
+pub use scenario::{FailureKind, FailurePlan, FederatedScenarioSpec, ScenarioSpec};

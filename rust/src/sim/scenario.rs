@@ -9,7 +9,7 @@
 //! nondeterminism (hash-map iteration order, wall-clock time, thread
 //! scheduling observable at block granularity).
 //!
-//! Three scenarios ship built in:
+//! Four scenarios ship built in:
 //!
 //! * `paper-19x5` — the paper's NUC-testbed shape (§5): 5 planes x 19
 //!   satellites at 550 km, 9 virtual servers, heavy per-satellite memory
@@ -19,9 +19,18 @@
 //!   satellite losses, ISL outages and a ground-station handover.
 //! * `kuiper-shell` — 34 planes x 34 satellites at 630 km (Kuiper's
 //!   first shell), 49 servers, moderate failure pressure.
+//! * `federated-dual-shell` — a two-shell federation (the Starlink-like
+//!   72x22 shell at 550 km plus the Kuiper-like 34x34 shell at 630 km)
+//!   run through [`crate::federation`]: shell-aware placement with
+//!   spillover, random failures on the primary shell, and a mid-run kill
+//!   of the primary shell's layout box that forces an inter-shell
+//!   handover of the hot chunks (see
+//!   [`FederatedScenarioSpec::federated_dual_shell`] and
+//!   [`super::harness::run_federated_scenario`]).
 
 use crate::constellation::geometry::Geometry;
 use crate::constellation::topology::{SatId, Torus};
+use crate::federation::placement::{cheapest_index, shell_cost, PlacementPolicy};
 use crate::kvc::eviction::EvictionPolicy;
 use crate::kvc::manager::KvcConfig;
 use crate::kvc::quantize::Quantizer;
@@ -301,6 +310,212 @@ impl ScenarioSpec {
     }
 }
 
+/// One shell of a federated scenario.
+#[derive(Debug, Clone)]
+pub struct ShellSpec {
+    pub name: String,
+    pub planes: usize,
+    pub sats_per_plane: usize,
+    pub altitude_km: f64,
+}
+
+impl ShellSpec {
+    pub fn torus(&self) -> Torus {
+        Torus::new(self.planes, self.sats_per_plane)
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        Geometry::new(self.altitude_km, self.sats_per_plane, self.planes)
+    }
+
+    /// The ground host starts under the middle of the shell's grid.
+    pub fn initial_center(&self) -> SatId {
+        SatId::new((self.planes / 2) as u16, (self.sats_per_plane / 2) as u16)
+    }
+}
+
+/// A fully-specified multi-shell federation scenario.  KVC parameters are
+/// shared across shells (one stripe width, one quantizer); each shell
+/// keeps its own geometry, fleet and failure state.
+#[derive(Debug, Clone)]
+pub struct FederatedScenarioSpec {
+    pub name: String,
+    /// The federated shells (normally >= 2; a single shell runs the same
+    /// harness as a no-federation baseline).
+    pub shells: Vec<ShellSpec>,
+    pub strategy: Strategy,
+    pub n_servers: usize,
+    pub block_tokens: usize,
+    pub chunk_size: usize,
+    pub quantizer: Quantizer,
+    pub eviction: EvictionPolicy,
+    pub sat_budget_bytes: usize,
+    pub kv_values_per_block: usize,
+    pub epochs: u64,
+    pub requests_per_epoch: usize,
+    pub workload: WorkloadConfig,
+    /// Random failures, injected into the primary shell only.
+    pub failures: FailurePlan,
+    /// Epoch at which the primary shell's layout box is killed for the
+    /// rest of the run (0 = never).  The manager evacuates the box over
+    /// the inter-shell links first — the proactive handover — and the
+    /// kill band covers the box's westward slide, so the primary stays
+    /// ineligible until the run ends.
+    pub primary_kill_epoch: u64,
+    /// Placement eligibility threshold (live fraction of the layout box).
+    pub min_live_fraction: f64,
+    /// Per-shell byte budget before placement spills over (0 = none).
+    pub spill_budget_bytes: u64,
+    pub seed: u64,
+}
+
+impl FederatedScenarioSpec {
+    pub fn kvc_config(&self) -> KvcConfig {
+        KvcConfig {
+            block_tokens: self.block_tokens,
+            chunk_size: self.chunk_size,
+            n_servers: self.n_servers,
+            strategy: self.strategy,
+            quantizer: self.quantizer,
+            eviction: self.eviction,
+            use_radix_index: true,
+            gossip_ttl: 2,
+        }
+    }
+
+    pub fn placement(&self) -> PlacementPolicy {
+        PlacementPolicy {
+            min_live_fraction: self.min_live_fraction,
+            spill_budget_bytes: self.spill_budget_bytes,
+        }
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.epochs as usize * self.requests_per_epoch
+    }
+
+    /// Index of the static primary shell: cheapest by [`shell_cost`],
+    /// ties to the lowest index (the same [`cheapest_index`] argmin the
+    /// manager and placement policy use).
+    pub fn primary_shell_index(&self) -> usize {
+        let costs: Vec<f64> =
+            self.shells.iter().map(|s| shell_cost(&s.geometry(), self.n_servers)).collect();
+        cheapest_index(&costs).expect("a federation has shells")
+    }
+
+    /// The no-federation baseline: the same scenario reduced to the
+    /// primary shell alone (same workload, failures and kill schedule,
+    /// nowhere to hand over to).
+    pub fn baseline_single_shell(&self) -> FederatedScenarioSpec {
+        let primary = self.primary_shell_index();
+        let mut spec = self.clone();
+        spec.name = format!("{}-baseline", self.name);
+        spec.shells = vec![self.shells[primary].clone()];
+        spec
+    }
+
+    /// Sanity-check internal consistency; panics with a descriptive
+    /// message on misuse.  The built-in spec always passes.
+    pub fn validate(&self) {
+        assert!(!self.shells.is_empty(), "{}: a federation needs shells", self.name);
+        let w = box_width(self.n_servers);
+        for s in &self.shells {
+            assert!(
+                w <= s.planes && w <= s.sats_per_plane,
+                "{}: {w}x{w} layout box does not fit shell {} ({}x{})",
+                self.name,
+                s.name,
+                s.planes,
+                s.sats_per_plane
+            );
+        }
+        if let Quantizer::QuantoInt8 { group } | Quantizer::HqqInt8 { group } = self.quantizer {
+            assert!(
+                self.kv_values_per_block % group == 0,
+                "{}: kv_values_per_block must be a multiple of the group",
+                self.name
+            );
+        }
+        assert!(self.epochs >= 1 && self.requests_per_epoch >= 1, "{}: empty run", self.name);
+        assert!(
+            self.primary_kill_epoch < self.epochs,
+            "{}: the kill epoch must fall inside the run",
+            self.name
+        );
+        assert!(
+            (0.0..=1.0).contains(&self.min_live_fraction),
+            "{}: min_live_fraction must be a fraction",
+            self.name
+        );
+    }
+
+    /// The built-in dual-shell federation: the Starlink-like 550 km shell
+    /// plus the Kuiper-like 630 km shell, 9 virtual servers, random
+    /// failures on the primary shell and a kill of the primary's layout
+    /// box at epoch 3 of 6 — the inter-shell handover acceptance case.
+    /// (Kuiper's denser 34-sat planes make it the cost-primary despite
+    /// the higher altitude; Starlink is the spillover/handover target.)
+    pub fn federated_dual_shell(seed: u64) -> FederatedScenarioSpec {
+        FederatedScenarioSpec {
+            name: "federated-dual-shell".into(),
+            shells: vec![
+                ShellSpec {
+                    name: "starlink-550".into(),
+                    planes: 72,
+                    sats_per_plane: 22,
+                    altitude_km: 550.0,
+                },
+                ShellSpec {
+                    name: "kuiper-630".into(),
+                    planes: 34,
+                    sats_per_plane: 34,
+                    altitude_km: 630.0,
+                },
+            ],
+            strategy: Strategy::RotationHopAware,
+            n_servers: 9,
+            block_tokens: 32,
+            chunk_size: 600,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Lazy,
+            // same per-satellite pressure as paper-19x5: the one-shot scan
+            // traffic overflows the budget so LRU eviction stays live
+            sat_budget_bytes: 48 << 10,
+            kv_values_per_block: 8192,
+            epochs: 6,
+            requests_per_epoch: 24,
+            workload: WorkloadConfig {
+                n_contexts: 4,
+                context_chars: 192,
+                n_questions: 6,
+                scan_every: 5,
+                seed,
+            },
+            failures: FailurePlan {
+                sat_losses_per_epoch: 1,
+                isl_outages_per_epoch: 1,
+                isl_outage_heal_epochs: 2,
+                handover_every_epochs: 0,
+            },
+            primary_kill_epoch: 3,
+            min_live_fraction: 0.6,
+            // generous soft budget: the scan traffic can push the primary
+            // over it late in the run, but the dominant spillover driver
+            // is the scheduled box kill
+            spill_budget_bytes: 1 << 20,
+            seed,
+        }
+    }
+
+    /// Look up a built-in federated scenario by name.
+    pub fn by_name(name: &str, seed: u64) -> Option<FederatedScenarioSpec> {
+        match name {
+            "federated-dual-shell" => Some(FederatedScenarioSpec::federated_dual_shell(seed)),
+            _ => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +555,36 @@ mod tests {
         assert_eq!((s.planes, s.sats_per_plane), (5, 19));
         assert_eq!(s.initial_center(), SatId::new(2, 9));
         assert_eq!(s.geometry().planes, 5);
+    }
+
+    #[test]
+    fn federated_dual_shell_spec_is_sound() {
+        let f = FederatedScenarioSpec::federated_dual_shell(7);
+        f.validate();
+        assert_eq!(f.shells.len(), 2);
+        assert_eq!(f.shells[0].torus().len(), 72 * 22);
+        assert_eq!(f.shells[1].torus().len(), 34 * 34);
+        // Kuiper's denser planes make it the cost-primary
+        assert_eq!(f.primary_shell_index(), 1);
+        assert!(f.primary_kill_epoch > 0 && f.primary_kill_epoch < f.epochs);
+        // a block must fan out over the whole stripe
+        let payload = f.quantizer.encoded_len(f.kv_values_per_block);
+        assert!(payload.div_ceil(f.chunk_size) >= f.n_servers);
+        let again = FederatedScenarioSpec::by_name("federated-dual-shell", 7).unwrap();
+        assert_eq!(again.shells[0].name, f.shells[0].name);
+        assert!(FederatedScenarioSpec::by_name("no-such-federation", 7).is_none());
+    }
+
+    #[test]
+    fn federated_baseline_keeps_only_the_primary() {
+        let f = FederatedScenarioSpec::federated_dual_shell(3);
+        let b = f.baseline_single_shell();
+        b.validate();
+        assert_eq!(b.shells.len(), 1);
+        assert_eq!(b.shells[0].name, "kuiper-630");
+        assert_eq!(b.primary_shell_index(), 0);
+        assert_eq!(b.primary_kill_epoch, f.primary_kill_epoch);
+        assert_eq!(b.name, "federated-dual-shell-baseline");
     }
 
     #[test]

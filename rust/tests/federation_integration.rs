@@ -1,0 +1,98 @@
+//! Integration: the multi-shell federation — golden determinism of the
+//! federated metrics JSON, the inter-shell handover acceptance case
+//! (killing the primary shell's layout box mid-run hands hot chunks to
+//! the secondary shell and beats the no-federation baseline), and the
+//! scenario registry / CLI surface.
+
+use skymemory::sim::harness::{run_federated_scenario, FederatedScenarioReport};
+use skymemory::sim::scenario::{FederatedScenarioSpec, ScenarioSpec};
+
+/// Golden property: the same seed must produce byte-identical metrics
+/// JSON for the full dual-shell federation, run-to-run in the same
+/// process.
+#[test]
+fn federated_dual_shell_fixed_seed_is_byte_identical() {
+    let spec = FederatedScenarioSpec::federated_dual_shell(1234);
+    let a: FederatedScenarioReport = run_federated_scenario(&spec);
+    let b: FederatedScenarioReport = run_federated_scenario(&spec);
+    assert_eq!(a, b, "reports must be structurally identical");
+    assert_eq!(a.to_json_string(), b.to_json_string(), "metrics JSON must be byte-identical");
+    // and the run really exercised the machinery
+    assert!(a.requests > 0);
+    assert!(a.blocks_requested > 0);
+    assert!(a.migrated_chunks > 0, "per-shell rotation must migrate chunks: {a:?}");
+    assert!(a.sat_losses > 0, "random failures must hit the primary: {a:?}");
+}
+
+/// Acceptance: killing the primary shell's layout box mid-run hands the
+/// hot chunks over to the secondary shell — the handover rides the
+/// inter-shell links, the secondary serves hits afterwards, and the
+/// federation's hit rate stays strictly above the no-federation
+/// (single-shell) baseline under the identical kill schedule.
+#[test]
+fn primary_box_kill_hands_over_and_beats_baseline() {
+    let spec = FederatedScenarioSpec::federated_dual_shell(42);
+    let fed = run_federated_scenario(&spec);
+    assert!(fed.box_killed_sats > 0, "the kill band must go dark: {fed:?}");
+    assert!(fed.handovers > 0, "hot chunks must re-home: {fed:?}");
+    assert!(fed.proactive_handover_blocks > 0, "evacuation must re-home blocks: {fed:?}");
+    assert!(fed.inter_shell_bytes > 0, "the handover rides the inter-shell links: {fed:?}");
+    assert!(fed.inter_shell_chunks > 0);
+
+    let primary = fed.shells.iter().find(|s| s.name == fed.primary_shell).unwrap();
+    let secondary = fed.shells.iter().find(|s| s.name != fed.primary_shell).unwrap();
+    assert_eq!(fed.primary_shell, "kuiper-630", "denser planes make Kuiper the cost-primary");
+    assert!(primary.blocks_stored > 0, "pre-kill traffic lands on the primary");
+    assert!(secondary.blocks_hit > 0, "post-kill hits come from the secondary: {fed:?}");
+    assert!(primary.failed_satellites > 0);
+
+    let base = run_federated_scenario(&spec.baseline_single_shell());
+    assert_eq!(base.shells.len(), 1);
+    assert_eq!(fed.requests, base.requests, "identical workload either way");
+    assert!(
+        fed.block_hit_rate > base.block_hit_rate,
+        "federation must out-hit the dead single shell: {} vs {}",
+        fed.block_hit_rate,
+        base.block_hit_rate
+    );
+    assert_eq!(base.handovers, 0, "a single shell has nowhere to hand over to");
+    assert_eq!(base.inter_shell_bytes, 0);
+    assert!(base.failed_writes > 0, "post-kill stores have nowhere to go in the baseline");
+}
+
+#[test]
+fn federated_seeds_change_numbers_but_not_shape() {
+    let a = run_federated_scenario(&FederatedScenarioSpec::federated_dual_shell(1));
+    let b = run_federated_scenario(&FederatedScenarioSpec::federated_dual_shell(2));
+    assert_ne!(a.to_json_string(), b.to_json_string());
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.shells.len(), b.shells.len());
+    assert_eq!(a.primary_shell, b.primary_shell);
+}
+
+#[test]
+fn federated_report_carries_per_shell_metrics() {
+    let r = run_federated_scenario(&FederatedScenarioSpec::federated_dual_shell(7));
+    assert_eq!(r.shells.len(), 2);
+    for sh in &r.shells {
+        assert!(sh.analytic_worst_case_s > 0.0);
+    }
+    // after the kill + evacuation, the live data is homed on the secondary
+    let secondary = r.shells.iter().find(|sh| sh.name != r.primary_shell).unwrap();
+    assert!(secondary.placed_bytes > 0, "the secondary holds the hot set by the end: {r:?}");
+    let j = r.to_json_string();
+    for key in ["\"shells\"", "\"inter_shell_bytes\"", "\"handovers\"", "\"hit_rate\""] {
+        assert!(j.contains(key), "missing {key} in {j}");
+    }
+}
+
+#[test]
+fn federated_scenario_registry_is_wired() {
+    // the federated name resolves through its own registry and does not
+    // collide with the single-shell one
+    assert!(ScenarioSpec::by_name("federated-dual-shell", 3).is_none());
+    let spec = FederatedScenarioSpec::by_name("federated-dual-shell", 3).unwrap();
+    spec.validate();
+    assert_eq!(spec.seed, 3);
+    assert!(FederatedScenarioSpec::by_name("paper-19x5", 3).is_none());
+}
