@@ -1,0 +1,233 @@
+//! Bench: the `net::sched` event engine vs the old thread-scoped chunk
+//! fan-out, at equal network fidelity.
+//!
+//! The baseline below reimplements what `kvc::manager` used to do before
+//! the rewire — stripe one block's chunks over at most 8 scoped OS
+//! threads, each issuing *timed* transport requests that sleep the
+//! emulated per-request round trip — and races it against
+//! [`NetScheduler::run_batch`], which sleeps one *pipelined batch
+//! makespan* instead.  Both sides emulate the same physical network
+//! (scaled 1/20 so iterations stay fast); the difference measured is
+//! exactly what the rewire buys: serial per-request round trips vs
+//! event-driven pipelining over per-link windows.
+//!
+//! * `paper-19x5` shape: 16 chunks over 9 servers — the engine must be
+//!   no slower (asserted, with slack for timer noise);
+//! * `mega-shell` shape: 1152 chunks over 25 servers — the engine must
+//!   be faster (asserted): a thread per chunk is unthinkable and the
+//!   8-thread stripe serializes 144 round trips per worker.
+//!
+//! Also times one full `run_scenario` of both scenarios end to end
+//! (virtual time only, no sleeping).  Run with `--smoke` (CI) for short
+//! measurement windows; the speedup assertions hold in both modes.
+//!
+//! ```text
+//! cargo bench --bench sched [-- --smoke]
+//! ```
+
+use skymemory::constellation::geometry::Geometry;
+use skymemory::constellation::los::LosGrid;
+use skymemory::constellation::topology::{SatId, Torus};
+use skymemory::kvc::block::BlockHash;
+use skymemory::kvc::chunk::ChunkKey;
+use skymemory::kvc::eviction::EvictionPolicy;
+use skymemory::mapping::Strategy;
+use skymemory::net::sched::{ChunkOp, NetScheduler, SchedConfig, Transfer};
+use skymemory::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
+use skymemory::satellite::fleet::Fleet;
+use skymemory::sim::harness::run_scenario;
+use skymemory::sim::scenario::ScenarioSpec;
+use skymemory::util::bench::Bencher;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The old manager's thread cap, reproduced for the baseline.
+const MAX_FANOUT: usize = 8;
+
+/// Emulated-network time scale (1/20 of real) — large enough that the
+/// sleeps dominate engine/thread machinery, small enough to iterate.
+const SLEEP_SCALE: f64 = 0.05;
+
+struct Shape {
+    name: &'static str,
+    planes: usize,
+    sats_per_plane: usize,
+    n_servers: usize,
+    n_chunks: usize,
+    chunk_bytes: usize,
+    bandwidth_bps: f64,
+    /// Engine-vs-baseline wall-clock floor asserted for this shape.
+    min_speedup: f64,
+}
+
+const SHAPES: [Shape; 2] = [
+    Shape {
+        name: "paper-19x5",
+        planes: 5,
+        sats_per_plane: 19,
+        n_servers: 9,
+        n_chunks: 16,
+        chunk_bytes: 600,
+        bandwidth_bps: 1e9,
+        // acceptance: "no slower" — 0.9 leaves room for timer noise
+        min_speedup: 0.9,
+    },
+    Shape {
+        name: "mega-shell",
+        planes: 72,
+        sats_per_plane: 22,
+        n_servers: 25,
+        n_chunks: 1152,
+        chunk_bytes: 50,
+        bandwidth_bps: 2e7,
+        // acceptance: "faster" — pipelining beats 144 serial RTTs/worker
+        min_speedup: 1.0,
+    },
+];
+
+struct Stack {
+    layout: Vec<SatId>,
+    inproc: Arc<InProcTransport>,
+}
+
+fn build(shape: &Shape, sleep_scale: f64) -> Stack {
+    let torus = Torus::new(shape.planes, shape.sats_per_plane);
+    let geometry = Geometry::new(550.0, shape.sats_per_plane, shape.planes);
+    let center = SatId::new((shape.planes / 2) as u16, (shape.sats_per_plane / 2) as u16);
+    let fleet = Arc::new(Fleet::new(torus, 64 << 20, EvictionPolicy::Lazy));
+    let los = LosGrid::new(center, 2, 2.min(shape.planes / 2));
+    let ground = GroundView::new(center, &los, torus.sats_per_plane);
+    let mut link = LinkModel::laser_defaults(geometry);
+    link.bandwidth_bps = shape.bandwidth_bps;
+    link.sleep_scale = sleep_scale;
+    let inproc = Arc::new(InProcTransport::new(fleet, ground, Some(link)));
+    let layout = Strategy::RotationHopAware.initial_layout(&torus, center, shape.n_servers);
+    Stack { layout, inproc }
+}
+
+fn chunk_key(i: usize) -> ChunkKey {
+    ChunkKey::new(BlockHash([0xB1; 32]), i as u32)
+}
+
+/// The pre-rewire fan-out: stripe one block's Set pass, then its Get
+/// pass, over scoped OS threads (exactly the old manager's shape); every
+/// request sleeps its own emulated round trip.
+fn threaded_block(stack: &Stack, shape: &Shape) {
+    let n_workers = shape.n_chunks.min(MAX_FANOUT).max(1);
+    std::thread::scope(|scope| {
+        for w in 0..n_workers {
+            let layout = &stack.layout;
+            let transport = &stack.inproc;
+            scope.spawn(move || {
+                let mut i = w;
+                while i < shape.n_chunks {
+                    let dest = layout[i % shape.n_servers];
+                    transport
+                        .set_chunk(dest, chunk_key(i), vec![0xAB; shape.chunk_bytes])
+                        .unwrap();
+                    i += n_workers;
+                }
+            });
+        }
+    });
+    std::thread::scope(|scope| {
+        for w in 0..n_workers {
+            let layout = &stack.layout;
+            let transport = &stack.inproc;
+            scope.spawn(move || {
+                let mut i = w;
+                while i < shape.n_chunks {
+                    let dest = layout[i % shape.n_servers];
+                    let _ = transport.get_chunk(dest, chunk_key(i)).unwrap();
+                    i += n_workers;
+                }
+            });
+        }
+    });
+}
+
+/// The same block through the event engine: one Set batch, one Get
+/// batch, each sleeping its pipelined makespan once.
+fn sched_block(sched: &NetScheduler, stack: &Stack, shape: &Shape) {
+    let sets: Vec<Transfer> = (0..shape.n_chunks)
+        .map(|i| Transfer {
+            tag: i as u64,
+            op: ChunkOp::Set {
+                dest: stack.layout[i % shape.n_servers],
+                key: chunk_key(i),
+                data: vec![0xAB; shape.chunk_bytes],
+            },
+        })
+        .collect();
+    let report = sched.run_batch(sets);
+    assert_eq!(report.outcomes.len(), shape.n_chunks);
+    let gets: Vec<Transfer> = (0..shape.n_chunks)
+        .map(|i| Transfer {
+            tag: i as u64,
+            op: ChunkOp::Get { dest: stack.layout[i % shape.n_servers], key: chunk_key(i) },
+        })
+        .collect();
+    let report = sched.run_batch(gets);
+    assert_eq!(report.outcomes.len(), shape.n_chunks);
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, measure) = if smoke {
+        (Duration::from_millis(20), Duration::from_millis(150))
+    } else {
+        (Duration::from_millis(200), Duration::from_millis(900))
+    };
+
+    println!("=== chunk fan-out at 1/{} emulated network time ===", (1.0 / SLEEP_SCALE) as u32);
+    println!("=== thread-scoped baseline (serial RTT sleeps) vs net::sched (batch makespan) ===");
+    let mut failures = 0u32;
+    for shape in &SHAPES {
+        let stack = build(shape, SLEEP_SCALE);
+        let baseline = Bencher::new(format!("{} threads(8) {} chunks", shape.name, shape.n_chunks))
+            .warmup(warmup)
+            .measure(measure)
+            .run(|| threaded_block(&stack, shape));
+        println!("{}", baseline.report());
+
+        let stack = build(shape, SLEEP_SCALE);
+        let transport: Arc<dyn Transport> = stack.inproc.clone();
+        let sched = NetScheduler::new(transport, SchedConfig { window: 8 });
+        let engine = Bencher::new(format!("{} sched(w=8) {} chunks", shape.name, shape.n_chunks))
+            .warmup(warmup)
+            .measure(measure)
+            .run(|| sched_block(&sched, &stack, shape));
+        println!("{}", engine.report());
+
+        let speedup = baseline.mean.as_secs_f64() / engine.mean.as_secs_f64();
+        let ok = speedup >= shape.min_speedup;
+        if !ok {
+            failures += 1;
+        }
+        println!(
+            "{:<16} engine is {speedup:.2}x the thread-scoped baseline (floor {:.1}x) -> {}\n",
+            shape.name,
+            shape.min_speedup,
+            if ok { "OK" } else { "REGRESSION" }
+        );
+    }
+
+    println!("=== end-to-end scenarios on the event engine (seed 42, virtual time only) ===");
+    for spec in [ScenarioSpec::paper_19x5(42), ScenarioSpec::mega_shell(42)] {
+        let t0 = Instant::now();
+        let r = run_scenario(&spec);
+        println!(
+            "{:<16} {:>4} reqs  hit {:>5.1}%  {:>8} transfers  peak in-flight {:>5}  \
+             queued {:>9.3} ms  wall {:.2?}",
+            r.name,
+            r.requests,
+            100.0 * r.block_hit_rate,
+            r.sched.transfers,
+            r.sched.peak_in_flight,
+            r.sched.queued_ns as f64 / 1e6,
+            t0.elapsed()
+        );
+    }
+
+    assert_eq!(failures, 0, "{failures} shape(s) regressed below their speedup floor");
+}

@@ -10,13 +10,13 @@
 //! arithmetic (write-epoch shift, §3.4 migration) applies unchanged per
 //! shell.
 //!
-//! Unlike [`crate::kvc::manager::KvcManager`], chunk I/O here is issued
-//! sequentially rather than over a `MAX_FANOUT` thread pool: the
-//! federated harness accounts link latency instead of sleeping, so
-//! per-chunk ordering is the simplest way to keep whole runs strictly
-//! deterministic.  Parallel fan-out parity is a roadmap item and would
-//! matter on a sleeping/real transport, where sequential Gets pay
-//! `n_chunks` round trips instead of `n_chunks / MAX_FANOUT`.
+//! Chunk I/O has full fan-out parity with
+//! [`crate::kvc::manager::KvcManager`]: each block's Get/Set set is one
+//! [`crate::net::sched`] virtual-time batch on its home shell's
+//! scheduler ([`crate::federation::transport::ShellLink::sched`]), so the
+//! transfers pipeline over per-link in-flight windows with deterministic
+//! `(virtual_time, tag)` ordering — the old sequential special-case
+//! (per-chunk round trips, kept only for determinism) is gone.
 //!
 //! Handover: when a shell's layout box degrades below the placement
 //! threshold, [`FederatedKvcManager::evacuate_shell`] drains the box's
@@ -37,7 +37,8 @@ use crate::kvc::manager::{encode_chunk_header, KvcConfig, CHUNK_HEADER_LEN};
 use crate::kvc::quantize::Quantizer;
 use crate::kvc::radix::BlockMeta;
 use crate::mapping::box_width;
-use anyhow::Result;
+use crate::net::sched::{ChunkOp, ChunkResult, Transfer};
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -245,7 +246,9 @@ impl FederatedKvcManager {
         Ok(shell)
     }
 
-    /// Stripe an encoded payload over `shell`'s current layout.
+    /// Stripe an encoded payload over `shell`'s current layout: one
+    /// virtual-time batch on the shell's scheduler (fan-out parity with
+    /// the single-shell manager).
     fn store_payload(
         &self,
         shell: ShellId,
@@ -263,12 +266,28 @@ impl FederatedKvcManager {
         let torus = self.transport.shell(shell).torus;
         let center = self.transport.closest(shell);
         let layout = self.config.strategy.initial_layout(&torus, center, self.config.n_servers);
-        for (i, chunk) in split_chunks(payload, self.config.chunk_size).iter().enumerate() {
-            let dest = FedSatId::new(shell, layout[i % self.config.n_servers]);
-            let mut data = Vec::with_capacity(CHUNK_HEADER_LEN + chunk.len());
-            data.extend_from_slice(&header);
-            data.extend_from_slice(chunk);
-            self.transport.set_chunk(dest, ChunkKey::new(block, i as u32), data)?;
+        let transfers: Vec<Transfer> = split_chunks(payload, self.config.chunk_size)
+            .iter()
+            .enumerate()
+            .map(|(i, chunk)| {
+                let mut data = Vec::with_capacity(CHUNK_HEADER_LEN + chunk.len());
+                data.extend_from_slice(&header);
+                data.extend_from_slice(chunk);
+                Transfer {
+                    tag: i as u64,
+                    op: ChunkOp::Set {
+                        dest: layout[i % self.config.n_servers],
+                        key: ChunkKey::new(block, i as u32),
+                        data,
+                    },
+                }
+            })
+            .collect();
+        let batch = self.transport.link(shell).sched.run_batch(transfers);
+        for o in &batch.outcomes {
+            if let ChunkResult::Failed(e) = &o.result {
+                bail!("shell {shell}: chunk {} set failed: {e}", o.tag);
+            }
         }
         let counters = &self.shell_counters[shell as usize];
         counters.blocks_stored.fetch_add(1, Ordering::Relaxed);
@@ -305,6 +324,8 @@ impl FederatedKvcManager {
         )
     }
 
+    /// Fetch a block's chunks as one virtual-time batch on its home
+    /// shell's scheduler and reassemble them in tag order.
     fn fetch_payload(
         &self,
         shell: ShellId,
@@ -313,11 +334,20 @@ impl FederatedKvcManager {
         now_epoch: u64,
     ) -> Option<Vec<u8>> {
         let layout = self.layout_for(shell, meta.write_epoch, now_epoch);
+        let transfers: Vec<Transfer> = (0..meta.num_chunks as usize)
+            .map(|i| Transfer {
+                tag: i as u64,
+                op: ChunkOp::Get {
+                    dest: layout[i % self.config.n_servers],
+                    key: ChunkKey::new(block, i as u32),
+                },
+            })
+            .collect();
+        let batch = self.transport.link(shell).sched.run_batch(transfers);
         let mut payload = Vec::with_capacity(meta.kvc_len as usize);
-        for i in 0..meta.num_chunks as usize {
-            let dest = FedSatId::new(shell, layout[i % self.config.n_servers]);
-            match self.transport.get_chunk(dest, ChunkKey::new(block, i as u32)) {
-                Ok(Some(data)) if data.len() > CHUNK_HEADER_LEN => {
+        for o in batch.outcomes {
+            match o.result {
+                ChunkResult::Got(Some(data)) if data.len() > CHUNK_HEADER_LEN => {
                     payload.extend_from_slice(&data[CHUNK_HEADER_LEN..])
                 }
                 _ => return None,
@@ -489,7 +519,7 @@ mod tests {
         let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, None));
         let faults =
             Arc::new(FaultyTransport::new(inproc.clone(), torus, los.half_slots, los.half_planes));
-        ShellLink { shell, fleet, inproc, faults }
+        ShellLink::new(shell, fleet, inproc, faults, 8)
     }
 
     /// Two small shells; the denser second one ("b-630") is cheaper and

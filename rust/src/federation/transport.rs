@@ -19,6 +19,7 @@ use crate::kvc::block::BlockHash;
 use crate::kvc::chunk::ChunkKey;
 use crate::net::faults::FaultyTransport;
 use crate::net::messages::{Request, Response};
+use crate::net::sched::{ChunkOp, ChunkResult, NetScheduler, SchedConfig, Transfer};
 use crate::net::transport::{InProcTransport, Transport};
 use crate::satellite::fleet::Fleet;
 use anyhow::Result;
@@ -36,12 +37,31 @@ pub struct FedTransportStats {
     pub inter_shell_latency_ns: AtomicU64,
 }
 
-/// One shell's full single-shell stack.
+/// One shell's full single-shell stack, plus its timing-plane scheduler
+/// (all chunk fan-out and evacuation traffic into this shell rides the
+/// shell's own [`NetScheduler`] over its fault-decorated transport).
 pub struct ShellLink {
     pub shell: Shell,
     pub fleet: Arc<Fleet>,
     pub inproc: Arc<InProcTransport>,
     pub faults: Arc<FaultyTransport>,
+    pub sched: Arc<NetScheduler>,
+}
+
+impl ShellLink {
+    /// Assemble one shell's stack; `window` is the per-link in-flight
+    /// window of the shell's virtual-time scheduler.
+    pub fn new(
+        shell: Shell,
+        fleet: Arc<Fleet>,
+        inproc: Arc<InProcTransport>,
+        faults: Arc<FaultyTransport>,
+        window: usize,
+    ) -> Self {
+        let transport: Arc<dyn Transport> = faults.clone();
+        let sched = Arc::new(NetScheduler::new(transport, SchedConfig { window }));
+        Self { shell, fleet, inproc, faults, sched }
+    }
 }
 
 /// The federation-wide transport.
@@ -92,12 +112,16 @@ impl FederatedTransport {
     }
 
     /// Total accounted network latency across the federation: every
-    /// shell's emulated link time plus the inter-shell links.
+    /// shell's serially-emulated link time, every shell scheduler's
+    /// pipelined virtual time, and the inter-shell links.
     pub fn total_latency_ns(&self) -> u64 {
         let intra: u64 = self
             .links
             .iter()
-            .map(|l| l.inproc.stats().sim_latency_ns.load(Ordering::Relaxed))
+            .map(|l| {
+                l.inproc.stats().sim_latency_ns.load(Ordering::Relaxed)
+                    + l.sched.stats.virtual_ns.load(Ordering::Relaxed)
+            })
             .sum();
         intra + self.stats.inter_shell_latency_ns.load(Ordering::Relaxed)
     }
@@ -137,19 +161,29 @@ impl FederatedTransport {
     /// Evacuate one satellite's entire chunk store across shells: drain
     /// the source node and re-Set everything (original keys and headers)
     /// on the target satellite of the other shell, over the inter-shell
-    /// link.  Deterministic: the drain is key-sorted.  Returns (chunks
-    /// moved, payload bytes moved); chunks the target rejects are dropped
-    /// (the block they belong to heals reactively).
+    /// link.  The drain is key-sorted and submitted as one virtual-time
+    /// batch on the *target* shell's scheduler, so evacuation traffic
+    /// pipelines over the target's link windows like any other fan-out.
+    /// Returns (chunks moved, payload bytes moved); chunks the target
+    /// rejects are dropped (the block they belong to heals reactively).
     pub fn migrate_cross_shell(&self, from: FedSatId, to: FedSatId) -> (u32, u64) {
         debug_assert_ne!(from.shell, to.shell, "cross-shell migrate needs two shells");
         let chunks = self.links[from.shell as usize].fleet.node(from.sat).drain_chunks();
+        let lens: Vec<usize> = chunks.iter().map(|(_, payload)| payload.len()).collect();
+        let transfers: Vec<Transfer> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(i, (key, data))| {
+                Transfer { tag: i as u64, op: ChunkOp::Set { dest: to.sat, key, data } }
+            })
+            .collect();
+        let batch = self.links[to.shell as usize].sched.run_batch(transfers);
         let mut moved = 0u32;
         let mut bytes = 0u64;
-        for (key, payload) in chunks {
-            let len = payload.len();
-            if self.links[to.shell as usize].faults.set_chunk(to.sat, key, payload).is_ok() {
+        for o in &batch.outcomes {
+            if o.result == ChunkResult::Stored {
                 moved += 1;
-                bytes += len as u64;
+                bytes += lens[o.tag as usize] as u64;
             }
         }
         if moved > 0 {
@@ -182,7 +216,7 @@ mod tests {
         let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, None));
         let faults =
             Arc::new(FaultyTransport::new(inproc.clone(), torus, los.half_slots, los.half_planes));
-        ShellLink { shell, fleet, inproc, faults }
+        ShellLink::new(shell, fleet, inproc, faults, 8)
     }
 
     fn dual() -> FederatedTransport {

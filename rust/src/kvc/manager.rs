@@ -18,6 +18,13 @@
 //! anywhere truncates the usable prefix and (lazy policy) triggers
 //! eviction of the broken block.
 //!
+//! Parallelism (§3.1: "parallelism both in setting and getting a single
+//! KVC") is modelled by the [`crate::net::sched`] virtual-time scheduler:
+//! each block's chunk Get/Set set is submitted as one
+//! [`crate::net::sched::NetScheduler::run_batch`] and the event engine
+//! pipelines the transfers over per-link in-flight windows — no OS
+//! threads, unbounded fan-out, deterministic completion order.
+//!
 //! Every stored chunk is prefixed with an 18-byte self-describing header
 //! (quantizer, chunk count, byte length, write epoch) so the distributed
 //! lookup path needs no local state at all.
@@ -30,6 +37,7 @@ use crate::kvc::quantize::Quantizer;
 use crate::kvc::radix::{BlockIndex, BlockMeta};
 use crate::mapping::{box_width, Strategy};
 use crate::net::messages::{Request, Response};
+use crate::net::sched::{ChunkOp, ChunkResult, NetScheduler, SchedConfig, Transfer};
 use crate::net::transport::Transport;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -38,10 +46,6 @@ use std::sync::{Arc, Mutex};
 /// Chunk payload header (see module docs).
 pub const CHUNK_HEADER_LEN: usize = 18;
 const CHUNK_VERSION: u8 = 1;
-
-/// Maximum worker threads for one block's chunk fan-out (§Perf: one
-/// thread per chunk wastes more on spawns than parallel RTTs save).
-const MAX_FANOUT: usize = 8;
 
 /// Encode the self-describing chunk header (shared with the federated
 /// manager, which stores the same wire format across shells).
@@ -90,6 +94,9 @@ pub struct KvcConfig {
     pub use_radix_index: bool,
     /// Gossip radius for explicit evictions.
     pub gossip_ttl: u8,
+    /// Per-link in-flight window of the chunk fan-out's virtual-time
+    /// scheduler ([`crate::net::sched::SchedConfig::window`]).
+    pub sched_window: usize,
 }
 
 impl Default for KvcConfig {
@@ -103,6 +110,7 @@ impl Default for KvcConfig {
             eviction: EvictionPolicy::Gossip,
             use_radix_index: true,
             gossip_ttl: 2,
+            sched_window: 8,
         }
     }
 }
@@ -173,6 +181,9 @@ pub struct PrefixFetch {
 pub struct KvcManager {
     pub config: KvcConfig,
     transport: Arc<dyn Transport>,
+    /// The virtual-time scheduler every chunk fan-out rides (timing
+    /// plane; `transport` stays the data plane).
+    sched: NetScheduler,
     torus: Torus,
     index: Mutex<BlockIndex>,
     /// Optional fast-RAM tier in front of the constellation (§2's memory
@@ -184,14 +195,22 @@ pub struct KvcManager {
 impl KvcManager {
     pub fn new(config: KvcConfig, torus: Torus, transport: Arc<dyn Transport>) -> Self {
         assert!(config.n_servers >= 1);
+        let sched =
+            NetScheduler::new(transport.clone(), SchedConfig { window: config.sched_window });
         Self {
             config,
             transport,
+            sched,
             torus,
             index: Mutex::new(BlockIndex::new()),
             local: None,
             stats: KvcStats::default(),
         }
+    }
+
+    /// The chunk fan-out's virtual-time scheduler (for its stats).
+    pub fn sched(&self) -> &NetScheduler {
+        &self.sched
     }
 
     /// Add a local RAM tier of `byte_budget` decoded-KV bytes.
@@ -302,35 +321,31 @@ impl KvcManager {
         };
         let layout = self.config.strategy.initial_layout(&self.torus, write_center, self.config.n_servers);
         // §3.1: "this allows for parallelism both in setting and getting".
-        // Chunks are striped over at most MAX_FANOUT worker threads (one
-        // thread per chunk costs more in spawns than it saves at in-proc
-        // latencies; see EXPERIMENTS.md §Perf).
-        let results: Vec<Result<()>> = std::thread::scope(|scope| {
-            let n_workers = chunks.len().min(MAX_FANOUT).max(1);
-            let mut handles = Vec::with_capacity(n_workers);
-            for w in 0..n_workers {
-                let chunks = &chunks;
-                let layout = &layout;
-                let transport = &self.transport;
-                let n_servers = self.config.n_servers;
-                handles.push(scope.spawn(move || -> Result<()> {
-                    let mut i = w;
-                    while i < chunks.len() {
-                        let dest = layout[i % n_servers];
-                        let key = ChunkKey::new(block, i as u32);
-                        let mut data = Vec::with_capacity(CHUNK_HEADER_LEN + chunks[i].len());
-                        data.extend_from_slice(&header);
-                        data.extend_from_slice(chunks[i]);
-                        transport.set_chunk(dest, key, data)?;
-                        i += n_workers;
-                    }
-                    Ok(())
-                }));
+        // The whole block is one virtual-time batch: the event engine
+        // pipelines every chunk over the per-link windows, so a thousand
+        // chunks cost no more ordering machinery than eight.
+        let transfers: Vec<Transfer> = chunks
+            .iter()
+            .enumerate()
+            .map(|(i, chunk)| {
+                let mut data = Vec::with_capacity(CHUNK_HEADER_LEN + chunk.len());
+                data.extend_from_slice(&header);
+                data.extend_from_slice(chunk);
+                Transfer {
+                    tag: i as u64,
+                    op: ChunkOp::Set {
+                        dest: layout[i % self.config.n_servers],
+                        key: ChunkKey::new(block, i as u32),
+                        data,
+                    },
+                }
+            })
+            .collect();
+        let batch = self.sched.run_batch(transfers);
+        for o in &batch.outcomes {
+            if let ChunkResult::Failed(e) = &o.result {
+                bail!("chunk {} set failed: {e}", o.tag);
             }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for r in results {
-            r?;
         }
         self.stats.blocks_stored.fetch_add(1, Ordering::Relaxed);
         if let Some(local) = &self.local {
@@ -478,8 +493,8 @@ impl KvcManager {
         )
         .ok_or_else(|| anyhow::anyhow!("unknown quantizer id {}", meta.quantizer_id))?;
         // parallel chunk fan-out (§3.8 step 8: "all chunks can be queried
-        // in parallel"), striped over at most MAX_FANOUT threads; the
-        // current layout is computed once, not per chunk
+        // in parallel"): one virtual-time batch over the per-link
+        // windows; the current layout is computed once, not per chunk
         let n_chunks = meta.num_chunks as usize;
         let write_center = self.write_center_for_epoch(meta.write_epoch, now_epoch);
         let layout = self.config.strategy.layout_at(
@@ -488,30 +503,20 @@ impl KvcManager {
             self.config.n_servers,
             now_epoch - meta.write_epoch,
         );
-        let n_workers = n_chunks.min(MAX_FANOUT).max(1);
+        let transfers: Vec<Transfer> = (0..n_chunks)
+            .map(|i| Transfer {
+                tag: i as u64,
+                op: ChunkOp::Get {
+                    dest: layout[i % self.config.n_servers],
+                    key: ChunkKey::new(block, i as u32),
+                },
+            })
+            .collect();
+        let batch = self.sched.run_batch(transfers);
         let mut fetched: Vec<Option<Vec<u8>>> = vec![None; n_chunks];
-        let stripes: Vec<Vec<(usize, Option<Vec<u8>>)>> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n_workers);
-            for w in 0..n_workers {
-                let layout = &layout;
-                let transport = &self.transport;
-                let n_servers = self.config.n_servers;
-                handles.push(scope.spawn(move || {
-                    (w..n_chunks)
-                        .step_by(n_workers)
-                        .map(|i| {
-                            let dest = layout[i % n_servers];
-                            let key = ChunkKey::new(block, i as u32);
-                            (i, transport.get_chunk(dest, key).ok().flatten())
-                        })
-                        .collect()
-                }));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for stripe in stripes {
-            for (i, data) in stripe {
-                fetched[i] = data;
+        for o in batch.outcomes {
+            if let ChunkResult::Got(Some(data)) = o.result {
+                fetched[o.tag as usize] = Some(data);
             }
         }
         // strip headers, verify, reassemble

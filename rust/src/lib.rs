@@ -15,8 +15,12 @@
 //!   and the [`kvc::manager::KvcManager`] implementing §3.8 Get/Set.
 //! * [`net`] — CCSDS Space Packet Protocol framing, binary message codecs,
 //!   the [`net::transport::Transport`] abstraction (in-proc, UDP,
-//!   simulated-latency), and the failure-injecting
-//!   [`net::faults::FaultyTransport`] decorator.
+//!   simulated-latency), the failure-injecting
+//!   [`net::faults::FaultyTransport`] decorator, and the
+//!   [`net::sched::NetScheduler`] — the discrete-event *virtual-time*
+//!   link scheduler (timing plane) every chunk fan-out rides: per-link
+//!   in-flight windows, FIFO queueing, deterministic
+//!   `(virtual_time, tag)` event ordering, zero OS threads.
 //! * [`federation`] — multi-shell federation: named [`federation::Shell`]s
 //!   at their own altitudes, shell-qualified addresses
 //!   ([`federation::FedSatId`]), inter-shell links (ground relay and
@@ -31,12 +35,14 @@
 //!   generation, and the deterministic scenario subsystem
 //!   ([`sim::scenario`] + [`sim::harness`]): named, seed-driven
 //!   end-to-end runs — the paper's 19x5 testbed, a Starlink-like 72x22
-//!   mega-shell, a Kuiper-like 34x34 shell, and the federated
-//!   `federated-dual-shell` scenario — sweeping rotation epochs with
-//!   migration, eviction pressure and injected failures (satellite loss,
-//!   ISL outage, ground-station handover, whole-shell degradation via
-//!   [`net::faults::FaultyTransport`]), emitting byte-stable metrics
-//!   JSON; plus the [`sim::diff`] scenario-diff tool.
+//!   mega-shell, a Kuiper-like 34x34 shell, the `mega-shell`
+//!   [`net::sched`] stress shape (>1000 in-flight chunks per block), and
+//!   the federated `federated-dual-shell` scenario — sweeping rotation
+//!   epochs with migration, eviction pressure and injected failures
+//!   (satellite loss, ISL outage, ground-station handover, whole-shell
+//!   degradation via [`net::faults::FaultyTransport`]), emitting
+//!   byte-stable metrics JSON with per-link scheduler stats; plus the
+//!   [`sim::diff`] scenario-diff tool.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (L2/L1 outputs):
 //!   HLO loading, weight upload, prefill/decode steps, tokenizer, sampler.
 //! * [`coordinator`] — the serving engine: prefix-cache-aware generation

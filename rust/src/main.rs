@@ -9,8 +9,10 @@
 //! skymemory simulate   [--strategy ...] [--altitude 550] [--servers 81]
 //!                      [--kvc-mb 21] [--proc-ms 2]
 //! skymemory scenario   [--name paper-19x5|starlink-shell|kuiper-shell|
-//!                              federated-dual-shell] [--seed 42]
+//!                              mega-shell|federated-dual-shell] [--seed 42]
+//! skymemory scenario   --list                     (names + descriptions)
 //! skymemory scenario   --diff <a.json> <b.json>   (nonzero exit on regression)
+//! skymemory sched      [--name mega-shell] [--seed 42] [--windows 1,8,64]
 //! skymemory federate   [--seed 42] [--baseline]
 //! skymemory repro      [--outdir results]
 //! ```
@@ -216,6 +218,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
+    if args.has("list") {
+        for (name, desc) in skymemory::sim::scenario::BUILTIN_SUMMARIES {
+            println!("{name:<22} {desc}");
+        }
+        return Ok(());
+    }
     if let Some(a_path) = args.get("diff") {
         let b_path = args
             .positionals
@@ -243,9 +251,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                     skymemory::sim::harness::run_federated_scenario(&spec).to_json_string()
                 );
             } else {
-                bail!(
-                    "unknown scenario {name} (paper-19x5 | starlink-shell | kuiper-shell | federated-dual-shell)"
-                );
+                bail!("unknown scenario {name} (see `skymemory scenario --list`)");
             }
         }
         None => {
@@ -255,6 +261,47 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             let fed = skymemory::sim::scenario::FederatedScenarioSpec::federated_dual_shell(seed);
             println!("{}", skymemory::sim::harness::run_federated_scenario(&fed).to_json_string());
         }
+    }
+    Ok(())
+}
+
+/// Sweep the `net::sched` per-link in-flight window over one scenario
+/// and print a metrics-JSON line plus a one-line summary per window —
+/// the pipelining/queueing trade the event scheduler exposes.
+fn cmd_sched(args: &Args) -> Result<()> {
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let name = args.get("name").unwrap_or("mega-shell");
+    let windows: Vec<usize> = args
+        .get("windows")
+        .unwrap_or("1,8,64")
+        .split(',')
+        .map(|w| match w.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(anyhow!("bad --windows entry {w:?} (need integers >= 1)")),
+        })
+        .collect::<Result<_>>()?;
+    let Some(base) = skymemory::sim::scenario::ScenarioSpec::by_name(name, seed) else {
+        bail!("unknown single-shell scenario {name} (see `skymemory scenario --list`)");
+    };
+    println!("# net::sched window sweep: {name}, seed {seed}");
+    for w in windows {
+        let mut spec = base.clone();
+        spec.sched_window = w;
+        let t0 = std::time::Instant::now();
+        let r = skymemory::sim::harness::run_scenario(&spec);
+        println!("{}", r.to_json_string());
+        println!(
+            "# window {w}: net p50 {:.3} ms, p99 {:.3} ms, worst {:.3} ms; peak in-flight {}, \
+             queued {:.3} ms, busy {:.3} ms over {} links, wall {:.2?}",
+            r.net_p50_ms,
+            r.net_p99_ms,
+            r.net_worst_ms,
+            r.sched.peak_in_flight,
+            r.sched.queued_ns as f64 / 1e6,
+            r.sched.busy_ns as f64 / 1e6,
+            r.sched.links_used,
+            t0.elapsed()
+        );
     }
     Ok(())
 }
@@ -294,7 +341,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: skymemory <serve|generate|satellite|simulate|scenario|federate|repro> [flags]\n\
+        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|repro> [flags]\n\
          see rust/src/main.rs header for per-command flags"
     );
     std::process::exit(2)
@@ -312,6 +359,7 @@ fn main() -> Result<()> {
         "satellite" => cmd_satellite(&args),
         "simulate" => cmd_simulate(&args),
         "scenario" => cmd_scenario(&args),
+        "sched" => cmd_sched(&args),
         "federate" => cmd_federate(&args),
         "repro" => cmd_repro(&args),
         _ => usage(),

@@ -19,7 +19,7 @@
 
 use crate::constellation::topology::{SatId, Torus};
 use crate::net::messages::{Request, Response};
-use crate::net::transport::{Transport, TransportStats};
+use crate::net::transport::{LinkModel, RouteInfo, Transport, TransportStats};
 use anyhow::{bail, Result};
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -155,6 +155,22 @@ impl FaultyTransport {
         }
         Reach::Ok
     }
+
+    /// The fault gate shared by the timed and untimed request paths:
+    /// count and surface a blackhole, or let the request through.
+    fn gate(&self, dest: SatId) -> Result<()> {
+        match self.check_reachable(dest) {
+            Reach::Ok => Ok(()),
+            Reach::DeadDestination => {
+                self.fault_stats.dead_destination.fetch_add(1, Ordering::Relaxed);
+                bail!("injected fault: satellite {dest} is lost")
+            }
+            Reach::BrokenRoute => {
+                self.fault_stats.broken_route.fetch_add(1, Ordering::Relaxed);
+                bail!("injected fault: no route to {dest}")
+            }
+        }
+    }
 }
 
 enum Reach {
@@ -165,17 +181,21 @@ enum Reach {
 
 impl Transport for FaultyTransport {
     fn request(&self, dest: SatId, req: Request) -> Result<Response> {
-        match self.check_reachable(dest) {
-            Reach::Ok => self.inner.request(dest, req),
-            Reach::DeadDestination => {
-                self.fault_stats.dead_destination.fetch_add(1, Ordering::Relaxed);
-                bail!("injected fault: satellite {dest} is lost")
-            }
-            Reach::BrokenRoute => {
-                self.fault_stats.broken_route.fetch_add(1, Ordering::Relaxed);
-                bail!("injected fault: no route to {dest}")
-            }
-        }
+        self.gate(dest)?;
+        self.inner.request(dest, req)
+    }
+
+    fn request_untimed(&self, dest: SatId, req: Request) -> Result<Response> {
+        self.gate(dest)?;
+        self.inner.request_untimed(dest, req)
+    }
+
+    fn route_info(&self, dest: SatId) -> RouteInfo {
+        self.inner.route_info(dest)
+    }
+
+    fn link_model(&self) -> Option<LinkModel> {
+        self.inner.link_model()
     }
 
     fn closest(&self) -> SatId {

@@ -7,9 +7,33 @@
 //! between the LLM host and the cFS satellites; we do exactly that: every
 //! datagram is a Space Packet whose user data field carries one SkyMemory
 //! message.
+//!
+//! # Timing plane vs data plane
+//!
+//! Since the `net::sched` rewire the stack separates two concerns that
+//! the transports used to conflate:
+//!
+//! * **Data plane** — *what happens*: a [`transport::Transport`] routes a
+//!   request to a satellite (direct ground uplink inside the reliable-LOS
+//!   window, closest-satellite relay plus ISL mesh otherwise), applies
+//!   fault gating ([`faults::FaultyTransport`]) and byte/hop accounting,
+//!   and returns the response.  [`transport::Transport::request_untimed`]
+//!   is the pure data-plane entry point.
+//! * **Timing plane** — *when it happens*: the [`sched::NetScheduler`]
+//!   discrete-event engine assigns virtual-time serialization, queueing
+//!   and propagation delays per link ([`sched::LinkKey`]) using the
+//!   transport's [`transport::LinkModel`] and per-destination
+//!   [`transport::RouteInfo`], with a configurable in-flight window per
+//!   link.  All §3.8 chunk fan-out (single-shell and federated managers,
+//!   cross-shell evacuation drains) flows through it — no OS threads.
+//!
+//! Single, non-fan-out requests (probes, evictions, migrations) still use
+//! the transports' own serial latency accounting via
+//! [`transport::Transport::request`].
 
 pub mod faults;
 pub mod messages;
+pub mod sched;
 pub mod spp;
 pub mod transport;
 pub mod udp;

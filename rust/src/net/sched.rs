@@ -1,0 +1,695 @@
+//! The event-driven virtual-time link scheduler — SkyMemory's *timing
+//! plane*.
+//!
+//! The §3.8 protocol fans a whole block's chunks out "in parallel".  The
+//! first implementation modelled that with scoped OS threads per block,
+//! which capped concurrency at a small worker count, burned real thread
+//! spawns on *simulated* round trips, and forced the federated manager
+//! into fully sequential chunk I/O to stay deterministic.  This module
+//! replaces all of that with a discrete-event simulation in **virtual
+//! time**:
+//!
+//! * The [`crate::net::transport::Transport`] stays the **data plane** —
+//!   every chunk still travels through the real request path (routing,
+//!   fault injection, stores, byte/hop accounting) via
+//!   [`Transport::request_untimed`], which skips only the transport's own
+//!   latency emulation.
+//! * [`NetScheduler`] is the **timing plane**: it decides *when* each
+//!   transfer's bytes move.  A transfer entering the constellation holds
+//!   its entry satellite's ground-uplink link for the request
+//!   serialization time, propagates (fully pipelined, no resource held)
+//!   over its ISL hops, holds the destination satellite's service link
+//!   for the response serialization time, and propagates back.  Each link
+//!   admits at most `window` concurrent transfers; excess transfers wait
+//!   in a FIFO queue and their wait is accounted as queueing delay.
+//!
+//! Determinism contract: the event queue is keyed by
+//! `(virtual_time_ns, tag)` where `tag` is a caller-assigned per-transfer
+//! id, and link FIFO queues are ordered by `(arrival_ns, tag)` — so batch
+//! results (completion times, data-plane execution order, queueing stats)
+//! are a pure function of the transfer *set*, independent of submission
+//! order and of any OS scheduling.  No threads are spawned; thousands of
+//! transfers can be in flight concurrently at zero per-transfer cost.
+//!
+//! Serialization and propagation costs derive from the transport's
+//! [`LinkModel`] ([`Transport::link_model`]) and per-destination
+//! [`RouteInfo`] ([`Transport::route_info`]); without a link model every
+//! delay is zero and the engine degrades to a deterministic ordering
+//! harness.  When the link model asks for wall-clock emulation
+//! (`sleep_scale > 0`), the scheduler sleeps once per batch for the
+//! batch's *makespan* — the pipelined time — instead of the serial
+//! per-request sum the transports sleep on their own.
+//!
+//! Caveat: the *data plane* executes synchronously inside the event
+//! loop, one request at a time.  That is exactly right for in-process
+//! transports (the request itself is microseconds; the modelled time is
+//! virtual), but over a transport whose requests genuinely block on a
+//! network — [`crate::net::udp::UdpTransport`] keeps the default
+//! `request_untimed` = `request` — a batch pays its round trips
+//! serially.  Real-network fan-out needs an async/io-multiplexed data
+//! plane underneath this scheduler (see ROADMAP "Async data plane for
+//! real transports").
+
+use crate::constellation::topology::SatId;
+use crate::kvc::chunk::ChunkKey;
+use crate::net::messages::{Request, Response};
+use crate::net::transport::{LinkModel, RouteInfo, Transport};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Timing-plane configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    /// Transfers one link serves concurrently before FIFO queueing
+    /// (>= 1; 1 = strictly serial per link).
+    pub window: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self { window: 8 }
+    }
+}
+
+/// The two contention points a transfer passes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LinkKind {
+    /// Ground-to-entry-satellite uplink (request serialization).
+    Uplink,
+    /// Destination satellite's service link (response serialization).
+    Serve,
+}
+
+/// One schedulable link of the constellation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LinkKey {
+    pub kind: LinkKind,
+    pub sat: SatId,
+}
+
+/// One chunk operation of a batch (the data plane of a transfer).
+#[derive(Debug)]
+pub enum ChunkOp {
+    /// Fetch a chunk from `dest`.
+    Get { dest: SatId, key: ChunkKey },
+    /// Store `data` (header included) on `dest`.
+    Set { dest: SatId, key: ChunkKey, data: Vec<u8> },
+}
+
+impl ChunkOp {
+    fn dest(&self) -> SatId {
+        match self {
+            ChunkOp::Get { dest, .. } | ChunkOp::Set { dest, .. } => *dest,
+        }
+    }
+
+    /// Request payload bytes on the wire (mirrors the transports' own
+    /// accounting: Set carries its payload, everything else ~64 B).
+    fn request_bytes(&self) -> usize {
+        match self {
+            ChunkOp::Set { data, .. } => data.len(),
+            ChunkOp::Get { .. } => 64,
+        }
+    }
+}
+
+/// One transfer of a batch: a caller-assigned unique `tag` (the
+/// deterministic tie-break and result index) plus its chunk operation.
+#[derive(Debug)]
+pub struct Transfer {
+    pub tag: u64,
+    pub op: ChunkOp,
+}
+
+/// Data-plane result of one transfer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChunkResult {
+    /// Get response: the payload, or `None` on a miss.
+    Got(Option<Vec<u8>>),
+    /// Set acknowledged.
+    Stored,
+    /// Transport error (fault-injected blackhole, satellite error, ...).
+    Failed(String),
+}
+
+/// Outcome of one transfer: its data-plane result and the virtual time
+/// (ns since batch start) at which its round trip completed.
+#[derive(Debug)]
+pub struct ChunkOutcome {
+    pub tag: u64,
+    pub completion_ns: u64,
+    pub result: ChunkResult,
+}
+
+/// Report of one batch run to quiescence.
+#[derive(Debug)]
+pub struct BatchReport {
+    /// Outcomes in ascending `tag` order.
+    pub outcomes: Vec<ChunkOutcome>,
+    /// Virtual time at which the last transfer completed.
+    pub makespan_ns: u64,
+    /// Peak number of transfers simultaneously in flight (begun
+    /// transmission, not yet completed).
+    pub peak_in_flight: usize,
+    /// Total time transfers spent holding links (serialization).
+    pub busy_ns: u64,
+    /// Total time transfers spent waiting for a link window slot.
+    pub queued_ns: u64,
+    /// Distinct links this batch touched.
+    pub links_used: usize,
+}
+
+/// Cumulative scheduler counters (the per-link queueing/utilization
+/// figures the scenario reports export).
+#[derive(Debug, Default)]
+pub struct SchedStats {
+    pub batches: AtomicU64,
+    pub transfers: AtomicU64,
+    pub failed_transfers: AtomicU64,
+    /// Sum of batch makespans: the pipelined virtual network time.
+    pub virtual_ns: AtomicU64,
+    /// Sum over links of time spent serving transfers.
+    pub busy_ns: AtomicU64,
+    /// Sum over links of FIFO queueing delay.
+    pub queued_ns: AtomicU64,
+    /// Max in-flight concurrency seen in any batch.
+    pub peak_in_flight: AtomicU64,
+    /// Cumulative transfer count per link (BTreeMap: deterministic).
+    links: Mutex<BTreeMap<LinkKey, u64>>,
+}
+
+/// Plain-value copy of [`SchedStats`] for reports and deltas.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedSnapshot {
+    pub batches: u64,
+    pub transfers: u64,
+    pub failed_transfers: u64,
+    pub virtual_ns: u64,
+    pub busy_ns: u64,
+    pub queued_ns: u64,
+    pub peak_in_flight: u64,
+    /// Distinct links ever used.
+    pub links_used: u64,
+    /// Transfer count of the busiest link.
+    pub busiest_link_transfers: u64,
+}
+
+impl SchedStats {
+    fn record_links(&self, batch_links: &BTreeMap<LinkKey, u64>) {
+        let mut links = self.links.lock().unwrap();
+        for (k, n) in batch_links {
+            *links.entry(*k).or_insert(0) += n;
+        }
+    }
+
+    pub fn links_used(&self) -> u64 {
+        self.links.lock().unwrap().len() as u64
+    }
+
+    pub fn snapshot(&self) -> SchedSnapshot {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let links = self.links.lock().unwrap();
+        SchedSnapshot {
+            batches: ld(&self.batches),
+            transfers: ld(&self.transfers),
+            failed_transfers: ld(&self.failed_transfers),
+            virtual_ns: ld(&self.virtual_ns),
+            busy_ns: ld(&self.busy_ns),
+            queued_ns: ld(&self.queued_ns),
+            peak_in_flight: ld(&self.peak_in_flight),
+            links_used: links.len() as u64,
+            busiest_link_transfers: links.values().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+/// The virtual-time transfer engine over one transport.
+pub struct NetScheduler {
+    transport: Arc<dyn Transport>,
+    pub config: SchedConfig,
+    pub stats: SchedStats,
+}
+
+impl NetScheduler {
+    pub fn new(transport: Arc<dyn Transport>, config: SchedConfig) -> Self {
+        assert!(config.window >= 1, "a link window must admit at least one transfer");
+        Self { transport, config, stats: SchedStats::default() }
+    }
+
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
+    }
+
+    /// Run one batch of transfers to quiescence and return per-transfer
+    /// outcomes, updating the cumulative stats.  Tags must be unique
+    /// within the batch.
+    pub fn run_batch(&self, transfers: Vec<Transfer>) -> BatchReport {
+        let link_model = self.transport.link_model();
+        let mut engine = Engine {
+            transport: self.transport.as_ref(),
+            link_model,
+            window: self.config.window,
+            flights: BTreeMap::new(),
+            events: BTreeMap::new(),
+            links: BTreeMap::new(),
+            active: 0,
+            peak_in_flight: 0,
+            failed: 0,
+        };
+        for t in transfers {
+            engine.admit(t);
+        }
+        let report = engine.run();
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.transfers.fetch_add(report.outcomes.len() as u64, Ordering::Relaxed);
+        self.stats.failed_transfers.fetch_add(engine.failed, Ordering::Relaxed);
+        self.stats.virtual_ns.fetch_add(report.makespan_ns, Ordering::Relaxed);
+        self.stats.busy_ns.fetch_add(report.busy_ns, Ordering::Relaxed);
+        self.stats.queued_ns.fetch_add(report.queued_ns, Ordering::Relaxed);
+        self.stats.peak_in_flight.fetch_max(report.peak_in_flight as u64, Ordering::Relaxed);
+        let batch_links: BTreeMap<LinkKey, u64> =
+            engine.links.iter().map(|(k, l)| (*k, l.transfers)).collect();
+        self.stats.record_links(&batch_links);
+        // wall-clock emulation (serving mode): sleep the *pipelined*
+        // makespan once per batch, not the serial per-request sum
+        if let Some(lm) = link_model {
+            if lm.sleep_scale > 0.0 && report.makespan_ns > 0 {
+                let ns = (report.makespan_ns as f64 * lm.sleep_scale) as u64;
+                std::thread::sleep(std::time::Duration::from_nanos(ns));
+            }
+        }
+        report
+    }
+}
+
+// ======================================================================
+// The single-batch event engine (single-threaded, no locks)
+// ======================================================================
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    ArriveUplink,
+    UplinkDone,
+    ArriveServe,
+    ServeDone,
+    Complete,
+}
+
+#[derive(Default)]
+struct LinkState {
+    in_flight: usize,
+    /// Waiting transfers, FIFO by `(arrival_ns, tag)`.
+    queue: BTreeSet<(u64, u64)>,
+    busy_ns: u64,
+    queued_ns: u64,
+    transfers: u64,
+}
+
+struct Flight {
+    op: Option<ChunkOp>,
+    dest: SatId,
+    route: RouteInfo,
+    /// Request serialization hold on the uplink.
+    req_ser_ns: u64,
+    /// Response serialization hold on the destination's service link —
+    /// known once the data plane has executed.
+    resp_ser_ns: u64,
+    /// One-way propagation (ground uplink + ISL hops), fully pipelined.
+    prop_ns: u64,
+    result: Option<ChunkResult>,
+    completion_ns: u64,
+}
+
+struct Engine<'a> {
+    transport: &'a dyn Transport,
+    link_model: Option<LinkModel>,
+    window: usize,
+    flights: BTreeMap<u64, Flight>,
+    /// Event queue keyed by `(virtual_time_ns, tag)` — the deterministic
+    /// total order of the simulation.
+    events: BTreeMap<(u64, u64), Ev>,
+    links: BTreeMap<LinkKey, LinkState>,
+    active: usize,
+    peak_in_flight: usize,
+    failed: u64,
+}
+
+impl Engine<'_> {
+    fn ser_ns(&self, bytes: usize) -> u64 {
+        match &self.link_model {
+            Some(lm) => (lm.serial_s(bytes) * 1e9) as u64,
+            None => 0,
+        }
+    }
+
+    fn prop_ns(&self, route: &RouteInfo) -> u64 {
+        match &self.link_model {
+            Some(lm) => (lm.propagation_s(route.ground_cells, route.isl_hops) * 1e9) as u64,
+            None => 0,
+        }
+    }
+
+    fn admit(&mut self, t: Transfer) {
+        let dest = t.op.dest();
+        let route = self.transport.route_info(dest);
+        let flight = Flight {
+            req_ser_ns: self.ser_ns(t.op.request_bytes()),
+            resp_ser_ns: 0,
+            prop_ns: self.prop_ns(&route),
+            op: Some(t.op),
+            dest,
+            route,
+            result: None,
+            completion_ns: 0,
+        };
+        let prev = self.flights.insert(t.tag, flight);
+        assert!(prev.is_none(), "duplicate transfer tag {}", t.tag);
+        self.events.insert((0, t.tag), Ev::ArriveUplink);
+    }
+
+    /// Execute the data plane of one transfer (deterministic point in the
+    /// event order: uplink admission).
+    fn execute(&mut self, tag: u64) {
+        let flight = self.flights.get_mut(&tag).expect("flight exists");
+        let op = flight.op.take().expect("data plane runs once");
+        let dest = flight.dest;
+        let (result, resp_bytes) = match op {
+            ChunkOp::Get { key, .. } => {
+                match self.transport.request_untimed(dest, Request::Get { key }) {
+                    Ok(Response::GetOk { payload }) => {
+                        let n = payload.len().max(64);
+                        (ChunkResult::Got(Some(payload)), n)
+                    }
+                    Ok(Response::GetMiss) => {
+                        self.transport.stats().misses.fetch_add(1, Ordering::Relaxed);
+                        (ChunkResult::Got(None), 64)
+                    }
+                    Ok(r) => {
+                        (ChunkResult::Failed(format!("unexpected response to Get: {r:?}")), 64)
+                    }
+                    Err(e) => (ChunkResult::Failed(e.to_string()), 64),
+                }
+            }
+            ChunkOp::Set { key, data, .. } => {
+                match self.transport.request_untimed(dest, Request::Set { key, payload: data }) {
+                    Ok(Response::SetOk) => (ChunkResult::Stored, 64),
+                    Ok(r) => {
+                        (ChunkResult::Failed(format!("unexpected response to Set: {r:?}")), 64)
+                    }
+                    Err(e) => (ChunkResult::Failed(e.to_string()), 64),
+                }
+            }
+        };
+        if matches!(result, ChunkResult::Failed(_)) {
+            self.failed += 1;
+        }
+        let resp_ser = self.ser_ns(resp_bytes);
+        let flight = self.flights.get_mut(&tag).expect("flight exists");
+        flight.result = Some(result);
+        flight.resp_ser_ns = resp_ser;
+    }
+
+    fn uplink_key(&self, tag: u64) -> LinkKey {
+        LinkKey { kind: LinkKind::Uplink, sat: self.flights[&tag].route.entry }
+    }
+
+    fn serve_key(&self, tag: u64) -> LinkKey {
+        LinkKey { kind: LinkKind::Serve, sat: self.flights[&tag].dest }
+    }
+
+    /// Begin the uplink hold of `tag` at time `t` (the transfer is now in
+    /// flight; its data plane executes here).
+    fn start_uplink(&mut self, t: u64, tag: u64) {
+        self.active += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.active);
+        self.execute(tag);
+        let key = self.uplink_key(tag);
+        let hold = self.flights[&tag].req_ser_ns;
+        let link = self.links.entry(key).or_default();
+        link.transfers += 1;
+        link.busy_ns += hold;
+        self.events.insert((t + hold, tag), Ev::UplinkDone);
+    }
+
+    /// Begin the destination-service hold of `tag` at time `t`.
+    fn start_serve(&mut self, t: u64, tag: u64) {
+        let key = self.serve_key(tag);
+        let hold = self.flights[&tag].resp_ser_ns;
+        let link = self.links.entry(key).or_default();
+        link.transfers += 1;
+        link.busy_ns += hold;
+        self.events.insert((t + hold, tag), Ev::ServeDone);
+    }
+
+    /// Acquire a window slot on `key` at time `t`, or join its FIFO.
+    /// Returns whether the slot was acquired.
+    fn acquire_or_queue(&mut self, key: LinkKey, t: u64, tag: u64) -> bool {
+        let window = self.window;
+        let link = self.links.entry(key).or_default();
+        if link.in_flight < window {
+            link.in_flight += 1;
+            true
+        } else {
+            link.queue.insert((t, tag));
+            false
+        }
+    }
+
+    /// Release a window slot on `key` at time `t`; returns the next
+    /// queued transfer (FIFO by arrival, tag tie-break), now admitted.
+    fn release(&mut self, key: LinkKey, t: u64) -> Option<u64> {
+        let link = self.links.get_mut(&key).expect("held link exists");
+        link.in_flight -= 1;
+        let head = link.queue.iter().next().copied();
+        if let Some((arrival, wtag)) = head {
+            link.queue.remove(&(arrival, wtag));
+            link.in_flight += 1;
+            link.queued_ns += t - arrival;
+            Some(wtag)
+        } else {
+            None
+        }
+    }
+
+    fn run(&mut self) -> BatchReport {
+        let mut makespan = 0u64;
+        while let Some(((t, tag), ev)) = self.events.pop_first() {
+            match ev {
+                Ev::ArriveUplink => {
+                    let key = self.uplink_key(tag);
+                    if self.acquire_or_queue(key, t, tag) {
+                        self.start_uplink(t, tag);
+                    }
+                }
+                Ev::UplinkDone => {
+                    let key = self.uplink_key(tag);
+                    if let Some(next) = self.release(key, t) {
+                        self.start_uplink(t, next);
+                    }
+                    let prop = self.flights[&tag].prop_ns;
+                    self.events.insert((t + prop, tag), Ev::ArriveServe);
+                }
+                Ev::ArriveServe => {
+                    let key = self.serve_key(tag);
+                    if self.acquire_or_queue(key, t, tag) {
+                        self.start_serve(t, tag);
+                    }
+                }
+                Ev::ServeDone => {
+                    let key = self.serve_key(tag);
+                    if let Some(next) = self.release(key, t) {
+                        self.start_serve(t, next);
+                    }
+                    let prop = self.flights[&tag].prop_ns;
+                    self.events.insert((t + prop, tag), Ev::Complete);
+                }
+                Ev::Complete => {
+                    self.active -= 1;
+                    let flight = self.flights.get_mut(&tag).expect("flight exists");
+                    flight.completion_ns = t;
+                    makespan = makespan.max(t);
+                }
+            }
+        }
+        let outcomes: Vec<ChunkOutcome> = std::mem::take(&mut self.flights)
+            .into_iter()
+            .map(|(tag, f)| ChunkOutcome {
+                tag,
+                completion_ns: f.completion_ns,
+                result: f.result.expect("every transfer ran its data plane"),
+            })
+            .collect();
+        let busy_ns = self.links.values().map(|l| l.busy_ns).sum();
+        let queued_ns = self.links.values().map(|l| l.queued_ns).sum();
+        BatchReport {
+            outcomes,
+            makespan_ns: makespan,
+            peak_in_flight: self.peak_in_flight,
+            busy_ns,
+            queued_ns,
+            links_used: self.links.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::constellation::geometry::Geometry;
+    use crate::constellation::los::LosGrid;
+    use crate::constellation::topology::Torus;
+    use crate::kvc::block::BlockHash;
+    use crate::kvc::eviction::EvictionPolicy;
+    use crate::net::faults::FaultyTransport;
+    use crate::net::transport::{GroundView, InProcTransport};
+    use crate::satellite::fleet::Fleet;
+
+    fn stack(bandwidth_bps: Option<f64>) -> (Arc<Fleet>, Arc<InProcTransport>) {
+        let torus = Torus::new(7, 13);
+        let fleet = Arc::new(Fleet::new(torus, 10 << 20, EvictionPolicy::Lazy));
+        let center = SatId::new(3, 6);
+        let los = LosGrid::new(center, 2, 2);
+        let ground = GroundView::new(center, &los, torus.sats_per_plane);
+        let link = bandwidth_bps.map(|b| {
+            let mut lm = LinkModel::laser_defaults(Geometry::new(550.0, 13, 7));
+            lm.bandwidth_bps = b;
+            lm.sleep_scale = 0.0;
+            lm
+        });
+        let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, link));
+        (fleet, inproc)
+    }
+
+    fn sched(inproc: &Arc<InProcTransport>, window: usize) -> NetScheduler {
+        let t: Arc<dyn Transport> = inproc.clone();
+        NetScheduler::new(t, SchedConfig { window })
+    }
+
+    fn key(b: u8, c: u32) -> ChunkKey {
+        ChunkKey::new(BlockHash([b; 32]), c)
+    }
+
+    fn set(tag: u64, dest: SatId, b: u8, c: u32, len: usize) -> Transfer {
+        Transfer { tag, op: ChunkOp::Set { dest, key: key(b, c), data: vec![b; len] } }
+    }
+
+    fn get(tag: u64, dest: SatId, b: u8, c: u32) -> Transfer {
+        Transfer { tag, op: ChunkOp::Get { dest, key: key(b, c) } }
+    }
+
+    #[test]
+    fn set_then_get_roundtrip_through_the_engine() {
+        let (_fleet, inproc) = stack(None);
+        let s = sched(&inproc, 4);
+        let dest = SatId::new(3, 7); // in LOS
+        let report = s.run_batch(vec![set(0, dest, 1, 0, 100), set(1, dest, 1, 1, 50)]);
+        assert_eq!(report.outcomes.len(), 2);
+        assert!(report.outcomes.iter().all(|o| o.result == ChunkResult::Stored));
+        // zero link model: everything completes at virtual time 0
+        assert_eq!(report.makespan_ns, 0);
+        let report = s.run_batch(vec![get(0, dest, 1, 0), get(1, dest, 1, 1), get(2, dest, 1, 9)]);
+        assert_eq!(report.outcomes[0].result, ChunkResult::Got(Some(vec![1; 100])));
+        assert_eq!(report.outcomes[1].result, ChunkResult::Got(Some(vec![1; 50])));
+        assert_eq!(report.outcomes[2].result, ChunkResult::Got(None), "missing chunk is a miss");
+        assert_eq!(s.stats.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats.transfers.load(Ordering::Relaxed), 5);
+        assert_eq!(s.stats.failed_transfers.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn outcomes_are_sorted_by_tag_regardless_of_submission_order() {
+        let (_fleet, inproc) = stack(Some(1e8));
+        let s = sched(&inproc, 2);
+        let dest = SatId::new(3, 7);
+        let batch = vec![set(2, dest, 1, 2, 10), set(0, dest, 1, 0, 10), set(1, dest, 1, 1, 10)];
+        let report = s.run_batch(batch);
+        let tags: Vec<u64> = report.outcomes.iter().map(|o| o.tag).collect();
+        assert_eq!(tags, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn window_one_serializes_a_shared_link() {
+        // two equal Sets to the same satellite: with window 1 the second
+        // trails the first by exactly one request serialization slot;
+        // with window 2 they complete together
+        let dest = SatId::new(3, 6);
+        let mk = || vec![set(0, dest, 2, 0, 1000), set(1, dest, 2, 1, 1000)];
+        let (_f1, t1) = stack(Some(1e8));
+        let serial = sched(&t1, 1).run_batch(mk());
+        let (_f2, t2) = stack(Some(1e8));
+        let parallel = sched(&t2, 2).run_batch(mk());
+        let ser_ns = ((1000.0 * 8.0 / 1e8) * 1e9) as u64;
+        let c = |r: &BatchReport, i: usize| r.outcomes[i].completion_ns;
+        assert_eq!(c(&serial, 1) - c(&serial, 0), ser_ns, "FIFO trails by one slot");
+        assert_eq!(c(&parallel, 0), c(&parallel, 1), "window 2 admits both at once");
+        assert!(serial.queued_ns > 0, "the queued wait is accounted");
+        assert_eq!(parallel.queued_ns, 0);
+        assert!(serial.makespan_ns > parallel.makespan_ns);
+    }
+
+    #[test]
+    fn distinct_destinations_pipeline() {
+        // five transfers over four distinct LOS satellites take barely
+        // longer than one transfer to the same ring, not five times as
+        // long: propagation overlaps, only shared links serialize
+        let (_fleet, inproc) = stack(Some(1e8));
+        let s = sched(&inproc, 1);
+        let one = s.run_batch(vec![set(0, SatId::new(3, 5), 3, 0, 2000)]);
+        let (_fleet2, inproc2) = stack(Some(1e8));
+        let s2 = sched(&inproc2, 1);
+        let many = s2.run_batch(
+            (0..5).map(|i| set(i, SatId::new(3, 5 + i as u16 % 4), 3, i as u32, 2000)).collect(),
+        );
+        assert!(
+            many.makespan_ns < 2 * one.makespan_ns,
+            "fan-out must not serialize: {} vs {}",
+            many.makespan_ns,
+            one.makespan_ns
+        );
+        assert!(many.peak_in_flight >= 4, "transfers overlap: {}", many.peak_in_flight);
+        assert!(many.links_used > one.links_used);
+    }
+
+    #[test]
+    fn failed_satellite_surfaces_as_failed_result() {
+        let (_fleet, inproc) = stack(None);
+        let torus = Torus::new(7, 13);
+        let faults = Arc::new(FaultyTransport::new(inproc.clone(), torus, 2, 2));
+        let dead = SatId::new(3, 7);
+        faults.fail_satellite(dead);
+        let t: Arc<dyn Transport> = faults;
+        let s = NetScheduler::new(t, SchedConfig::default());
+        let report = s.run_batch(vec![set(0, dead, 4, 0, 10), set(1, SatId::new(3, 6), 4, 1, 10)]);
+        assert!(matches!(report.outcomes[0].result, ChunkResult::Failed(_)));
+        assert_eq!(report.outcomes[1].result, ChunkResult::Stored);
+        assert_eq!(s.stats.failed_transfers.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn snapshot_aggregates_links() {
+        let (_fleet, inproc) = stack(Some(1e8));
+        let s = sched(&inproc, 1);
+        let dest = SatId::new(3, 6);
+        s.run_batch(vec![set(0, dest, 5, 0, 500), set(1, dest, 5, 1, 500)]);
+        s.run_batch(vec![get(0, dest, 5, 0)]);
+        let snap = s.stats.snapshot();
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.transfers, 3);
+        // one uplink + one service link on the single destination
+        assert_eq!(snap.links_used, 2);
+        assert_eq!(snap.busiest_link_transfers, 3);
+        assert!(snap.virtual_ns > 0);
+        assert!(snap.busy_ns > 0);
+        assert_eq!(snap.peak_in_flight, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate transfer tag")]
+    fn duplicate_tags_are_rejected() {
+        let (_fleet, inproc) = stack(None);
+        let s = sched(&inproc, 1);
+        let dest = SatId::new(3, 6);
+        s.run_batch(vec![set(7, dest, 6, 0, 10), set(7, dest, 6, 1, 10)]);
+    }
+}

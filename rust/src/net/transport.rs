@@ -40,16 +40,43 @@ impl LinkModel {
         Self { geometry, bandwidth_bps: 1e9, sleep_scale: 1.0 }
     }
 
-    /// One-way latency for a request entering at `entry` (ground uplink)
-    /// and traversing `hops` ISL hops carrying `bytes` of payload.
-    pub fn one_way_s(&self, entry_ground_cells: (usize, usize), hops: usize, bytes: usize) -> f64 {
+    /// Pure propagation: slant-range ground uplink from `entry` plus
+    /// `hops` worst-case ISL hops (no payload term).
+    pub fn propagation_s(&self, entry_ground_cells: (usize, usize), hops: usize) -> f64 {
         let up = self
             .geometry
             .ground_latency_s(entry_ground_cells.0, entry_ground_cells.1);
-        let isl = hops as f64 * self.geometry.worst_hop_latency_s();
-        let serial = (bytes as f64 * 8.0) / self.bandwidth_bps;
-        up + isl + serial
+        up + hops as f64 * self.geometry.worst_hop_latency_s()
     }
+
+    /// Serialization time of `bytes` at this link's bandwidth.
+    pub fn serial_s(&self, bytes: usize) -> f64 {
+        (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+
+    /// One-way latency for a request entering at `entry` (ground uplink)
+    /// and traversing `hops` ISL hops carrying `bytes` of payload.
+    /// Exactly [`Self::propagation_s`] + [`Self::serial_s`] — the
+    /// `net::sched` timing plane uses the two terms separately.
+    pub fn one_way_s(&self, entry_ground_cells: (usize, usize), hops: usize, bytes: usize) -> f64 {
+        self.propagation_s(entry_ground_cells, hops) + self.serial_s(bytes)
+    }
+}
+
+/// Timing-plane description of the path one request takes: where it
+/// enters the constellation and what it traverses.  Consumed by the
+/// [`crate::net::sched`] virtual-time scheduler; the data plane never
+/// looks at it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteInfo {
+    /// Satellite the request enters at (the destination itself when it is
+    /// inside the reliable-LOS window, else the closest satellite).
+    pub entry: SatId,
+    /// ISL hops from the entry satellite to the destination.
+    pub isl_hops: usize,
+    /// Ground-grid cells (slots, planes) from the sub-stellar point to
+    /// the entry satellite (drives the slant-range uplink latency).
+    pub ground_cells: (usize, usize),
 }
 
 /// Counters every transport keeps (exported to /metrics).
@@ -85,6 +112,28 @@ pub trait Transport: Send + Sync {
     fn epoch(&self) -> u64;
 
     fn stats(&self) -> &TransportStats;
+
+    // --- timing plane ---------------------------------------------------
+
+    /// Data-plane-only delivery: identical routing, fault gating and
+    /// byte/hop accounting to [`Transport::request`], but **no** latency
+    /// accounting or sleeping — the caller (the [`crate::net::sched`]
+    /// scheduler) owns timing.  Default: plain `request`.
+    fn request_untimed(&self, dest: SatId, req: Request) -> Result<Response> {
+        self.request(dest, req)
+    }
+
+    /// Timing-plane description of the path to `dest` (entry satellite,
+    /// ISL hops, ground cells).  Default: direct zero-hop delivery.
+    fn route_info(&self, dest: SatId) -> RouteInfo {
+        RouteInfo { entry: dest, isl_hops: 0, ground_cells: (0, 0) }
+    }
+
+    /// The link model driving the timing plane, when this transport has
+    /// one (the in-proc transport's latency emulation parameters).
+    fn link_model(&self) -> Option<LinkModel> {
+        None
+    }
 
     // --- conveniences ---------------------------------------------------
 
@@ -224,10 +273,10 @@ impl InProcTransport {
             }
         }
     }
-}
 
-impl Transport for InProcTransport {
-    fn request(&self, dest: SatId, req: Request) -> Result<Response> {
+    /// Shared body of [`Transport::request`] / [`Transport::request_untimed`]:
+    /// the data plane always runs; only the timing plane is optional.
+    fn deliver(&self, dest: SatId, req: Request, timed: bool) -> Result<Response> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let req_id = self.req_counter.fetch_add(1, Ordering::Relaxed);
         let entry = self.entry_for(dest);
@@ -245,12 +294,39 @@ impl Transport for InProcTransport {
         self.stats
             .isl_bytes
             .fetch_add(hops as u64 * (bytes + resp_bytes) as u64, Ordering::Relaxed);
-        self.emulate_latency(entry, hops, resp_bytes);
+        if timed {
+            self.emulate_latency(entry, hops, resp_bytes);
+        }
         if let Response::Error { code } = resp {
             self.stats.errors.fetch_add(1, Ordering::Relaxed);
             bail!("satellite error code {code}");
         }
         Ok(resp)
+    }
+}
+
+impl Transport for InProcTransport {
+    fn request(&self, dest: SatId, req: Request) -> Result<Response> {
+        self.deliver(dest, req, true)
+    }
+
+    fn request_untimed(&self, dest: SatId, req: Request) -> Result<Response> {
+        self.deliver(dest, req, false)
+    }
+
+    fn route_info(&self, dest: SatId) -> RouteInfo {
+        let entry = self.entry_for(dest);
+        let center = self.ground.center();
+        let torus = &self.fleet.torus;
+        RouteInfo {
+            entry,
+            isl_hops: torus.hops(entry, dest),
+            ground_cells: (torus.slot_distance(center, entry), torus.plane_distance(center, entry)),
+        }
+    }
+
+    fn link_model(&self) -> Option<LinkModel> {
+        self.link
     }
 
     fn closest(&self) -> SatId {
@@ -345,6 +421,43 @@ mod tests {
         t.set_chunk(far, key(1, 0), vec![0u8; 6000]).unwrap();
         let ns = t.stats().sim_latency_ns.load(Ordering::Relaxed);
         assert!(ns > 1_000_000, "multi-hop + uplink should exceed 1 ms, got {ns} ns");
+    }
+
+    #[test]
+    fn route_info_mirrors_the_entry_model() {
+        let t = transport(None);
+        let center = SatId::new(2, 9);
+        // LOS destination: direct uplink, no mesh
+        let near = SatId::new(1, 8);
+        let ri = t.route_info(near);
+        assert_eq!(ri.entry, near);
+        assert_eq!(ri.isl_hops, 0);
+        assert_eq!(ri.ground_cells, (1, 1));
+        // far destination: enters at the centre, rides the mesh
+        let far = SatId::new(4, 0);
+        let ri = t.route_info(far);
+        assert_eq!(ri.entry, center);
+        assert_eq!(ri.isl_hops, t.fleet.torus.hops(center, far));
+        assert_eq!(ri.ground_cells, (0, 0), "the centre is the sub-stellar point");
+    }
+
+    #[test]
+    fn untimed_requests_account_bytes_but_not_latency() {
+        let g = Geometry::new(550.0, 19, 5);
+        let mut link = LinkModel::laser_defaults(g);
+        link.sleep_scale = 0.0;
+        let t = transport(Some(link));
+        assert_eq!(t.link_model().map(|l| l.bandwidth_bps), Some(link.bandwidth_bps));
+        let far = SatId::new(4, 0);
+        t.request_untimed(far, Request::Set { key: key(1, 0), payload: vec![0u8; 6000] })
+            .unwrap();
+        assert_eq!(t.stats().sim_latency_ns.load(Ordering::Relaxed), 0, "timing plane elsewhere");
+        assert!(t.stats().isl_hops.load(Ordering::Relaxed) > 0, "data plane still accounted");
+        assert!(t.stats().isl_bytes.load(Ordering::Relaxed) > 0);
+        assert_eq!(t.stats().requests.load(Ordering::Relaxed), 1);
+        // the timed path on the same transport does accrue latency
+        t.set_chunk(far, key(1, 1), vec![0u8; 6000]).unwrap();
+        assert!(t.stats().sim_latency_ns.load(Ordering::Relaxed) > 0);
     }
 
     #[test]

@@ -152,9 +152,10 @@ pub fn fig16_summary() -> String {
 }
 
 /// The scenario-harness reports: every built-in scenario (the paper's
-/// 19x5 testbed, the Starlink- and Kuiper-like mega shells, and the
-/// federated dual-shell run) at a fixed seed, one metrics-JSON line
-/// each.  Deterministic: re-running produces byte-identical output.
+/// 19x5 testbed, the Starlink- and Kuiper-like mega shells, the
+/// net::sched mega-shell stress, and the federated dual-shell run) at a
+/// fixed seed, one metrics-JSON line each.  Deterministic: re-running
+/// produces byte-identical output.
 pub fn scenarios() -> String {
     let mut out = String::new();
     for spec in crate::sim::scenario::ScenarioSpec::builtin(42) {
@@ -268,8 +269,14 @@ mod tests {
     #[test]
     fn scenarios_artifact_has_one_line_per_builtin() {
         let text = scenarios();
-        assert_eq!(text.trim().lines().count(), 4);
-        for name in ["paper-19x5", "starlink-shell", "kuiper-shell", "federated-dual-shell"] {
+        assert_eq!(text.trim().lines().count(), 5);
+        for name in [
+            "paper-19x5",
+            "starlink-shell",
+            "kuiper-shell",
+            "mega-shell",
+            "federated-dual-shell",
+        ] {
             assert!(text.contains(name), "{name} missing");
         }
     }

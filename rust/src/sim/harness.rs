@@ -12,9 +12,11 @@
 //! produces a byte-identical metrics JSON.  Everything that could vary
 //! between runs is pinned: the RNG is seeded, link latency is *accounted*
 //! (never slept), per-satellite migration handoffs drain in sorted key
-//! order, and the manager's intra-block thread fan-out only reorders
-//! events within a single block — invisible at the block granularity all
-//! metrics are computed at.
+//! order, and the chunk fan-out runs on the [`crate::net::sched`]
+//! virtual-time event engine — single-threaded, `(virtual_time, tag)`
+//! ordered, with zero OS-scheduling influence.  Network time per request
+//! is the serial accounting of the non-batched requests plus the
+//! *pipelined* batch makespans of the scheduler.
 
 use crate::constellation::los::LosGrid;
 use crate::constellation::topology::{SatId, Torus};
@@ -25,6 +27,7 @@ use crate::kvc::block::{block_hashes, BlockHash};
 use crate::kvc::manager::{KvcManager, KvcStatsSnapshot};
 use crate::mapping::box_width;
 use crate::net::faults::FaultyTransport;
+use crate::net::sched::SchedSnapshot;
 use crate::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
 use crate::satellite::fleet::Fleet;
 use crate::sim::config::SimConfig;
@@ -84,6 +87,25 @@ pub struct ScenarioReport {
     pub analytic_worst_case_s: f64,
     /// KVC manager counters at the end of the run.
     pub kvc: KvcStatsSnapshot,
+    /// Virtual-time scheduler counters: batches, in-flight peak, and the
+    /// per-link queueing/utilization aggregates.
+    pub sched: SchedSnapshot,
+}
+
+/// Render a scheduler snapshot (shared by the single-shell and federated
+/// reports; integer ns keep the JSON byte-stable).
+fn sched_json(s: &SchedSnapshot) -> Json {
+    obj(vec![
+        ("batches", n(s.batches as f64)),
+        ("transfers", n(s.transfers as f64)),
+        ("failed_transfers", n(s.failed_transfers as f64)),
+        ("virtual_time_ns", n(s.virtual_ns as f64)),
+        ("link_busy_ns", n(s.busy_ns as f64)),
+        ("link_queued_ns", n(s.queued_ns as f64)),
+        ("peak_in_flight", n(s.peak_in_flight as f64)),
+        ("links_used", n(s.links_used as f64)),
+        ("busiest_link_transfers", n(s.busiest_link_transfers as f64)),
+    ])
 }
 
 impl ScenarioReport {
@@ -130,6 +152,7 @@ impl ScenarioReport {
                     ("broken_blocks", n(k.broken_blocks as f64)),
                 ]),
             ),
+            ("sched", sched_json(&self.sched)),
         ])
     }
 
@@ -293,6 +316,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     let los = LosGrid::new(center0, LOS_HALF, LOS_HALF.min(spec.planes / 2));
     let ground = GroundView::new(center0, &los, torus.sats_per_plane);
     let mut link = LinkModel::laser_defaults(geometry);
+    link.bandwidth_bps = spec.link_bandwidth_bps;
     link.sleep_scale = 0.0; // account latency, never sleep: runs stay fast
     let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, Some(link)));
     let faults = Arc::new(FaultyTransport::new(
@@ -346,7 +370,13 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
                 continue;
             }
             blocks_requested += hashes.len() as u64;
-            let before_ns = inproc.stats().sim_latency_ns.load(Ordering::Relaxed);
+            // request network time = serial accounting of the non-batched
+            // requests + pipelined makespans of the scheduler's batches
+            let net_now = || {
+                inproc.stats().sim_latency_ns.load(Ordering::Relaxed)
+                    + manager.sched().stats.virtual_ns.load(Ordering::Relaxed)
+            };
+            let before_ns = net_now();
             let cached = manager.lookup(&hashes, epoch).map(|(b, _)| b).unwrap_or(0);
             let fetched = if cached > 0 {
                 manager
@@ -365,7 +395,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
                     failed_writes += 1;
                 }
             }
-            let after_ns = inproc.stats().sim_latency_ns.load(Ordering::Relaxed);
+            let after_ns = net_now();
             request_net_ns.push(after_ns.saturating_sub(before_ns));
         }
 
@@ -429,6 +459,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         net_worst_ms: to_ms(sorted_ns.last().copied().unwrap_or(0)),
         analytic_worst_case_s: analytic_worst_case_s(spec),
         kvc: manager.stats.snapshot(),
+        sched: manager.sched().stats.snapshot(),
     }
 }
 
@@ -457,6 +488,8 @@ pub struct FederatedShellReport {
     pub evicted_blocks: u64,
     pub failed_satellites: u64,
     pub analytic_worst_case_s: f64,
+    /// The shell scheduler's counters (per-link queueing/utilization).
+    pub sched: SchedSnapshot,
 }
 
 impl FederatedShellReport {
@@ -477,6 +510,7 @@ impl FederatedShellReport {
             ("evicted_blocks", n(self.evicted_blocks as f64)),
             ("failed_satellites", n(self.failed_satellites as f64)),
             ("analytic_worst_case_s", n(self.analytic_worst_case_s)),
+            ("sched", sched_json(&self.sched)),
         ])
     }
 }
@@ -594,7 +628,7 @@ fn build_shell_link(id: ShellId, ss: &ShellSpec, spec: &FederatedScenarioSpec) -
     let inproc = Arc::new(InProcTransport::new(fleet.clone(), ground, Some(link)));
     let faults =
         Arc::new(FaultyTransport::new(inproc.clone(), torus, los.half_slots, los.half_planes));
-    ShellLink { shell, fleet, inproc, faults }
+    ShellLink::new(shell, fleet, inproc, faults, spec.sched_window)
 }
 
 /// Run one federated scenario end to end: multi-shell placement with
@@ -763,6 +797,7 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
                 evicted_blocks,
                 failed_satellites: link.faults.failed_satellites() as u64,
                 analytic_worst_case_s: fed_shell_analytic(spec, ss),
+                sched: link.sched.stats.snapshot(),
             }
         })
         .collect();
@@ -952,8 +987,27 @@ mod tests {
             "\"net_p99_ms\"",
             "\"analytic_worst_case_s\"",
             "\"kvc\"",
+            "\"sched\"",
+            "\"peak_in_flight\"",
+            "\"link_queued_ns\"",
+            "\"links_used\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    #[test]
+    fn scheduler_counters_reflect_the_fan_out() {
+        let mut spec = tiny_spec(4);
+        spec.failures = FailurePlan::NONE;
+        let r = run_scenario(&spec);
+        assert!(r.sched.batches > 0, "{r:?}");
+        // every fetched/stored chunk rode the scheduler (broken-block
+        // fetch attempts make the transfer count strictly larger)
+        assert!(r.sched.transfers >= r.kvc.chunks_fetched + r.kvc.chunks_stored, "{r:?}");
+        assert_eq!(r.sched.failed_transfers, 0, "no faults injected: {r:?}");
+        assert!(r.sched.virtual_ns > 0, "link model must cost virtual time");
+        assert!(r.sched.peak_in_flight > 1, "chunks must overlap in flight");
+        assert!(r.sched.links_used > 1);
     }
 }

@@ -7,7 +7,8 @@
 //! * [`workload`] — shared-prefix prompt generation.
 //! * [`scenario`] — named, seed-driven scenario specs (the paper's 19x5
 //!   testbed, a Starlink-like 72x22 mega-shell, a Kuiper-like 34x34
-//!   shell, and the federated dual-shell scenario) with
+//!   shell, the `mega-shell` [`crate::net::sched`] stress shape, and the
+//!   federated dual-shell scenario; `skymemory scenario --list`) with
 //!   failure-injection plans.
 //! * [`harness`] — runs a scenario end to end over the real protocol
 //!   stack (fleet + mapping + migration + KVC manager; for federated

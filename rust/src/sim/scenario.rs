@@ -9,7 +9,7 @@
 //! nondeterminism (hash-map iteration order, wall-clock time, thread
 //! scheduling observable at block granularity).
 //!
-//! Four scenarios ship built in:
+//! Five scenarios ship built in (`skymemory scenario --list`):
 //!
 //! * `paper-19x5` — the paper's NUC-testbed shape (§5): 5 planes x 19
 //!   satellites at 550 km, 9 virtual servers, heavy per-satellite memory
@@ -19,6 +19,9 @@
 //!   satellite losses, ISL outages and a ground-station handover.
 //! * `kuiper-shell` — 34 planes x 34 satellites at 630 km (Kuiper's
 //!   first shell), 49 servers, moderate failure pressure.
+//! * `mega-shell` — the [`crate::net::sched`] stress shape: the 72x22
+//!   shell with >1000 in-flight chunks per block over throttled links,
+//!   for sweeping the per-link transfer window (`skymemory sched`).
 //! * `federated-dual-shell` — a two-shell federation (the Starlink-like
 //!   72x22 shell at 550 km plus the Kuiper-like 34x34 shell at 630 km)
 //!   run through [`crate::federation`]: shell-aware placement with
@@ -111,6 +114,11 @@ pub struct ScenarioSpec {
     pub requests_per_epoch: usize,
     pub workload: WorkloadConfig,
     pub failures: FailurePlan,
+    /// Per-link in-flight window of the [`crate::net::sched`] scheduler
+    /// driving the chunk fan-out.
+    pub sched_window: usize,
+    /// Link serialization bandwidth, bits/s (uplink and ISL).
+    pub link_bandwidth_bps: f64,
     pub seed: u64,
 }
 
@@ -138,6 +146,7 @@ impl ScenarioSpec {
             eviction: self.eviction,
             use_radix_index: true,
             gossip_ttl: 2,
+            sched_window: self.sched_window,
         }
     }
 
@@ -167,6 +176,8 @@ impl ScenarioSpec {
             );
         }
         assert!(self.epochs >= 1 && self.requests_per_epoch >= 1, "{}: empty run", self.name);
+        assert!(self.sched_window >= 1, "{}: a link window must admit a transfer", self.name);
+        assert!(self.link_bandwidth_bps > 0.0, "{}: links need bandwidth", self.name);
     }
 
     // --- built-in scenarios ---------------------------------------------
@@ -208,6 +219,8 @@ impl ScenarioSpec {
                 isl_outage_heal_epochs: 2,
                 handover_every_epochs: 0,
             },
+            sched_window: 8,
+            link_bandwidth_bps: 1e9,
             seed,
         }
     }
@@ -247,6 +260,8 @@ impl ScenarioSpec {
                 isl_outage_heal_epochs: 2,
                 handover_every_epochs: 3,
             },
+            sched_window: 8,
+            link_bandwidth_bps: 1e9,
             seed,
         }
     }
@@ -286,6 +301,54 @@ impl ScenarioSpec {
                 isl_outage_heal_epochs: 2,
                 handover_every_epochs: 0,
             },
+            sched_window: 8,
+            link_bandwidth_bps: 1e9,
+            seed,
+        }
+    }
+
+    /// The `net::sched` stress shape: the Starlink-like 72x22 shell with
+    /// *huge* blocks over tiny chunks, so a single block fans out into
+    /// >1000 concurrent in-flight transfers — the regime the
+    /// discrete-event scheduler exists for (thread-per-chunk would melt).
+    /// Bandwidth is throttled to 20 Mbit/s so the per-link in-flight
+    /// window ([`ScenarioSpec::sched_window`], sweep it with
+    /// `skymemory sched`) visibly shapes queueing and tail latency.
+    pub fn mega_shell(seed: u64) -> ScenarioSpec {
+        ScenarioSpec {
+            name: "mega-shell".into(),
+            planes: 72,
+            sats_per_plane: 22,
+            altitude_km: 550.0,
+            strategy: Strategy::RotationHopAware,
+            n_servers: 25,
+            block_tokens: 32,
+            // 32768 f32 -> 36864 B quantized over 32 B chunks -> 1152
+            // chunks per block, striped 25 ways (~46 per box satellite)
+            chunk_size: 32,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Lazy,
+            // hot set ~27 blocks x ~2.3 kB per box satellite: fits, so
+            // the run measures scheduling, not eviction churn
+            sat_budget_bytes: 192 << 10,
+            kv_values_per_block: 32768,
+            epochs: 3,
+            requests_per_epoch: 10,
+            workload: WorkloadConfig {
+                n_contexts: 3,
+                context_chars: 96,
+                n_questions: 4,
+                scan_every: 6,
+                seed,
+            },
+            failures: FailurePlan {
+                sat_losses_per_epoch: 1,
+                isl_outages_per_epoch: 1,
+                isl_outage_heal_epochs: 2,
+                handover_every_epochs: 0,
+            },
+            sched_window: 8,
+            link_bandwidth_bps: 2e7,
             seed,
         }
     }
@@ -296,6 +359,7 @@ impl ScenarioSpec {
             ScenarioSpec::paper_19x5(seed),
             ScenarioSpec::starlink_shell(seed),
             ScenarioSpec::kuiper_shell(seed),
+            ScenarioSpec::mega_shell(seed),
         ]
     }
 
@@ -305,10 +369,36 @@ impl ScenarioSpec {
             "paper-19x5" => Some(ScenarioSpec::paper_19x5(seed)),
             "starlink-shell" => Some(ScenarioSpec::starlink_shell(seed)),
             "kuiper-shell" => Some(ScenarioSpec::kuiper_shell(seed)),
+            "mega-shell" => Some(ScenarioSpec::mega_shell(seed)),
             _ => None,
         }
     }
 }
+
+/// One-line summaries of every built-in scenario (single-shell and
+/// federated), for `skymemory scenario --list`.
+pub const BUILTIN_SUMMARIES: &[(&str, &str)] = &[
+    (
+        "paper-19x5",
+        "the paper's 5x19 NUC-testbed shape at 550 km: 9 servers, heavy eviction pressure, light failures",
+    ),
+    (
+        "starlink-shell",
+        "Starlink-like 72x22 mega-shell at 550 km: 25 servers, satellite/ISL failures and a ground handover",
+    ),
+    (
+        "kuiper-shell",
+        "Kuiper-like 34x34 shell at 630 km: 49 servers, moderate failure pressure",
+    ),
+    (
+        "mega-shell",
+        "net::sched stress: 72x22 shell, >1000 in-flight chunks per block, 20 Mbit/s links (sweep windows via `skymemory sched`)",
+    ),
+    (
+        "federated-dual-shell",
+        "two-shell federation (Starlink 550 km + Kuiper 630 km): placement spillover and a mid-run primary-box kill with inter-shell handover",
+    ),
+];
 
 /// One shell of a federated scenario.
 #[derive(Debug, Clone)]
@@ -366,6 +456,9 @@ pub struct FederatedScenarioSpec {
     pub min_live_fraction: f64,
     /// Per-shell byte budget before placement spills over (0 = none).
     pub spill_budget_bytes: u64,
+    /// Per-link in-flight window of every shell's [`crate::net::sched`]
+    /// scheduler.
+    pub sched_window: usize,
     pub seed: u64,
 }
 
@@ -380,6 +473,7 @@ impl FederatedScenarioSpec {
             eviction: self.eviction,
             use_radix_index: true,
             gossip_ttl: 2,
+            sched_window: self.sched_window,
         }
     }
 
@@ -447,6 +541,7 @@ impl FederatedScenarioSpec {
             "{}: min_live_fraction must be a fraction",
             self.name
         );
+        assert!(self.sched_window >= 1, "{}: a link window must admit a transfer", self.name);
     }
 
     /// The built-in dual-shell federation: the Starlink-like 550 km shell
@@ -503,6 +598,7 @@ impl FederatedScenarioSpec {
             // over it late in the run, but the dominant spillover driver
             // is the scheduled box kill
             spill_budget_bytes: 1 << 20,
+            sched_window: 8,
             seed,
         }
     }
@@ -523,11 +619,41 @@ mod tests {
     #[test]
     fn builtin_specs_validate() {
         let specs = ScenarioSpec::builtin(7);
-        assert_eq!(specs.len(), 3);
+        assert_eq!(specs.len(), 4);
         for s in &specs {
             s.validate();
             assert!(s.torus().len() >= s.n_servers);
             assert!(s.total_requests() > 0);
+        }
+    }
+
+    #[test]
+    fn mega_shell_fans_out_over_a_thousand_chunks() {
+        let s = ScenarioSpec::mega_shell(1);
+        s.validate();
+        // a single block must split into >= 1000 chunks: the in-flight
+        // concurrency regime the event scheduler exists for
+        let payload = s.quantizer.encoded_len(s.kv_values_per_block);
+        assert!(payload.div_ceil(s.chunk_size) >= 1000, "{}", payload.div_ceil(s.chunk_size));
+        assert!(s.link_bandwidth_bps < 1e9, "throttled links make windows matter");
+        assert_eq!(s.sched_window, 8);
+    }
+
+    #[test]
+    fn builtin_summaries_cover_every_scenario() {
+        let names: Vec<&str> = BUILTIN_SUMMARIES.iter().map(|(n, _)| *n).collect();
+        for s in ScenarioSpec::builtin(1) {
+            assert!(names.contains(&s.name.as_str()), "{} missing a summary", s.name);
+        }
+        assert!(names.contains(&"federated-dual-shell"));
+        // every summarized name resolves through one of the registries
+        for (name, desc) in BUILTIN_SUMMARIES {
+            assert!(!desc.is_empty());
+            assert!(
+                ScenarioSpec::by_name(name, 1).is_some()
+                    || FederatedScenarioSpec::by_name(name, 1).is_some(),
+                "{name} is summarized but not registered"
+            );
         }
     }
 

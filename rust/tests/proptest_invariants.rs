@@ -3,18 +3,24 @@
 //! a from-scratch property harness: deterministic XorShift-driven random
 //! cases with failure seeds printed for reproduction.
 
+use skymemory::constellation::geometry::Geometry;
+use skymemory::constellation::los::LosGrid;
 use skymemory::constellation::topology::{SatId, Torus};
 use skymemory::kvc::block::{block_hashes, BlockHash};
-use skymemory::kvc::chunk::{chunk_count, join_chunks, split_chunks};
-use skymemory::kvc::eviction::LruTracker;
+use skymemory::kvc::chunk::{chunk_count, join_chunks, split_chunks, ChunkKey};
+use skymemory::kvc::eviction::{EvictionPolicy, LruTracker};
 use skymemory::kvc::quantize::Quantizer;
 use skymemory::kvc::radix::RadixTree;
 use skymemory::mapping::{box_width, Strategy};
 use skymemory::net::messages::{
     decode_request, decode_response, encode_request, encode_response, Envelope, Request, Response,
 };
+use skymemory::net::sched::{ChunkOp, ChunkResult, NetScheduler, SchedConfig, Transfer};
+use skymemory::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
+use skymemory::satellite::fleet::Fleet;
 use skymemory::satellite::store::ChunkStore;
 use skymemory::util::rng::XorShift64;
+use std::sync::Arc;
 
 const CASES: u64 = 300;
 
@@ -383,6 +389,151 @@ fn prop_message_codecs_roundtrip_random() {
         let bytes = encode_response(&env, &resp);
         let (e3, r3) = decode_response(&bytes).unwrap();
         assert_eq!((e3, r3), (env, resp), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_link_model_one_way_monotone_and_zero_byte_invariant() {
+    // one_way_s is monotone non-decreasing in payload bytes and in ISL
+    // hops; a zero-byte probe pays pure propagation, so its latency is
+    // invariant under bandwidth changes and equals uplink + hops * worst
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 120_000);
+        let g = Geometry::new(
+            300.0 + rng.next_range(1500) as f64,
+            8 + rng.next_range(40),
+            4 + rng.next_range(40),
+        );
+        let mut link = LinkModel::laser_defaults(g);
+        link.bandwidth_bps = [1e7, 1e8, 1e9, 2.4e9][rng.next_range(4)];
+        let cells = (rng.next_range(4), rng.next_range(4));
+        let hops = rng.next_range(20);
+        let b1 = rng.next_range(10_000);
+        let b2 = b1 + rng.next_range(10_000);
+        let t1 = link.one_way_s(cells, hops, b1);
+        assert!(t1 <= link.one_way_s(cells, hops, b2), "seed {seed}: bytes monotone");
+        assert!(t1 <= link.one_way_s(cells, hops + 1, b1), "seed {seed}: hops monotone");
+        let mut fat = link;
+        fat.bandwidth_bps = link.bandwidth_bps * 8.0;
+        assert_eq!(
+            link.one_way_s(cells, hops, 0),
+            fat.one_way_s(cells, hops, 0),
+            "seed {seed}: zero-byte probes ignore bandwidth"
+        );
+        let prop = g.ground_latency_s(cells.0, cells.1) + hops as f64 * g.worst_hop_latency_s();
+        assert!(
+            (link.one_way_s(cells, hops, 0) - prop).abs() < 1e-12,
+            "seed {seed}: zero bytes = pure propagation"
+        );
+    }
+}
+
+/// Build one deterministic sched stack (fresh fleet each call, so two
+/// identically-seeded stacks replay identically).
+fn sched_stack(window: usize) -> NetScheduler {
+    let torus = Torus::new(7, 13);
+    let fleet = Arc::new(Fleet::new(torus, 10 << 20, EvictionPolicy::Lazy));
+    let center = SatId::new(3, 6);
+    let los = LosGrid::new(center, 2, 2);
+    let ground = GroundView::new(center, &los, torus.sats_per_plane);
+    let mut link = LinkModel::laser_defaults(Geometry::new(550.0, 13, 7));
+    link.bandwidth_bps = 1e8;
+    link.sleep_scale = 0.0;
+    let inproc: Arc<dyn Transport> =
+        Arc::new(InProcTransport::new(fleet, ground, Some(link)));
+    NetScheduler::new(inproc, SchedConfig { window })
+}
+
+#[test]
+fn prop_sched_completion_independent_of_submission_order() {
+    // the tie-break determinism contract: a batch's outcome (per-transfer
+    // completion times, payloads, makespan — hence completion *order*) is
+    // a function of the transfer set, not of the order transfers were
+    // pushed into the batch
+    for seed in 0..60 {
+        let mut rng = XorShift64::new(seed + 130_000);
+        let torus = Torus::new(7, 13);
+        let window = 1 + rng.next_range(4);
+        let n = 1 + rng.next_range(60);
+        // the deterministic transfer set: (tag, dest, payload)
+        let specs: Vec<(u64, SatId, Vec<u8>)> = (0..n)
+            .map(|i| {
+                let dest = SatId::new(
+                    rng.next_range(torus.planes) as u16,
+                    rng.next_range(torus.sats_per_plane) as u16,
+                );
+                let len = 1 + rng.next_range(2000);
+                (i as u64, dest, vec![(i & 0xFF) as u8; len])
+            })
+            .collect();
+        // a shuffled submission order
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            order.swap(i, rng.next_range(i + 1));
+        }
+        let set_ops = |idx: &[usize]| -> Vec<Transfer> {
+            idx.iter()
+                .map(|&i| {
+                    let (tag, dest, data) = &specs[i];
+                    Transfer {
+                        tag: *tag,
+                        op: ChunkOp::Set {
+                            dest: *dest,
+                            key: ChunkKey::new(BlockHash([9; 32]), *tag as u32),
+                            data: data.clone(),
+                        },
+                    }
+                })
+                .collect()
+        };
+        let get_ops = |idx: &[usize]| -> Vec<Transfer> {
+            idx.iter()
+                .map(|&i| {
+                    let (tag, dest, _) = &specs[i];
+                    Transfer {
+                        tag: *tag,
+                        op: ChunkOp::Get {
+                            dest: *dest,
+                            key: ChunkKey::new(BlockHash([9; 32]), *tag as u32),
+                        },
+                    }
+                })
+                .collect()
+        };
+        let sorted: Vec<usize> = (0..n).collect();
+
+        let a = sched_stack(window);
+        let set_a = a.run_batch(set_ops(&sorted));
+        let get_a = a.run_batch(get_ops(&sorted));
+        let b = sched_stack(window);
+        let set_b = b.run_batch(set_ops(&order));
+        let get_b = b.run_batch(get_ops(&order));
+
+        assert_eq!(set_a.makespan_ns, set_b.makespan_ns, "seed {seed}");
+        assert_eq!(get_a.makespan_ns, get_b.makespan_ns, "seed {seed}");
+        for (oa, ob) in set_a.outcomes.iter().zip(&set_b.outcomes) {
+            assert_eq!(oa.tag, ob.tag, "seed {seed}");
+            assert_eq!(oa.completion_ns, ob.completion_ns, "seed {seed} tag {}", oa.tag);
+            assert_eq!(oa.result, ChunkResult::Stored, "seed {seed}");
+            assert_eq!(ob.result, ChunkResult::Stored, "seed {seed}");
+        }
+        for (oa, ob) in get_a.outcomes.iter().zip(&get_b.outcomes) {
+            assert_eq!(oa.tag, ob.tag, "seed {seed}");
+            assert_eq!(oa.completion_ns, ob.completion_ns, "seed {seed} tag {}", oa.tag);
+            assert_eq!(oa.result, ob.result, "seed {seed} tag {}", oa.tag);
+            assert!(
+                matches!(oa.result, ChunkResult::Got(Some(_))),
+                "seed {seed}: every Set must be readable back"
+            );
+        }
+        // completion *order* (by time, tag tie-break) is identical too
+        let order_of = |r: &skymemory::net::sched::BatchReport| {
+            let mut v: Vec<(u64, u64)> =
+                r.outcomes.iter().map(|o| (o.completion_ns, o.tag)).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(order_of(&get_a), order_of(&get_b), "seed {seed}");
     }
 }
 

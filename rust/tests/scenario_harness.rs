@@ -99,11 +99,69 @@ fn seeds_change_the_numbers_but_not_the_shape() {
 #[test]
 fn registry_covers_all_builtins() {
     let specs = ScenarioSpec::builtin(8);
-    assert_eq!(specs.len(), 3);
+    assert_eq!(specs.len(), 4);
     for spec in &specs {
         spec.validate();
         let found = ScenarioSpec::by_name(&spec.name, 8).expect("by_name finds builtin");
         assert_eq!(found.planes, spec.planes);
     }
     assert!(ScenarioSpec::by_name("not-a-scenario", 8).is_none());
+}
+
+/// Acceptance for the `net::sched` engine: the mega-shell scenario runs
+/// byte-stably with >= 1000 chunks concurrently in flight — concurrency
+/// no thread-per-chunk (or 8-thread-stripe) model could express — and
+/// the scheduler's queueing/utilization counters land in the JSON.
+#[test]
+fn mega_shell_thousand_chunks_in_flight_and_byte_stable() {
+    let spec = ScenarioSpec::mega_shell(77);
+    let a = run_scenario(&spec);
+    let b = run_scenario(&spec);
+    assert_eq!(a, b, "virtual-time runs must be structurally identical");
+    assert_eq!(a.to_json_string(), b.to_json_string(), "and byte-identical");
+    assert!(a.requests > 0);
+    assert!(a.block_hit_rate > 0.0, "{a:?}");
+    assert!(
+        a.sched.peak_in_flight >= 1000,
+        "a mega-shell block must put >= 1000 chunks in flight at once: {:?}",
+        a.sched
+    );
+    assert!(a.sched.transfers > 10_000, "{:?}", a.sched);
+    assert!(a.sched.links_used > 25, "uplink + service links across the box: {:?}", a.sched);
+    assert!(a.sched.queued_ns > 0, "throttled links must queue: {:?}", a.sched);
+    assert!(a.sched.virtual_ns > 0);
+    let j = a.to_json_string();
+    for key in
+        ["\"sched\"", "\"peak_in_flight\"", "\"link_queued_ns\"", "\"busiest_link_transfers\""]
+    {
+        assert!(j.contains(key), "missing {key}");
+    }
+}
+
+#[test]
+fn sched_window_shapes_the_tail_on_the_mega_shell() {
+    // a wider per-link window admits more concurrent transfers: queueing
+    // delay must not increase, and the pipelined virtual time must not
+    // get worse (scaled-down run: the effect shows within one epoch)
+    let mut narrow = ScenarioSpec::mega_shell(5);
+    narrow.epochs = 1;
+    narrow.requests_per_epoch = 4;
+    narrow.sched_window = 1;
+    let mut wide = narrow.clone();
+    wide.sched_window = 64;
+    let rn = run_scenario(&narrow);
+    let rw = run_scenario(&wide);
+    assert_eq!(rn.requests, rw.requests, "same workload either way");
+    assert!(
+        rw.sched.queued_ns <= rn.sched.queued_ns,
+        "window 64 must not queue more than window 1: {} vs {}",
+        rw.sched.queued_ns,
+        rn.sched.queued_ns
+    );
+    assert!(
+        rw.sched.virtual_ns <= rn.sched.virtual_ns,
+        "wider windows cannot slow the pipeline: {} vs {}",
+        rw.sched.virtual_ns,
+        rn.sched.virtual_ns
+    );
 }
