@@ -1,8 +1,8 @@
 //! Run every built-in scenario — the paper's 19x5 testbed, the
-//! Starlink-like 72x22 mega-shell, the Kuiper-like 34x34 shell, and the
-//! federated dual-shell (Starlink + Kuiper) run — twice each, verify the
-//! metrics JSON is byte-identical across the two runs (the determinism
-//! contract), and print the reports.
+//! Starlink-like 72x22 mega-shell, the Kuiper-like 34x34 shell, the
+//! mega-shell stress shape, and the federated dual- and tri-shell runs —
+//! twice each, verify the metrics JSON is byte-identical across the two
+//! runs (the determinism contract), and print the reports.
 //!
 //! ```text
 //! cargo run --release --example scenario_sweep
@@ -37,26 +37,30 @@ fn main() {
         );
         assert!(deterministic, "{}: metrics JSON differed between runs", spec.name);
     }
-    // the federated dual-shell scenario holds the same contract
-    let fed = FederatedScenarioSpec::federated_dual_shell(seed);
-    let t0 = std::time::Instant::now();
-    let first = run_federated_scenario(&fed).to_json_string();
-    let second = run_federated_scenario(&fed).to_json_string();
-    let deterministic = first == second;
-    all_deterministic &= deterministic;
-    println!("{first}");
-    println!(
-        "# {}: {} shells ({} sats total), {} epochs, {} requests; \
-         deterministic across two runs: {} ({:.2?} for both runs)",
-        fed.name,
-        fed.shells.len(),
-        fed.shells.iter().map(|s| s.torus().len()).sum::<usize>(),
-        fed.epochs,
-        fed.total_requests(),
-        deterministic,
-        t0.elapsed()
-    );
-    assert!(deterministic, "{}: metrics JSON differed between runs", fed.name);
+    // the federated scenarios hold the same contract
+    for fed in [
+        FederatedScenarioSpec::federated_dual_shell(seed),
+        FederatedScenarioSpec::federated_tri_shell(seed),
+    ] {
+        let t0 = std::time::Instant::now();
+        let first = run_federated_scenario(&fed).to_json_string();
+        let second = run_federated_scenario(&fed).to_json_string();
+        let deterministic = first == second;
+        all_deterministic &= deterministic;
+        println!("{first}");
+        println!(
+            "# {}: {} shells ({} sats total), {} epochs, {} requests; \
+             deterministic across two runs: {} ({:.2?} for both runs)",
+            fed.name,
+            fed.shells.len(),
+            fed.shells.iter().map(|s| s.torus().len()).sum::<usize>(),
+            fed.epochs,
+            fed.total_requests(),
+            deterministic,
+            t0.elapsed()
+        );
+        assert!(deterministic, "{}: metrics JSON differed between runs", fed.name);
+    }
     assert!(all_deterministic);
     println!("# all scenarios deterministic: same seed -> identical metrics JSON");
 }

@@ -30,35 +30,54 @@ fn main() {
         );
     }
 
-    println!("\n=== federated dual-shell end-to-end (seed 42) ===");
-    let fed = FederatedScenarioSpec::federated_dual_shell(42);
-    let t0 = Instant::now();
-    let report = run_federated_scenario(&fed);
-    let wall = t0.elapsed();
-    println!(
-        "{:<20} {:>5} sats  {:>2} epochs  {:>4} reqs  hit {:>6.1}%  \
-         handovers {:>4}  inter-shell {:>8} B  spill {:>4}  wall {:?}",
-        report.name,
-        fed.shells.iter().map(|s| s.torus().len()).sum::<usize>(),
-        report.epochs,
-        report.requests,
-        100.0 * report.block_hit_rate,
-        report.handovers,
-        report.inter_shell_bytes,
-        report.spillovers,
-        wall
-    );
-    for sh in &report.shells {
+    println!("\n=== federated end-to-end (seed 42) ===");
+    for fed in [
+        FederatedScenarioSpec::federated_dual_shell(42),
+        FederatedScenarioSpec::federated_tri_shell(42),
+    ] {
+        let t0 = Instant::now();
+        let report = run_federated_scenario(&fed);
+        let wall = t0.elapsed();
         println!(
-            "  {:<14} {:>5} sats  stored {:>5}  hit {:>6.1}%  evicted {:>5}  failed sats {:>4}",
-            sh.name,
-            sh.planes * sh.sats_per_plane,
-            sh.blocks_stored,
-            100.0 * sh.hit_rate,
-            sh.evicted_chunks,
-            sh.failed_satellites
+            "{:<22} {:>5} sats  {:>2} epochs  {:>4} reqs  hit {:>6.1}%  \
+             handovers {:>4}  replicas {:>3}  preplaced {:>3}  inter-shell {:>8} B  spill {:>4}  wall {:?}",
+            report.name,
+            fed.shells.iter().map(|s| s.torus().len()).sum::<usize>(),
+            report.epochs,
+            report.requests,
+            100.0 * report.block_hit_rate,
+            report.handovers,
+            report.replicated_blocks,
+            report.preplaced_blocks,
+            report.inter_shell_bytes,
+            report.spillovers,
+            wall
         );
+        for sh in &report.shells {
+            println!(
+                "  {:<14} {:>5} sats  stored {:>5}  hit {:>6.1}%  replica hits {:>4}  \
+                 evicted {:>5}  failed sats {:>4}",
+                sh.name,
+                sh.planes * sh.sats_per_plane,
+                sh.blocks_stored,
+                100.0 * sh.hit_rate,
+                sh.replica_hits,
+                sh.evicted_chunks,
+                sh.failed_satellites
+            );
+        }
     }
+    // the tri-shell acceptance comparison: replicated vs re-homing-only
+    let tri = FederatedScenarioSpec::federated_tri_shell(42);
+    let t0 = Instant::now();
+    let replicated = run_federated_scenario(&tri);
+    let rehoming = run_federated_scenario(&tri.rehoming_baseline());
+    println!(
+        "replicated {:>6.1}% vs re-homing-only {:>6.1}% under the correlated plan ({:?} for both)",
+        100.0 * replicated.block_hit_rate,
+        100.0 * rehoming.block_hit_rate,
+        t0.elapsed()
+    );
 
     println!("\n=== paper-19x5 repeatability (micro-bench) ===");
     let mut small = ScenarioSpec::paper_19x5(42);

@@ -1,34 +1,53 @@
 //! The federated KVC manager: §3.8 Get/Set fan-out over shell-qualified
-//! layouts.
+//! layouts, hot-block replication, and §3.7-style predictive
+//! pre-placement.
 //!
-//! Every block is homed on exactly one shell, chosen by the
-//! [`PlacementPolicy`] at Set time (cheapest shell first, spillover on
-//! saturation or failure).  Within its home shell a block uses the
-//! standard chunk-to-server striping over the shell's own
-//! [`crate::mapping::Strategy`] layout — chunk `i` goes to
-//! `FedSatId { shell, layout[i % n] }` — so the single-shell rotation
-//! arithmetic (write-epoch shift, §3.4 migration) applies unchanged per
-//! shell.
+//! Every block's *primary* copy is homed on exactly one shell, chosen by
+//! the [`PlacementPolicy`] at Set time (cheapest shell first, spillover
+//! on saturation or failure).  Within a shell a block uses the shell's
+//! own stripe ([`ShellLayoutConfig`]): chunk `i` goes to
+//! `FedSatId { shell, layout[i % n_servers] }` of that shell's layout —
+//! shells of one federation may run different strategies and stripe
+//! widths — so the single-shell rotation arithmetic (write-epoch shift,
+//! §3.4 migration) applies unchanged per shell.
 //!
 //! Chunk I/O has full fan-out parity with
-//! [`crate::kvc::manager::KvcManager`]: each block's Get/Set set is one
-//! [`crate::net::sched`] virtual-time batch on its home shell's
-//! scheduler ([`crate::federation::transport::ShellLink::sched`]), so the
-//! transfers pipeline over per-link in-flight windows with deterministic
-//! `(virtual_time, tag)` ordering — the old sequential special-case
-//! (per-chunk round trips, kept only for determinism) is gone.
+//! [`crate::kvc::manager::KvcManager`]: each copy's Get/Set set is one
+//! [`crate::net::sched`] virtual-time batch on its shell's scheduler
+//! ([`crate::federation::transport::ShellLink::sched`]).
+//!
+//! Replication ([`ReplicationPolicy`]): at each epoch boundary
+//! ([`FederatedKvcManager::end_of_epoch`]) the top-K hottest blocks (by
+//! access count, ties by hash) gain a live replica so their copies span
+//! the two cheapest live shells ([`cheapest_two`]).  Reads *race* every
+//! copy via [`race_batches`] — all arms really execute, the fastest
+//! complete copy serves — and a broken primary promotes its surviving
+//! replica to primary instead of dropping the block.  Writes fan out
+//! invalidations: dropping a block evicts every copy on every shell.
+//!
+//! Pre-placement: the §3.7-style predictor
+//! ([`predict_preplacement_shell`]) extrapolates each shell's layout-box
+//! live fraction one rotation ahead and pre-places the hot set's *next*
+//! rotation layout (write epoch `e+1`, centred one slot west) on the
+//! predicted-cheapest shell before the handover — instead of reacting to
+//! broken fetches after the shell degrades.
 //!
 //! Handover: when a shell's layout box degrades below the placement
 //! threshold, [`FederatedKvcManager::evacuate_shell`] drains the box's
-//! surviving satellites to the same relative cells of a healthy shell over
-//! the inter-shell links and re-homes the affected blocks (proactive
-//! handover; cell offsets are preserved, so the rotation arithmetic keeps
-//! working on the new shell).  Blocks whose chunks were already lost heal
+//! surviving satellites to a healthy shell over the inter-shell links
+//! and re-homes the affected blocks (proactive handover).  Between
+//! shells with identical layout configs cell offsets are preserved, so
+//! the rotation arithmetic keeps working on the new shell; between
+//! differing configs every block is re-fetched and re-striped onto the
+//! target's own layout.  Blocks whose chunks were already lost heal
 //! reactively: the broken fetch drops them from the index, and the next
 //! Set re-places them on whichever shell placement now prefers.
 
 use crate::constellation::topology::SatId;
-use crate::federation::placement::{cheapest_index, shell_cost, PlacementPolicy, ShellCandidate};
+use crate::federation::placement::{
+    cheapest_index, cheapest_two, predict_preplacement_shell, shell_cost, PlacementPolicy,
+    ReplicationPolicy, ShellCandidate, ShellLayoutConfig,
+};
 use crate::federation::transport::FederatedTransport;
 use crate::federation::{FedSatId, ShellId};
 use crate::kvc::block::BlockHash;
@@ -37,28 +56,50 @@ use crate::kvc::manager::{encode_chunk_header, KvcConfig, CHUNK_HEADER_LEN};
 use crate::kvc::quantize::Quantizer;
 use crate::kvc::radix::BlockMeta;
 use crate::mapping::box_width;
-use crate::net::sched::{ChunkOp, ChunkResult, Transfer};
+use crate::net::sched::{race_batches, BatchReport, ChunkOp, ChunkResult, Transfer};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// One copy of a block on one shell (a replica or a pre-placed copy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockCopy {
+    pub shell: ShellId,
+    pub meta: BlockMeta,
+}
+
 /// Where a block lives and how to reassemble it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FedBlockMeta {
+    /// Home shell of the primary copy.
     pub shell: ShellId,
     pub meta: BlockMeta,
+    /// Served fetches of this block (the replication hotness signal).
+    pub accesses: u64,
+    /// Live replica created by [`ReplicationPolicy`], if any.
+    pub replica: Option<BlockCopy>,
+    /// Pre-placed next-rotation copy created by the §3.7 predictor.
+    pub preplaced: Option<BlockCopy>,
 }
 
 /// Per-shell manager counters.
 #[derive(Debug, Default)]
 pub struct ShellCounters {
     pub blocks_stored: AtomicU64,
+    /// Fetch arms raced against this shell (every copy fetch counts).
     pub fetch_attempts: AtomicU64,
+    /// Fetches this shell served (fastest complete copy).
     pub blocks_hit: AtomicU64,
-    /// Encoded payload bytes of the blocks currently homed here by
-    /// placement or evacuation (headers excluded; moved between shells on
-    /// evacuation, not debited on LRU eviction).
+    /// Fetches this shell served from a replica / pre-placed copy.
+    pub replica_hits: AtomicU64,
+    /// Replicas created onto this shell.
+    pub replicas_hosted: AtomicU64,
+    /// Pre-placed copies created onto this shell.
+    pub preplaced_hosted: AtomicU64,
+    /// Encoded payload bytes of the copies currently on this shell
+    /// (headers excluded; moved between shells on evacuation and debited
+    /// when a copy is dropped, not debited on LRU eviction).
     pub placed_bytes: AtomicU64,
 }
 
@@ -72,8 +113,21 @@ pub struct FedStats {
     /// Blocks re-homed reactively: broken on one shell, re-stored on
     /// another.
     pub reactive_rehomed_blocks: AtomicU64,
-    /// Fetches that found a chunk missing (prefix truncation).
+    /// Fetches that found every copy broken (prefix truncation).
     pub broken_blocks: AtomicU64,
+    /// Replicas created (top-K hot blocks onto the second-cheapest
+    /// shell).
+    pub replicated_blocks: AtomicU64,
+    /// Fetches that raced two or more copies.
+    pub replica_races: AtomicU64,
+    /// Races won (served) by a non-home copy.
+    pub replica_race_wins: AtomicU64,
+    /// Broken primaries healed by promoting a surviving copy.
+    pub replica_promotions: AtomicU64,
+    /// Next-rotation copies pre-placed by the predictor.
+    pub preplaced_blocks: AtomicU64,
+    /// Fetches served by a pre-placed copy.
+    pub preplace_hits: AtomicU64,
 }
 
 /// Summary of one shell evacuation.
@@ -88,31 +142,67 @@ pub struct EvacSummary {
 pub struct FederatedKvcManager {
     pub config: KvcConfig,
     pub placement: PlacementPolicy,
+    pub replication: ReplicationPolicy,
+    /// Run the §3.7 pre-placement predictor at epoch boundaries (shares
+    /// the replication hot set, so it needs `replication.top_k > 0`).
+    pub preplace: bool,
     transport: Arc<FederatedTransport>,
-    /// Block -> home shell + reassembly metadata.  Chained hashes commit
-    /// to the whole prefix, so one entry per block hash suffices (no radix
-    /// walk needed; prefix length is a `take_while` over the hash list).
-    /// BTreeMap: deterministic iteration for evacuation order.
+    /// Per-shell stripe configuration (strategy + width), index-aligned
+    /// with the transport's shells.
+    shell_layouts: Vec<ShellLayoutConfig>,
+    /// Block -> home shell + reassembly metadata + copies.  Chained
+    /// hashes commit to the whole prefix, so one entry per block hash
+    /// suffices (no radix walk needed; prefix length is a `take_while`
+    /// over the hash list).  BTreeMap: deterministic iteration for
+    /// evacuation and hot-set order.
     index: Mutex<BTreeMap<BlockHash, FedBlockMeta>>,
     /// Last known home of blocks dropped as broken, to count reactive
     /// re-homing on their next Set.
     tombstones: Mutex<BTreeMap<BlockHash, ShellId>>,
+    /// Per-shell box live fractions at the previous epoch boundary (the
+    /// predictor's trend input).
+    prev_live: Mutex<Vec<f64>>,
     shell_counters: Vec<ShellCounters>,
     /// Static per-shell placement cost (pure function of geometry and the
-    /// server count), computed once at construction.
+    /// shell's stripe width), computed once at construction.
     shell_costs: Vec<f64>,
     pub stats: FedStats,
 }
 
 impl FederatedKvcManager {
+    /// A manager with every shell striping the global [`KvcConfig`]
+    /// layout and replication off — the re-homing-only configuration.
     pub fn new(
         config: KvcConfig,
         transport: Arc<FederatedTransport>,
         placement: PlacementPolicy,
     ) -> Self {
+        let layouts = vec![
+            ShellLayoutConfig { strategy: config.strategy, n_servers: config.n_servers };
+            transport.n_shells()
+        ];
+        Self::new_with(config, transport, placement, ReplicationPolicy::default(), false, layouts)
+    }
+
+    /// A fully-configured manager: per-shell layouts, replication policy
+    /// and the pre-placement predictor switch.
+    pub fn new_with(
+        config: KvcConfig,
+        transport: Arc<FederatedTransport>,
+        placement: PlacementPolicy,
+        replication: ReplicationPolicy,
+        preplace: bool,
+        shell_layouts: Vec<ShellLayoutConfig>,
+    ) -> Self {
         assert!(config.n_servers >= 1);
-        let w = box_width(config.n_servers);
-        for link in transport.links() {
+        assert_eq!(
+            shell_layouts.len(),
+            transport.n_shells(),
+            "one layout config per shell"
+        );
+        for (link, lc) in transport.links().iter().zip(&shell_layouts) {
+            assert!(lc.n_servers >= 1, "{}: a stripe needs servers", link.shell.name);
+            let w = box_width(lc.n_servers);
             let t = &link.shell.torus;
             assert!(
                 w <= t.planes && w <= t.sats_per_plane,
@@ -126,14 +216,20 @@ impl FederatedKvcManager {
         let shell_costs = transport
             .links()
             .iter()
-            .map(|l| shell_cost(&l.shell.geometry, config.n_servers))
+            .zip(&shell_layouts)
+            .map(|(l, lc)| shell_cost(&l.shell.geometry, lc.n_servers))
             .collect();
+        let prev_live = vec![1.0; transport.n_shells()];
         Self {
             config,
             placement,
+            replication,
+            preplace,
             transport,
+            shell_layouts,
             index: Mutex::new(BTreeMap::new()),
             tombstones: Mutex::new(BTreeMap::new()),
+            prev_live: Mutex::new(prev_live),
             shell_counters,
             shell_costs,
             stats: FedStats::default(),
@@ -148,7 +244,11 @@ impl FederatedKvcManager {
         &self.shell_counters
     }
 
-    /// Blocks currently indexed (federation-wide).
+    pub fn shell_layout(&self, shell: ShellId) -> ShellLayoutConfig {
+        self.shell_layouts[shell as usize]
+    }
+
+    /// Blocks currently indexed (federation-wide; copies not counted).
     pub fn indexed_blocks(&self) -> usize {
         self.index.lock().unwrap().len()
     }
@@ -158,13 +258,18 @@ impl FederatedKvcManager {
         self.index.lock().unwrap().get(block).map(|e| e.shell)
     }
 
+    /// Shell of a block's live replica, if any.
+    pub fn replica_of(&self, block: &BlockHash) -> Option<ShellId> {
+        self.index.lock().unwrap().get(block).and_then(|e| e.replica.map(|r| r.shell))
+    }
+
     /// Live fraction of `shell`'s current layout box (the placement
     /// eligibility signal).
     pub fn box_live_fraction(&self, shell: ShellId) -> f64 {
         let link = self.transport.link(shell);
         let torus = link.shell.torus;
         let center = self.transport.closest(shell);
-        let half = (box_width(self.config.n_servers) as i32 - 1) / 2;
+        let half = (box_width(self.shell_layouts[shell as usize].n_servers) as i32 - 1) / 2;
         let mut live = 0usize;
         let mut total = 0usize;
         for dp in -half..=half {
@@ -242,30 +347,35 @@ impl FederatedKvcManager {
                 self.stats.reactive_rehomed_blocks.fetch_add(1, Ordering::Relaxed);
             }
         }
-        self.index.lock().unwrap().insert(block, FedBlockMeta { shell, meta });
+        self.index.lock().unwrap().insert(
+            block,
+            FedBlockMeta { shell, meta, accesses: 0, replica: None, preplaced: None },
+        );
         Ok(shell)
     }
 
-    /// Stripe an encoded payload over `shell`'s current layout: one
-    /// virtual-time batch on the shell's scheduler (fan-out parity with
-    /// the single-shell manager).
-    fn store_payload(
+    /// Stripe an encoded payload over `shell`'s layout around `center`
+    /// as one virtual-time batch on the shell's scheduler (fan-out parity
+    /// with the single-shell manager).  No counters: callers account
+    /// stores, replicas and evacuations differently.
+    fn stripe_payload(
         &self,
         shell: ShellId,
         block: BlockHash,
         payload: &[u8],
-        now_epoch: u64,
+        write_epoch: u64,
+        center: SatId,
     ) -> Result<BlockMeta> {
+        let lc = self.shell_layouts[shell as usize];
         let n_chunks = chunk_count(payload.len(), self.config.chunk_size) as u32;
         let header = encode_chunk_header(
             self.config.quantizer.id(),
             n_chunks,
             payload.len() as u32,
-            now_epoch,
+            write_epoch,
         );
         let torus = self.transport.shell(shell).torus;
-        let center = self.transport.closest(shell);
-        let layout = self.config.strategy.initial_layout(&torus, center, self.config.n_servers);
+        let layout = lc.strategy.initial_layout(&torus, center, lc.n_servers);
         let transfers: Vec<Transfer> = split_chunks(payload, self.config.chunk_size)
             .iter()
             .enumerate()
@@ -276,7 +386,7 @@ impl FederatedKvcManager {
                 Transfer {
                     tag: i as u64,
                     op: ChunkOp::Set {
-                        dest: layout[i % self.config.n_servers],
+                        dest: layout[i % lc.n_servers],
                         key: ChunkKey::new(block, i as u32),
                         data,
                     },
@@ -289,15 +399,29 @@ impl FederatedKvcManager {
                 bail!("shell {shell}: chunk {} set failed: {e}", o.tag);
             }
         }
-        let counters = &self.shell_counters[shell as usize];
-        counters.blocks_stored.fetch_add(1, Ordering::Relaxed);
-        counters.placed_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
         Ok(BlockMeta {
             num_chunks: n_chunks,
             kvc_len: payload.len() as u32,
-            write_epoch: now_epoch,
+            write_epoch,
             quantizer_id: self.config.quantizer.id(),
         })
+    }
+
+    /// Store a primary copy on `shell` at the current rotation centre,
+    /// with the store counters.
+    fn store_payload(
+        &self,
+        shell: ShellId,
+        block: BlockHash,
+        payload: &[u8],
+        now_epoch: u64,
+    ) -> Result<BlockMeta> {
+        let center = self.transport.closest(shell);
+        let meta = self.stripe_payload(shell, block, payload, now_epoch, center)?;
+        let counters = &self.shell_counters[shell as usize];
+        counters.blocks_stored.fetch_add(1, Ordering::Relaxed);
+        counters.placed_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        Ok(meta)
     }
 
     // ------------------------------------------------------------ GET ---
@@ -309,44 +433,63 @@ impl FederatedKvcManager {
         hashes.iter().take_while(|h| index.contains_key(h)).count()
     }
 
-    /// The shell-qualified layout of a block's servers at `now_epoch`.
+    /// The layout of a copy written on `shell` at `write_epoch`, resolved
+    /// at `now_epoch`.  Total over pre-placed copies too: a copy written
+    /// for a *future* epoch sits one slot west per epoch of lead, with no
+    /// rotation shift yet.
     fn layout_for(&self, shell: ShellId, write_epoch: u64, now_epoch: u64) -> Vec<SatId> {
+        let lc = self.shell_layouts[shell as usize];
         let torus = self.transport.shell(shell).torus;
-        let delta = (now_epoch - write_epoch) as i32;
-        // the centre slides one slot west per epoch; the write-time centre
-        // was `delta` slots east of the current one
-        let write_center = torus.offset(self.transport.closest(shell), 0, delta);
-        self.config.strategy.layout_at(
-            &torus,
-            write_center,
-            self.config.n_servers,
-            now_epoch - write_epoch,
-        )
+        let delta = now_epoch as i64 - write_epoch as i64;
+        // the centre slides one slot west per epoch; the write-time
+        // centre was `delta` slots east of the current one (west of it
+        // for a copy pre-placed for a future epoch)
+        let write_center = torus.offset(self.transport.closest(shell), 0, delta as i32);
+        lc.strategy.layout_at(&torus, write_center, lc.n_servers, delta.max(0) as u64)
     }
 
-    /// Fetch a block's chunks as one virtual-time batch on its home
-    /// shell's scheduler and reassemble them in tag order.
-    fn fetch_payload(
+    /// The Get transfer set of one copy.
+    fn copy_transfers(
         &self,
         shell: ShellId,
         block: BlockHash,
         meta: &BlockMeta,
         now_epoch: u64,
-    ) -> Option<Vec<u8>> {
+    ) -> Vec<Transfer> {
+        let lc = self.shell_layouts[shell as usize];
         let layout = self.layout_for(shell, meta.write_epoch, now_epoch);
-        let transfers: Vec<Transfer> = (0..meta.num_chunks as usize)
+        (0..meta.num_chunks as usize)
             .map(|i| Transfer {
                 tag: i as u64,
                 op: ChunkOp::Get {
-                    dest: layout[i % self.config.n_servers],
+                    dest: layout[i % lc.n_servers],
                     key: ChunkKey::new(block, i as u32),
                 },
             })
-            .collect();
-        let batch = self.transport.link(shell).sched.run_batch(transfers);
+            .collect()
+    }
+
+    /// Whether a copy's batch report carries a complete payload — the
+    /// allocation-free check [`Self::assemble`] would answer with `Some`.
+    fn copy_complete(report: &BatchReport, meta: &BlockMeta) -> bool {
+        let mut len = 0usize;
+        for o in &report.outcomes {
+            match &o.result {
+                ChunkResult::Got(Some(data)) if data.len() > CHUNK_HEADER_LEN => {
+                    len += data.len() - CHUNK_HEADER_LEN
+                }
+                _ => return false,
+            }
+        }
+        len == meta.kvc_len as usize
+    }
+
+    /// Reassemble a copy's payload from its batch report (outcomes are in
+    /// tag order); `None` when any chunk is missing or short.
+    fn assemble(&self, report: &BatchReport, meta: &BlockMeta) -> Option<Vec<u8>> {
         let mut payload = Vec::with_capacity(meta.kvc_len as usize);
-        for o in batch.outcomes {
-            match o.result {
+        for o in &report.outcomes {
+            match &o.result {
                 ChunkResult::Got(Some(data)) if data.len() > CHUNK_HEADER_LEN => {
                     payload.extend_from_slice(&data[CHUNK_HEADER_LEN..])
                 }
@@ -360,9 +503,25 @@ impl FederatedKvcManager {
         }
     }
 
-    /// Fetch one block's KV values from its home shell; `None` if the
-    /// block is unknown or broken (broken blocks are dropped and lazily
-    /// evicted, and their home is remembered for re-homing stats).
+    /// Fetch one copy (no counters): one virtual-time batch on its
+    /// shell's scheduler.  Used by replication and re-striping
+    /// evacuation, which must not perturb the fetch metrics.
+    fn fetch_copy_payload(
+        &self,
+        shell: ShellId,
+        block: BlockHash,
+        meta: &BlockMeta,
+        now_epoch: u64,
+    ) -> Option<Vec<u8>> {
+        let transfers = self.copy_transfers(shell, block, meta, now_epoch);
+        let report = self.transport.link(shell).sched.run_batch(transfers);
+        self.assemble(&report, meta)
+    }
+
+    /// Fetch one block's KV values, racing every live copy; `None` if the
+    /// block is unknown or every copy is broken (broken blocks are
+    /// dropped with invalidations fanned out to every copy, and their
+    /// home is remembered for re-homing stats).
     pub fn fetch_block(
         &self,
         hashes: &[BlockHash],
@@ -373,38 +532,184 @@ impl FederatedKvcManager {
         let Some(entry) = self.index.lock().unwrap().get(&block).copied() else {
             return Ok(None);
         };
-        let counters = &self.shell_counters[entry.shell as usize];
-        counters.fetch_attempts.fetch_add(1, Ordering::Relaxed);
-        match self.fetch_payload(entry.shell, block, &entry.meta, now_epoch) {
-            Some(payload) => {
-                counters.blocks_hit.fetch_add(1, Ordering::Relaxed);
-                let group = match self.config.quantizer {
-                    Quantizer::QuantoInt8 { group } | Quantizer::HqqInt8 { group } => group,
-                    Quantizer::F32 => 32,
-                };
-                let quantizer = Quantizer::from_id(entry.meta.quantizer_id, group).ok_or_else(
-                    || anyhow::anyhow!("unknown quantizer id {}", entry.meta.quantizer_id),
-                )?;
-                Ok(Some(quantizer.decode(&payload)?))
+        // arm 0 is always the home copy; copies follow in slot order
+        let mut arms: Vec<BlockCopy> = vec![BlockCopy { shell: entry.shell, meta: entry.meta }];
+        if let Some(r) = entry.replica {
+            arms.push(r);
+        }
+        if let Some(p) = entry.preplaced {
+            arms.push(p);
+        }
+        for arm in &arms {
+            self.shell_counters[arm.shell as usize].fetch_attempts.fetch_add(1, Ordering::Relaxed);
+        }
+        if arms.len() > 1 {
+            self.stats.replica_races.fetch_add(1, Ordering::Relaxed);
+        }
+        let race_arms = arms
+            .iter()
+            .map(|arm| {
+                (
+                    self.transport.link(arm.shell).sched.as_ref(),
+                    self.copy_transfers(arm.shell, block, &arm.meta, now_epoch),
+                )
+            })
+            .collect();
+        let outcome = race_batches(race_arms);
+        // the serving arm: fastest makespan among arms whose payload
+        // reassembled completely, ties to the lowest arm index
+        let mut order: Vec<usize> = (0..arms.len()).collect();
+        order.sort_by_key(|&i| (outcome.reports[i].makespan_ns, i));
+        let mut served: Option<(usize, Vec<u8>)> = None;
+        for i in order {
+            if let Some(payload) = self.assemble(&outcome.reports[i], &arms[i].meta) {
+                served = Some((i, payload));
+                break;
             }
-            None => {
-                self.drop_broken(block, &entry, now_epoch);
-                Ok(None)
+        }
+        let Some((winner, payload)) = served else {
+            self.drop_broken(block, &entry, now_epoch);
+            return Ok(None);
+        };
+        let win = arms[winner];
+        let counters = &self.shell_counters[win.shell as usize];
+        counters.blocks_hit.fetch_add(1, Ordering::Relaxed);
+        if winner > 0 {
+            counters.replica_hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.replica_race_wins.fetch_add(1, Ordering::Relaxed);
+            // arm indices: replica (if present) sits right after home
+            let is_preplaced = entry.replica.is_some() && winner == 2
+                || entry.replica.is_none() && winner == 1;
+            if is_preplaced {
+                self.stats.preplace_hits.fetch_add(1, Ordering::Relaxed);
             }
+            // a broken primary promotes the surviving copy it raced
+            if !Self::copy_complete(&outcome.reports[0], &arms[0].meta) {
+                self.promote_copy(block, &entry, winner, now_epoch);
+            }
+        }
+        // copy arms that raced and failed to reassemble are dead even
+        // though their shell's box may still be live (chunk loss, LRU):
+        // drop their slots now so the next epoch boundary re-creates
+        // them — otherwise a silently-broken replica is raced forever
+        // and protects nothing
+        for (i, arm) in arms.iter().enumerate().skip(1) {
+            if i != winner && !Self::copy_complete(&outcome.reports[i], &arm.meta) {
+                self.invalidate_copy_slot(block, arm, now_epoch);
+            }
+        }
+        self.bump_accesses(&block);
+        let group = match self.config.quantizer {
+            Quantizer::QuantoInt8 { group } | Quantizer::HqqInt8 { group } => group,
+            Quantizer::F32 => 32,
+        };
+        let quantizer = Quantizer::from_id(win.meta.quantizer_id, group)
+            .ok_or_else(|| anyhow::anyhow!("unknown quantizer id {}", win.meta.quantizer_id))?;
+        Ok(Some(quantizer.decode(&payload)?))
+    }
+
+    fn bump_accesses(&self, block: &BlockHash) {
+        if let Some(e) = self.index.lock().unwrap().get_mut(block) {
+            e.accesses += 1;
         }
     }
 
-    /// §3.9 lazy eviction, federated: drop the broken block from the
-    /// index, remember its home for re-homing stats, and tell the
-    /// surviving replicas on its home shell to purge.
+    /// Drop a dead copy's slot (matched by value), evict its leftover
+    /// chunks and debit its bytes.  No-op when the slot no longer holds
+    /// this exact copy (e.g. it was just promoted to primary, or its
+    /// bytes were already settled by a collapse).
+    fn invalidate_copy_slot(&self, block: BlockHash, copy: &BlockCopy, now_epoch: u64) {
+        let mut index = self.index.lock().unwrap();
+        let Some(e) = index.get_mut(&block) else { return };
+        if e.replica == Some(*copy) {
+            e.replica = None;
+        } else if e.preplaced == Some(*copy) {
+            e.preplaced = None;
+        } else {
+            return;
+        }
+        drop(index);
+        // safe by-block eviction: copies live on pairwise-distinct
+        // shells, so no other copy of this block shares these satellites
+        self.evict_copy(copy, block, now_epoch);
+        self.shell_counters[copy.shell as usize]
+            .placed_bytes
+            .fetch_sub(copy.meta.kvc_len as u64, Ordering::Relaxed);
+    }
+
+    /// Re-home a block onto the copy that won its race while the primary
+    /// was broken: the copy becomes the primary, the dead primary's
+    /// chunks are invalidated, and the block never leaves the index.
+    fn promote_copy(&self, block: BlockHash, entry: &FedBlockMeta, winner: usize, now_epoch: u64) {
+        let old = BlockCopy { shell: entry.shell, meta: entry.meta };
+        let mut index = self.index.lock().unwrap();
+        let Some(e) = index.get_mut(&block) else { return };
+        let promoted = if entry.replica.is_some() && winner == 1 {
+            e.replica.take()
+        } else {
+            e.preplaced.take()
+        };
+        let Some(copy) = promoted else { return };
+        e.shell = copy.shell;
+        e.meta = copy.meta;
+        // a leftover copy slot on the new home shell duplicates the block
+        // there: drop the slot and its byte credit.  Its chunks are left
+        // to LRU — chunk keys are not copy-qualified, so evicting by
+        // block hash would purge the promoted copy too.
+        let mut merged_bytes = 0u64;
+        if let Some(r) = e.replica {
+            if r.shell == e.shell {
+                merged_bytes += r.meta.kvc_len as u64;
+                e.replica = None;
+            }
+        }
+        if let Some(p) = e.preplaced {
+            if p.shell == e.shell {
+                merged_bytes += p.meta.kvc_len as u64;
+                e.preplaced = None;
+            }
+        }
+        let new_home = e.shell;
+        drop(index);
+        if merged_bytes > 0 {
+            self.shell_counters[new_home as usize]
+                .placed_bytes
+                .fetch_sub(merged_bytes, Ordering::Relaxed);
+        }
+        self.stats.replica_promotions.fetch_add(1, Ordering::Relaxed);
+        // fan out the invalidation of the dead primary and move the
+        // placement accounting onto the promoted copy's shell
+        self.evict_copy(&old, block, now_epoch);
+        self.shell_counters[old.shell as usize]
+            .placed_bytes
+            .fetch_sub(old.meta.kvc_len as u64, Ordering::Relaxed);
+    }
+
+    /// §3.9 lazy eviction, federated: every copy is broken — drop the
+    /// block from the index, remember its home for re-homing stats, and
+    /// fan out evictions to the surviving satellites of *every* copy.
     fn drop_broken(&self, block: BlockHash, entry: &FedBlockMeta, now_epoch: u64) {
         self.stats.broken_blocks.fetch_add(1, Ordering::Relaxed);
         self.index.lock().unwrap().remove(&block);
         self.tombstones.lock().unwrap().insert(block, entry.shell);
-        let layout = self.layout_for(entry.shell, entry.meta.write_epoch, now_epoch);
-        let servers = self.config.n_servers.min(entry.meta.num_chunks as usize);
+        let mut copies = vec![BlockCopy { shell: entry.shell, meta: entry.meta }];
+        copies.extend(entry.replica);
+        copies.extend(entry.preplaced);
+        for c in &copies {
+            self.evict_copy(c, block, now_epoch);
+            self.shell_counters[c.shell as usize]
+                .placed_bytes
+                .fetch_sub(c.meta.kvc_len as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Tell the satellites of one copy's layout to purge the block.
+    fn evict_copy(&self, copy: &BlockCopy, block: BlockHash, now_epoch: u64) {
+        let lc = self.shell_layouts[copy.shell as usize];
+        let layout = self.layout_for(copy.shell, copy.meta.write_epoch, now_epoch);
+        let servers = lc.n_servers.min(copy.meta.num_chunks as usize);
         for sat in layout.iter().take(servers) {
-            let _ = self.transport.evict_block(FedSatId::new(entry.shell, *sat), block);
+            let _ = self.transport.evict_block(FedSatId::new(copy.shell, *sat), block);
         }
     }
 
@@ -426,38 +731,234 @@ impl FederatedKvcManager {
         Ok(got)
     }
 
+    // ------------------------------------------------- REPLICATION ------
+
+    /// The deterministic hot set: top-K blocks by `(accesses desc, hash
+    /// asc)` among blocks with at least
+    /// [`ReplicationPolicy::min_accesses`] accesses.
+    fn hot_blocks(&self, k: usize) -> Vec<BlockHash> {
+        let index = self.index.lock().unwrap();
+        let mut hot: Vec<(u64, BlockHash)> = index
+            .iter()
+            .filter(|(_, e)| e.accesses >= self.replication.min_accesses)
+            .map(|(h, e)| (e.accesses, *h))
+            .collect();
+        hot.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        hot.truncate(k);
+        hot.into_iter().map(|(_, h)| h).collect()
+    }
+
+    /// Ensure `block` has a live replica so its copies span the cheapest
+    /// live pair; returns 1 when a replica was created.
+    fn ensure_replica(&self, block: BlockHash, span: &[ShellId], now_epoch: u64) -> u64 {
+        let Some(entry) = self.index.lock().unwrap().get(&block).copied() else { return 0 };
+        if let Some(r) = entry.replica {
+            if self.box_live_fraction(r.shell) >= self.placement.min_live_fraction {
+                return 0; // live replica already in place
+            }
+            // the replica's shell died: drop the stale copy and re-create
+            self.evict_copy(&r, block, now_epoch);
+            self.shell_counters[r.shell as usize]
+                .placed_bytes
+                .fetch_sub(r.meta.kvc_len as u64, Ordering::Relaxed);
+            if let Some(e) = self.index.lock().unwrap().get_mut(&block) {
+                e.replica = None;
+            }
+        }
+        // never target the home shell, nor the shell already holding the
+        // pre-placed copy: chunk keys are not copy-qualified, so two
+        // copies of one block on one shell would collide and a later
+        // invalidation of either would purge both
+        let preplaced_shell = entry.preplaced.map(|c| c.shell);
+        let target = span
+            .iter()
+            .copied()
+            .find(|s| *s != entry.shell && Some(*s) != preplaced_shell)
+            .or_else(|| {
+                self.cheapest_live_shell_excluding(entry.shell)
+                    .filter(|s| Some(*s) != preplaced_shell)
+            });
+        let Some(target) = target else { return 0 };
+        let Some(payload) = self.fetch_copy_payload(entry.shell, block, &entry.meta, now_epoch)
+        else {
+            return 0; // broken home heals reactively on its next fetch
+        };
+        let center = self.transport.closest(target);
+        let Ok(meta) = self.stripe_payload(target, block, &payload, now_epoch, center) else {
+            return 0;
+        };
+        if let Some(e) = self.index.lock().unwrap().get_mut(&block) {
+            e.replica = Some(BlockCopy { shell: target, meta });
+        } else {
+            return 0;
+        }
+        let counters = &self.shell_counters[target as usize];
+        counters.replicas_hosted.fetch_add(1, Ordering::Relaxed);
+        counters.placed_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        self.stats.replicated_blocks.fetch_add(1, Ordering::Relaxed);
+        self.transport.account_inter_shell(
+            entry.shell,
+            target,
+            meta.num_chunks as u64,
+            payload.len() as u64,
+        );
+        1
+    }
+
+    /// Pre-place `block`'s next-rotation layout on the predicted shell
+    /// `p`: write epoch `now + 1`, centred one slot west of `p`'s current
+    /// centre (where `p`'s ground view will be after the handover).
+    fn ensure_preplaced(&self, block: BlockHash, p: ShellId, now_epoch: u64) -> u64 {
+        let Some(entry) = self.index.lock().unwrap().get(&block).copied() else { return 0 };
+        if entry.shell == p || entry.replica.map(|r| r.shell) == Some(p) {
+            return 0; // a copy already lives on the predicted shell
+        }
+        if let Some(old) = entry.preplaced {
+            if old.shell == p {
+                return 0; // already pre-placed there (keeps rotating along)
+            }
+            // prediction moved: invalidate the stale pre-placement
+            self.evict_copy(&old, block, now_epoch);
+            self.shell_counters[old.shell as usize]
+                .placed_bytes
+                .fetch_sub(old.meta.kvc_len as u64, Ordering::Relaxed);
+            if let Some(e) = self.index.lock().unwrap().get_mut(&block) {
+                e.preplaced = None;
+            }
+        }
+        let payload = self
+            .fetch_copy_payload(entry.shell, block, &entry.meta, now_epoch)
+            .or_else(|| {
+                let r = entry.replica?;
+                self.fetch_copy_payload(r.shell, block, &r.meta, now_epoch)
+            });
+        let Some(payload) = payload else { return 0 };
+        let torus = self.transport.shell(p).torus;
+        let next_center = torus.offset(self.transport.closest(p), 0, -1);
+        let Ok(meta) = self.stripe_payload(p, block, &payload, now_epoch + 1, next_center) else {
+            return 0;
+        };
+        if let Some(e) = self.index.lock().unwrap().get_mut(&block) {
+            e.preplaced = Some(BlockCopy { shell: p, meta });
+        } else {
+            return 0;
+        }
+        let counters = &self.shell_counters[p as usize];
+        counters.preplaced_hosted.fetch_add(1, Ordering::Relaxed);
+        counters.placed_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        self.stats.preplaced_blocks.fetch_add(1, Ordering::Relaxed);
+        self.transport.account_inter_shell(
+            entry.shell,
+            p,
+            meta.num_chunks as u64,
+            payload.len() as u64,
+        );
+        1
+    }
+
+    /// Epoch-boundary policy hook: replicate the hot set across the
+    /// cheapest live pair, run the §3.7 predictor and pre-place the hot
+    /// set's next-rotation layout on its pick, then record this epoch's
+    /// live fractions as the next trend input.  Call after serving an
+    /// epoch's traffic and before advancing the ground views.  Returns
+    /// `(replicas created, copies pre-placed)`.
+    pub fn end_of_epoch(&self, now_epoch: u64) -> (u64, u64) {
+        let cands = self.candidates();
+        let mut replicated = 0u64;
+        let mut preplaced = 0u64;
+        if self.replication.enabled() {
+            let hot = self.hot_blocks(self.replication.top_k);
+            let span: Vec<ShellId> = cheapest_two(&cands, self.placement.min_live_fraction)
+                .into_iter()
+                .map(|i| i as ShellId)
+                .collect();
+            for block in &hot {
+                replicated += self.ensure_replica(*block, &span, now_epoch);
+            }
+            if self.preplace {
+                let prev = self.prev_live.lock().unwrap().clone();
+                if let Some(p) = predict_preplacement_shell(
+                    &cands,
+                    &prev,
+                    self.placement.min_live_fraction,
+                ) {
+                    for block in &hot {
+                        preplaced += self.ensure_preplaced(*block, p as ShellId, now_epoch);
+                    }
+                }
+            }
+        }
+        *self.prev_live.lock().unwrap() = cands.iter().map(|c| c.live_fraction).collect();
+        (replicated, preplaced)
+    }
+
     // ------------------------------------------------------ ROTATION ----
 
     /// §3.4 intra-shell rotation migration for one shell: the exiting east
     /// column hands its chunks to the entering west column, per plane
-    /// (the same handoff pairs the single-shell manager issues).
+    /// (the same handoff pairs the single-shell manager issues), using
+    /// the shell's own stripe width.
     pub fn migration_requests(&self, shell: ShellId) -> Vec<(SatId, SatId)> {
-        if !self.config.strategy.migrates() {
+        let lc = self.shell_layouts[shell as usize];
+        if !lc.strategy.migrates() {
             return vec![];
         }
         let torus = self.transport.shell(shell).torus;
         crate::mapping::migration::rotation_handoff_pairs(
             &torus,
             self.transport.closest(shell),
-            self.config.n_servers,
+            lc.n_servers,
         )
     }
 
     // ------------------------------------------------------ HANDOVER ----
 
-    /// Proactive inter-shell handover: drain every cell of `from`'s
-    /// current layout box to the same relative cell of `to`'s box (over
-    /// the inter-shell links) and re-home `from`'s blocks onto `to`.
-    /// Because cell offsets relative to the (lockstep-rotating) centres
-    /// are preserved, the write-epoch layout arithmetic keeps resolving
-    /// every surviving chunk on the new shell.
-    pub fn evacuate_shell(&self, from: ShellId, to: ShellId, _now_epoch: u64) -> EvacSummary {
+    /// Proactive inter-shell handover: move every block homed on `from`
+    /// onto `to` and re-home the index.
+    ///
+    /// When both shells share one [`ShellLayoutConfig`], the whole layout
+    /// box is drained cell-by-cell to the same relative cells of `to`'s
+    /// box (offsets relative to the lockstep-rotating centres are
+    /// preserved, so the write-epoch arithmetic keeps resolving every
+    /// surviving chunk).  When the configs differ, every block is
+    /// re-fetched and re-striped onto `to`'s own layout (write epoch
+    /// `now_epoch`); blocks that no longer reassemble drop to tombstones
+    /// and heal reactively.  Replicas already on `to` are kept; copies
+    /// stranded on `from` are invalidated or re-tagged.
+    pub fn evacuate_shell(&self, from: ShellId, to: ShellId, now_epoch: u64) -> EvacSummary {
         assert_ne!(from, to, "evacuation needs a distinct target shell");
+        // pre-placed copies on `from` straddle the next rotation's box and
+        // cannot ride either path: invalidate them first
+        let stranded: Vec<(BlockHash, BlockCopy)> = self
+            .index
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(h, e)| e.preplaced.filter(|c| c.shell == from).map(|c| (*h, c)))
+            .collect();
+        for (block, copy) in &stranded {
+            self.evict_copy(copy, *block, now_epoch);
+            self.shell_counters[from as usize]
+                .placed_bytes
+                .fetch_sub(copy.meta.kvc_len as u64, Ordering::Relaxed);
+            if let Some(e) = self.index.lock().unwrap().get_mut(block) {
+                e.preplaced = None;
+            }
+        }
+        if self.shell_layouts[from as usize] == self.shell_layouts[to as usize] {
+            self.evacuate_same_layout(from, to)
+        } else {
+            self.evacuate_restripe(from, to, now_epoch)
+        }
+    }
+
+    /// The offset-preserving evacuation path (identical layout configs).
+    fn evacuate_same_layout(&self, from: ShellId, to: ShellId) -> EvacSummary {
         let src_torus = self.transport.shell(from).torus;
         let dst_torus = self.transport.shell(to).torus;
         let src_center = self.transport.closest(from);
         let dst_center = self.transport.closest(to);
-        let half = (box_width(self.config.n_servers) as i32 - 1) / 2;
+        let half = (box_width(self.shell_layouts[from as usize].n_servers) as i32 - 1) / 2;
         let mut chunks_moved = 0u32;
         let mut bytes_moved = 0u64;
         for dp in -half..=half {
@@ -471,19 +972,167 @@ impl FederatedKvcManager {
         }
         let mut rehomed = 0u64;
         let mut rehomed_bytes = 0u64;
+        let mut copy_bytes_moved = 0u64;
+        let mut copy_bytes_merged = 0u64;
+        let mut copy_bytes_collapsed = 0u64;
         for entry in self.index.lock().unwrap().values_mut() {
             if entry.shell == from {
                 entry.shell = to;
                 rehomed += 1;
                 rehomed_bytes += entry.meta.kvc_len as u64;
             }
+            // replicas physically rode the drain with everything else:
+            // re-tag them, and drop the slot if it collapsed onto the
+            // (possibly just re-homed) primary
+            if let Some(mut r) = entry.replica {
+                if r.shell == from {
+                    r.shell = to;
+                    if to == entry.shell {
+                        copy_bytes_merged += r.meta.kvc_len as u64;
+                        entry.replica = None;
+                    } else {
+                        copy_bytes_moved += r.meta.kvc_len as u64;
+                        entry.replica = Some(r);
+                    }
+                }
+            }
+            // the target shell may already hold this block's replica or
+            // pre-placed copy: a re-homed primary collapses onto it.
+            // Drop the slot and its byte credit; the chunks share keys
+            // with the primary's, so a by-block eviction would purge the
+            // primary too — leave them to LRU.
+            if entry.shell == to {
+                if let Some(r) = entry.replica {
+                    if r.shell == to {
+                        copy_bytes_collapsed += r.meta.kvc_len as u64;
+                        entry.replica = None;
+                    }
+                }
+                if let Some(p) = entry.preplaced {
+                    if p.shell == to {
+                        copy_bytes_collapsed += p.meta.kvc_len as u64;
+                        entry.preplaced = None;
+                    }
+                }
+            }
         }
         self.stats.proactive_handover_blocks.fetch_add(rehomed, Ordering::Relaxed);
         // move the placement accounting with the blocks (payload-byte
-        // convention, matching store_payload; every rehomed block was
-        // credited to `from` when stored, so the debit cannot underflow)
-        self.shell_counters[from as usize].placed_bytes.fetch_sub(rehomed_bytes, Ordering::Relaxed);
-        self.shell_counters[to as usize].placed_bytes.fetch_add(rehomed_bytes, Ordering::Relaxed);
+        // convention, matching store_payload; every moved copy was
+        // credited to `from` — and every collapsed copy to `to` — when
+        // stored, so the debits cannot underflow)
+        self.shell_counters[from as usize]
+            .placed_bytes
+            .fetch_sub(rehomed_bytes + copy_bytes_moved + copy_bytes_merged, Ordering::Relaxed);
+        self.shell_counters[to as usize]
+            .placed_bytes
+            .fetch_add(rehomed_bytes + copy_bytes_moved, Ordering::Relaxed);
+        self.shell_counters[to as usize]
+            .placed_bytes
+            .fetch_sub(copy_bytes_collapsed, Ordering::Relaxed);
+        EvacSummary { chunks_moved, bytes_moved, blocks_rehomed: rehomed }
+    }
+
+    /// The re-striping evacuation path (differing layout configs): fetch
+    /// each block homed on `from` and stripe it onto `to`'s own layout.
+    fn evacuate_restripe(&self, from: ShellId, to: ShellId, now_epoch: u64) -> EvacSummary {
+        // replicas stranded on `from` (blocks homed elsewhere) cannot be
+        // offset-preserved across layout configs: invalidate them — the
+        // replication policy re-creates them on a live shell at the next
+        // epoch boundary
+        let stranded: Vec<(BlockHash, BlockCopy)> = self
+            .index
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.shell != from)
+            .filter_map(|(h, e)| e.replica.filter(|c| c.shell == from).map(|c| (*h, c)))
+            .collect();
+        for (block, copy) in &stranded {
+            self.evict_copy(copy, *block, now_epoch);
+            self.shell_counters[from as usize]
+                .placed_bytes
+                .fetch_sub(copy.meta.kvc_len as u64, Ordering::Relaxed);
+            if let Some(e) = self.index.lock().unwrap().get_mut(block) {
+                e.replica = None;
+            }
+        }
+        let homed: Vec<(BlockHash, FedBlockMeta)> = self
+            .index
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.shell == from)
+            .map(|(h, e)| (*h, *e))
+            .collect();
+        let dst_center = self.transport.closest(to);
+        let mut chunks_moved = 0u32;
+        let mut bytes_moved = 0u64;
+        let mut rehomed = 0u64;
+        for (block, entry) in homed {
+            // prefer the home copy; fall back to a replica if the home
+            // box already lost chunks
+            let payload = self
+                .fetch_copy_payload(from, block, &entry.meta, now_epoch)
+                .or_else(|| {
+                    let r = entry.replica?;
+                    self.fetch_copy_payload(r.shell, block, &r.meta, now_epoch)
+                });
+            let Some(payload) = payload else {
+                // nothing to move: drop the block like drop_broken would —
+                // every copy evicted and debited — and heal reactively
+                self.index.lock().unwrap().remove(&block);
+                self.tombstones.lock().unwrap().insert(block, from);
+                self.shell_counters[from as usize]
+                    .placed_bytes
+                    .fetch_sub(entry.meta.kvc_len as u64, Ordering::Relaxed);
+                for c in entry.replica.iter().chain(entry.preplaced.iter()) {
+                    self.evict_copy(c, block, now_epoch);
+                    self.shell_counters[c.shell as usize]
+                        .placed_bytes
+                        .fetch_sub(c.meta.kvc_len as u64, Ordering::Relaxed);
+                }
+                continue;
+            };
+            let Ok(meta) = self.stripe_payload(to, block, &payload, now_epoch, dst_center) else {
+                continue;
+            };
+            // the old primary's surviving chunks stay behind otherwise,
+            // squatting in `from`'s LRU stores (the same-layout path
+            // physically drains them); no other copy lives on `from` by
+            // now, so a by-block eviction there is safe
+            self.evict_copy(&BlockCopy { shell: from, meta: entry.meta }, block, now_epoch);
+            let mut index = self.index.lock().unwrap();
+            let Some(e) = index.get_mut(&block) else { continue };
+            e.shell = to;
+            e.meta = meta;
+            if e.replica.map(|r| r.shell) == Some(to) {
+                // the replica slot collapsed onto the new home
+                let r = e.replica.take().unwrap();
+                self.shell_counters[to as usize]
+                    .placed_bytes
+                    .fetch_sub(r.meta.kvc_len as u64, Ordering::Relaxed);
+            }
+            if e.preplaced.map(|p| p.shell) == Some(to) {
+                // so did the pre-placed copy
+                let p = e.preplaced.take().unwrap();
+                self.shell_counters[to as usize]
+                    .placed_bytes
+                    .fetch_sub(p.meta.kvc_len as u64, Ordering::Relaxed);
+            }
+            drop(index);
+            rehomed += 1;
+            chunks_moved += meta.num_chunks;
+            bytes_moved += payload.len() as u64;
+            self.shell_counters[from as usize]
+                .placed_bytes
+                .fetch_sub(entry.meta.kvc_len as u64, Ordering::Relaxed);
+            self.shell_counters[to as usize]
+                .placed_bytes
+                .fetch_add(payload.len() as u64, Ordering::Relaxed);
+        }
+        self.stats.proactive_handover_blocks.fetch_add(rehomed, Ordering::Relaxed);
+        self.transport.account_inter_shell(from, to, chunks_moved as u64, bytes_moved);
         EvacSummary { chunks_moved, bytes_moved, blocks_rehomed: rehomed }
     }
 
@@ -503,6 +1152,7 @@ mod tests {
     use crate::federation::Shell;
     use crate::kvc::block::block_hashes;
     use crate::kvc::eviction::EvictionPolicy;
+    use crate::mapping::Strategy;
     use crate::net::faults::FaultyTransport;
     use crate::net::transport::{GroundView, InProcTransport, Transport};
     use crate::satellite::fleet::Fleet;
@@ -533,9 +1183,55 @@ mod tests {
         FederatedKvcManager::new(config, transport, PlacementPolicy::default())
     }
 
+    /// Three shells with replication + pre-placement on: a-550 (second
+    /// cheapest), b-630 (dense, primary), c-1200 (expensive polar
+    /// stand-in running its *own* layout config).
+    fn tri_manager(top_k: usize, preplace: bool) -> FederatedKvcManager {
+        let transport = Arc::new(FederatedTransport::new(vec![
+            shell_link(0, "a-550", 9, 11, 550.0),
+            shell_link(1, "b-630", 15, 15, 630.0),
+            shell_link(2, "c-1200", 9, 11, 1200.0),
+        ]));
+        let config = KvcConfig { n_servers: 9, chunk_size: 600, ..KvcConfig::default() };
+        let layouts = vec![
+            ShellLayoutConfig { strategy: config.strategy, n_servers: 9 },
+            ShellLayoutConfig { strategy: config.strategy, n_servers: 9 },
+            // the polar shell stripes differently: re-stripe paths apply
+            ShellLayoutConfig { strategy: Strategy::RotationAware, n_servers: 9 },
+        ];
+        FederatedKvcManager::new_with(
+            config,
+            transport,
+            PlacementPolicy::default(),
+            ReplicationPolicy { top_k, min_accesses: 2 },
+            preplace,
+            layouts,
+        )
+    }
+
     fn values(n: usize, seed: u64) -> Vec<f32> {
         let mut rng = XorShift64::new(seed);
         (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect()
+    }
+
+    fn kill_box(m: &FederatedKvcManager, shell: ShellId) {
+        let link = m.transport().link(shell);
+        let center = link.faults.closest();
+        for dp in -1..=1 {
+            for ds in -1..=1 {
+                link.faults.fail_satellite(link.shell.torus.offset(center, dp, ds));
+            }
+        }
+    }
+
+    fn restore_box(m: &FederatedKvcManager, shell: ShellId) {
+        let link = m.transport().link(shell);
+        let center = link.faults.closest();
+        for dp in -1..=1 {
+            for ds in -1..=1 {
+                link.faults.restore_satellite(link.shell.torus.offset(center, dp, ds));
+            }
+        }
     }
 
     #[test]
@@ -571,9 +1267,6 @@ mod tests {
         for b in 0..3 {
             m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
         }
-        // force block 1 onto the other shell by re-homing its index entry
-        // is not possible from outside; instead verify the walk truncates
-        // at the first unknown block
         assert_eq!(m.lookup(&hashes), 3);
         assert_eq!(m.fetch_prefix(&hashes, 3, 0).unwrap(), 3);
         let mut tokens2 = tokens.clone();
@@ -587,14 +1280,7 @@ mod tests {
         let m = manager();
         let primary = m.primary_shell();
         let other = 1 - primary;
-        // kill the primary's whole layout box
-        let link = m.transport().link(primary);
-        let center = link.faults.closest();
-        for dp in -1..=1 {
-            for ds in -1..=1 {
-                link.faults.fail_satellite(link.shell.torus.offset(center, dp, ds));
-            }
-        }
+        kill_box(&m, primary);
         assert!(m.box_live_fraction(primary) < 0.2);
         let tokens: Vec<i32> = (0..32).collect();
         let hashes = block_hashes(&tokens, 32);
@@ -698,15 +1384,160 @@ mod tests {
         assert_eq!(m.stats.broken_blocks.load(Ordering::Relaxed), 1);
         assert_eq!(m.lookup(&hashes), 1, "broken block left the index");
         // re-store while the home shell's box is dead: reactive re-home
-        let link = m.transport().link(home);
-        let center = link.faults.closest();
-        for dp in -1..=1 {
-            for ds in -1..=1 {
-                link.faults.fail_satellite(link.shell.torus.offset(center, dp, ds));
-            }
-        }
+        kill_box(&m, home);
         let new_home = m.put_block(&hashes, 1, &values(2048, 1), 0).unwrap();
         assert_ne!(new_home, home);
         assert_eq!(m.stats.reactive_rehomed_blocks.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn hot_blocks_replicate_across_the_cheapest_pair() {
+        let m = tri_manager(4, false);
+        assert_eq!(m.primary_shell(), 1, "the dense 630 km shell is primary");
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+        }
+        // two served fetches per block clear min_accesses
+        for _ in 0..2 {
+            assert_eq!(m.fetch_prefix(&hashes, 3, 0).unwrap(), 3);
+        }
+        let (replicated, preplaced) = m.end_of_epoch(0);
+        assert_eq!(replicated, 3, "every hot block gains a replica");
+        assert_eq!(preplaced, 0, "pre-placement is off");
+        assert_eq!(m.stats.replicated_blocks.load(Ordering::Relaxed), 3);
+        for b in 0..3 {
+            assert_eq!(m.home_of(&hashes[b]), Some(1));
+            assert_eq!(m.replica_of(&hashes[b]), Some(0), "replica on the second-cheapest");
+        }
+        assert_eq!(m.shell_counters()[0].replicas_hosted.load(Ordering::Relaxed), 3);
+        assert!(m.shell_counters()[0].placed_bytes.load(Ordering::Relaxed) > 0);
+        assert!(m.transport().stats.inter_shell_bytes.load(Ordering::Relaxed) > 0);
+        // replicas are idempotent across epochs
+        let (again, _) = m.end_of_epoch(1);
+        assert_eq!(again, 0);
+        // fetches now race both copies; with a healthy home the home
+        // still serves (virtual-time tie resolves to arm 0)
+        assert!(m.fetch_block(&hashes, 0, 0).unwrap().is_some());
+        assert!(m.stats.replica_races.load(Ordering::Relaxed) > 0);
+        assert_eq!(m.stats.replica_race_wins.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn dead_home_race_serves_replica_and_promotes() {
+        let m = tri_manager(4, false);
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let kv = values(2048, 5);
+        let home = m.put_block(&hashes, 0, &kv, 0).unwrap();
+        for _ in 0..2 {
+            assert!(m.fetch_block(&hashes, 0, 0).unwrap().is_some());
+        }
+        m.end_of_epoch(0);
+        let replica = m.replica_of(&hashes[0]).unwrap();
+        assert_ne!(replica, home);
+        // the home box goes dark: the race must serve the replica and
+        // promote it to primary — no broken block, no truncation
+        kill_box(&m, home);
+        let fetched = m.fetch_block(&hashes, 0, 0).unwrap();
+        assert!(fetched.is_some(), "the replica must serve");
+        assert_eq!(fetched.unwrap().len(), kv.len());
+        assert_eq!(m.stats.replica_race_wins.load(Ordering::Relaxed), 1);
+        assert_eq!(m.stats.replica_promotions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.stats.broken_blocks.load(Ordering::Relaxed), 0);
+        assert_eq!(m.home_of(&hashes[0]), Some(replica), "the replica is the new home");
+        assert_eq!(m.replica_of(&hashes[0]), None, "the slot was consumed");
+        assert!(m.shell_counters()[replica as usize].replica_hits.load(Ordering::Relaxed) >= 1);
+        // and the promoted copy keeps serving
+        assert!(m.fetch_block(&hashes, 0, 0).unwrap().is_some());
+    }
+
+    #[test]
+    fn predictor_preplaces_next_rotation_and_serves_after_handover() {
+        let m = tri_manager(4, true);
+        // force the home off the primary: the primary's box is dark at
+        // Set time, so placement spills to a-550
+        kill_box(&m, 1);
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let home = m.put_block(&hashes, 0, &values(2048, 11), 0).unwrap();
+        assert_eq!(home, 0);
+        for _ in 0..2 {
+            assert!(m.fetch_block(&hashes, 0, 0).unwrap().is_some());
+        }
+        // epoch 0 boundary: the replica goes to the cheapest live shell
+        // that is not the home — the polar shell (b is dead), which runs
+        // a different layout config (re-striped copy)
+        let (replicated, preplaced) = m.end_of_epoch(0);
+        assert_eq!(replicated, 1);
+        assert_eq!(m.replica_of(&hashes[0]), Some(2));
+        assert_eq!(preplaced, 0, "the predictor still picks the home shell");
+        // one epoch of per-shell rotation (migration, then the views
+        // move), exactly as the harness drives it
+        let advance = |m: &FederatedKvcManager, to_epoch: u64| {
+            for s in 0..m.transport().n_shells() as ShellId {
+                for (from, to) in m.migration_requests(s) {
+                    let _ = m.transport().link(s).faults.migrate(from, to);
+                }
+            }
+            m.transport().set_epoch_all(to_epoch);
+        };
+        advance(&m, 1);
+        // the primary heals: the predictor now forecasts b-630 eligible
+        // (rising trend) and pre-places the next rotation's layout there
+        restore_box(&m, 1);
+        let (_, preplaced) = m.end_of_epoch(1);
+        assert_eq!(preplaced, 1, "the §3.7 predictor pre-places on the healed primary");
+        assert_eq!(m.stats.preplaced_blocks.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shell_counters()[1].preplaced_hosted.load(Ordering::Relaxed), 1);
+        // advance the rotation; then lose both other copies — only the
+        // pre-placed copy survives, resolves at its target epoch, serves,
+        // and is promoted
+        advance(&m, 2);
+        kill_box(&m, 0);
+        kill_box(&m, 2);
+        let fetched = m.fetch_block(&hashes, 0, 2).unwrap();
+        assert!(fetched.is_some(), "the pre-placed copy must serve after the handover");
+        assert_eq!(m.stats.preplace_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.stats.replica_promotions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.home_of(&hashes[0]), Some(1));
+    }
+
+    #[test]
+    fn restripe_evacuation_crosses_layout_configs() {
+        let m = tri_manager(0, false);
+        assert_ne!(
+            m.shell_layout(0).strategy,
+            m.shell_layout(2).strategy,
+            "the polar shell runs its own strategy"
+        );
+        // home everything on a-550 (kill the primary first)
+        kill_box(&m, 1);
+        let tokens: Vec<i32> = (0..96).collect();
+        let hashes = block_hashes(&tokens, 32);
+        for b in 0..3 {
+            assert_eq!(m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap(), 0);
+        }
+        // evacuating a -> c must re-stripe (configs differ) and keep
+        // every block fetchable from the polar shell
+        let summary = m.evacuate_shell(0, 2, 0);
+        assert_eq!(summary.blocks_rehomed, 3);
+        assert!(summary.chunks_moved > 0);
+        assert!(summary.bytes_moved > 0);
+        let link = m.transport().link(0);
+        for sat in link.shell.torus.all() {
+            link.faults.fail_satellite(sat);
+        }
+        for b in 0..3 {
+            assert_eq!(m.home_of(&hashes[b]), Some(2));
+            assert!(m.fetch_block(&hashes, b, 0).unwrap().is_some(), "block {b}");
+        }
+        assert_eq!(
+            m.stats.proactive_handover_blocks.load(Ordering::Relaxed),
+            3,
+            "re-striping is still a proactive handover"
+        );
+        assert!(m.transport().stats.inter_shell_bytes.load(Ordering::Relaxed) > 0);
     }
 }

@@ -15,16 +15,30 @@
 //!   of the other shell is at most half a grid cell away horizontally and
 //!   the altitude gap away vertically), both with altitude-correct
 //!   latency from [`Geometry`].
-//! * [`placement`] — the shell-aware placement policy: each block goes to
-//!   the cheapest shell by uplink+hop cost, spilling over when the primary
-//!   shell's layout box is saturated or failed.
+//! * [`placement`] — the shell-aware policies: cost-based primary
+//!   placement with spillover, per-shell layout configuration
+//!   ([`placement::ShellLayoutConfig`]: each shell may run its own
+//!   mapping strategy and stripe width), the hot-block
+//!   [`placement::ReplicationPolicy`] (top-K blocks span the two
+//!   cheapest shells, [`placement::cheapest_two`]), and the §3.7-style
+//!   pre-placement predictor
+//!   ([`placement::predict_preplacement_shell`]).
 //! * [`transport`] — [`transport::FederatedTransport`]: routes Get/Set to
 //!   the addressed shell (each shell keeps its own
 //!   [`crate::net::faults::FaultyTransport`] decorator, so failure
-//!   injection composes) and carries cross-shell chunk evacuations.
+//!   injection composes) and carries cross-shell chunk evacuations,
+//!   replication and pre-placement traffic over the inter-shell links.
 //! * [`manager`] — [`manager::FederatedKvcManager`]: the §3.8 Get/Set
-//!   fan-out over shell-qualified layouts, with inter-shell handover of
-//!   hot chunks when a whole shell degrades.
+//!   fan-out over shell-qualified layouts; reads race every copy of a
+//!   replicated block via [`crate::net::sched::race_batches`] and a
+//!   broken primary promotes its surviving replica; inter-shell handover
+//!   (offset-preserving between identical layouts, re-striping between
+//!   differing ones) moves hot chunks when a whole shell degrades.
+//!
+//! A federation holds any number of shells (N >= 1): single-shell runs
+//! are the no-federation baseline, two shells reproduce PR 2's dual-shell
+//! re-homing, and the `federated-tri-shell` scenario exercises the full
+//! replicated three-shell stack under correlated failures.
 
 pub mod manager;
 pub mod placement;

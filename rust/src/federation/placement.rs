@@ -1,15 +1,31 @@
-//! Shell-aware chunk placement.
+//! Shell-aware chunk placement, replication and pre-placement policy.
 //!
-//! Each block's virtual servers go to one shell; the policy picks the
+//! Each block's *primary* copy goes to one shell; the policy picks the
 //! cheapest shell by uplink+hop cost and spills over when the primary
 //! shell's layout box is saturated (byte budget) or failed (live fraction
 //! of its box below threshold).  Costs are pure functions of a shell's
-//! [`Geometry`] and the server count, so the primary shell of a federation
-//! is a static property; eligibility is dynamic (failures, load).
+//! [`Geometry`] and the shell's own stripe width
+//! ([`ShellLayoutConfig::n_servers`]), so the primary shell of a
+//! federation is a static property; eligibility is dynamic (failures,
+//! load).
+//!
+//! On top of single-copy placement this module carries the two policies
+//! the N-shell federation adds:
+//!
+//! * [`ReplicationPolicy`] — the top-K hottest blocks (by access count)
+//!   keep a live replica so the block's copies span the **two cheapest
+//!   shells** ([`cheapest_two`]); reads race the copies over
+//!   [`crate::net::sched::race_batches`] and writes fan out
+//!   invalidations to every copy.
+//! * [`predict_preplacement_shell`] — the §3.7-style predictor: instead
+//!   of reacting to broken fetches after a shell degrades, each epoch
+//!   extrapolates every shell's layout-box live fraction one rotation
+//!   ahead and pre-places the next rotation's layout of the hot blocks
+//!   on the shell predicted to be cheapest *and still eligible*.
 
 use crate::constellation::geometry::Geometry;
 use crate::federation::ShellId;
-use crate::mapping::box_width;
+use crate::mapping::{box_width, Strategy};
 
 /// Expected retrieval cost of hosting one block on a shell, seconds: the
 /// round-trip slant uplink to the farthest cell of the layout box plus the
@@ -35,6 +51,49 @@ pub fn cheapest_index(costs: &[f64]) -> Option<usize> {
         }
     }
     best
+}
+
+/// Per-shell layout configuration: which mapping strategy a shell
+/// stripes over and how many virtual servers it uses.  Shells of one
+/// federation may differ (a sparse polar shell can run a narrower stripe
+/// than a dense mega-shell); chunk `i` of a block homed on a shell goes
+/// to `layout[i % n_servers]` of *that shell's* layout.  Cross-shell
+/// evacuation between shells with identical configs preserves relative
+/// box offsets (the cheap path); between differing configs the
+/// federation manager re-stripes block by block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShellLayoutConfig {
+    pub strategy: Strategy,
+    pub n_servers: usize,
+}
+
+/// The hot-block replication policy.
+///
+/// Access counts accumulate per block; at each epoch boundary the
+/// federation manager replicates the `top_k` hottest blocks (ties broken
+/// by block hash, so the selection is deterministic) onto the cheapest
+/// live shell that does not already hold a copy — after which the
+/// block's copies span the two cheapest shells.  `top_k == 0` disables
+/// replication (the re-homing-only baseline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicationPolicy {
+    /// Replicate the K hottest blocks (0 = replication off).
+    pub top_k: usize,
+    /// Accesses a block needs before it is replica-eligible (keeps
+    /// one-shot scan traffic out of the replica set).
+    pub min_accesses: u64,
+}
+
+impl Default for ReplicationPolicy {
+    fn default() -> Self {
+        Self { top_k: 0, min_accesses: 2 }
+    }
+}
+
+impl ReplicationPolicy {
+    pub fn enabled(&self) -> bool {
+        self.top_k > 0
+    }
 }
 
 /// A shell's placement-relevant state at decision time.
@@ -120,6 +179,76 @@ impl PlacementPolicy {
     }
 }
 
+/// Indices of the two cheapest *live* candidates, cheapest first.
+/// Ties resolve to the lowest index; returns fewer than two when the
+/// federation is smaller or degraded (a dead shell is never a replica
+/// target).  This is the replica span of [`ReplicationPolicy`]: a
+/// replicated block's copies live on exactly these shells when both are
+/// healthy.
+pub fn cheapest_two(candidates: &[ShellCandidate], min_live_fraction: f64) -> Vec<usize> {
+    let mut live: Vec<usize> = (0..candidates.len())
+        .filter(|&i| candidates[i].live_fraction >= min_live_fraction)
+        .collect();
+    // stable selection: by (cost, index), so equal costs keep index order
+    live.sort_by(|&a, &b| {
+        candidates[a]
+            .cost_s
+            .partial_cmp(&candidates[b].cost_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    live.truncate(2);
+    live
+}
+
+/// The §3.7-style pre-placement predictor.
+///
+/// Extrapolates each shell's layout-box live fraction one rotation epoch
+/// ahead with a linear trend (`predicted = live + (live - prev_live)`,
+/// clamped to `[0, 1]`) and picks the cheapest shell whose *predicted*
+/// live fraction still clears the placement threshold — so a shell that
+/// is eligible today but visibly degrading is skipped before its fetches
+/// start breaking.  Falls back to the shell with the best predicted live
+/// fraction when no shell clears the threshold.  Deterministic: a pure
+/// function of its inputs, ties to the lowest index.
+pub fn predict_preplacement_shell(
+    candidates: &[ShellCandidate],
+    prev_live: &[f64],
+    min_live_fraction: f64,
+) -> Option<usize> {
+    assert_eq!(candidates.len(), prev_live.len(), "one trend point per shell");
+    if candidates.is_empty() {
+        return None;
+    }
+    let predicted: Vec<f64> = candidates
+        .iter()
+        .zip(prev_live)
+        .map(|(c, prev)| (2.0 * c.live_fraction - prev).clamp(0.0, 1.0))
+        .collect();
+    let mut best: Option<usize> = None;
+    for (i, c) in candidates.iter().enumerate() {
+        if predicted[i] < min_live_fraction {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => c.cost_s < candidates[b].cost_s,
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best.or_else(|| {
+        let mut b = 0;
+        for i in 1..predicted.len() {
+            if predicted[i] > predicted[b] {
+                b = i;
+            }
+        }
+        Some(b)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +297,72 @@ mod tests {
         assert_eq!(cheapest_index(&[0.3]), Some(0));
         assert_eq!(cheapest_index(&[0.3, 0.1, 0.2]), Some(1));
         assert_eq!(cheapest_index(&[0.2, 0.1, 0.1]), Some(1), "ties resolve low");
+    }
+
+    #[test]
+    fn cheapest_two_spans_the_two_cheapest_live_shells() {
+        let c = [
+            cand(0, 0.020, 1.0, 0),
+            cand(1, 0.017, 1.0, 0),
+            cand(2, 0.031, 1.0, 0),
+        ];
+        assert_eq!(cheapest_two(&c, 0.6), vec![1, 0], "cheapest first");
+        // a dead shell is never a replica target: the expensive polar
+        // shell steps in
+        let degraded = [
+            cand(0, 0.020, 0.1, 0),
+            cand(1, 0.017, 1.0, 0),
+            cand(2, 0.031, 1.0, 0),
+        ];
+        assert_eq!(cheapest_two(&degraded, 0.6), vec![1, 2]);
+        // a single live shell yields a single-slot span; none yields none
+        assert_eq!(cheapest_two(&[cand(0, 0.02, 1.0, 0)], 0.6), vec![0]);
+        assert_eq!(cheapest_two(&[cand(0, 0.02, 0.0, 0)], 0.6), Vec::<usize>::new());
+        // cost ties keep index order
+        let tied = [cand(0, 0.017, 1.0, 0), cand(1, 0.017, 1.0, 0), cand(2, 0.017, 1.0, 0)];
+        assert_eq!(cheapest_two(&tied, 0.6), vec![0, 1]);
+    }
+
+    #[test]
+    fn saturated_cheapest_pair_still_spills_for_placement() {
+        // replication span and placement spillover are independent: the
+        // span ignores byte budgets (a replica is worth hosting on a
+        // full shell), while placement spills off an over-budget shell
+        let p = PlacementPolicy { spill_budget_bytes: 1000, ..Default::default() };
+        let c = [
+            cand(0, 0.020, 1.0, 0),
+            cand(1, 0.017, 1.0, 2000),
+            cand(2, 0.031, 1.0, 0),
+        ];
+        assert_eq!(p.choose(&c), Some(0), "placement spills off the saturated primary");
+        assert_eq!(cheapest_two(&c, 0.6), vec![1, 0], "the span does not");
+    }
+
+    #[test]
+    fn predictor_is_deterministic_and_trend_aware() {
+        // stable federation: the cheapest shell is predicted to stay
+        // eligible, so it is picked — repeatably
+        let stable = [cand(0, 0.020, 1.0, 0), cand(1, 0.017, 1.0, 0)];
+        let pick = predict_preplacement_shell(&stable, &[1.0, 1.0], 0.6);
+        assert_eq!(pick, Some(1));
+        assert_eq!(pick, predict_preplacement_shell(&stable, &[1.0, 1.0], 0.6));
+        // the cheap shell is still eligible *today* (0.7 >= 0.6) but the
+        // trend 1.0 -> 0.7 extrapolates to 0.4 next epoch: the predictor
+        // moves pre-placement off it before fetches break
+        let degrading = [cand(0, 0.020, 1.0, 0), cand(1, 0.017, 0.7, 0)];
+        assert_eq!(predict_preplacement_shell(&degrading, &[1.0, 1.0], 0.6), Some(0));
+        // everything predicted dead: best-effort falls back to the best
+        // predicted live fraction, ties to the lowest index
+        let grim = [cand(0, 0.020, 0.3, 0), cand(1, 0.017, 0.2, 0)];
+        assert_eq!(predict_preplacement_shell(&grim, &[0.3, 0.2], 0.6), Some(0));
+        assert_eq!(predict_preplacement_shell(&[], &[], 0.6), None);
+    }
+
+    #[test]
+    fn replication_policy_default_is_off() {
+        let r = ReplicationPolicy::default();
+        assert!(!r.enabled());
+        assert!(ReplicationPolicy { top_k: 4, min_accesses: 2 }.enabled());
     }
 
     #[test]

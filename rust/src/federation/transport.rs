@@ -158,6 +158,21 @@ impl FederatedTransport {
         self.checked_link(dest.shell)?.faults.evict_block(dest.sat, block, 0)
     }
 
+    /// Account `chunks`/`bytes` of cross-shell payload that rode the
+    /// inter-shell link from `from` to `to`.  Replication, pre-placement
+    /// and re-striping evacuation use this: their chunk Sets ride the
+    /// target shell's scheduler like any other fan-out, and this charges
+    /// the inter-shell leg on top.
+    pub fn account_inter_shell(&self, from: ShellId, to: ShellId, chunks: u64, bytes: u64) {
+        if chunks == 0 {
+            return;
+        }
+        self.stats.inter_shell_chunks.fetch_add(chunks, Ordering::Relaxed);
+        self.stats.inter_shell_bytes.fetch_add(bytes, Ordering::Relaxed);
+        let s = self.constellation.transfer_latency_s(from, to, bytes as usize);
+        self.stats.inter_shell_latency_ns.fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+    }
+
     /// Evacuate one satellite's entire chunk store across shells: drain
     /// the source node and re-Set everything (original keys and headers)
     /// on the target satellite of the other shell, over the inter-shell
@@ -186,12 +201,7 @@ impl FederatedTransport {
                 bytes += lens[o.tag as usize] as u64;
             }
         }
-        if moved > 0 {
-            self.stats.inter_shell_chunks.fetch_add(moved as u64, Ordering::Relaxed);
-            self.stats.inter_shell_bytes.fetch_add(bytes, Ordering::Relaxed);
-            let s = self.constellation.transfer_latency_s(from.shell, to.shell, bytes as usize);
-            self.stats.inter_shell_latency_ns.fetch_add((s * 1e9) as u64, Ordering::Relaxed);
-        }
+        self.account_inter_shell(from.shell, to.shell, moved as u64, bytes);
         (moved, bytes)
     }
 }

@@ -4,6 +4,12 @@
 //! inference, reproducing Sandholm et al., *"SkyMemory: A LEO Edge Cache for
 //! Transformer Inference Optimization and Scale Out"* (2025).
 //!
+//! `ARCHITECTURE.md` (repository root) is the orientation document: the
+//! layer map (kvc → net → federation → sim/repro), the timing-plane vs
+//! data-plane split around [`net::sched`], and how a scenario run
+//! composes the stack.  `docs/METRICS.md` documents every metrics-JSON
+//! key and `docs/CLI.md` the `skymemory` command surface.
+//!
 //! The crate is organized bottom-up:
 //!
 //! * [`constellation`] — orbital geometry (paper eqs. 1–4), the +GRID
@@ -21,14 +27,17 @@
 //!   link scheduler (timing plane) every chunk fan-out rides: per-link
 //!   in-flight windows, FIFO queueing, deterministic
 //!   `(virtual_time, tag)` event ordering, zero OS threads.
-//! * [`federation`] — multi-shell federation: named [`federation::Shell`]s
+//! * [`federation`] — N-shell federation: named [`federation::Shell`]s
 //!   at their own altitudes, shell-qualified addresses
 //!   ([`federation::FedSatId`]), inter-shell links (ground relay and
-//!   nearest-neighbour cross-shell hop), cost-based shell placement with
-//!   spillover ([`federation::placement`]), the shell-routing
-//!   [`federation::transport::FederatedTransport`], and the
-//!   [`federation::manager::FederatedKvcManager`] with inter-shell
-//!   handover of hot chunks under whole-shell degradation.
+//!   nearest-neighbour cross-shell hop), per-shell layout configs and
+//!   cost-based placement with spillover ([`federation::placement`]),
+//!   hot-block replication across the two cheapest shells with
+//!   replica-racing reads, the §3.7-style pre-placement predictor, the
+//!   shell-routing [`federation::transport::FederatedTransport`], and
+//!   the [`federation::manager::FederatedKvcManager`] with inter-shell
+//!   handover (offset-preserving or re-striping) under whole- and
+//!   partial-shell degradation.
 //! * [`satellite`] — the satellite node substrate (the paper's cFS stand-in):
 //!   chunk store with LRU, ISL forwarding, migration, eviction gossip.
 //! * [`sim`] — the §4 worst-case-latency simulator (Figure 16), workload
@@ -37,10 +46,12 @@
 //!   end-to-end runs — the paper's 19x5 testbed, a Starlink-like 72x22
 //!   mega-shell, a Kuiper-like 34x34 shell, the `mega-shell`
 //!   [`net::sched`] stress shape (>1000 in-flight chunks per block), and
-//!   the federated `federated-dual-shell` scenario — sweeping rotation
-//!   epochs with migration, eviction pressure and injected failures
-//!   (satellite loss, ISL outage, ground-station handover, whole-shell
-//!   degradation via [`net::faults::FaultyTransport`]), emitting
+//!   the federated `federated-dual-shell` and `federated-tri-shell`
+//!   scenarios — sweeping rotation epochs with migration, eviction
+//!   pressure and injected failures (satellite loss, ISL outage,
+//!   ground-station handover, whole-shell degradation, and correlated
+//!   plans: whole-plane loss, solar-storm bands, fractional box kills
+//!   via [`net::faults::FaultyTransport`]), emitting
 //!   byte-stable metrics JSON with per-link scheduler stats; plus the
 //!   [`sim::diff`] scenario-diff tool.
 //! * [`runtime`] — PJRT execution of the AOT artifacts (L2/L1 outputs):

@@ -8,15 +8,18 @@
 //! skymemory satellite  [--torus 5x19] [--planes 0..5] [--budget-mb 64]
 //! skymemory simulate   [--strategy ...] [--altitude 550] [--servers 81]
 //!                      [--kvc-mb 21] [--proc-ms 2]
-//! skymemory scenario   [--name paper-19x5|starlink-shell|kuiper-shell|
-//!                              mega-shell|federated-dual-shell] [--seed 42]
+//! skymemory scenario   [--name NAME] [--seed 42]      (see scenario --list)
 //! skymemory scenario   --list                     (names + descriptions)
 //! skymemory scenario   --diff <a.json> <b.json>   (nonzero exit on regression)
 //! skymemory sched      [--name mega-shell] [--seed 42] [--windows 1,8,64]
-//! skymemory federate   [--seed 42] [--baseline]
+//! skymemory federate   [--shells 2|3 | --name NAME] [--seed 42]
+//!                      [--replicate K] [--baseline]
 //! skymemory repro      [--outdir results]
 //! ```
 //!
+//! `scenario`, `sched` and `federate` answer `--help` with their full
+//! flag/default/exit-code contract; `docs/CLI.md` is the long-form
+//! reference and `docs/METRICS.md` documents every metrics-JSON key.
 //! (CLI parsing is hand-rolled: the offline build has no clap.)
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -217,7 +220,81 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `skymemory scenario --help`.
+const SCENARIO_HELP: &str = "\
+usage: skymemory scenario [--name NAME] [--seed N]
+       skymemory scenario --list
+       skymemory scenario --diff <a.json> <b.json>
+
+Run one (or every) built-in scenario end to end and print one line of
+byte-stable metrics JSON per run (docs/METRICS.md documents every key).
+
+flags:
+  --name NAME   run a single scenario, single-shell or federated; see
+                --list for the registry (default: every built-in)
+  --seed N      scenario seed (default 42)
+  --list        print scenario names and one-line summaries, then exit
+  --diff A B    compare two metrics files: per-metric deltas, '!' marks
+                regressions (hit rates falling, latencies/failure
+                counters rising, tracked metrics or scenarios dropped)
+  --help        this text
+
+exit codes: 0 success; 1 --diff found regressions, or an error
+(unknown scenario, unreadable file); 2 usage error.
+";
+
+/// `skymemory sched --help`.
+const SCHED_HELP: &str = "\
+usage: skymemory sched [--name NAME] [--seed N] [--windows A,B,C]
+
+Sweep the net::sched per-link in-flight window over one single-shell
+scenario; prints one metrics-JSON line plus a '#' summary line per
+window (queueing, utilization, tail latency).
+
+flags:
+  --name NAME      single-shell scenario to sweep (default mega-shell)
+  --seed N         scenario seed (default 42)
+  --windows LIST   comma-separated in-flight windows, each >= 1
+                   (default 1,8,64)
+  --help           this text
+
+exit codes: 0 success; 1 error (unknown or federated scenario, bad
+--windows entry); 2 usage error.
+";
+
+/// `skymemory federate --help`.
+const FEDERATE_HELP: &str = "\
+usage: skymemory federate [--shells 2|3 | --name NAME] [--seed N]
+                          [--replicate K] [--baseline]
+
+Run a federated scenario end to end and print its metrics JSON
+(docs/METRICS.md documents every key, including the replication,
+pre-placement and correlated-failure counters).
+
+flags:
+  --shells N     built-in federation size: 2 = federated-dual-shell
+                 (default), 3 = federated-tri-shell (replication +
+                 pre-placement under the correlated-failure plan)
+  --name NAME    run a named federated scenario instead of --shells
+  --replicate K  override the replication policy: the top-K hottest
+                 blocks keep live replicas spanning the two cheapest
+                 shells (0 disables replication and pre-placement)
+  --seed N       scenario seed (default 42)
+  --baseline     also run and print the matching baseline, then gate:
+                 a replicated spec must strictly out-hit the
+                 re-homing-only federation; a re-homing-only spec must
+                 strictly out-hit its single primary shell
+  --help         this text
+
+exit codes: 0 success; 1 the --baseline gate failed (the federation did
+not strictly beat its baseline) or an error occurred; 2 usage error.
+";
+
 fn cmd_scenario(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{SCENARIO_HELP}");
+        return Ok(());
+    }
     if args.has("list") {
         for (name, desc) in skymemory::sim::scenario::BUILTIN_SUMMARIES {
             println!("{name:<22} {desc}");
@@ -258,8 +335,15 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             for spec in skymemory::sim::scenario::ScenarioSpec::builtin(seed) {
                 println!("{}", skymemory::sim::harness::run_scenario(&spec).to_json_string());
             }
-            let fed = skymemory::sim::scenario::FederatedScenarioSpec::federated_dual_shell(seed);
-            println!("{}", skymemory::sim::harness::run_federated_scenario(&fed).to_json_string());
+            for fed in [
+                skymemory::sim::scenario::FederatedScenarioSpec::federated_dual_shell(seed),
+                skymemory::sim::scenario::FederatedScenarioSpec::federated_tri_shell(seed),
+            ] {
+                println!(
+                    "{}",
+                    skymemory::sim::harness::run_federated_scenario(&fed).to_json_string()
+                );
+            }
         }
     }
     Ok(())
@@ -269,6 +353,10 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 /// and print a metrics-JSON line plus a one-line summary per window —
 /// the pipelining/queueing trade the event scheduler exposes.
 fn cmd_sched(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{SCHED_HELP}");
+        return Ok(());
+    }
     let seed: u64 = args.get_or("seed", 42u64)?;
     let name = args.get("name").unwrap_or("mega-shell");
     let windows: Vec<usize> = args
@@ -307,21 +395,53 @@ fn cmd_sched(args: &Args) -> Result<()> {
 }
 
 fn cmd_federate(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{FEDERATE_HELP}");
+        return Ok(());
+    }
+    use skymemory::sim::scenario::FederatedScenarioSpec;
     let seed: u64 = args.get_or("seed", 42u64)?;
-    let spec = skymemory::sim::scenario::FederatedScenarioSpec::federated_dual_shell(seed);
+    let mut spec = match (args.get("name"), args.get_or("shells", 2usize)?) {
+        (Some(name), _) => FederatedScenarioSpec::by_name(name, seed).ok_or_else(|| {
+            anyhow!("unknown federated scenario {name} (see `skymemory scenario --list`)")
+        })?,
+        (None, 2) => FederatedScenarioSpec::federated_dual_shell(seed),
+        (None, 3) => FederatedScenarioSpec::federated_tri_shell(seed),
+        (None, n) => bail!("no built-in {n}-shell federation (--shells 2 or 3, or use --name)"),
+    };
+    if let Some(k) = args.get("replicate") {
+        let k: usize =
+            k.parse().map_err(|_| anyhow!("bad value for --replicate: {k} (need >= 0)"))?;
+        spec.replicate_top_k = k;
+        if k == 0 {
+            spec.preplace = false; // the predictor rides the hot set
+        }
+    }
+    spec.validate();
     let report = skymemory::sim::harness::run_federated_scenario(&spec);
     println!("{}", report.to_json_string());
     if args.has("baseline") {
-        let base = skymemory::sim::harness::run_federated_scenario(&spec.baseline_single_shell());
+        // acceptance gates: a replicated federation must strictly
+        // out-hit the same federation with re-homing only; a re-homing
+        // federation must strictly out-hit its single primary shell
+        let (base_spec, kind) = if spec.replicate_top_k > 0 {
+            (spec.rehoming_baseline(), "re-homing-only")
+        } else {
+            (spec.baseline_single_shell(), "single-shell")
+        };
+        let base = skymemory::sim::harness::run_federated_scenario(&base_spec);
         println!("{}", base.to_json_string());
         println!(
-            "# federation hit rate {:.3} vs single-shell baseline {:.3} ({} handovers, {} inter-shell bytes)",
-            report.block_hit_rate, base.block_hit_rate, report.handovers, report.inter_shell_bytes
+            "# federation hit rate {:.3} vs {kind} baseline {:.3} ({} handovers, {} replicas, {} pre-placed, {} inter-shell bytes)",
+            report.block_hit_rate,
+            base.block_hit_rate,
+            report.handovers,
+            report.replicated_blocks,
+            report.preplaced_blocks,
+            report.inter_shell_bytes
         );
-        // acceptance gate: surviving the primary-shell kill is the whole
-        // point — a federation that does not out-hit the baseline failed
         if report.block_hit_rate <= base.block_hit_rate {
-            eprintln!("# FAIL: federation does not beat the no-federation baseline");
+            eprintln!("# FAIL: federation does not beat the {kind} baseline");
             std::process::exit(1);
         }
     }

@@ -245,6 +245,23 @@ impl NetScheduler {
     /// outcomes, updating the cumulative stats.  Tags must be unique
     /// within the batch.
     pub fn run_batch(&self, transfers: Vec<Transfer>) -> BatchReport {
+        let report = self.run_batch_untimed(transfers);
+        // wall-clock emulation (serving mode): sleep the *pipelined*
+        // makespan once per batch, not the serial per-request sum
+        if let Some(lm) = self.transport.link_model() {
+            if lm.sleep_scale > 0.0 && report.makespan_ns > 0 {
+                let ns = (report.makespan_ns as f64 * lm.sleep_scale) as u64;
+                std::thread::sleep(std::time::Duration::from_nanos(ns));
+            }
+        }
+        report
+    }
+
+    /// [`NetScheduler::run_batch`] without the wall-clock emulation
+    /// sleep.  Racing callers use this so concurrent arms sleep once for
+    /// the *slowest* arm ([`race_batches`]) instead of summing sleeps;
+    /// virtual-time accounting is identical either way.
+    pub fn run_batch_untimed(&self, transfers: Vec<Transfer>) -> BatchReport {
         let link_model = self.transport.link_model();
         let mut engine = Engine {
             transport: self.transport.as_ref(),
@@ -271,16 +288,63 @@ impl NetScheduler {
         let batch_links: BTreeMap<LinkKey, u64> =
             engine.links.iter().map(|(k, l)| (*k, l.transfers)).collect();
         self.stats.record_links(&batch_links);
-        // wall-clock emulation (serving mode): sleep the *pipelined*
-        // makespan once per batch, not the serial per-request sum
-        if let Some(lm) = link_model {
-            if lm.sleep_scale > 0.0 && report.makespan_ns > 0 {
-                let ns = (report.makespan_ns as f64 * lm.sleep_scale) as u64;
-                std::thread::sleep(std::time::Duration::from_nanos(ns));
-            }
-        }
         report
     }
+}
+
+/// Outcome of racing one logical transfer set over several schedulers.
+#[derive(Debug)]
+pub struct RaceOutcome {
+    /// Index of the fastest arm: the batch with the smallest makespan,
+    /// ties to the lowest index.
+    pub fastest: usize,
+    /// Per-arm batch reports, in submission order.
+    pub reports: Vec<BatchReport>,
+}
+
+/// Race the same logical chunk set across several schedulers (replica
+/// arms of a federated Get: each arm addresses a different shell's copy
+/// of the block, so each arm carries its own transfers).
+///
+/// Every arm's batch really runs — the data plane of the losing arms
+/// executes too, and their traffic is paid and accounted on their own
+/// links — which is exactly what issuing a replica race over the air
+/// would cost.  Arms run sequentially in index order, so the outcome is
+/// a pure function of the arms: each batch is itself deterministic, and
+/// the winner is the smallest `makespan_ns` with ties resolved to the
+/// lowest arm index.
+///
+/// Wall-clock emulation (`sleep_scale > 0`): the arms are concurrent,
+/// so the race sleeps once for the *slowest* arm's scaled makespan
+/// instead of letting each batch sleep its own (a race must never be
+/// slower than its slowest arm).
+///
+/// The caller decides what "won" means for its payloads (e.g. the
+/// fastest arm whose chunks all arrived); `fastest` is purely the
+/// timing-plane verdict.
+pub fn race_batches(arms: Vec<(&NetScheduler, Vec<Transfer>)>) -> RaceOutcome {
+    assert!(!arms.is_empty(), "a race needs at least one arm");
+    let mut reports = Vec::with_capacity(arms.len());
+    let mut sleep_ns = 0u64;
+    for (sched, transfers) in arms {
+        let report = sched.run_batch_untimed(transfers);
+        if let Some(lm) = sched.transport().link_model() {
+            if lm.sleep_scale > 0.0 {
+                sleep_ns = sleep_ns.max((report.makespan_ns as f64 * lm.sleep_scale) as u64);
+            }
+        }
+        reports.push(report);
+    }
+    if sleep_ns > 0 {
+        std::thread::sleep(std::time::Duration::from_nanos(sleep_ns));
+    }
+    let mut fastest = 0;
+    for (i, r) in reports.iter().enumerate().skip(1) {
+        if r.makespan_ns < reports[fastest].makespan_ns {
+            fastest = i;
+        }
+    }
+    RaceOutcome { fastest, reports }
 }
 
 // ======================================================================
@@ -682,6 +746,30 @@ mod tests {
         assert!(snap.virtual_ns > 0);
         assert!(snap.busy_ns > 0);
         assert_eq!(snap.peak_in_flight, 2);
+    }
+
+    #[test]
+    fn race_picks_the_faster_arm_and_runs_both() {
+        // same transfer set over a fast and a slow stack: the fast arm
+        // wins, but the slow arm's data plane ran too (both stores land)
+        let dest = SatId::new(3, 6);
+        let (fast_fleet, fast) = stack(Some(1e9));
+        let (slow_fleet, slow) = stack(Some(1e6));
+        let s_fast = sched(&fast, 4);
+        let s_slow = sched(&slow, 4);
+        let mk = || vec![set(0, dest, 8, 0, 1000), set(1, dest, 8, 1, 1000)];
+        let out = race_batches(vec![(&s_slow, mk()), (&s_fast, mk())]);
+        assert_eq!(out.fastest, 1, "the 1 Gbit/s arm must win");
+        assert_eq!(out.reports.len(), 2);
+        assert!(out.reports[0].makespan_ns > out.reports[1].makespan_ns);
+        assert_eq!(fast_fleet.total_chunks(), 2, "the winner stored");
+        assert_eq!(slow_fleet.total_chunks(), 2, "the loser's data plane ran too");
+        // equal arms: ties resolve to the lowest index
+        let (_f3, a) = stack(Some(1e8));
+        let (_f4, b) = stack(Some(1e8));
+        let (sa, sb) = (sched(&a, 4), sched(&b, 4));
+        let tie = race_batches(vec![(&sa, mk()), (&sb, mk())]);
+        assert_eq!(tie.fastest, 0, "ties must resolve to the first arm");
     }
 
     #[test]

@@ -153,17 +153,22 @@ pub fn fig16_summary() -> String {
 
 /// The scenario-harness reports: every built-in scenario (the paper's
 /// 19x5 testbed, the Starlink- and Kuiper-like mega shells, the
-/// net::sched mega-shell stress, and the federated dual-shell run) at a
-/// fixed seed, one metrics-JSON line each.  Deterministic: re-running
-/// produces byte-identical output.
+/// net::sched mega-shell stress, and the federated dual- and tri-shell
+/// runs) at a fixed seed, one metrics-JSON line each.  Deterministic:
+/// re-running produces byte-identical output.
 pub fn scenarios() -> String {
     let mut out = String::new();
     for spec in crate::sim::scenario::ScenarioSpec::builtin(42) {
         let report = crate::sim::harness::run_scenario(&spec);
         let _ = writeln!(out, "{}", report.to_json_string());
     }
-    let fed = crate::sim::scenario::FederatedScenarioSpec::federated_dual_shell(42);
-    let _ = writeln!(out, "{}", crate::sim::harness::run_federated_scenario(&fed).to_json_string());
+    for fed in [
+        crate::sim::scenario::FederatedScenarioSpec::federated_dual_shell(42),
+        crate::sim::scenario::FederatedScenarioSpec::federated_tri_shell(42),
+    ] {
+        let _ =
+            writeln!(out, "{}", crate::sim::harness::run_federated_scenario(&fed).to_json_string());
+    }
     out
 }
 
@@ -269,13 +274,14 @@ mod tests {
     #[test]
     fn scenarios_artifact_has_one_line_per_builtin() {
         let text = scenarios();
-        assert_eq!(text.trim().lines().count(), 5);
+        assert_eq!(text.trim().lines().count(), 6);
         for name in [
             "paper-19x5",
             "starlink-shell",
             "kuiper-shell",
             "mega-shell",
             "federated-dual-shell",
+            "federated-tri-shell",
         ] {
             assert!(text.contains(name), "{name} missing");
         }

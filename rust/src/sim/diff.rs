@@ -9,6 +9,8 @@
 //! failure counters rising; everything else is reported as a neutral
 //! delta.  `skymemory scenario --diff a.json b.json` exits nonzero when
 //! regressions are found, so the tool gates CI runs across commits.
+//! `docs/METRICS.md` documents the file format, every metric key and a
+//! worked `--diff` example.
 
 use crate::util::json::Json;
 use anyhow::{bail, Result};
@@ -175,9 +177,19 @@ fn parse_metrics(text: &str) -> Result<Vec<(String, Vec<(String, f64)>)>> {
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?;
+        let j = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!(
+                "line {}: {e} (metrics files hold one JSON object per line, as emitted by \
+                 `skymemory scenario`; docs/METRICS.md documents the format and every key)",
+                i + 1
+            )
+        })?;
         if !matches!(j, Json::Obj(_)) {
-            bail!("line {}: expected a JSON object", i + 1);
+            bail!(
+                "line {}: expected a JSON object (one scenario report per line; see \
+                 docs/METRICS.md)",
+                i + 1
+            );
         }
         let base = j
             .get("name")

@@ -21,6 +21,7 @@
 use crate::constellation::los::LosGrid;
 use crate::constellation::topology::{SatId, Torus};
 use crate::federation::manager::{EvacSummary, FederatedKvcManager};
+use crate::federation::placement::ShellLayoutConfig;
 use crate::federation::transport::{FederatedTransport, ShellLink};
 use crate::federation::{Shell, ShellId};
 use crate::kvc::block::{block_hashes, BlockHash};
@@ -32,7 +33,9 @@ use crate::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
 use crate::satellite::fleet::Fleet;
 use crate::sim::config::SimConfig;
 use crate::sim::latency::worst_case_latency;
-use crate::sim::scenario::{FailurePlan, FederatedScenarioSpec, ScenarioSpec, ShellSpec};
+use crate::sim::scenario::{
+    CorrelatedFailure, FailurePlan, FederatedScenarioSpec, ScenarioSpec, ShellSpec,
+};
 use crate::sim::workload;
 use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::XorShift64;
@@ -256,6 +259,71 @@ fn inject_failures_epoch(
     (losses, outages, handovers)
 }
 
+/// Apply every correlated failure scheduled for `epoch` against the
+/// federation: the affected satellites' stores are wiped and their
+/// traffic blackholed (permanent, like random satellite losses).
+/// Coordinates resolve against the target shell's *current* ground-view
+/// centre.  Returns `(plane_losses, solar_storms, box_kills,
+/// satellites_killed)` for this epoch.
+fn inject_correlated_epoch(
+    transport: &FederatedTransport,
+    layouts: &[ShellLayoutConfig],
+    events: &[CorrelatedFailure],
+    epoch: u64,
+) -> (u64, u64, u64, u64) {
+    fn kill(link: &ShellLink, sat: SatId) -> u64 {
+        if link.faults.is_satellite_failed(sat) {
+            return 0;
+        }
+        link.fleet.node(sat).clear();
+        link.faults.fail_satellite(sat);
+        1
+    }
+    let (mut planes, mut storms, mut boxes, mut killed) = (0u64, 0u64, 0u64, 0u64);
+    for ev in events.iter().filter(|e| e.epoch() == epoch) {
+        let shell = ev.shell() as ShellId;
+        let link = transport.link(shell);
+        let torus = link.shell.torus;
+        let center = transport.closest(shell);
+        match ev {
+            CorrelatedFailure::PlaneLoss { plane_offset, .. } => {
+                planes += 1;
+                let plane = torus.offset(center, *plane_offset, 0).plane;
+                for slot in 0..torus.sats_per_plane {
+                    killed += kill(link, SatId::new(plane, slot as u16));
+                }
+            }
+            CorrelatedFailure::SolarStorm { half_width, .. } => {
+                storms += 1;
+                let hw = *half_width as i32;
+                for p in 0..torus.planes {
+                    let band_center = SatId::new(p as u16, center.slot);
+                    for ds in -hw..=hw {
+                        killed += kill(link, torus.offset(band_center, 0, ds));
+                    }
+                }
+            }
+            CorrelatedFailure::BoxKill { fraction, .. } => {
+                boxes += 1;
+                let half =
+                    (crate::mapping::box_width(layouts[ev.shell()].n_servers) as i32 - 1) / 2;
+                let total = ((2 * half + 1) * (2 * half + 1)) as f64;
+                let to_kill = (fraction * total).ceil() as usize;
+                let mut cells = Vec::new();
+                for dp in -half..=half {
+                    for ds in -half..=half {
+                        cells.push(torus.offset(center, dp, ds));
+                    }
+                }
+                for sat in cells.into_iter().take(to_kill) {
+                    killed += kill(link, sat);
+                }
+            }
+        }
+    }
+    (planes, storms, boxes, killed)
+}
+
 fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
@@ -477,10 +545,17 @@ pub struct FederatedShellReport {
     /// Blocks homed on this shell by placement (stores only; handover
     /// re-homing is reported federation-wide).
     pub blocks_stored: u64,
-    /// Block fetches attempted against / served by this shell.
+    /// Fetch arms raced against this shell (every copy fetch counts).
     pub fetch_attempts: u64,
+    /// Fetches this shell served (fastest complete copy).
     pub blocks_hit: u64,
     pub hit_rate: f64,
+    /// Fetches this shell served from a replica / pre-placed copy.
+    pub replica_hits: u64,
+    /// Replicas created onto this shell by the replication policy.
+    pub replicas_hosted: u64,
+    /// Next-rotation copies pre-placed onto this shell by the predictor.
+    pub preplaced_hosted: u64,
     pub placed_bytes: u64,
     pub isl_hops: u64,
     pub isl_bytes: u64,
@@ -503,6 +578,9 @@ impl FederatedShellReport {
             ("fetch_attempts", n(self.fetch_attempts as f64)),
             ("blocks_hit", n(self.blocks_hit as f64)),
             ("hit_rate", n(self.hit_rate)),
+            ("replica_hits", n(self.replica_hits as f64)),
+            ("replicas_hosted", n(self.replicas_hosted as f64)),
+            ("preplaced_hosted", n(self.preplaced_hosted as f64)),
             ("placed_bytes", n(self.placed_bytes as f64)),
             ("isl_hops", n(self.isl_hops as f64)),
             ("isl_bytes", n(self.isl_bytes as f64)),
@@ -533,10 +611,24 @@ pub struct FederatedScenarioReport {
     pub failed_writes: u64,
     /// Blocks placed off the cheapest shell (saturation/failure spill).
     pub spillovers: u64,
-    /// Proactive + reactive inter-shell re-homings.
+    /// Proactive + reactive inter-shell re-homings (promotions
+    /// included).
     pub handovers: u64,
     pub proactive_handover_blocks: u64,
     pub reactive_rehomed_blocks: u64,
+    /// Replicas created (top-K hot blocks onto the second-cheapest
+    /// shell).
+    pub replicated_blocks: u64,
+    /// Fetches that raced two or more copies.
+    pub replica_races: u64,
+    /// Races won (served) by a non-home copy.
+    pub replica_race_wins: u64,
+    /// Broken primaries healed by promoting a surviving copy.
+    pub replica_promotions: u64,
+    /// Next-rotation copies pre-placed by the §3.7 predictor.
+    pub preplaced_blocks: u64,
+    /// Fetches served by a pre-placed copy.
+    pub preplace_hits: u64,
     /// Chunks / payload bytes carried over the inter-shell links.
     pub inter_shell_chunks: u64,
     pub inter_shell_bytes: u64,
@@ -550,6 +642,13 @@ pub struct FederatedScenarioReport {
     pub ground_handovers: u64,
     /// Satellites of the primary's layout-box kill band.
     pub box_killed_sats: u64,
+    /// Correlated-failure events applied
+    /// ([`crate::sim::scenario::CorrelatedFailure`]).
+    pub plane_losses: u64,
+    pub solar_storms: u64,
+    pub box_kills: u64,
+    /// Satellites killed by correlated failures.
+    pub correlated_killed_sats: u64,
     pub blackholed_requests: u64,
     pub net_mean_ms: f64,
     pub net_p50_ms: f64,
@@ -576,6 +675,12 @@ impl FederatedScenarioReport {
             ("handovers", n(self.handovers as f64)),
             ("proactive_handover_blocks", n(self.proactive_handover_blocks as f64)),
             ("reactive_rehomed_blocks", n(self.reactive_rehomed_blocks as f64)),
+            ("replicated_blocks", n(self.replicated_blocks as f64)),
+            ("replica_races", n(self.replica_races as f64)),
+            ("replica_race_wins", n(self.replica_race_wins as f64)),
+            ("replica_promotions", n(self.replica_promotions as f64)),
+            ("preplaced_blocks", n(self.preplaced_blocks as f64)),
+            ("preplace_hits", n(self.preplace_hits as f64)),
             ("inter_shell_chunks", n(self.inter_shell_chunks as f64)),
             ("inter_shell_bytes", n(self.inter_shell_bytes as f64)),
             ("broken_blocks", n(self.broken_blocks as f64)),
@@ -585,6 +690,10 @@ impl FederatedScenarioReport {
             ("isl_outages", n(self.isl_outages as f64)),
             ("ground_handovers", n(self.ground_handovers as f64)),
             ("box_killed_sats", n(self.box_killed_sats as f64)),
+            ("plane_losses", n(self.plane_losses as f64)),
+            ("solar_storms", n(self.solar_storms as f64)),
+            ("box_kills", n(self.box_kills as f64)),
+            ("correlated_killed_sats", n(self.correlated_killed_sats as f64)),
             ("blackholed_requests", n(self.blackholed_requests as f64)),
             ("net_mean_ms", n(self.net_mean_ms)),
             ("net_p50_ms", n(self.net_p50_ms)),
@@ -600,15 +709,16 @@ impl FederatedScenarioReport {
     }
 }
 
-/// The §4 closed-form worst case for one shell of a federated scenario.
+/// The §4 closed-form worst case for one shell of a federated scenario,
+/// using the shell's *own* strategy and stripe width.
 fn fed_shell_analytic(spec: &FederatedScenarioSpec, ss: &ShellSpec) -> f64 {
     let blocks_per_prompt = (spec.workload.context_chars / spec.block_tokens).max(1);
     analytic_shape_worst_case_s(
-        spec.strategy,
+        ss.strategy.unwrap_or(spec.strategy),
         ss.altitude_km,
         ss.planes,
         ss.sats_per_plane,
-        spec.n_servers,
+        ss.n_servers.unwrap_or(spec.n_servers),
         spec.quantizer.encoded_len(spec.kv_values_per_block) * blocks_per_prompt,
         spec.chunk_size,
     )
@@ -645,7 +755,15 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
         .map(|(i, ss)| build_shell_link(i as ShellId, ss, spec))
         .collect();
     let transport = Arc::new(FederatedTransport::new(links));
-    let manager = FederatedKvcManager::new(spec.kvc_config(), transport.clone(), spec.placement());
+    let shell_layouts = spec.shell_layouts();
+    let manager = FederatedKvcManager::new_with(
+        spec.kvc_config(),
+        transport.clone(),
+        spec.placement(),
+        spec.replication(),
+        spec.preplace,
+        shell_layouts.clone(),
+    );
     let primary = manager.primary_shell();
     debug_assert_eq!(primary as usize, spec.primary_shell_index());
 
@@ -661,10 +779,14 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
     let mut isl_outages = 0u64;
     let mut ground_handovers = 0u64;
     let mut box_killed_sats = 0u64;
+    let mut plane_losses = 0u64;
+    let mut solar_storms = 0u64;
+    let mut box_kills = 0u64;
+    let mut correlated_killed_sats = 0u64;
     let mut request_net_ns: Vec<u64> = Vec::with_capacity(items.len());
     // (heal_at_epoch, a, b) for active ISL outages on the primary shell
     let mut active_outages: Vec<(u64, SatId, SatId)> = Vec::new();
-    let half = (box_width(spec.n_servers) as i32 - 1) / 2;
+    let half = (box_width(shell_layouts[primary as usize].n_servers) as i32 - 1) / 2;
 
     for epoch in 0..spec.epochs {
         // --- random failures on the primary shell (epoch 0 stays clean) -
@@ -683,6 +805,16 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
             sat_losses += l;
             isl_outages += o;
             ground_handovers += h;
+        }
+
+        // --- scheduled correlated failures: no pre-announced evacuation -
+        if !spec.correlated.is_empty() {
+            let (p, s, b, k) =
+                inject_correlated_epoch(&transport, &shell_layouts, &spec.correlated, epoch);
+            plane_losses += p;
+            solar_storms += s;
+            box_kills += b;
+            correlated_killed_sats += k;
         }
 
         // --- scheduled whole-box kill: evacuate first, then go dark -----
@@ -738,6 +870,11 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
             request_net_ns.push(after_ns.saturating_sub(before_ns));
         }
 
+        // --- epoch boundary: replicate the hot set across the cheapest
+        // pair and run the §3.7 pre-placement predictor (no-ops for
+        // re-homing-only specs), before the rotation handover ----------
+        manager.end_of_epoch(epoch);
+
         // --- rotate every shell: §3.4 migration, then the views move ----
         for sid in 0..spec.shells.len() {
             let sid = sid as ShellId;
@@ -790,6 +927,9 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
                 } else {
                     hits as f64 / fetch_attempts as f64
                 },
+                replica_hits: counters.replica_hits.load(Ordering::Relaxed),
+                replicas_hosted: counters.replicas_hosted.load(Ordering::Relaxed),
+                preplaced_hosted: counters.preplaced_hosted.load(Ordering::Relaxed),
                 placed_bytes: counters.placed_bytes.load(Ordering::Relaxed),
                 isl_hops: link.inproc.stats().isl_hops.load(Ordering::Relaxed),
                 isl_bytes: link.inproc.stats().isl_bytes.load(Ordering::Relaxed),
@@ -804,6 +944,7 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
 
     let proactive = manager.stats.proactive_handover_blocks.load(Ordering::Relaxed);
     let reactive = manager.stats.reactive_rehomed_blocks.load(Ordering::Relaxed);
+    let promotions = manager.stats.replica_promotions.load(Ordering::Relaxed);
     FederatedScenarioReport {
         name: spec.name.clone(),
         seed: spec.seed,
@@ -821,9 +962,15 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
         },
         failed_writes,
         spillovers: manager.stats.spillovers.load(Ordering::Relaxed),
-        handovers: proactive + reactive,
+        handovers: proactive + reactive + promotions,
         proactive_handover_blocks: proactive,
         reactive_rehomed_blocks: reactive,
+        replicated_blocks: manager.stats.replicated_blocks.load(Ordering::Relaxed),
+        replica_races: manager.stats.replica_races.load(Ordering::Relaxed),
+        replica_race_wins: manager.stats.replica_race_wins.load(Ordering::Relaxed),
+        replica_promotions: promotions,
+        preplaced_blocks: manager.stats.preplaced_blocks.load(Ordering::Relaxed),
+        preplace_hits: manager.stats.preplace_hits.load(Ordering::Relaxed),
         inter_shell_chunks: transport.stats.inter_shell_chunks.load(Ordering::Relaxed),
         inter_shell_bytes: transport.stats.inter_shell_bytes.load(Ordering::Relaxed),
         broken_blocks: manager.stats.broken_blocks.load(Ordering::Relaxed),
@@ -833,6 +980,10 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
         isl_outages,
         ground_handovers,
         box_killed_sats,
+        plane_losses,
+        solar_storms,
+        box_kills,
+        correlated_killed_sats,
         blackholed_requests: transport.total_blackholed(),
         net_mean_ms: if requests == 0 { 0.0 } else { to_ms(total_ns / requests) },
         net_p50_ms: to_ms(percentile_ns(&sorted_ns, 0.50)),
@@ -900,17 +1051,45 @@ mod tests {
         assert_eq!(r.failed_migrations, 0);
     }
 
+    fn shell_spec(name: &str, planes: usize, sats_per_plane: usize, alt: f64) -> ShellSpec {
+        ShellSpec {
+            name: name.into(),
+            planes,
+            sats_per_plane,
+            altitude_km: alt,
+            strategy: None,
+            n_servers: None,
+        }
+    }
+
     /// A scaled-down federation that runs in milliseconds: two small
     /// shells, 4 epochs, kill at epoch 2.
     fn tiny_fed(seed: u64) -> FederatedScenarioSpec {
         let mut spec = FederatedScenarioSpec::federated_dual_shell(seed);
-        spec.shells[0] =
-            ShellSpec { name: "a-550".into(), planes: 9, sats_per_plane: 19, altitude_km: 550.0 };
-        spec.shells[1] =
-            ShellSpec { name: "b-630".into(), planes: 7, sats_per_plane: 17, altitude_km: 630.0 };
+        spec.shells[0] = shell_spec("a-550", 9, 19, 550.0);
+        spec.shells[1] = shell_spec("b-630", 7, 17, 630.0);
         spec.epochs = 4;
         spec.requests_per_epoch = 8;
         spec.primary_kill_epoch = 2;
+        spec
+    }
+
+    /// A scaled-down replicated tri-shell under the correlated plan: the
+    /// dense b-630 shell is primary, a-550 is the replica span partner,
+    /// and the polar shell runs its own (rotation-aware) layout config.
+    fn tiny_tri(seed: u64) -> FederatedScenarioSpec {
+        let mut spec = FederatedScenarioSpec::federated_tri_shell(seed);
+        spec.shells[0] = shell_spec("a-550", 9, 11, 550.0);
+        spec.shells[1] = shell_spec("b-630", 15, 15, 630.0);
+        spec.shells[2] = shell_spec("c-1200", 9, 11, 1200.0);
+        spec.shells[2].strategy = Some(crate::mapping::Strategy::RotationAware);
+        spec.epochs = 4;
+        spec.requests_per_epoch = 8;
+        spec.correlated = vec![
+            CorrelatedFailure::PlaneLoss { epoch: 1, shell: 0, plane_offset: 3 },
+            CorrelatedFailure::SolarStorm { epoch: 2, shell: 1, half_width: 2 },
+            CorrelatedFailure::BoxKill { epoch: 3, shell: 0, fraction: 0.33 },
+        ];
         spec
     }
 
@@ -958,6 +1137,46 @@ mod tests {
     }
 
     #[test]
+    fn tri_shell_correlated_plan_is_deterministic_and_counted() {
+        let spec = tiny_tri(11);
+        let a = run_federated_scenario(&spec);
+        let b = run_federated_scenario(&spec);
+        assert_eq!(a, b);
+        assert_eq!(a.to_json_string(), b.to_json_string());
+        assert_eq!(a.shells.len(), 3);
+        assert_eq!(a.plane_losses, 1, "{a:?}");
+        assert_eq!(a.solar_storms, 1, "{a:?}");
+        assert_eq!(a.box_kills, 1, "{a:?}");
+        assert!(a.correlated_killed_sats > 0);
+        assert!(a.replicated_blocks > 0, "the hot set must replicate: {a:?}");
+        assert!(a.replica_races > 0, "replicated fetches race their copies: {a:?}");
+        assert!(a.replica_race_wins > 0, "the storm forces replica serves: {a:?}");
+        assert!(a.replica_promotions > 0, "broken primaries promote: {a:?}");
+        assert!(a.block_hit_rate > 0.0);
+    }
+
+    #[test]
+    fn replicated_tri_shell_beats_the_rehoming_baseline() {
+        let spec = tiny_tri(9);
+        let fed = run_federated_scenario(&spec);
+        let base = run_federated_scenario(&spec.rehoming_baseline());
+        assert_eq!(fed.requests, base.requests, "same workload either way");
+        assert_eq!(
+            fed.correlated_killed_sats, base.correlated_killed_sats,
+            "the correlated plan hits both runs identically"
+        );
+        assert!(
+            fed.block_hit_rate > base.block_hit_rate,
+            "replication must out-hit re-homing under correlated failures: {} vs {}",
+            fed.block_hit_rate,
+            base.block_hit_rate
+        );
+        assert_eq!(base.replicated_blocks, 0);
+        assert_eq!(base.replica_race_wins, 0);
+        assert_eq!(base.preplaced_blocks, 0);
+    }
+
+    #[test]
     fn federated_report_json_has_per_shell_metrics() {
         let r = run_federated_scenario(&tiny_fed(2));
         let j = r.to_json_string();
@@ -970,6 +1189,19 @@ mod tests {
             "\"hit_rate\"",
             "\"placed_bytes\"",
             "\"analytic_worst_case_s\"",
+            "\"replicated_blocks\"",
+            "\"replica_races\"",
+            "\"replica_race_wins\"",
+            "\"replica_promotions\"",
+            "\"preplaced_blocks\"",
+            "\"preplace_hits\"",
+            "\"plane_losses\"",
+            "\"solar_storms\"",
+            "\"box_kills\"",
+            "\"correlated_killed_sats\"",
+            "\"replica_hits\"",
+            "\"replicas_hosted\"",
+            "\"preplaced_hosted\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

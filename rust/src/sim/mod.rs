@@ -8,8 +8,11 @@
 //! * [`scenario`] — named, seed-driven scenario specs (the paper's 19x5
 //!   testbed, a Starlink-like 72x22 mega-shell, a Kuiper-like 34x34
 //!   shell, the `mega-shell` [`crate::net::sched`] stress shape, and the
-//!   federated dual-shell scenario; `skymemory scenario --list`) with
-//!   failure-injection plans.
+//!   federated dual- and tri-shell scenarios; `skymemory scenario
+//!   --list`) with failure-injection plans — random per-epoch draws
+//!   ([`scenario::FailurePlan`]) and scheduled correlated events
+//!   ([`scenario::CorrelatedFailure`]: whole-plane loss, solar-storm
+//!   bands, fractional box kills).
 //! * [`harness`] — runs a scenario end to end over the real protocol
 //!   stack (fleet + mapping + migration + KVC manager; for federated
 //!   scenarios, the [`crate::federation`] stack) and emits a byte-stable

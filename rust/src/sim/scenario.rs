@@ -9,7 +9,7 @@
 //! nondeterminism (hash-map iteration order, wall-clock time, thread
 //! scheduling observable at block granularity).
 //!
-//! Five scenarios ship built in (`skymemory scenario --list`):
+//! Six scenarios ship built in (`skymemory scenario --list`):
 //!
 //! * `paper-19x5` — the paper's NUC-testbed shape (§5): 5 planes x 19
 //!   satellites at 550 km, 9 virtual servers, heavy per-satellite memory
@@ -30,10 +30,20 @@
 //!   handover of the hot chunks (see
 //!   [`FederatedScenarioSpec::federated_dual_shell`] and
 //!   [`super::harness::run_federated_scenario`]).
+//! * `federated-tri-shell` — the N-shell flagship: Starlink 550 km +
+//!   Kuiper 630 km + a polar 1200 km shell with its own layout config,
+//!   hot-block replication across the two cheapest shells, §3.7
+//!   predictive pre-placement, and a scheduled *correlated-failure* plan
+//!   ([`CorrelatedFailure`]: whole-plane loss, a solar-storm band over
+//!   the primary, a fractional box kill on the fallback) that the
+//!   replicated federation must survive strictly better than the
+//!   re-homing-only baseline.
 
 use crate::constellation::geometry::Geometry;
 use crate::constellation::topology::{SatId, Torus};
-use crate::federation::placement::{cheapest_index, shell_cost, PlacementPolicy};
+use crate::federation::placement::{
+    cheapest_index, shell_cost, PlacementPolicy, ReplicationPolicy, ShellLayoutConfig,
+};
 use crate::kvc::eviction::EvictionPolicy;
 use crate::kvc::manager::KvcConfig;
 use crate::kvc::quantize::Quantizer;
@@ -81,6 +91,47 @@ impl FailurePlan {
         self.sat_losses_per_epoch == 0
             && self.isl_outages_per_epoch == 0
             && self.handover_every_epochs == 0
+    }
+}
+
+/// A correlated (multi-satellite) failure event of a federated scenario
+/// plan.  Unlike the random per-epoch [`FailurePlan`] draws, these are
+/// scheduled, spatially-correlated losses; satellite coordinates are
+/// relative to the target shell's *current* ground-view centre, so plans
+/// stay meaningful as the shells rotate.  All three kinds are permanent
+/// (stores wiped, traffic blackholed): a lost plane never redeploys
+/// mid-run and a storm-latched satellite stays dark.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CorrelatedFailure {
+    /// A whole orbital plane is lost (launch-vehicle or deployment
+    /// failure): every satellite of the plane `plane_offset` planes from
+    /// the current centre goes dark.
+    PlaneLoss { epoch: u64, shell: usize, plane_offset: i32 },
+    /// Fractional layout-box kill — partial-shell degradation: the given
+    /// fraction of the shell's current layout-box cells (row-major from
+    /// the north-west corner, `ceil`) goes dark.
+    BoxKill { epoch: u64, shell: usize, fraction: f64 },
+    /// A solar-storm regional outage: every satellite within
+    /// `half_width` slots of the centre's slot band, across *all* planes
+    /// of the shell, goes dark.
+    SolarStorm { epoch: u64, shell: usize, half_width: usize },
+}
+
+impl CorrelatedFailure {
+    pub fn epoch(&self) -> u64 {
+        match self {
+            CorrelatedFailure::PlaneLoss { epoch, .. }
+            | CorrelatedFailure::BoxKill { epoch, .. }
+            | CorrelatedFailure::SolarStorm { epoch, .. } => *epoch,
+        }
+    }
+
+    pub fn shell(&self) -> usize {
+        match self {
+            CorrelatedFailure::PlaneLoss { shell, .. }
+            | CorrelatedFailure::BoxKill { shell, .. }
+            | CorrelatedFailure::SolarStorm { shell, .. } => *shell,
+        }
     }
 }
 
@@ -398,15 +449,26 @@ pub const BUILTIN_SUMMARIES: &[(&str, &str)] = &[
         "federated-dual-shell",
         "two-shell federation (Starlink 550 km + Kuiper 630 km): placement spillover and a mid-run primary-box kill with inter-shell handover",
     ),
+    (
+        "federated-tri-shell",
+        "three-shell federation (Starlink 550 km + Kuiper 630 km + polar 1200 km): hot-block replication, §3.7 pre-placement, and a correlated-failure plan (plane loss, solar storm, fractional box kill)",
+    ),
 ];
 
-/// One shell of a federated scenario.
+/// One shell of a federated scenario.  `strategy` / `n_servers` override
+/// the federation-wide defaults for this shell
+/// ([`crate::federation::placement::ShellLayoutConfig`]): a sparse polar
+/// shell can stripe differently from a dense mega-shell.
 #[derive(Debug, Clone)]
 pub struct ShellSpec {
     pub name: String,
     pub planes: usize,
     pub sats_per_plane: usize,
     pub altitude_km: f64,
+    /// Per-shell mapping-strategy override (`None` = the spec's).
+    pub strategy: Option<Strategy>,
+    /// Per-shell stripe-width override (`None` = the spec's).
+    pub n_servers: Option<usize>,
 }
 
 impl ShellSpec {
@@ -446,12 +508,25 @@ pub struct FederatedScenarioSpec {
     pub workload: WorkloadConfig,
     /// Random failures, injected into the primary shell only.
     pub failures: FailurePlan,
+    /// Scheduled correlated failures (whole-plane loss, fractional box
+    /// kills, solar-storm bands), applied at the start of their epoch —
+    /// *without* any pre-announced evacuation: surviving them is what
+    /// replication and pre-placement are for.
+    pub correlated: Vec<CorrelatedFailure>,
     /// Epoch at which the primary shell's layout box is killed for the
     /// rest of the run (0 = never).  The manager evacuates the box over
     /// the inter-shell links first — the proactive handover — and the
     /// kill band covers the box's westward slide, so the primary stays
     /// ineligible until the run ends.
     pub primary_kill_epoch: u64,
+    /// Replicate the K hottest blocks across the two cheapest shells
+    /// (0 = re-homing only; see
+    /// [`crate::federation::placement::ReplicationPolicy`]).
+    pub replicate_top_k: usize,
+    /// Accesses a block needs before it is replica-eligible.
+    pub replicate_min_accesses: u64,
+    /// Run the §3.7 pre-placement predictor at epoch boundaries.
+    pub preplace: bool,
     /// Placement eligibility threshold (live fraction of the layout box).
     pub min_live_fraction: f64,
     /// Per-shell byte budget before placement spills over (0 = none).
@@ -484,36 +559,90 @@ impl FederatedScenarioSpec {
         }
     }
 
+    pub fn replication(&self) -> ReplicationPolicy {
+        ReplicationPolicy {
+            top_k: self.replicate_top_k,
+            min_accesses: self.replicate_min_accesses,
+        }
+    }
+
+    /// Effective per-shell layout configs (shell overrides applied over
+    /// the federation-wide defaults), index-aligned with `shells`.
+    pub fn shell_layouts(&self) -> Vec<ShellLayoutConfig> {
+        self.shells
+            .iter()
+            .map(|s| ShellLayoutConfig {
+                strategy: s.strategy.unwrap_or(self.strategy),
+                n_servers: s.n_servers.unwrap_or(self.n_servers),
+            })
+            .collect()
+    }
+
     pub fn total_requests(&self) -> usize {
         self.epochs as usize * self.requests_per_epoch
     }
 
-    /// Index of the static primary shell: cheapest by [`shell_cost`],
-    /// ties to the lowest index (the same [`cheapest_index`] argmin the
-    /// manager and placement policy use).
+    /// Index of the static primary shell: cheapest by [`shell_cost`]
+    /// over each shell's *own* stripe width, ties to the lowest index
+    /// (the same [`cheapest_index`] argmin the manager and placement
+    /// policy use).
     pub fn primary_shell_index(&self) -> usize {
-        let costs: Vec<f64> =
-            self.shells.iter().map(|s| shell_cost(&s.geometry(), self.n_servers)).collect();
+        let costs: Vec<f64> = self
+            .shells
+            .iter()
+            .zip(self.shell_layouts())
+            .map(|(s, lc)| shell_cost(&s.geometry(), lc.n_servers))
+            .collect();
         cheapest_index(&costs).expect("a federation has shells")
     }
 
     /// The no-federation baseline: the same scenario reduced to the
     /// primary shell alone (same workload, failures and kill schedule,
-    /// nowhere to hand over to).
+    /// nowhere to hand over to, nothing to replicate onto).  Correlated
+    /// events aimed at the dropped shells are dropped with them.
     pub fn baseline_single_shell(&self) -> FederatedScenarioSpec {
         let primary = self.primary_shell_index();
         let mut spec = self.clone();
         spec.name = format!("{}-baseline", self.name);
         spec.shells = vec![self.shells[primary].clone()];
+        spec.correlated = self
+            .correlated
+            .iter()
+            .filter(|c| c.shell() == primary)
+            .map(|c| {
+                let mut c = *c;
+                match &mut c {
+                    CorrelatedFailure::PlaneLoss { shell, .. }
+                    | CorrelatedFailure::BoxKill { shell, .. }
+                    | CorrelatedFailure::SolarStorm { shell, .. } => *shell = 0,
+                }
+                c
+            })
+            .collect();
+        spec.replicate_top_k = 0;
+        spec.preplace = false;
+        spec
+    }
+
+    /// The re-homing-only baseline: the identical federation (same
+    /// shells, workload, failure and correlated plans) with replication
+    /// and pre-placement switched off — what PR 2 shipped.  The
+    /// replicated run must strictly out-hit this under the correlated
+    /// plan; `skymemory federate --baseline` gates on it.
+    pub fn rehoming_baseline(&self) -> FederatedScenarioSpec {
+        let mut spec = self.clone();
+        spec.name = format!("{}-rehoming", self.name);
+        spec.replicate_top_k = 0;
+        spec.preplace = false;
         spec
     }
 
     /// Sanity-check internal consistency; panics with a descriptive
-    /// message on misuse.  The built-in spec always passes.
+    /// message on misuse.  The built-in specs always pass.
     pub fn validate(&self) {
         assert!(!self.shells.is_empty(), "{}: a federation needs shells", self.name);
-        let w = box_width(self.n_servers);
-        for s in &self.shells {
+        for (s, lc) in self.shells.iter().zip(self.shell_layouts()) {
+            let w = box_width(lc.n_servers);
             assert!(
                 w <= s.planes && w <= s.sats_per_plane,
                 "{}: {w}x{w} layout box does not fit shell {} ({}x{})",
@@ -523,6 +652,34 @@ impl FederatedScenarioSpec {
                 s.sats_per_plane
             );
         }
+        for c in &self.correlated {
+            assert!(
+                c.shell() < self.shells.len(),
+                "{}: correlated failure aims at shell {} of {}",
+                self.name,
+                c.shell(),
+                self.shells.len()
+            );
+            assert!(
+                c.epoch() > 0 && c.epoch() < self.epochs,
+                "{}: correlated failure epoch {} outside (0, {})",
+                self.name,
+                c.epoch(),
+                self.epochs
+            );
+            if let CorrelatedFailure::BoxKill { fraction, .. } = c {
+                assert!(
+                    *fraction > 0.0 && *fraction <= 1.0,
+                    "{}: box-kill fraction must be in (0, 1]",
+                    self.name
+                );
+            }
+        }
+        assert!(
+            !self.preplace || self.replicate_top_k > 0,
+            "{}: the predictor pre-places the replication hot set (top_k > 0)",
+            self.name
+        );
         if let Quantizer::QuantoInt8 { group } | Quantizer::HqqInt8 { group } = self.quantizer {
             assert!(
                 self.kv_values_per_block % group == 0,
@@ -559,12 +716,16 @@ impl FederatedScenarioSpec {
                     planes: 72,
                     sats_per_plane: 22,
                     altitude_km: 550.0,
+                    strategy: None,
+                    n_servers: None,
                 },
                 ShellSpec {
                     name: "kuiper-630".into(),
                     planes: 34,
                     sats_per_plane: 34,
                     altitude_km: 630.0,
+                    strategy: None,
+                    n_servers: None,
                 },
             ],
             strategy: Strategy::RotationHopAware,
@@ -592,7 +753,11 @@ impl FederatedScenarioSpec {
                 isl_outage_heal_epochs: 2,
                 handover_every_epochs: 0,
             },
+            correlated: vec![],
             primary_kill_epoch: 3,
+            replicate_top_k: 0,
+            replicate_min_accesses: 2,
+            preplace: false,
             min_live_fraction: 0.6,
             // generous soft budget: the scan traffic can push the primary
             // over it late in the run, but the dominant spillover driver
@@ -603,10 +768,109 @@ impl FederatedScenarioSpec {
         }
     }
 
+    /// The built-in three-shell federation under a *correlated-failure*
+    /// plan: the Starlink-like 550 km shell, the Kuiper-like 630 km shell
+    /// (cost-primary), and a sparse polar 1200 km shell running its own
+    /// layout config (rotation-aware stripe — the per-shell override).
+    /// The hot set is replicated across the two cheapest shells and the
+    /// §3.7 predictor pre-places ahead of handovers.  The plan: a whole
+    /// Starlink plane is lost at epoch 2, a solar storm takes out
+    /// Kuiper's ±2-slot band (every plane) at epoch 3 with *no*
+    /// pre-announced evacuation, and a fractional box kill degrades
+    /// Starlink at epoch 4.  Surviving this strictly better than the
+    /// re-homing-only baseline ([`FederatedScenarioSpec::rehoming_baseline`])
+    /// is the acceptance gate (`skymemory federate --shells 3 --baseline`).
+    pub fn federated_tri_shell(seed: u64) -> FederatedScenarioSpec {
+        FederatedScenarioSpec {
+            name: "federated-tri-shell".into(),
+            shells: vec![
+                ShellSpec {
+                    name: "starlink-550".into(),
+                    planes: 72,
+                    sats_per_plane: 22,
+                    altitude_km: 550.0,
+                    strategy: None,
+                    n_servers: None,
+                },
+                ShellSpec {
+                    name: "kuiper-630".into(),
+                    planes: 34,
+                    sats_per_plane: 34,
+                    altitude_km: 630.0,
+                    strategy: None,
+                    n_servers: None,
+                },
+                ShellSpec {
+                    name: "polar-1200".into(),
+                    planes: 12,
+                    sats_per_plane: 24,
+                    altitude_km: 1200.0,
+                    // the per-shell override: the polar shell stripes
+                    // rotation-aware, so every copy moved onto it is
+                    // re-striped rather than offset-preserved
+                    strategy: Some(Strategy::RotationAware),
+                    n_servers: None,
+                },
+            ],
+            strategy: Strategy::RotationHopAware,
+            n_servers: 9,
+            block_tokens: 32,
+            chunk_size: 600,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Lazy,
+            // roomy budgets: replication adds copies, and this scenario
+            // measures correlated-failure survival, not eviction churn
+            sat_budget_bytes: 256 << 10,
+            kv_values_per_block: 8192,
+            epochs: 6,
+            requests_per_epoch: 24,
+            workload: WorkloadConfig {
+                n_contexts: 4,
+                context_chars: 192,
+                n_questions: 6,
+                scan_every: 5,
+                seed,
+            },
+            failures: FailurePlan {
+                sat_losses_per_epoch: 1,
+                isl_outages_per_epoch: 1,
+                isl_outage_heal_epochs: 2,
+                handover_every_epochs: 0,
+            },
+            correlated: vec![
+                // a launch-vehicle loss three planes east of Starlink's
+                // centre: outside the layout box, so replicas survive
+                CorrelatedFailure::PlaneLoss { epoch: 2, shell: 0, plane_offset: 3 },
+                // the sudden solar storm over the primary: the whole
+                // ±2-slot band across all 34 Kuiper planes goes dark —
+                // only racing the pre-made replicas keeps the hot set hot
+                CorrelatedFailure::SolarStorm { epoch: 3, shell: 1, half_width: 2 },
+                // partial-shell degradation of the fallback shell: a
+                // third of Starlink's box (north row) goes dark, breaking
+                // the promoted primaries and forcing a second promotion
+                // onto the polar shell's replicas
+                CorrelatedFailure::BoxKill { epoch: 4, shell: 0, fraction: 0.33 },
+            ],
+            primary_kill_epoch: 0,
+            // covers the whole shared-context hot set (~24 blocks at this
+            // workload): chained-hash prefix walks stop at the first
+            // broken block, so replicating the full hot prefix is what
+            // keeps the walks alive through the storm
+            replicate_top_k: 32,
+            replicate_min_accesses: 2,
+            preplace: true,
+            min_live_fraction: 0.6,
+            spill_budget_bytes: 1 << 20,
+            sched_window: 8,
+            seed,
+        }
+    }
+
     /// Look up a built-in federated scenario by name.
     pub fn by_name(name: &str, seed: u64) -> Option<FederatedScenarioSpec> {
         match name {
             "federated-dual-shell" => Some(FederatedScenarioSpec::federated_dual_shell(seed)),
+            "federated-tri-shell" => Some(FederatedScenarioSpec::federated_tri_shell(seed)),
             _ => None,
         }
     }
@@ -699,6 +963,61 @@ mod tests {
         let again = FederatedScenarioSpec::by_name("federated-dual-shell", 7).unwrap();
         assert_eq!(again.shells[0].name, f.shells[0].name);
         assert!(FederatedScenarioSpec::by_name("no-such-federation", 7).is_none());
+    }
+
+    #[test]
+    fn federated_tri_shell_spec_is_sound() {
+        let f = FederatedScenarioSpec::federated_tri_shell(7);
+        f.validate();
+        assert_eq!(f.shells.len(), 3);
+        // Kuiper's denser planes keep it cost-primary; the polar shell is
+        // the most expensive (highest altitude at equal stripe width)
+        assert_eq!(f.primary_shell_index(), 1);
+        let layouts = f.shell_layouts();
+        assert_eq!(layouts[0].strategy, Strategy::RotationHopAware);
+        assert_eq!(layouts[2].strategy, Strategy::RotationAware, "per-shell override");
+        assert_eq!(layouts[2].n_servers, 9);
+        // replication + pre-placement are on; the correlated plan covers
+        // all three failure kinds, storm aimed at the primary
+        assert!(f.replicate_top_k > 0);
+        assert!(f.preplace);
+        assert_eq!(f.correlated.len(), 3);
+        assert!(f
+            .correlated
+            .iter()
+            .any(|c| matches!(c, CorrelatedFailure::SolarStorm { shell: 1, .. })));
+        assert!(f.correlated.iter().all(|c| c.epoch() > 0 && c.epoch() < f.epochs));
+        let again = FederatedScenarioSpec::by_name("federated-tri-shell", 7).unwrap();
+        assert_eq!(again.shells[2].name, "polar-1200");
+    }
+
+    #[test]
+    fn rehoming_baseline_disables_replication_only() {
+        let f = FederatedScenarioSpec::federated_tri_shell(5);
+        let b = f.rehoming_baseline();
+        b.validate();
+        assert_eq!(b.name, "federated-tri-shell-rehoming");
+        assert_eq!(b.shells.len(), 3, "same shells");
+        assert_eq!(b.correlated.len(), f.correlated.len(), "same correlated plan");
+        assert_eq!(b.replicate_top_k, 0);
+        assert!(!b.preplace);
+        assert_eq!(b.seed, f.seed);
+    }
+
+    #[test]
+    fn single_shell_baseline_remaps_correlated_events() {
+        let f = FederatedScenarioSpec::federated_tri_shell(5);
+        let b = f.baseline_single_shell();
+        b.validate();
+        assert_eq!(b.shells.len(), 1);
+        assert_eq!(b.shells[0].name, "kuiper-630");
+        // only the storm aimed at the primary survives, re-aimed at 0
+        assert_eq!(b.correlated.len(), 1);
+        assert!(matches!(
+            b.correlated[0],
+            CorrelatedFailure::SolarStorm { shell: 0, epoch: 3, half_width: 2 }
+        ));
+        assert_eq!(b.replicate_top_k, 0, "one shell has nothing to replicate onto");
     }
 
     #[test]

@@ -88,11 +88,68 @@ fn federated_report_carries_per_shell_metrics() {
 
 #[test]
 fn federated_scenario_registry_is_wired() {
-    // the federated name resolves through its own registry and does not
+    // the federated names resolve through their own registry and do not
     // collide with the single-shell one
     assert!(ScenarioSpec::by_name("federated-dual-shell", 3).is_none());
+    assert!(ScenarioSpec::by_name("federated-tri-shell", 3).is_none());
     let spec = FederatedScenarioSpec::by_name("federated-dual-shell", 3).unwrap();
     spec.validate();
     assert_eq!(spec.seed, 3);
+    FederatedScenarioSpec::by_name("federated-tri-shell", 3).unwrap().validate();
     assert!(FederatedScenarioSpec::by_name("paper-19x5", 3).is_none());
+}
+
+/// Golden property: the full replicated tri-shell federation under the
+/// correlated-failure plan is byte-stable across two runs in the same
+/// process, and the machinery really fired (replication, racing,
+/// promotion, all three correlated kinds).
+#[test]
+fn federated_tri_shell_fixed_seed_is_byte_identical() {
+    let spec = FederatedScenarioSpec::federated_tri_shell(1234);
+    let a: FederatedScenarioReport = run_federated_scenario(&spec);
+    let b: FederatedScenarioReport = run_federated_scenario(&spec);
+    assert_eq!(a, b, "reports must be structurally identical");
+    assert_eq!(a.to_json_string(), b.to_json_string(), "metrics JSON must be byte-identical");
+    assert_eq!(a.shells.len(), 3);
+    assert_eq!(a.plane_losses, 1, "{a:?}");
+    assert_eq!(a.solar_storms, 1, "{a:?}");
+    assert_eq!(a.box_kills, 1, "{a:?}");
+    assert!(a.correlated_killed_sats > 100, "a storm band is a mass casualty: {a:?}");
+    assert!(a.replicated_blocks > 0, "{a:?}");
+    assert!(a.replica_races > 0, "{a:?}");
+    assert!(a.replica_race_wins > 0, "the storm forces replica serves: {a:?}");
+    assert!(a.replica_promotions > 0, "{a:?}");
+}
+
+/// Acceptance: under the identical correlated-failure plan (sudden solar
+/// storm over the primary — no pre-announced evacuation — plus a plane
+/// loss and a fractional box kill), the replicated tri-shell federation
+/// strictly out-hits the re-homing-only baseline: racing pre-made
+/// replicas saves the misses that reactive re-homing must eat, and the
+/// §3.7 pre-placement keeps the hot set resolvable across handovers.
+#[test]
+fn replicated_tri_shell_beats_rehoming_only_baseline() {
+    let spec = FederatedScenarioSpec::federated_tri_shell(42);
+    let fed = run_federated_scenario(&spec);
+    let base = run_federated_scenario(&spec.rehoming_baseline());
+    assert_eq!(fed.requests, base.requests, "identical workload either way");
+    assert_eq!(
+        (base.replicated_blocks, base.replica_race_wins, base.preplaced_blocks),
+        (0, 0, 0),
+        "the baseline really is re-homing-only: {base:?}"
+    );
+    assert!(
+        fed.block_hit_rate > base.block_hit_rate,
+        "replication must strictly out-hit re-homing under the correlated plan: {} vs {}",
+        fed.block_hit_rate,
+        base.block_hit_rate
+    );
+    // the replica span is visible per shell: the second-cheapest shell
+    // hosted replicas and served races
+    let primary = fed.shells.iter().find(|s| s.name == fed.primary_shell).unwrap();
+    let others: Vec<_> = fed.shells.iter().filter(|s| s.name != fed.primary_shell).collect();
+    assert_eq!(fed.primary_shell, "kuiper-630");
+    assert!(primary.blocks_stored > 0);
+    assert!(others.iter().any(|s| s.replicas_hosted > 0), "{fed:?}");
+    assert!(others.iter().any(|s| s.replica_hits > 0), "{fed:?}");
 }

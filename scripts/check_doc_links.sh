@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Doc link check: every repo path referenced by ARCHITECTURE.md or
+# docs/*.md (tokens starting with rust/, docs/, examples/, scripts/ or
+# .github/) must exist. Keeps the documentation pass honest; runs in CI
+# (.github/workflows/ci.yml). Exits nonzero listing every dangling
+# reference.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for doc in ARCHITECTURE.md docs/*.md; do
+    [ -f "$doc" ] || { echo "missing doc file: $doc"; fail=1; continue; }
+    # path-like tokens; trailing sentence punctuation stripped below
+    refs=$(grep -oE '(rust|docs|examples|scripts|\.github)/[A-Za-z0-9_./-]+' "$doc" | sort -u)
+    for ref in $refs; do
+        # strip trailing dots (end of sentence) but keep extensions
+        while [ "${ref%.}" != "$ref" ]; do ref="${ref%.}"; done
+        if [ ! -e "$ref" ]; then
+            echo "$doc: dangling reference: $ref"
+            fail=1
+        fi
+    done
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "doc link check FAILED"
+    exit 1
+fi
+echo "doc link check OK"
