@@ -2,13 +2,20 @@
 //! across strategies x altitude x servers x chunk-processing x KVC size.
 //! Prints the paper's series (who wins, by how much, where the knees are)
 //! and times the simulator.
+//!
+//! Writes `BENCH_fig16_strategies.json`: sweep shape counters in the
+//! deterministic namespace, wall-clock stats in timing.
 
 use skymemory::mapping::Strategy;
 use skymemory::sim::latency::{figure16_sweep, worst_case_latency};
 use skymemory::sim::SimConfig;
-use skymemory::util::bench::Bencher;
+use skymemory::util::bench::{smoke_mode, BenchArtifact, Bencher};
 
 fn main() {
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("fig16_strategies", smoke);
+    let pick = |s: usize, f: usize| if smoke { s } else { f };
+
     println!("=== Figure 16: max latency across parameters and strategies ===");
     println!(
         "{:<26} {:>8} {:>8} {:>7} {:>8} {:>10}",
@@ -31,6 +38,9 @@ fn main() {
             );
         }
     }
+    art.counter("strategies", Strategy::ALL.len() as u64);
+    art.counter("altitude_points", SimConfig::altitude_sweep().len() as u64);
+    art.counter("server_points", SimConfig::server_sweep().len() as u64);
 
     // server scaling (the 8x claim)
     println!("\n--- server scaling at 550 km, 21 MB, 20 ms processing ---");
@@ -48,15 +58,24 @@ fn main() {
         println!();
     }
     print!("\n{}", skymemory::repro::fig16_summary());
+    art.counter("sweep_cells", figure16_sweep().len() as u64);
 
     println!("\n=== timings ===");
     let cfg = SimConfig::default();
-    let r = Bencher::new("worst_case_latency (81 servers)").run(|| {
-        std::hint::black_box(worst_case_latency(&cfg));
-    });
+    let r = Bencher::new("worst_case_latency (81 servers)")
+        .fixed_iters(pick(2048, 16384))
+        .batch(32)
+        .run(|| {
+            std::hint::black_box(worst_case_latency(&cfg));
+        });
     println!("{}", r.report());
-    let r = Bencher::new("figure16 full sweep (336 cells)").max_iters(200).run(|| {
+    art.push(&r);
+    let r = Bencher::new("figure16 full sweep (336 cells)").fixed_iters(pick(5, 50)).run(|| {
         std::hint::black_box(figure16_sweep());
     });
     println!("{}", r.report());
+    art.push(&r);
+
+    let path = art.write().expect("write BENCH_fig16_strategies.json");
+    println!("wrote {}", path.display());
 }

@@ -2,11 +2,18 @@
 //! rows): intra-plane ISL latency vs altitude and plane size, straight
 //! from eq. (1).  Prints the same series the paper plots, then times the
 //! geometry hot functions.
+//!
+//! Writes `BENCH_fig_geometry.json`: iteration/shape counters in the
+//! deterministic namespace, wall-clock stats in timing.
 
 use skymemory::constellation::geometry::{chord_distance_km, Geometry, LIGHT_SPEED_KM_S};
-use skymemory::util::bench::Bencher;
+use skymemory::util::bench::{smoke_mode, BenchArtifact, Bencher};
 
 fn main() {
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("fig_geometry", smoke);
+    let pick = |s: usize, f: usize| if smoke { s } else { f };
+
     println!("=== Figure 1 / Figure 2: intra-plane ISL latency (ms) ===");
     println!(
         "{:>6} {}",
@@ -43,23 +50,41 @@ fn main() {
             g.ground_latency_s(0, 0) * 1e3
         );
     }
+    // 7 plane sizes x 24 altitudes in the full-sweep bench below
+    art.counter("sweep_plane_sizes", 7);
+    art.counter("sweep_altitudes", 24);
 
     println!("\n=== timings ===");
     let g = Geometry::new(550.0, 19, 5);
-    let r = Bencher::new("geometry::worst_hop_latency_s").run(|| {
-        std::hint::black_box(g.worst_hop_latency_s());
-    });
+    let r = Bencher::new("geometry::worst_hop_latency_s")
+        .fixed_iters(pick(8192, 65536))
+        .batch(64)
+        .run(|| {
+            std::hint::black_box(g.worst_hop_latency_s());
+        });
     println!("{}", r.report());
-    let r = Bencher::new("geometry::ground_latency_s(2,2)").run(|| {
-        std::hint::black_box(g.ground_latency_s(2, 2));
-    });
+    art.push(&r);
+    let r = Bencher::new("geometry::ground_latency_s(2,2)")
+        .fixed_iters(pick(8192, 65536))
+        .batch(64)
+        .run(|| {
+            std::hint::black_box(g.ground_latency_s(2, 2));
+        });
     println!("{}", r.report());
-    let r = Bencher::new("fig1 full sweep (7 M x 24 h)").run(|| {
-        for m in [10usize, 15, 20, 30, 40, 50, 60] {
-            for i in 0..24 {
-                std::hint::black_box(chord_distance_km(160.0 + i as f64 * 80.0, m));
+    art.push(&r);
+    let r = Bencher::new("fig1 full sweep (7 M x 24 h)")
+        .fixed_iters(pick(1024, 8192))
+        .batch(8)
+        .run(|| {
+            for m in [10usize, 15, 20, 30, 40, 50, 60] {
+                for i in 0..24 {
+                    std::hint::black_box(chord_distance_km(160.0 + i as f64 * 80.0, m));
+                }
             }
-        }
-    });
+        });
     println!("{}", r.report());
+    art.push(&r);
+
+    let path = art.write().expect("write BENCH_fig_geometry.json");
+    println!("wrote {}", path.display());
 }

@@ -1,7 +1,12 @@
 //! Hot-path micro-benchmarks (the §Perf working set): hashing, chunking,
 //! quantization codecs, the radix index, wire codecs, store ops, and the
 //! in-proc protocol round-trip.  Used to drive the L3 optimization loop —
-//! before/after numbers live in EXPERIMENTS.md §Perf.
+//! before/after numbers live in EXPERIMENTS.md §Perf and the machine-
+//! readable trajectory in `BENCH_hotpath.json` (see docs/METRICS.md
+//! "Bench artifacts").
+//!
+//! Iteration counts are fixed per mode (`--smoke` = CI-sized), so the
+//! artifact's deterministic namespace is byte-identical run-over-run.
 
 use skymemory::constellation::los::LosGrid;
 use skymemory::constellation::topology::{SatId, Torus};
@@ -15,25 +20,36 @@ use skymemory::kvc::radix::RadixTree;
 use skymemory::net::messages::{decode_request, encode_request, Envelope, Request};
 use skymemory::net::transport::{GroundView, InProcTransport};
 use skymemory::satellite::fleet::Fleet;
-use skymemory::util::bench::Bencher;
+use skymemory::util::bench::{smoke_mode, BenchArtifact, Bencher};
 use skymemory::util::rng::XorShift64;
 use std::sync::Arc;
 
 fn main() {
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("hotpath", smoke);
     let mut rng = XorShift64::new(1);
+    // (smoke, full) measured iteration counts per group
+    let pick = |s: usize, f: usize| if smoke { s } else { f };
 
     // --- hashing ---------------------------------------------------------
     let payload_64k = vec![0xA5u8; 65536];
-    let r = Bencher::new("sha256 64 KiB").run(|| {
-        std::hint::black_box(sha256(&payload_64k));
-    });
+    let r = Bencher::new("sha256 64 KiB")
+        .fixed_iters(pick(256, 4096))
+        .bytes_per_iter(65536)
+        .run(|| {
+            std::hint::black_box(sha256(&payload_64k));
+        });
     println!("{}", r.report());
-    println!("{}", r.throughput(65536));
+    println!("{}", r.throughput());
+    art.push(&r);
     let tokens: Vec<i32> = (0..256).collect();
-    let r = Bencher::new("block_hashes 256 tokens / 32-blocks").run(|| {
-        std::hint::black_box(block_hashes(&tokens, 32));
-    });
+    let r = Bencher::new("block_hashes 256 tokens / 32-blocks")
+        .fixed_iters(pick(256, 4096))
+        .run(|| {
+            std::hint::black_box(block_hashes(&tokens, 32));
+        });
     println!("{}", r.report());
+    art.push(&r);
 
     // --- quantization (the KVC encode/decode on the request path) --------
     let kv: Vec<f32> = (0..65536).map(|_| (rng.next_f64() as f32 - 0.5) * 4.0).collect();
@@ -43,24 +59,36 @@ fn main() {
         Quantizer::HqqInt8 { group: 32 },
     ] {
         let enc = q.encode(&kv);
-        let r = Bencher::new(format!("{}::encode 64k f32 (one block)", q.name())).run(|| {
-            std::hint::black_box(q.encode(&kv));
-        });
+        let r = Bencher::new(format!("{}::encode 64k f32 (one block)", q.name()))
+            .fixed_iters(pick(64, 512))
+            .bytes_per_iter(kv.len() * 4)
+            .run(|| {
+                std::hint::black_box(q.encode(&kv));
+            });
         println!("{}", r.report());
-        println!("{}", r.throughput(kv.len() * 4));
-        let r = Bencher::new(format!("{}::decode", q.name())).run(|| {
-            std::hint::black_box(q.decode(&enc).unwrap());
-        });
+        println!("{}", r.throughput());
+        art.push(&r);
+        let r = Bencher::new(format!("{}::decode", q.name()))
+            .fixed_iters(pick(64, 512))
+            .bytes_per_iter(kv.len() * 4)
+            .run(|| {
+                std::hint::black_box(q.decode(&enc).unwrap());
+            });
         println!("{}", r.report());
-        println!("{}", r.throughput(kv.len() * 4));
+        println!("{}", r.throughput());
+        art.push(&r);
     }
 
     // --- chunking ---------------------------------------------------------
     let payload = vec![0u8; 73728];
-    let r = Bencher::new("split_chunks 72 KiB / 6 kB").run(|| {
-        std::hint::black_box(split_chunks(&payload, 6000));
-    });
+    let r = Bencher::new("split_chunks 72 KiB / 6 kB")
+        .fixed_iters(pick(512, 8192))
+        .bytes_per_iter(73728)
+        .run(|| {
+            std::hint::black_box(split_chunks(&payload, 6000));
+        });
     println!("{}", r.report());
+    art.push(&r);
 
     // --- radix index -------------------------------------------------------
     let mut tree = RadixTree::new();
@@ -73,10 +101,14 @@ fn main() {
         tree.insert(&key, i);
         keys.push(key);
     }
-    let r = Bencher::new("radix::longest_prefix (10k keys)").run(|| {
-        std::hint::black_box(tree.longest_prefix(&keys[4321]));
-    });
+    let r = Bencher::new("radix::longest_prefix (10k keys)")
+        .fixed_iters(pick(8192, 131_072))
+        .batch(64)
+        .run(|| {
+            std::hint::black_box(tree.longest_prefix(&keys[4321]));
+        });
     println!("{}", r.report());
+    art.push(&r);
 
     // --- wire codecs -------------------------------------------------------
     let env = Envelope::new(SatId::new(3, 14), 42);
@@ -85,14 +117,24 @@ fn main() {
         payload: vec![0xCD; 6000],
     };
     let bytes = encode_request(&env, &req);
-    let r = Bencher::new("messages::encode Set(6 kB)").run(|| {
-        std::hint::black_box(encode_request(&env, &req));
-    });
+    let r = Bencher::new("messages::encode Set(6 kB)")
+        .fixed_iters(pick(2048, 32768))
+        .batch(8)
+        .bytes_per_iter(bytes.len())
+        .run(|| {
+            std::hint::black_box(encode_request(&env, &req));
+        });
     println!("{}", r.report());
-    let r = Bencher::new("messages::decode Set(6 kB)").run(|| {
-        std::hint::black_box(decode_request(&bytes).unwrap());
-    });
+    art.push(&r);
+    let r = Bencher::new("messages::decode Set(6 kB)")
+        .fixed_iters(pick(2048, 32768))
+        .batch(8)
+        .bytes_per_iter(bytes.len())
+        .run(|| {
+            std::hint::black_box(decode_request(&bytes).unwrap());
+        });
     println!("{}", r.report());
+    art.push(&r);
 
     // --- full protocol round trip (in-proc, no link emulation) ------------
     let torus = Torus::new(15, 15);
@@ -108,20 +150,45 @@ fn main() {
     let hashes = block_hashes(&tokens, 32);
     let kv_block: Vec<f32> = kv[..65536].to_vec();
     manager.put_block(&hashes, 0, &kv_block, 0).unwrap();
-    let r = Bencher::new("manager::put_block 64k f32 (13 chunks)").run(|| {
-        // fresh hash each iter so the index does not dedupe
-        let mut t2 = tokens.clone();
-        t2[0] = rng.next_u64() as i32;
-        let h = block_hashes(&t2, 32);
-        manager.put_block(&h, 0, &kv_block, 0).unwrap();
-    });
+    let r = Bencher::new("manager::put_block 64k f32 (13 chunks)")
+        .fixed_iters(pick(32, 256))
+        .bytes_per_iter(kv_block.len() * 4)
+        .run(|| {
+            // fresh hash each iter so the index does not dedupe
+            let mut t2 = tokens.clone();
+            t2[0] = rng.next_u64() as i32;
+            let h = block_hashes(&t2, 32);
+            manager.put_block(&h, 0, &kv_block, 0).unwrap();
+        });
     println!("{}", r.report());
-    let r = Bencher::new("manager::fetch_block 64k f32 (13 chunks)").run(|| {
-        std::hint::black_box(manager.fetch_block(&hashes, 0, 0).unwrap().unwrap());
-    });
+    art.push(&r);
+    let r = Bencher::new("manager::fetch_block 64k f32 (13 chunks)")
+        .fixed_iters(pick(64, 512))
+        .bytes_per_iter(kv_block.len() * 4)
+        .run(|| {
+            std::hint::black_box(manager.fetch_block(&hashes, 0, 0).unwrap().unwrap());
+        });
     println!("{}", r.report());
+    art.push(&r);
     println!(
         "  (per-fetch payload {} bytes quantized)",
         manager.config.quantizer.encoded_len(kv_block.len())
     );
+
+    // Manager/scheduler counters: deterministic given the fixed iteration
+    // counts and the seeded rng (warmup runs max(1, n/8) extra iters).
+    let kvc = manager.stats.snapshot();
+    art.counter("manager.blocks_stored", kvc.blocks_stored);
+    art.counter("manager.chunks_stored", kvc.chunks_stored);
+    art.counter("manager.blocks_fetched", kvc.blocks_fetched);
+    art.counter("manager.chunks_fetched", kvc.chunks_fetched);
+    art.counter("manager.bytes_stored", kvc.bytes_stored);
+    art.counter("manager.bytes_fetched", kvc.bytes_fetched);
+    art.counter("manager.broken_blocks", kvc.broken_blocks);
+    let sched = manager.sched().stats.snapshot();
+    art.counter("sched.batches", sched.batches);
+    art.counter("sched.transfers", sched.transfers);
+    art.counter("sched.failed_transfers", sched.failed_transfers);
+    let path = art.write().expect("write BENCH_hotpath.json");
+    println!("wrote {}", path.display());
 }

@@ -1,12 +1,19 @@
 //! Bench + reproduction harness for Figures 13/14/15: the three
 //! chunk-to-server mapping layouts (printed exactly as the paper's grids)
 //! and the cost of layout generation + migration planning.
+//!
+//! Writes `BENCH_mapping_layouts.json`: iteration/shape counters in the
+//! deterministic namespace, wall-clock stats in timing.
 
 use skymemory::constellation::topology::{SatId, Torus};
 use skymemory::mapping::{migration, Strategy};
-use skymemory::util::bench::Bencher;
+use skymemory::util::bench::{smoke_mode, BenchArtifact, Bencher};
 
 fn main() {
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("mapping_layouts", smoke);
+    let pick = |s: usize, f: usize| if smoke { s } else { f };
+
     println!("=== Figure 13 (rotation-aware row-major) ===");
     print!("{}", skymemory::repro::fig13());
     println!("=== Figure 14 (hop-aware concentric rings) ===");
@@ -17,19 +24,32 @@ fn main() {
     println!("=== timings ===");
     let torus = Torus::new(15, 15);
     let center = SatId::new(7, 7);
+    art.counter("strategies", Strategy::ALL.len() as u64);
+    art.counter("torus_sats", torus.len() as u64);
     for st in Strategy::ALL {
         for n in [9usize, 81] {
-            let r = Bencher::new(format!("{}::layout n={n}", st.name())).run(|| {
-                std::hint::black_box(st.initial_layout(&torus, center, n));
-            });
+            let layout = st.initial_layout(&torus, center, n);
+            assert_eq!(layout.len(), n);
+            let r = Bencher::new(format!("{}::layout n={n}", st.name()))
+                .fixed_iters(pick(256, 2048))
+                .batch(if n == 9 { 16 } else { 4 })
+                .run(|| {
+                    std::hint::black_box(st.initial_layout(&torus, center, n));
+                });
             println!("{}", r.report());
+            art.push(&r);
         }
     }
-    let r = Bencher::new("layout_at with 7 epochs of migration (81)").run(|| {
-        std::hint::black_box(Strategy::RotationHopAware.layout_at(&torus, center, 81, 7));
-    });
+    let r = Bencher::new("layout_at with 7 epochs of migration (81)")
+        .fixed_iters(pick(64, 512))
+        .run(|| {
+            std::hint::black_box(Strategy::RotationHopAware.layout_at(&torus, center, 81, 7));
+        });
     println!("{}", r.report());
-    let r = Bencher::new("migration_plan (81 servers)").run(|| {
+    art.push(&r);
+    let plan = migration::migration_plan(&torus, Strategy::RotationHopAware, center, 81, 0);
+    art.counter("migration_plan_moves", plan.len() as u64);
+    let r = Bencher::new("migration_plan (81 servers)").fixed_iters(pick(64, 512)).run(|| {
         std::hint::black_box(migration::migration_plan(
             &torus,
             Strategy::RotationHopAware,
@@ -39,4 +59,8 @@ fn main() {
         ));
     });
     println!("{}", r.report());
+    art.push(&r);
+
+    let path = art.write().expect("write BENCH_mapping_layouts.json");
+    println!("wrote {}", path.display());
 }

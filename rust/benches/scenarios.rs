@@ -3,15 +3,25 @@
 //! per-epoch migration and failure injection included), then uses the
 //! micro-bench harness on the small paper shape to expose run-to-run
 //! variance of the hot loop.
+//!
+//! Writes `BENCH_scenarios.json`: every scenario's counters (requests,
+//! hits, migrations, ISL bytes, scheduler transfers and virtual time)
+//! are deterministic at a fixed seed and go into the artifact's
+//! deterministic namespace; wall-clock numbers go into timing.
 
 use skymemory::sim::harness::{run_federated_scenario, run_scenario};
 use skymemory::sim::scenario::{FederatedScenarioSpec, ScenarioSpec};
-use skymemory::util::bench::Bencher;
-use std::time::{Duration, Instant};
+use skymemory::util::bench::{smoke_mode, slug, BenchArtifact, Bencher};
+use std::time::Instant;
 
 fn main() {
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("scenarios", smoke);
+
     println!("=== scenario end-to-end timings (seed 42) ===");
-    for spec in ScenarioSpec::builtin(42) {
+    let builtin = ScenarioSpec::builtin(42);
+    art.counter("builtin_scenarios", builtin.len() as u64);
+    for spec in builtin {
         let t0 = Instant::now();
         let report = run_scenario(&spec);
         let wall = t0.elapsed();
@@ -28,6 +38,14 @@ fn main() {
             report.isl_bytes,
             wall
         );
+        let p = slug(&report.name);
+        art.counter(&format!("{p}.requests"), report.requests);
+        art.counter(&format!("{p}.blocks_hit"), report.blocks_hit);
+        art.counter(&format!("{p}.migrated_chunks"), report.migrated_chunks);
+        art.counter(&format!("{p}.isl_bytes"), report.isl_bytes);
+        art.counter(&format!("{p}.sched_transfers"), report.sched.transfers);
+        art.counter(&format!("{p}.sched_virtual_time_ns"), report.sched.virtual_ns);
+        art.timing_ns(&format!("{p}.wall_ns"), wall.as_nanos() as u64);
     }
 
     println!("\n=== federated end-to-end (seed 42) ===");
@@ -66,6 +84,13 @@ fn main() {
                 sh.failed_satellites
             );
         }
+        let p = slug(&report.name);
+        art.counter(&format!("{p}.requests"), report.requests);
+        art.counter(&format!("{p}.blocks_hit"), report.blocks_hit);
+        art.counter(&format!("{p}.handovers"), report.handovers);
+        art.counter(&format!("{p}.replicated_blocks"), report.replicated_blocks);
+        art.counter(&format!("{p}.inter_shell_bytes"), report.inter_shell_bytes);
+        art.timing_ns(&format!("{p}.wall_ns"), wall.as_nanos() as u64);
     }
     // the tri-shell acceptance comparison: replicated vs re-homing-only
     let tri = FederatedScenarioSpec::federated_tri_shell(42);
@@ -78,16 +103,21 @@ fn main() {
         100.0 * rehoming.block_hit_rate,
         t0.elapsed()
     );
+    art.counter("tri_replicated.blocks_hit", replicated.blocks_hit);
+    art.counter("tri_rehoming.blocks_hit", rehoming.blocks_hit);
 
     println!("\n=== paper-19x5 repeatability (micro-bench) ===");
     let mut small = ScenarioSpec::paper_19x5(42);
     small.epochs = 2;
     small.requests_per_epoch = 8;
     let r = Bencher::new("run_scenario paper-19x5 (2 epochs x 8 reqs)")
-        .warmup(Duration::from_millis(50))
-        .measure(Duration::from_millis(500))
+        .fixed_iters(if smoke { 5 } else { 20 })
         .run(|| {
             std::hint::black_box(run_scenario(&small));
         });
     println!("{}", r.report());
+    art.push(&r);
+
+    let path = art.write().expect("write BENCH_scenarios.json");
+    println!("wrote {}", path.display());
 }

@@ -18,8 +18,11 @@
 //!   8-thread stripe serializes 144 round trips per worker.
 //!
 //! Also times one full `run_scenario` of both scenarios end to end
-//! (virtual time only, no sleeping).  Run with `--smoke` (CI) for short
-//! measurement windows; the speedup assertions hold in both modes.
+//! (virtual time only, no sleeping), and writes `BENCH_sched.json`:
+//! scenario counters and the scheduler's virtual-time totals go into the
+//! deterministic namespace (they are machine-independent), wall-clock
+//! stats into the timing namespace.  Run with `--smoke` (CI) for small
+//! fixed iteration counts; the speedup assertions hold in both modes.
 //!
 //! ```text
 //! cargo bench --bench sched [-- --smoke]
@@ -37,9 +40,9 @@ use skymemory::net::transport::{GroundView, InProcTransport, LinkModel, Transpor
 use skymemory::satellite::fleet::Fleet;
 use skymemory::sim::harness::run_scenario;
 use skymemory::sim::scenario::ScenarioSpec;
-use skymemory::util::bench::Bencher;
+use skymemory::util::bench::{smoke_mode, slug, BenchArtifact, Bencher};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// The old manager's thread cap, reproduced for the baseline.
 const MAX_FANOUT: usize = 8;
@@ -58,6 +61,8 @@ struct Shape {
     bandwidth_bps: f64,
     /// Engine-vs-baseline wall-clock floor asserted for this shape.
     min_speedup: f64,
+    /// Fixed measured iterations (smoke, full).
+    iters: (usize, usize),
 }
 
 const SHAPES: [Shape; 2] = [
@@ -71,6 +76,7 @@ const SHAPES: [Shape; 2] = [
         bandwidth_bps: 1e9,
         // acceptance: "no slower" — 0.9 leaves room for timer noise
         min_speedup: 0.9,
+        iters: (12, 60),
     },
     Shape {
         name: "mega-shell",
@@ -82,6 +88,7 @@ const SHAPES: [Shape; 2] = [
         bandwidth_bps: 2e7,
         // acceptance: "faster" — pipelining beats 144 serial RTTs/worker
         min_speedup: 1.0,
+        iters: (1, 4),
     },
 ];
 
@@ -172,32 +179,38 @@ fn sched_block(sched: &NetScheduler, stack: &Stack, shape: &Shape) {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    let (warmup, measure) = if smoke {
-        (Duration::from_millis(20), Duration::from_millis(150))
-    } else {
-        (Duration::from_millis(200), Duration::from_millis(900))
-    };
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("sched", smoke);
 
     println!("=== chunk fan-out at 1/{} emulated network time ===", (1.0 / SLEEP_SCALE) as u32);
     println!("=== thread-scoped baseline (serial RTT sleeps) vs net::sched (batch makespan) ===");
     let mut failures = 0u32;
     for shape in &SHAPES {
+        let iters = if smoke { shape.iters.0 } else { shape.iters.1 };
         let stack = build(shape, SLEEP_SCALE);
         let baseline = Bencher::new(format!("{} threads(8) {} chunks", shape.name, shape.n_chunks))
-            .warmup(warmup)
-            .measure(measure)
+            .fixed_iters(iters)
             .run(|| threaded_block(&stack, shape));
         println!("{}", baseline.report());
+        art.push(&baseline);
 
         let stack = build(shape, SLEEP_SCALE);
         let transport: Arc<dyn Transport> = stack.inproc.clone();
         let sched = NetScheduler::new(transport, SchedConfig { window: 8 });
         let engine = Bencher::new(format!("{} sched(w=8) {} chunks", shape.name, shape.n_chunks))
-            .warmup(warmup)
-            .measure(measure)
+            .fixed_iters(iters)
             .run(|| sched_block(&sched, &stack, shape));
         println!("{}", engine.report());
+        art.push(&engine);
+
+        // The engine's virtual time per iteration is machine-independent:
+        // total virtual ns / batches run is a pure function of the shape.
+        let snap = sched.stats.snapshot();
+        let prefix = slug(shape.name);
+        let transfers_per_iter = snap.transfers / snap.batches.max(1) * 2;
+        let virtual_ns_per_iter = snap.virtual_ns / (snap.batches.max(1) / 2);
+        art.counter(&format!("{prefix}.transfers_per_iter"), transfers_per_iter);
+        art.counter(&format!("{prefix}.virtual_ns_per_iter"), virtual_ns_per_iter);
 
         let speedup = baseline.mean.as_secs_f64() / engine.mean.as_secs_f64();
         let ok = speedup >= shape.min_speedup;
@@ -216,6 +229,7 @@ fn main() {
     for spec in [ScenarioSpec::paper_19x5(42), ScenarioSpec::mega_shell(42)] {
         let t0 = Instant::now();
         let r = run_scenario(&spec);
+        let wall = t0.elapsed();
         println!(
             "{:<16} {:>4} reqs  hit {:>5.1}%  {:>8} transfers  peak in-flight {:>5}  \
              queued {:>9.3} ms  wall {:.2?}",
@@ -225,9 +239,18 @@ fn main() {
             r.sched.transfers,
             r.sched.peak_in_flight,
             r.sched.queued_ns as f64 / 1e6,
-            t0.elapsed()
+            wall
         );
+        let prefix = format!("scenario.{}", slug(&r.name));
+        art.counter(&format!("{prefix}.requests"), r.requests);
+        art.counter(&format!("{prefix}.hit_permille"), (r.block_hit_rate * 1000.0).round() as u64);
+        art.counter(&format!("{prefix}.transfers"), r.sched.transfers);
+        art.counter(&format!("{prefix}.virtual_time_ns"), r.sched.virtual_ns);
+        art.counter(&format!("{prefix}.peak_in_flight"), r.sched.peak_in_flight);
+        art.timing_ns(&format!("{prefix}.wall_ns"), wall.as_nanos() as u64);
     }
 
+    let path = art.write().expect("write BENCH_sched.json");
+    println!("wrote {}", path.display());
     assert_eq!(failures, 0, "{failures} shape(s) regressed below their speedup floor");
 }

@@ -76,7 +76,7 @@ impl Sha256 {
         pad[0] = 0x80;
         let pad_len = if self.buf_len < 56 { 56 - self.buf_len } else { 120 - self.buf_len };
         pad[pad_len..pad_len + 8].copy_from_slice(&bit_len.to_be_bytes());
-        self.update_no_count(&pad[..pad_len + 8].to_vec());
+        self.update_no_count(&pad[..pad_len + 8]);
         let mut out = [0u8; DIGEST_LEN];
         for (i, w) in self.state.iter().enumerate() {
             out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());
@@ -148,8 +148,17 @@ pub fn sha256(data: &[u8]) -> [u8; DIGEST_LEN] {
 }
 
 /// Render a digest as lowercase hex (for logs and the HTTP API).
+/// Writes into one preallocated `String` — this runs on every chained
+/// block-key derivation, where a per-byte `format!` allocation showed up
+/// in the hotpath bench.
 pub fn to_hex(digest: &[u8]) -> String {
-    digest.iter().map(|b| format!("{b:02x}")).collect()
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(digest.len() * 2);
+    for b in digest {
+        out.push(HEX[(b >> 4) as usize] as char);
+        out.push(HEX[(b & 0xf) as usize] as char);
+    }
+    out
 }
 
 #[cfg(test)]

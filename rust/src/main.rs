@@ -15,6 +15,8 @@
 //! skymemory federate   [--shells 2|3 | --name NAME] [--seed 42]
 //!                      [--replicate K] [--baseline]
 //! skymemory repro      [--outdir results]
+//! skymemory bench      --diff <old.json> <new.json> [--tolerance PCT]
+//!                      [--det-only]
 //! ```
 //!
 //! `scenario`, `sched` and `federate` answer `--help` with their full
@@ -448,6 +450,62 @@ fn cmd_federate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `skymemory bench --help`.
+const BENCH_HELP: &str = "\
+usage: skymemory bench --diff <old.json> <new.json> [--tolerance PCT]
+                       [--det-only]
+
+Compare two BENCH_*.json artifacts written by the bench binaries
+(docs/METRICS.md \"Bench artifacts\" documents the schema).
+`deterministic.*` counters must match exactly in both directions —
+any drift at the same mode and seed is a logic change, not noise.
+`timing.*` keys are direction-aware: only slowdowns beyond the
+tolerance count as regressions, speedups never do.
+
+flags:
+  --diff A B       the two artifact files to compare (old, then new)
+  --tolerance PCT  allowed timing slowdown in percent (default 15)
+  --det-only       ignore timing.* entirely — compare deterministic
+                   counters only (what CI does: timings are not
+                   comparable across runner hardware)
+  --help           this text
+
+exit codes: 0 no regressions; 1 regressions found (counter drift,
+timing beyond tolerance, tracked keys dropped) or an error reading a
+file; 2 usage error.
+";
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{BENCH_HELP}");
+        return Ok(());
+    }
+    let Some(a_path) = args.get("diff") else {
+        bail!("usage: skymemory bench --diff <old.json> <new.json> (see --help)");
+    };
+    let b_path = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("usage: skymemory bench --diff <old.json> <new.json>"))?;
+    let tolerance_pct: f64 = args.get_or("tolerance", 15.0)?;
+    if !(0.0..1000.0).contains(&tolerance_pct) {
+        bail!("bad value for --tolerance: {tolerance_pct} (percent, 0..1000)");
+    }
+    let a = std::fs::read_to_string(a_path).with_context(|| format!("reading {a_path}"))?;
+    let b = std::fs::read_to_string(b_path).with_context(|| format!("reading {b_path}"))?;
+    let report = skymemory::sim::diff::diff_bench_metrics(
+        &a,
+        &b,
+        tolerance_pct / 100.0,
+        args.has("det-only"),
+    )?;
+    print!("{}", report.render());
+    if report.has_regressions() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
     let outdir = std::path::PathBuf::from(args.get("outdir").unwrap_or("results"));
     let files = skymemory::repro::write_all(&outdir).context("writing results")?;
@@ -461,7 +519,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|repro> [flags]\n\
+        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|repro|bench> [flags]\n\
          see rust/src/main.rs header for per-command flags"
     );
     std::process::exit(2)
@@ -482,6 +540,7 @@ fn main() -> Result<()> {
         "sched" => cmd_sched(&args),
         "federate" => cmd_federate(&args),
         "repro" => cmd_repro(&args),
+        "bench" => cmd_bench(&args),
         _ => usage(),
     }
 }

@@ -54,7 +54,8 @@ use crate::constellation::topology::SatId;
 use crate::kvc::chunk::ChunkKey;
 use crate::net::messages::{Request, Response};
 use crate::net::transport::{LinkModel, RouteInfo, Transport};
-use std::collections::{BTreeMap, BTreeSet};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -268,7 +269,7 @@ impl NetScheduler {
             link_model,
             window: self.config.window,
             flights: BTreeMap::new(),
-            events: BTreeMap::new(),
+            events: BinaryHeap::new(),
             links: BTreeMap::new(),
             active: 0,
             peak_in_flight: 0,
@@ -351,7 +352,7 @@ pub fn race_batches(arms: Vec<(&NetScheduler, Vec<Transfer>)>) -> RaceOutcome {
 // The single-batch event engine (single-threaded, no locks)
 // ======================================================================
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum Ev {
     ArriveUplink,
     UplinkDone,
@@ -390,9 +391,16 @@ struct Engine<'a> {
     link_model: Option<LinkModel>,
     window: usize,
     flights: BTreeMap<u64, Flight>,
-    /// Event queue keyed by `(virtual_time_ns, tag)` — the deterministic
-    /// total order of the simulation.
-    events: BTreeMap<(u64, u64), Ev>,
+    /// Event queue: a binary min-heap popping the smallest
+    /// `(virtual_time_ns, tag)` — the deterministic total order of the
+    /// simulation.  A transfer's state machine is linear (every popped
+    /// event schedules at most one successor for that tag, and a
+    /// link-queued transfer holds no event), so at most one event per tag
+    /// is ever pending and `(time, tag)` is unique in the heap; the `Ev`
+    /// component never has to break a tie.  O(log n) push/pop without the
+    /// BTreeMap's rebalancing and allocation overhead — this queue is the
+    /// hottest structure of every scenario run.
+    events: BinaryHeap<Reverse<(u64, u64, Ev)>>,
     links: BTreeMap<LinkKey, LinkState>,
     active: usize,
     peak_in_flight: usize,
@@ -429,7 +437,7 @@ impl Engine<'_> {
         };
         let prev = self.flights.insert(t.tag, flight);
         assert!(prev.is_none(), "duplicate transfer tag {}", t.tag);
-        self.events.insert((0, t.tag), Ev::ArriveUplink);
+        self.events.push(Reverse((0, t.tag, Ev::ArriveUplink)));
     }
 
     /// Execute the data plane of one transfer (deterministic point in the
@@ -493,7 +501,7 @@ impl Engine<'_> {
         let link = self.links.entry(key).or_default();
         link.transfers += 1;
         link.busy_ns += hold;
-        self.events.insert((t + hold, tag), Ev::UplinkDone);
+        self.events.push(Reverse((t + hold, tag, Ev::UplinkDone)));
     }
 
     /// Begin the destination-service hold of `tag` at time `t`.
@@ -503,7 +511,7 @@ impl Engine<'_> {
         let link = self.links.entry(key).or_default();
         link.transfers += 1;
         link.busy_ns += hold;
-        self.events.insert((t + hold, tag), Ev::ServeDone);
+        self.events.push(Reverse((t + hold, tag, Ev::ServeDone)));
     }
 
     /// Acquire a window slot on `key` at time `t`, or join its FIFO.
@@ -538,7 +546,7 @@ impl Engine<'_> {
 
     fn run(&mut self) -> BatchReport {
         let mut makespan = 0u64;
-        while let Some(((t, tag), ev)) = self.events.pop_first() {
+        while let Some(Reverse((t, tag, ev))) = self.events.pop() {
             match ev {
                 Ev::ArriveUplink => {
                     let key = self.uplink_key(tag);
@@ -552,7 +560,7 @@ impl Engine<'_> {
                         self.start_uplink(t, next);
                     }
                     let prop = self.flights[&tag].prop_ns;
-                    self.events.insert((t + prop, tag), Ev::ArriveServe);
+                    self.events.push(Reverse((t + prop, tag, Ev::ArriveServe)));
                 }
                 Ev::ArriveServe => {
                     let key = self.serve_key(tag);
@@ -566,7 +574,7 @@ impl Engine<'_> {
                         self.start_serve(t, next);
                     }
                     let prop = self.flights[&tag].prop_ns;
-                    self.events.insert((t + prop, tag), Ev::Complete);
+                    self.events.push(Reverse((t + prop, tag, Ev::Complete)));
                 }
                 Ev::Complete => {
                     self.active -= 1;

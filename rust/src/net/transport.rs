@@ -92,6 +92,14 @@ pub struct TransportStats {
     pub isl_bytes: AtomicU64,
     /// Accumulated emulated network latency (ns), whether or not slept.
     pub sim_latency_ns: AtomicU64,
+    /// Forwards dropped because the envelope TTL expired in the mesh
+    /// (previously a silent drop, indistinguishable from satellite loss).
+    pub dropped_ttl: AtomicU64,
+    /// Datagrams discarded as stale or undecodable (responses to a
+    /// request that already timed out, deframe/decode failures).
+    pub dropped_stale: AtomicU64,
+    /// Forwards dropped because the next hop had no known address.
+    pub dropped_unroutable: AtomicU64,
 }
 
 /// A synchronous satellite-cache transport.  Thread-safe: the manager

@@ -14,7 +14,7 @@ use crate::constellation::topology::{SatId, Torus};
 use crate::kvc::eviction::EvictionPolicy;
 use crate::net::messages::{
     decode_request, decode_response, encode_request, encode_response, is_request, Envelope,
-    Request, Response,
+    Request, Response, DEFAULT_TTL,
 };
 use crate::net::spp::{deframe, frame, PacketType};
 use crate::net::transport::{GroundView, Transport, TransportStats};
@@ -57,6 +57,10 @@ struct UdpSatellite {
     torus: Torus,
     book: Arc<AddrBook>,
     shutdown: Arc<AtomicBool>,
+    /// Fleet-wide counters shared by every satellite thread: drops that
+    /// used to be silent `continue`s are counted here so a debugging
+    /// session can tell TTL expiry from satellite loss.
+    stats: Arc<TransportStats>,
     seq: u16,
 }
 
@@ -77,14 +81,23 @@ impl UdpSatellite {
                 }
                 Err(_) => return,
             };
-            let Ok((_hdr, body)) = deframe(&buf[..len]) else { continue };
+            let Ok((_hdr, body)) = deframe(&buf[..len]) else {
+                self.stats.dropped_stale.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
             if !is_request(body) {
-                continue; // responses are not routed through satellites here
+                // responses are not routed through satellites here
+                self.stats.dropped_stale.fetch_add(1, Ordering::Relaxed);
+                continue;
             }
-            let Ok((mut env, req)) = decode_request(body) else { continue };
+            let Ok((mut env, req)) = decode_request(body) else {
+                self.stats.dropped_stale.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
             if env.dest != self.node.id {
                 // forward one hop along the mesh
                 if env.ttl == 0 {
+                    self.stats.dropped_ttl.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
                 env.ttl -= 1;
@@ -94,6 +107,8 @@ impl UdpSatellite {
                     self.seq = self.seq.wrapping_add(1);
                     let pkt = frame(PacketType::Telecommand, self.apid(), self.seq, &data);
                     let _ = self.socket.send_to(&pkt, addr);
+                } else {
+                    self.stats.dropped_unroutable.fetch_add(1, Ordering::Relaxed);
                 }
                 continue;
             }
@@ -111,6 +126,8 @@ impl UdpSatellite {
                     self.seq = self.seq.wrapping_add(1);
                     let pkt = frame(PacketType::Telecommand, self.apid(), self.seq, &data);
                     let _ = self.socket.send_to(&pkt, addr);
+                } else {
+                    self.stats.dropped_unroutable.fetch_add(1, Ordering::Relaxed);
                 }
             }
             if let Some(reply) = env.reply_to {
@@ -131,6 +148,9 @@ impl UdpSatellite {
 pub struct UdpFleet {
     pub torus: Torus,
     pub book: Arc<AddrBook>,
+    /// Fleet-side drop counters (`dropped_ttl`, `dropped_stale`,
+    /// `dropped_unroutable`), aggregated over every satellite thread.
+    pub stats: Arc<TransportStats>,
     nodes: Vec<Arc<Node>>,
     shutdown: Arc<AtomicBool>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -160,6 +180,7 @@ impl UdpFleet {
             sockets.push((sat, socket));
         }
         let book = Arc::new(book);
+        let stats = Arc::new(TransportStats::default());
         let mut nodes = Vec::new();
         let mut handles = Vec::new();
         for (sat, socket) in sockets {
@@ -171,11 +192,12 @@ impl UdpFleet {
                 torus,
                 book: book.clone(),
                 shutdown: shutdown.clone(),
+                stats: stats.clone(),
                 seq: 0,
             };
             handles.push(std::thread::spawn(move || s.run()));
         }
-        Ok(Self { torus, book, nodes, shutdown, handles })
+        Ok(Self { torus, book, stats, nodes, shutdown, handles })
     }
 
     pub fn node(&self, sat: SatId) -> Option<&Arc<Node>> {
@@ -210,6 +232,7 @@ pub struct UdpTransport {
     ground: GroundView,
     socket: Mutex<UdpSocket>,
     timeout: Duration,
+    ttl: u8,
     stats: TransportStats,
     req_counter: AtomicU64,
 }
@@ -224,9 +247,19 @@ impl UdpTransport {
             ground,
             socket: Mutex::new(socket),
             timeout,
+            ttl: DEFAULT_TTL,
             stats: TransportStats::default(),
             req_counter: AtomicU64::new(1),
         })
+    }
+
+    /// Override the envelope TTL of outgoing requests (default
+    /// [`DEFAULT_TTL`]).  A TTL smaller than the route's hop count makes
+    /// the mesh drop the forward — counted in the fleet's `dropped_ttl`
+    /// — and the client surfaces a counted timeout.
+    pub fn with_ttl(mut self, ttl: u8) -> Self {
+        self.ttl = ttl;
+        self
     }
 
     fn entry_for(&self, dest: SatId) -> SatId {
@@ -244,7 +277,8 @@ impl Transport for UdpTransport {
         let req_id = self.req_counter.fetch_add(1, Ordering::Relaxed);
         let socket = self.socket.lock().unwrap();
         let local = socket.local_addr()?;
-        let env = Envelope::new(dest, req_id).with_reply_to(local);
+        let mut env = Envelope::new(dest, req_id).with_reply_to(local);
+        env.ttl = self.ttl;
         let entry = self.entry_for(dest);
         let entry_addr = self
             .book
@@ -271,13 +305,22 @@ impl Transport for UdpTransport {
                 }
                 Err(e) => return Err(e.into()),
             };
-            let Ok((_h, body)) = deframe(&buf[..len]) else { continue };
+            let Ok((_h, body)) = deframe(&buf[..len]) else {
+                self.stats.dropped_stale.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
             if is_request(body) {
+                self.stats.dropped_stale.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
-            let Ok((renv, resp)) = decode_response(body) else { continue };
+            let Ok((renv, resp)) = decode_response(body) else {
+                self.stats.dropped_stale.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
             if renv.req_id != req_id {
-                continue; // stale response from an earlier timeout
+                // stale response from an earlier timeout
+                self.stats.dropped_stale.fetch_add(1, Ordering::Relaxed);
+                continue;
             }
             if matches!(resp, Response::GetMiss) {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
@@ -341,6 +384,27 @@ mod tests {
         assert_eq!(t.get_chunk(far, key(2, 1)).unwrap(), Some(vec![7; 128]));
         // the chunk physically lives on the far node
         assert_eq!(fleet.node(far).unwrap().chunk_count(), 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn udp_ttl_expiry_is_a_counted_timeout() {
+        let torus = Torus::new(3, 7);
+        let fleet = UdpFleet::spawn(torus, 1 << 20, EvictionPolicy::Gossip, None).unwrap();
+        let center = SatId::new(1, 3);
+        let ground = GroundView::new(center, &LosGrid::new(center, 1, 1), torus.sats_per_plane);
+        // (0, 0) is 4 mesh hops from the entry satellite; a TTL of 2
+        // expires in flight, so the request must surface as a counted
+        // timeout on the client and a counted TTL drop on the fleet —
+        // not a mystery hang.
+        let t = UdpTransport::new(torus, fleet.book.clone(), ground, Duration::from_millis(300))
+            .unwrap()
+            .with_ttl(2);
+        let far = SatId::new(0, 0);
+        let err = t.get_chunk(far, key(4, 0)).unwrap_err();
+        assert!(err.to_string().contains("timeout"), "{err}");
+        assert_eq!(t.stats().errors.load(Ordering::Relaxed), 1);
+        assert!(fleet.stats.dropped_ttl.load(Ordering::Relaxed) >= 1, "the drop is visible");
         fleet.shutdown();
     }
 

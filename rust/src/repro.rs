@@ -208,6 +208,24 @@ pub fn write_all(outdir: &std::path::Path) -> std::io::Result<Vec<std::path::Pat
         std::fs::write(&path, content)?;
         written.push(path);
     }
+    // Snapshot any BENCH_*.json perf-trajectory artifacts sitting in the
+    // working directory (written by the bench binaries, see
+    // docs/METRICS.md "Bench artifacts") next to the paper artifacts.
+    let mut bench: Vec<std::path::PathBuf> = std::fs::read_dir(".")?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    bench.sort();
+    for src in bench {
+        let dst = outdir.join(src.file_name().unwrap());
+        std::fs::copy(&src, &dst)?;
+        written.push(dst);
+    }
     Ok(written)
 }
 
@@ -263,7 +281,9 @@ mod tests {
     fn write_all_creates_files() {
         let dir = std::env::temp_dir().join(format!("skymem_repro_{}", std::process::id()));
         let files = write_all(&dir).unwrap();
-        assert_eq!(files.len(), 8);
+        // 8 paper artifacts, plus any BENCH_*.json snapshots present in
+        // the working directory at test time
+        assert!(files.len() >= 8, "{}", files.len());
         for f in &files {
             assert!(f.exists());
             assert!(std::fs::metadata(f).unwrap().len() > 10);

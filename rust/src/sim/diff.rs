@@ -1,19 +1,54 @@
-//! Scenario-diff: compare two scenario metrics JSON files and report
-//! per-metric deltas, flagging regressions.
+//! Metrics-diff: compare two metrics JSON files and report per-metric
+//! deltas, flagging regressions.
 //!
 //! A metrics file holds one JSON object per line (the format
-//! `skymemory scenario`, `repro::scenarios` and the sweep example emit);
-//! objects pair up by their `"name"` field.  Nested objects (`kvc`,
-//! `shells[i]`) are flattened with dotted keys.  Direction-aware keys
-//! decide what counts as a regression: hit rates falling or latencies /
-//! failure counters rising; everything else is reported as a neutral
-//! delta.  `skymemory scenario --diff a.json b.json` exits nonzero when
-//! regressions are found, so the tool gates CI runs across commits.
-//! `docs/METRICS.md` documents the file format, every metric key and a
-//! worked `--diff` example.
+//! `skymemory scenario`, `repro::scenarios`, the sweep example and the
+//! `BENCH_*.json` bench artifacts emit); objects pair up by their
+//! `"name"` field.  Nested objects (`kvc`, `shells[i]`) are flattened
+//! with dotted keys.  A per-key [`Rule`] decides what counts as a
+//! regression; two classifiers ship:
+//!
+//! * [`diff_metrics`] — scenario semantics: direction-aware keys (hit
+//!   rates falling or latencies / failure counters rising regress),
+//!   everything else a neutral delta.  Backs
+//!   `skymemory scenario --diff a.json b.json`.
+//! * [`diff_bench_metrics`] — bench-artifact semantics: every
+//!   `deterministic.*` key must match exactly, every `timing.*` key is
+//!   lower-better within a relative tolerance (machine noise is not a
+//!   regression), and `--det-only` ignores timing keys entirely.  Backs
+//!   `skymemory bench --diff old.json new.json`.
+//!
+//! Both exit nonzero when regressions are found, so the tools gate CI
+//! runs across commits.  `docs/METRICS.md` documents the file formats,
+//! every metric key and worked `--diff` examples.
 
 use crate::util::json::Json;
 use anyhow::{bail, Result};
+
+/// How one flattened key participates in the diff.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Rule {
+    /// A drop beyond [`EPS`] regresses (hit rates).
+    HigherBetter,
+    /// A rise beyond [`EPS`] regresses (latencies, failure counters).
+    LowerBetter,
+    /// Any change beyond [`EPS`] regresses (deterministic counters).
+    Exact,
+    /// Lower is better, but only a rise beyond `a * (1 + tol)` regresses
+    /// (timing stats: machine noise inside the tolerance is neutral).
+    TolerantLower(f64),
+    /// Changes are reported but never regress.
+    Neutral,
+    /// The key does not participate at all (not even in missing-key lists).
+    Ignore,
+}
+
+impl Rule {
+    /// Tracked keys cannot be silently dropped from the second file.
+    fn tracked(self) -> bool {
+        !matches!(self, Rule::Neutral | Rule::Ignore)
+    }
+}
 
 /// Metrics where *bigger* is better (suffix match on flattened keys).
 const HIGHER_BETTER: &[&str] =
@@ -71,12 +106,16 @@ pub struct DiffReport {
     pub keys_only_in_a: Vec<(String, String)>,
     /// (scenario, key) pairs present only in the second file.
     pub keys_only_in_b: Vec<(String, String)>,
+    /// The subset of `keys_only_in_a` whose rule is tracked
+    /// (direction-aware, exact or tolerance-compared) — each of these
+    /// drops is a regression.
+    pub tracked_key_drops: Vec<(String, String)>,
 }
 
 impl DiffReport {
     pub fn has_regressions(&self) -> bool {
         self.deltas.iter().any(|d| d.regression)
-            || self.keys_only_in_a.iter().any(|(_, k)| direction(k).is_some())
+            || !self.tracked_key_drops.is_empty()
             || !self.only_in_a.is_empty()
     }
 
@@ -94,8 +133,9 @@ impl DiffReport {
         for name in &self.only_in_b {
             let _ = writeln!(out, "+ {name}: only in the second file");
         }
-        for (scenario, key) in &self.keys_only_in_a {
-            let marker = if direction(key).is_some() { "!" } else { "-" };
+        for pair in &self.keys_only_in_a {
+            let marker = if self.tracked_key_drops.contains(pair) { "!" } else { "-" };
+            let (scenario, key) = pair;
             let _ = writeln!(out, "{marker} {scenario}/{key}: missing in the second file");
         }
         for (scenario, key) in &self.keys_only_in_b {
@@ -121,9 +161,8 @@ impl DiffReport {
         if nothing {
             out.push_str("no differences\n");
         } else {
-            let regressions = self.regressions().count()
-                + self.keys_only_in_a.iter().filter(|(_, k)| direction(k).is_some()).count()
-                + self.only_in_a.len();
+            let regressions =
+                self.regressions().count() + self.tracked_key_drops.len() + self.only_in_a.len();
             let _ =
                 writeln!(out, "{} metrics changed, {} regressions", self.deltas.len(), regressions);
         }
@@ -206,8 +245,8 @@ fn parse_metrics(text: &str) -> Result<Vec<(String, Vec<(String, f64)>)>> {
     Ok(out)
 }
 
-/// Diff two metrics files (the raw text of each).
-pub fn diff_metrics(a_text: &str, b_text: &str) -> Result<DiffReport> {
+/// Diff two metrics files under a per-key rule classifier.
+fn diff_with<F: Fn(&str) -> Rule>(a_text: &str, b_text: &str, rule: F) -> Result<DiffReport> {
     let a = parse_metrics(a_text)?;
     let b = parse_metrics(b_text)?;
     let mut report = DiffReport::default();
@@ -224,23 +263,32 @@ pub fn diff_metrics(a_text: &str, b_text: &str) -> Result<DiffReport> {
     for (name, a_flat) in &a {
         let Some((_, b_flat)) = b.iter().find(|(n, _)| n == name) else { continue };
         for (key, _) in b_flat {
-            if !a_flat.iter().any(|(k, _)| k == key) {
+            if rule(key) != Rule::Ignore && !a_flat.iter().any(|(k, _)| k == key) {
                 report.keys_only_in_b.push((name.clone(), key.clone()));
             }
         }
         for (key, av) in a_flat {
+            let key_rule = rule(key);
+            if key_rule == Rule::Ignore {
+                continue;
+            }
             let Some((_, bv)) = b_flat.iter().find(|(k, _)| k == key) else {
                 report.keys_only_in_a.push((name.clone(), key.clone()));
+                if key_rule.tracked() {
+                    report.tracked_key_drops.push((name.clone(), key.clone()));
+                }
                 continue;
             };
             let delta = bv - av;
             if delta.abs() <= EPS {
                 continue;
             }
-            let regression = match direction(key) {
-                Some(true) => delta < -EPS,
-                Some(false) => delta > EPS,
-                None => false,
+            let regression = match key_rule {
+                Rule::HigherBetter => delta < -EPS,
+                Rule::LowerBetter => delta > EPS,
+                Rule::Exact => true,
+                Rule::TolerantLower(tol) => *bv > av * (1.0 + tol) + EPS,
+                Rule::Neutral | Rule::Ignore => false,
             };
             report.deltas.push(MetricDelta {
                 scenario: name.clone(),
@@ -252,6 +300,47 @@ pub fn diff_metrics(a_text: &str, b_text: &str) -> Result<DiffReport> {
         }
     }
     Ok(report)
+}
+
+/// Scenario classifier: the direction tables above, neutral otherwise.
+fn scenario_rule(key: &str) -> Rule {
+    match direction(key) {
+        Some(true) => Rule::HigherBetter,
+        Some(false) => Rule::LowerBetter,
+        None => Rule::Neutral,
+    }
+}
+
+/// Diff two scenario metrics files (the raw text of each).
+pub fn diff_metrics(a_text: &str, b_text: &str) -> Result<DiffReport> {
+    diff_with(a_text, b_text, scenario_rule)
+}
+
+/// Diff two `BENCH_*.json` artifacts: `deterministic.*` keys compare
+/// exactly (any change regresses — those counters must be bit-identical
+/// run-over-run), `timing.*` keys are lower-better within a relative
+/// `timing_tolerance` (0.15 = ±15%), and `det_only` drops timing keys
+/// from the comparison entirely (the CI gate runs on shared runners
+/// whose wall-clock numbers are not comparable to the baselines').
+pub fn diff_bench_metrics(
+    a_text: &str,
+    b_text: &str,
+    timing_tolerance: f64,
+    det_only: bool,
+) -> Result<DiffReport> {
+    diff_with(a_text, b_text, move |key: &str| {
+        if key.starts_with("deterministic.") {
+            Rule::Exact
+        } else if key.starts_with("timing.") {
+            if det_only {
+                Rule::Ignore
+            } else {
+                Rule::TolerantLower(timing_tolerance)
+            }
+        } else {
+            Rule::Neutral
+        }
+    })
 }
 
 #[cfg(test)]
@@ -362,6 +451,63 @@ mod tests {
         // an extra occurrence on one side surfaces as a missing scenario
         let r2 = diff_metrics(&a, A).unwrap();
         assert_eq!(r2.only_in_a, vec!["s1#2"]);
+    }
+
+    const BA: &str = r#"{"deterministic":{"op":{"bytes":128,"iters":2},"sched.transfers":38},"mode":"smoke","name":"hotpath","timing":{"op":{"mean_ns":1000,"p50_ns":900}}}"#;
+
+    #[test]
+    fn bench_counter_change_regresses_in_either_direction() {
+        let down = BA.replace(r#""sched.transfers":38"#, r#""sched.transfers":37"#);
+        let r = diff_bench_metrics(BA, &down, 0.15, false).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.regressions().next().unwrap().key, "deterministic.sched.transfers");
+        let up = BA.replace(r#""sched.transfers":38"#, r#""sched.transfers":39"#);
+        assert!(diff_bench_metrics(BA, &up, 0.15, false).unwrap().has_regressions());
+    }
+
+    #[test]
+    fn bench_timing_noise_inside_tolerance_is_not_a_regression() {
+        let noisy = BA.replace(r#""mean_ns":1000"#, r#""mean_ns":1100"#);
+        let r = diff_bench_metrics(BA, &noisy, 0.15, false).unwrap();
+        assert_eq!(r.deltas.len(), 1, "still reported");
+        assert!(!r.has_regressions(), "+10% is inside the ±15% tolerance");
+        let worse = BA.replace(r#""mean_ns":1000"#, r#""mean_ns":1200"#);
+        assert!(diff_bench_metrics(BA, &worse, 0.15, false).unwrap().has_regressions());
+        let better = BA.replace(r#""mean_ns":1000"#, r#""mean_ns":500"#);
+        assert!(!diff_bench_metrics(BA, &better, 0.15, false).unwrap().has_regressions());
+    }
+
+    #[test]
+    fn bench_det_only_ignores_timing_keys_entirely() {
+        let much_worse = BA.replace(r#""mean_ns":1000"#, r#""mean_ns":9000"#);
+        let r = diff_bench_metrics(BA, &much_worse, 0.15, true).unwrap();
+        assert!(r.deltas.is_empty());
+        assert!(!r.has_regressions());
+        let no_timing =
+            BA.replace(r#","timing":{"op":{"mean_ns":1000,"p50_ns":900}}"#, r#","timing":{}"#);
+        let r2 = diff_bench_metrics(BA, &no_timing, 0.15, true).unwrap();
+        assert!(r2.keys_only_in_a.is_empty(), "{r2:?}");
+        assert!(!r2.has_regressions());
+    }
+
+    #[test]
+    fn bench_added_counters_are_neutral_but_drops_regress() {
+        // bootstrap baselines carry a subset of the counters a real run
+        // emits; the fresh file adding keys must pass the gate …
+        let fresh = BA.replace(
+            r#""sched.transfers":38"#,
+            r#""sched.transfers":38,"sched.virtual_time_ns":123"#,
+        );
+        let r = diff_bench_metrics(BA, &fresh, 0.15, true).unwrap();
+        assert_eq!(
+            r.keys_only_in_b,
+            vec![("hotpath".to_string(), "deterministic.sched.virtual_time_ns".to_string())]
+        );
+        assert!(!r.has_regressions());
+        // … but dropping a baseline counter cannot.
+        let r2 = diff_bench_metrics(&fresh, BA, 0.15, true).unwrap();
+        assert_eq!(r2.tracked_key_drops, r2.keys_only_in_a);
+        assert!(r2.has_regressions());
     }
 
     #[test]

@@ -1,14 +1,36 @@
 //! Criterion-style micro-benchmark harness (criterion is unavailable in
 //! the offline build): warmup, timed iterations, mean / p50 / p95 / p99,
 //! and a stable one-line report format the bench binaries print.
+//!
+//! Percentiles use the nearest-rank definition: the p-th percentile of N
+//! sorted samples is the sample at rank `ceil(p * N)` (1-based), i.e.
+//! index `ceil(p * N) - 1`.  For ultra-cheap operations the harness can
+//! batch several iterations per `Instant::now()` pair ([`Bencher::batch`])
+//! so the clock overhead does not dominate the samples.
+//!
+//! Besides the human-readable report, each bench binary serialises its
+//! results into a `BENCH_<name>.json` artifact via [`BenchArtifact`]:
+//! a byte-stable (sorted-key, compact) JSON object with two namespaces,
+//! `deterministic` (iteration/byte/transfer counters that must be
+//! bit-identical run-over-run) and `timing` (wall-clock stats that are
+//! only comparable within a tolerance).  `skymemory bench --diff`
+//! compares two artifacts with exactly those rules.
 
+use crate::util::json::{n, obj, s, Json};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
+    /// Total closure invocations measured (batched iterations all count).
     pub iters: usize,
+    /// Timing samples collected (== `iters` unless batching was used).
+    pub samples: usize,
+    /// Bytes processed per iteration (0 when not byte-oriented).
+    pub bytes_per_iter: usize,
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
@@ -25,10 +47,32 @@ impl BenchResult {
         )
     }
 
-    /// Throughput line for a known per-iteration workload size.
-    pub fn throughput(&self, bytes_per_iter: usize) -> String {
-        let bps = bytes_per_iter as f64 / self.mean.as_secs_f64();
+    /// Throughput line derived from the recorded per-iteration byte count.
+    pub fn throughput(&self) -> String {
+        let bps = self.bytes_per_iter as f64 / self.mean.as_secs_f64().max(1e-12);
         format!("{:<44} {:>10.1} MiB/s", self.name, bps / (1024.0 * 1024.0))
+    }
+
+    /// Deterministic counters for the artifact: iteration count and, when
+    /// the bench is byte-oriented, total bytes processed.
+    pub fn deterministic_json(&self) -> Json {
+        let mut pairs = vec![("iters", n(self.iters as f64))];
+        if self.bytes_per_iter > 0 {
+            pairs.push(("bytes", n((self.bytes_per_iter * self.iters) as f64)));
+        }
+        obj(pairs)
+    }
+
+    /// Timing stats (nanoseconds) for the artifact's `timing` namespace.
+    pub fn timing_json(&self) -> Json {
+        obj(vec![
+            ("max_ns", n(self.max.as_nanos() as f64)),
+            ("mean_ns", n(self.mean.as_nanos() as f64)),
+            ("min_ns", n(self.min.as_nanos() as f64)),
+            ("p50_ns", n(self.p50.as_nanos() as f64)),
+            ("p95_ns", n(self.p95.as_nanos() as f64)),
+            ("p99_ns", n(self.p99.as_nanos() as f64)),
+        ])
     }
 }
 
@@ -38,6 +82,9 @@ pub struct Bencher {
     warmup: Duration,
     measure: Duration,
     max_iters: usize,
+    fixed_iters: Option<usize>,
+    batch: usize,
+    bytes_per_iter: usize,
 }
 
 impl Bencher {
@@ -47,6 +94,9 @@ impl Bencher {
             warmup: Duration::from_millis(200),
             measure: Duration::from_millis(800),
             max_iters: 1_000_000,
+            fixed_iters: None,
+            batch: 1,
+            bytes_per_iter: 0,
         }
     }
 
@@ -65,51 +115,209 @@ impl Bencher {
         self
     }
 
-    /// Run the closure repeatedly and collect statistics.
-    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
-        // warmup
-        let start = Instant::now();
-        while start.elapsed() < self.warmup {
-            f();
-        }
-        // measure
-        let mut samples = Vec::new();
-        let start = Instant::now();
-        while start.elapsed() < self.measure && samples.len() < self.max_iters {
-            let t0 = Instant::now();
-            f();
-            samples.push(t0.elapsed());
-        }
-        Self::summarize(self.name, samples)
+    /// Run exactly `n` measured iterations (plus `max(1, n/8)` warmup
+    /// iterations) instead of a wall-clock budget.  This makes the
+    /// iteration count — and every counter derived from it — identical on
+    /// every machine, which is what the `BENCH_*.json` deterministic
+    /// namespace requires.
+    pub fn fixed_iters(mut self, n: usize) -> Self {
+        self.fixed_iters = Some(n.max(1));
+        self
     }
 
-    fn summarize(name: String, mut samples: Vec<Duration>) -> BenchResult {
-        assert!(!samples.is_empty(), "no samples collected");
-        samples.sort_unstable();
-        let iters = samples.len();
-        let total: Duration = samples.iter().sum();
-        let pct = |p: f64| samples[((iters as f64 * p) as usize).min(iters - 1)];
-        BenchResult {
-            name,
-            iters,
-            mean: total / iters as u32,
-            p50: pct(0.50),
-            p95: pct(0.95),
-            p99: pct(0.99),
-            min: samples[0],
-            max: samples[iters - 1],
+    /// Time `k` closure calls per sample (one `Instant::now()` pair per
+    /// batch) and record the per-iteration average.  Use for operations
+    /// so cheap that the clock read would otherwise dominate.
+    pub fn batch(mut self, k: usize) -> Self {
+        self.batch = k.max(1);
+        self
+    }
+
+    /// Record the per-iteration workload size for throughput reporting
+    /// and the artifact's `bytes` counter.
+    pub fn bytes_per_iter(mut self, bytes: usize) -> Self {
+        self.bytes_per_iter = bytes;
+        self
+    }
+
+    /// Run the closure repeatedly and collect statistics.
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
+        let mut samples = Vec::new();
+        let mut total = Duration::ZERO;
+        let mut iters = 0usize;
+        if let Some(target) = self.fixed_iters {
+            for _ in 0..(target / 8).max(1) {
+                f();
+            }
+            while iters < target {
+                let take = self.batch.min(target - iters);
+                let t0 = Instant::now();
+                for _ in 0..take {
+                    f();
+                }
+                let elapsed = t0.elapsed();
+                total += elapsed;
+                samples.push(elapsed / take as u32);
+                iters += take;
+            }
+        } else {
+            let start = Instant::now();
+            while start.elapsed() < self.warmup {
+                f();
+            }
+            let start = Instant::now();
+            while start.elapsed() < self.measure && iters < self.max_iters {
+                let take = self.batch.min(self.max_iters - iters);
+                let t0 = Instant::now();
+                for _ in 0..take {
+                    f();
+                }
+                let elapsed = t0.elapsed();
+                total += elapsed;
+                samples.push(elapsed / take as u32);
+                iters += take;
+            }
         }
+        summarize_samples(self.name, samples, iters, total, self.bytes_per_iter)
+    }
+}
+
+fn summarize_samples(
+    name: String,
+    mut samples: Vec<Duration>,
+    iters: usize,
+    total: Duration,
+    bytes_per_iter: usize,
+) -> BenchResult {
+    assert!(!samples.is_empty(), "no samples collected");
+    samples.sort_unstable();
+    let count = samples.len();
+    // Nearest-rank percentile: 1-based rank ceil(p * N), so index
+    // ceil(p * N) - 1 (clamped for p == 1.0 rounding).
+    let pct = |p: f64| {
+        let rank = (count as f64 * p).ceil() as usize;
+        samples[rank.clamp(1, count) - 1]
+    };
+    BenchResult {
+        name,
+        iters,
+        samples: count,
+        bytes_per_iter,
+        mean: total / iters.max(1) as u32,
+        p50: pct(0.50),
+        p95: pct(0.95),
+        p99: pct(0.99),
+        min: samples[0],
+        max: samples[count - 1],
     }
 }
 
 /// Record externally-collected samples (e.g. end-to-end request latencies).
 pub fn summarize(name: impl Into<String>, samples: Vec<Duration>) -> BenchResult {
-    Bencher::summarize(name.into(), samples)
+    let total: Duration = samples.iter().sum();
+    let iters = samples.len();
+    summarize_samples(name.into(), samples, iters, total, 0)
+}
+
+/// True when the binary was invoked with `--smoke` (CI-sized workloads).
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Normalise a bench name into a stable artifact key: lowercase
+/// alphanumerics with single underscores (`"SHA-256 64 KiB"` →
+/// `"sha_256_64_kib"`).
+pub fn slug(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else if !out.ends_with('_') && !out.is_empty() {
+            out.push('_');
+        }
+    }
+    while out.ends_with('_') {
+        out.pop();
+    }
+    out
+}
+
+/// Accumulates one bench binary's results into the `BENCH_<name>.json`
+/// artifact: `{"deterministic":{...},"mode":"smoke|full","name":...,
+/// "timing":{...}}` rendered as a single compact line with sorted keys,
+/// so equal content is byte-identical and `sim::diff` can parse it as a
+/// metrics line.
+pub struct BenchArtifact {
+    name: String,
+    mode: String,
+    deterministic: BTreeMap<String, Json>,
+    timing: BTreeMap<String, Json>,
+}
+
+impl BenchArtifact {
+    pub fn new(name: impl Into<String>, smoke: bool) -> Self {
+        Self {
+            name: name.into(),
+            mode: if smoke { "smoke" } else { "full" }.to_string(),
+            deterministic: BTreeMap::new(),
+            timing: BTreeMap::new(),
+        }
+    }
+
+    /// Record a [`BenchResult`] under its slugified name in both
+    /// namespaces.
+    pub fn push(&mut self, r: &BenchResult) {
+        let key = slug(&r.name);
+        self.deterministic.insert(key.clone(), r.deterministic_json());
+        self.timing.insert(key, r.timing_json());
+    }
+
+    /// Add an extra deterministic counter (dotted keys group in the diff:
+    /// `"sched.transfers"` flattens to `deterministic.sched.transfers`).
+    pub fn counter(&mut self, key: &str, v: u64) {
+        self.deterministic.insert(key.to_string(), n(v as f64));
+    }
+
+    /// Add a string annotation to the deterministic namespace.  Strings
+    /// are skipped by the metric flattener, so labels never participate
+    /// in the numeric diff.
+    pub fn label(&mut self, key: &str, v: &str) {
+        self.deterministic.insert(key.to_string(), s(v));
+    }
+
+    /// Add an extra timing value in nanoseconds (tolerance-compared).
+    pub fn timing_ns(&mut self, key: &str, ns: u64) {
+        self.timing.insert(key.to_string(), n(ns as f64));
+    }
+
+    /// Byte-stable rendering: compact single-line JSON with sorted keys.
+    pub fn to_json_string(&self) -> String {
+        obj(vec![
+            ("deterministic", Json::Obj(self.deterministic.clone())),
+            ("mode", s(&self.mode)),
+            ("name", s(&self.name)),
+            ("timing", Json::Obj(self.timing.clone())),
+        ])
+        .to_string()
+    }
+
+    /// Write `BENCH_<name>.json` into `$SKYMEMORY_BENCH_DIR` (or the
+    /// current directory — the repo root under `cargo bench`).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("SKYMEMORY_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, format!("{}\n", self.to_json_string()))?;
+        Ok(path)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
 
     #[test]
     fn collects_stats() {
@@ -125,24 +333,78 @@ mod tests {
     }
 
     #[test]
+    fn fixed_iters_is_exact_and_batched() {
+        let r = Bencher::new("fixed").fixed_iters(100).batch(8).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 100);
+        // 12 full batches of 8 plus one remainder batch of 4.
+        assert_eq!(r.samples, 13);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95 && r.p95 <= r.p99 && r.p99 <= r.max);
+    }
+
+    #[test]
     fn summarize_external_samples() {
-        let samples = vec![
-            Duration::from_millis(1),
-            Duration::from_millis(2),
-            Duration::from_millis(3),
-            Duration::from_millis(10),
-        ];
+        let samples = vec![ms(1), ms(2), ms(3), ms(10)];
         let r = summarize("ext", samples);
         assert_eq!(r.iters, 4);
-        assert_eq!(r.min, Duration::from_millis(1));
-        assert_eq!(r.max, Duration::from_millis(10));
-        assert_eq!(r.p50, Duration::from_millis(3));
+        assert_eq!(r.min, ms(1));
+        assert_eq!(r.max, ms(10));
+        // Nearest-rank: p50 of 4 samples is rank ceil(0.5*4)=2 → 2ms
+        // (the old truncating index was one rank high).
+        assert_eq!(r.p50, ms(2));
+        assert_eq!(r.p95, ms(10));
+        assert_eq!(r.p99, ms(10));
+    }
+
+    #[test]
+    fn nearest_rank_on_1_to_100() {
+        let samples: Vec<Duration> = (1..=100).map(ms).collect();
+        let r = summarize("ranks", samples);
+        assert_eq!(r.p50, ms(50));
+        assert_eq!(r.p95, ms(95));
+        assert_eq!(r.p99, ms(99));
     }
 
     #[test]
     fn throughput_format() {
-        let r = summarize("x", vec![Duration::from_secs(1)]);
-        let line = r.throughput(1024 * 1024);
+        let mut r = summarize("x", vec![Duration::from_secs(1)]);
+        r.bytes_per_iter = 1024 * 1024;
+        let line = r.throughput();
         assert!(line.contains("1.0 MiB/s"), "{line}");
+    }
+
+    #[test]
+    fn slug_normalises() {
+        assert_eq!(slug("SHA-256 64 KiB"), "sha_256_64_kib");
+        assert_eq!(slug("put_block (13 chunks)"), "put_block_13_chunks");
+        assert_eq!(slug("  odd--name  "), "odd_name");
+    }
+
+    #[test]
+    fn artifact_json_is_byte_stable() {
+        let build = |flip: bool| {
+            let mut a = BenchArtifact::new("demo", true);
+            let mut r = summarize("op one", vec![ms(1), ms(2)]);
+            r.bytes_per_iter = 64;
+            if flip {
+                a.counter("z.count", 3);
+                a.push(&r);
+            } else {
+                a.push(&r);
+                a.counter("z.count", 3);
+            }
+            a.label("host", "ci");
+            a.timing_ns("wall_ns", 1234);
+            a.to_json_string()
+        };
+        let one = build(false);
+        let two = build(true);
+        assert_eq!(one, two);
+        assert!(one.starts_with(r#"{"deterministic":"#), "{one}");
+        assert!(one.contains(r#""op_one":{"bytes":128,"iters":2}"#), "{one}");
+        assert!(one.contains(r#""mode":"smoke","name":"demo""#), "{one}");
+        let parsed = Json::parse(&one).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("demo"));
     }
 }

@@ -1,0 +1,136 @@
+//! Integration tests for the perf-trajectory artifacts: fixed-iteration
+//! bench runs must produce byte-identical `deterministic` sections, the
+//! artifact file round-trips through `$SKYMEMORY_BENCH_DIR`, and
+//! `sim::diff::diff_bench_metrics` (the `skymemory bench --diff` core)
+//! gates counter drift and timing regressions the way docs/METRICS.md
+//! promises.
+
+use skymemory::kvc::hash::sha256;
+use skymemory::sim::diff::diff_bench_metrics;
+use skymemory::util::bench::{summarize, BenchArtifact, Bencher};
+use skymemory::util::json::Json;
+use std::time::Duration;
+
+/// One miniature "--smoke bench run": fixed iteration counts, seeded
+/// workload, a couple of hand-rolled counters — the same shape every
+/// bench binary produces.
+fn smoke_run() -> String {
+    let mut art = BenchArtifact::new("golden", true);
+    let payload = vec![0x5Au8; 4096];
+    let r = Bencher::new("sha256 4 KiB")
+        .fixed_iters(32)
+        .batch(4)
+        .bytes_per_iter(payload.len())
+        .run(|| {
+            std::hint::black_box(sha256(&payload));
+        });
+    art.push(&r);
+    let r = Bencher::new("noop").fixed_iters(16).run(|| {
+        std::hint::black_box(1 + 1);
+    });
+    art.push(&r);
+    art.counter("sched.transfers", 96);
+    art.label("host", "test");
+    art.timing_ns("wall_ns", 1); // timing differs run-over-run; this doesn't matter
+    art.to_json_string()
+}
+
+fn deterministic_section(artifact: &str) -> String {
+    Json::parse(artifact).unwrap().get("deterministic").unwrap().to_string()
+}
+
+#[test]
+fn two_smoke_runs_have_byte_identical_deterministic_sections() {
+    let one = smoke_run();
+    let two = smoke_run();
+    assert_eq!(deterministic_section(&one), deterministic_section(&two));
+    // and the timing namespace exists with the promised stats
+    let timing = Json::parse(&one).unwrap();
+    let timing = timing.get("timing").unwrap();
+    let stats = timing.get("sha256_4_kib").unwrap();
+    for key in ["max_ns", "mean_ns", "min_ns", "p50_ns", "p95_ns", "p99_ns"] {
+        assert!(stats.get(key).unwrap().as_f64().is_some(), "{key}");
+    }
+    // the deterministic counters are the statically-known ones
+    let det = Json::parse(&one).unwrap();
+    let det = det.get("deterministic").unwrap();
+    assert_eq!(det.get("sha256_4_kib").unwrap().get("iters").unwrap().as_u64(), Some(32));
+    assert_eq!(det.get("sha256_4_kib").unwrap().get("bytes").unwrap().as_u64(), Some(32 * 4096));
+    assert_eq!(det.get("noop").unwrap().get("iters").unwrap().as_u64(), Some(16));
+    assert_eq!(det.get("sched.transfers").unwrap().as_u64(), Some(96));
+}
+
+#[test]
+fn identical_smoke_runs_diff_clean_det_only() {
+    // det-only is what CI runs: wall-clock numbers from two runs (or two
+    // machines) are never comparable, the counters always are
+    let report = diff_bench_metrics(&smoke_run(), &smoke_run(), 0.15, true).unwrap();
+    assert!(!report.has_regressions(), "{}", report.render());
+}
+
+#[test]
+fn counter_drift_is_a_regression_in_both_directions() {
+    let base = smoke_run();
+    let drifted = base.replace(r#""sched.transfers":96"#, r#""sched.transfers":95"#);
+    assert_ne!(base, drifted);
+    let report = diff_bench_metrics(&base, &drifted, 0.15, true).unwrap();
+    assert!(report.has_regressions(), "{}", report.render());
+    let report = diff_bench_metrics(&drifted, &base, 0.15, true).unwrap();
+    assert!(report.has_regressions(), "counter rising must also regress");
+}
+
+#[test]
+fn timing_gate_is_direction_aware_with_tolerance() {
+    let mut a = BenchArtifact::new("t", true);
+    a.timing_ns("op.mean_ns", 1000);
+    let mk = |ns: u64| {
+        let mut b = BenchArtifact::new("t", true);
+        b.timing_ns("op.mean_ns", ns);
+        b.to_json_string()
+    };
+    let a = a.to_json_string();
+    // +10% is inside the default ±15% tolerance; +30% is not; -50% is an
+    // improvement and never regresses
+    assert!(!diff_bench_metrics(&a, &mk(1100), 0.15, false).unwrap().has_regressions());
+    assert!(diff_bench_metrics(&a, &mk(1300), 0.15, false).unwrap().has_regressions());
+    assert!(!diff_bench_metrics(&a, &mk(500), 0.15, false).unwrap().has_regressions());
+    // det-only ignores even a 9x timing blowup
+    assert!(!diff_bench_metrics(&a, &mk(9000), 0.15, true).unwrap().has_regressions());
+}
+
+#[test]
+fn bootstrap_baselines_tolerate_added_counters_but_not_drops() {
+    // the committed baselines carry a subset of the counters (the
+    // statically-computable ones); fresh runs adding keys is fine,
+    // dropping a tracked counter is a regression
+    let full = smoke_run();
+    let subset = {
+        let mut art = BenchArtifact::new("golden", true);
+        let r = summarize("noop", vec![Duration::from_nanos(10); 16]);
+        art.push(&r);
+        art.counter("sched.transfers", 96);
+        art.to_json_string()
+    };
+    let report = diff_bench_metrics(&subset, &full, 0.15, true).unwrap();
+    assert!(!report.has_regressions(), "added counters are neutral: {}", report.render());
+    let report = diff_bench_metrics(&full, &subset, 0.15, true).unwrap();
+    assert!(report.has_regressions(), "dropped counters must regress");
+}
+
+#[test]
+fn artifact_write_honors_bench_dir() {
+    let dir = std::env::temp_dir().join(format!("skymem_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::env::set_var("SKYMEMORY_BENCH_DIR", &dir);
+    let mut art = BenchArtifact::new("envtest", true);
+    art.counter("k", 1);
+    let path = art.write().unwrap();
+    std::env::remove_var("SKYMEMORY_BENCH_DIR");
+    assert_eq!(path, dir.join("BENCH_envtest.json"));
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'));
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("name").unwrap().as_str(), Some("envtest"));
+    assert_eq!(parsed.get("mode").unwrap().as_str(), Some("smoke"));
+    std::fs::remove_dir_all(&dir).ok();
+}

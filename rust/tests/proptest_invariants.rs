@@ -538,6 +538,39 @@ fn prop_sched_completion_independent_of_submission_order() {
 }
 
 #[test]
+fn prop_bench_percentiles_match_nearest_rank_oracle() {
+    // the bench harness's summary statistics against a from-scratch
+    // nearest-rank oracle: for N sorted samples the p-th percentile is
+    // the sample at 1-based rank ceil(p * N); and the summary is always
+    // internally ordered min <= p50 <= p95 <= p99 <= max
+    use skymemory::util::bench::summarize;
+    use std::time::Duration;
+    let oracle = |sorted: &[Duration], p: f64| {
+        let rank = (sorted.len() as f64 * p).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    };
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 140_000);
+        let n = 1 + rng.next_range(400);
+        let samples: Vec<Duration> =
+            (0..n).map(|_| Duration::from_nanos(rng.next_range(1_000_000) as u64)).collect();
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        let r = summarize("oracle", samples);
+        assert_eq!(r.iters, n, "seed {seed}");
+        assert_eq!(r.min, sorted[0], "seed {seed}");
+        assert_eq!(r.max, sorted[n - 1], "seed {seed}");
+        for (p, got) in [(0.50, r.p50), (0.95, r.p95), (0.99, r.p99)] {
+            assert_eq!(got, oracle(&sorted, p), "seed {seed} n {n} p {p}");
+        }
+        assert!(
+            r.min <= r.p50 && r.p50 <= r.p95 && r.p95 <= r.p99 && r.p99 <= r.max,
+            "seed {seed}: percentiles must be ordered"
+        );
+    }
+}
+
+#[test]
 fn prop_decode_rejects_random_corruption() {
     // flip random bytes in valid messages: decode must error or return a
     // different-but-valid message, never panic
