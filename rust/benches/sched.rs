@@ -37,6 +37,7 @@ use skymemory::kvc::eviction::EvictionPolicy;
 use skymemory::mapping::Strategy;
 use skymemory::net::sched::{ChunkOp, NetScheduler, SchedConfig, Transfer};
 use skymemory::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
+use skymemory::obs::Recorder;
 use skymemory::satellite::fleet::Fleet;
 use skymemory::sim::harness::run_scenario;
 use skymemory::sim::scenario::ScenarioSpec;
@@ -248,6 +249,47 @@ fn main() {
         art.counter(&format!("{prefix}.virtual_time_ns"), r.sched.virtual_ns);
         art.counter(&format!("{prefix}.peak_in_flight"), r.sched.peak_in_flight);
         art.timing_ns(&format!("{prefix}.wall_ns"), wall.as_nanos() as u64);
+    }
+
+    println!("=== tracing overhead: NoopSink (default) vs recording sink, no network sleeps ===");
+    {
+        let shape = &SHAPES[0];
+        let iters = if smoke { 20 } else { 120 };
+
+        // No emulated sleeps: the fan-out machinery itself is the workload,
+        // so any sink cost shows up undiluted.
+        let stack = build(shape, 0.0);
+        let transport: Arc<dyn Transport> = stack.inproc.clone();
+        let sched = NetScheduler::new(transport, SchedConfig { window: 8 });
+        let off = Bencher::new(format!("{} trace=off {} chunks", shape.name, shape.n_chunks))
+            .fixed_iters(iters)
+            .run(|| sched_block(&sched, &stack, shape));
+        println!("{}", off.report());
+        art.push(&off);
+
+        let stack = build(shape, 0.0);
+        let transport: Arc<dyn Transport> = stack.inproc.clone();
+        let sched = NetScheduler::new(transport, SchedConfig { window: 8 });
+        let recorder = Arc::new(Recorder::new());
+        sched.set_trace_sink(recorder.clone(), 0);
+        let on = Bencher::new(format!("{} trace=rec {} chunks", shape.name, shape.n_chunks))
+            .fixed_iters(iters)
+            .run(|| sched_block(&sched, &stack, shape));
+        println!("{}", on.report());
+        art.push(&on);
+
+        // Events per sched_block call are a pure function of the shape, so
+        // the counter is deterministic.  `fixed_iters(n)` also runs
+        // `max(1, n/8)` warmup calls through the recorder.
+        let calls = (iters + (iters / 8).max(1)) as u64;
+        let events = recorder.take().len() as u64;
+        assert_eq!(events % calls, 0, "trace event count must be stable per call");
+        art.counter("trace.events_per_iter", events / calls);
+        let overhead = on.mean.as_secs_f64() / off.mean.as_secs_f64();
+        println!(
+            "recording sink costs {overhead:.2}x over NoopSink ({} events/iter)\n",
+            events / calls
+        );
     }
 
     let path = art.write().expect("write BENCH_sched.json");

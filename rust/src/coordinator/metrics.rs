@@ -141,6 +141,60 @@ mod tests {
         assert!(s.contains("x_count 3"));
     }
 
+    /// Pull the `{le}` bucket counts out of a rendered exposition, in
+    /// declaration order, finite buckets first and `+Inf` last.
+    fn bucket_counts(rendered: &str, name: &str) -> Vec<u64> {
+        rendered
+            .lines()
+            .filter(|l| l.starts_with(&format!("{name}_bucket{{")))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn rendered_buckets_are_cumulative_and_monotone() {
+        let h = Histogram::default();
+        // One sample per finite bucket, from below each upper bound.
+        for b in BUCKETS_S {
+            h.observe(Duration::from_secs_f64(b * 0.9));
+        }
+        let mut s = String::new();
+        h.render("x", &mut s);
+        let counts = bucket_counts(&s, "x");
+        assert_eq!(counts.len(), BUCKETS_S.len() + 1);
+        // Cumulative exposition: each le bucket includes everything below it.
+        let expect: Vec<u64> = (1..=BUCKETS_S.len() as u64).collect();
+        assert_eq!(&counts[..BUCKETS_S.len()], &expect[..]);
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "buckets must be monotone: {counts:?}");
+    }
+
+    #[test]
+    fn inf_bucket_equals_count() {
+        let h = Histogram::default();
+        h.observe(Duration::from_micros(100));
+        h.observe(Duration::from_millis(40));
+        h.observe(Duration::from_secs(10)); // beyond the largest finite bucket
+        let mut s = String::new();
+        h.render("x", &mut s);
+        let counts = bucket_counts(&s, "x");
+        assert_eq!(*counts.last().unwrap(), h.count());
+        assert!(s.contains("x_bucket{le=\"+Inf\"} 3"));
+        assert!(s.contains("x_count 3"));
+    }
+
+    #[test]
+    fn over_largest_bucket_sample_lands_only_in_inf() {
+        let h = Histogram::default();
+        let largest = BUCKETS_S[BUCKETS_S.len() - 1];
+        h.observe(Duration::from_secs_f64(largest * 2.0));
+        let mut s = String::new();
+        h.render("x", &mut s);
+        let counts = bucket_counts(&s, "x");
+        // Every finite bucket stays at zero; only +Inf (== count) sees it.
+        assert!(counts[..BUCKETS_S.len()].iter().all(|&c| c == 0), "finite buckets: {counts:?}");
+        assert_eq!(*counts.last().unwrap(), 1);
+    }
+
     #[test]
     fn hit_rate() {
         let m = Metrics::default();

@@ -57,6 +57,7 @@ use crate::kvc::quantize::Quantizer;
 use crate::kvc::radix::BlockMeta;
 use crate::mapping::box_width;
 use crate::net::sched::{race_batches, BatchReport, ChunkOp, ChunkResult, Transfer};
+use crate::obs::{ArgVal, NoopSink, SpanKind, TraceEvent, TraceSink};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -166,6 +167,9 @@ pub struct FederatedKvcManager {
     /// Static per-shell placement cost (pure function of geometry and the
     /// shell's stripe width), computed once at construction.
     shell_costs: Vec<f64>,
+    /// Flight-recorder sink for federation-level events (race arms,
+    /// promotions, evacuations, epoch boundaries).
+    trace: Mutex<Arc<dyn TraceSink>>,
     pub stats: FedStats,
 }
 
@@ -232,12 +236,33 @@ impl FederatedKvcManager {
             prev_live: Mutex::new(prev_live),
             shell_counters,
             shell_costs,
+            trace: Mutex::new(Arc::new(NoopSink)),
             stats: FedStats::default(),
         }
     }
 
     pub fn transport(&self) -> &Arc<FederatedTransport> {
         &self.transport
+    }
+
+    /// Route federation events to `sink` and install it on every shell's
+    /// scheduler (each stamps its own shell index on its events).
+    pub fn set_trace_sink(&self, sink: Arc<dyn TraceSink>) {
+        for (i, link) in self.transport.links().iter().enumerate() {
+            link.sched.set_trace_sink(sink.clone(), i as u16);
+        }
+        *self.trace.lock().unwrap() = sink;
+    }
+
+    /// Federation-level virtual-time stamp for events that belong to no
+    /// single shell: the sum of every shell scheduler's clock (monotone
+    /// and deterministic).
+    fn fed_now(&self) -> u64 {
+        self.transport
+            .links()
+            .iter()
+            .map(|l| l.sched.stats.virtual_ns.load(Ordering::Relaxed))
+            .sum()
     }
 
     pub fn shell_counters(&self) -> &[ShellCounters] {
@@ -555,6 +580,19 @@ impl FederatedKvcManager {
                 )
             })
             .collect();
+        let sink = self.trace.lock().unwrap().clone();
+        let tracing = sink.wants(SpanKind::Fed);
+        // each arm's span starts on its own shell's clock, read before the
+        // race advances it
+        let arm_bases: Vec<u64> = if tracing {
+            arms.iter()
+                .map(|a| {
+                    self.transport.link(a.shell).sched.stats.virtual_ns.load(Ordering::Relaxed)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         let outcome = race_batches(race_arms);
         // the serving arm: fastest makespan among arms whose payload
         // reassembled completely, ties to the lowest arm index
@@ -565,6 +603,27 @@ impl FederatedKvcManager {
             if let Some(payload) = self.assemble(&outcome.reports[i], &arms[i].meta) {
                 served = Some((i, payload));
                 break;
+            }
+        }
+        if tracing {
+            let win = served.as_ref().map(|(i, _)| *i);
+            for (i, arm) in arms.iter().enumerate() {
+                let result = match win {
+                    Some(w) if w == i => "win",
+                    _ if Self::copy_complete(&outcome.reports[i], &arm.meta) => "lose",
+                    _ => "broken",
+                };
+                sink.record(
+                    TraceEvent::span(
+                        SpanKind::Fed,
+                        "race_arm",
+                        arm_bases[i],
+                        outcome.reports[i].makespan_ns,
+                    )
+                    .with_shell(u16::from(arm.shell))
+                    .arg_u("arm", i as u64)
+                    .arg("outcome", ArgVal::S(result.to_string())),
+                );
             }
         }
         let Some((winner, payload)) = served else {
@@ -677,6 +736,15 @@ impl FederatedKvcManager {
                 .fetch_sub(merged_bytes, Ordering::Relaxed);
         }
         self.stats.replica_promotions.fetch_add(1, Ordering::Relaxed);
+        let sink = self.trace.lock().unwrap().clone();
+        if sink.wants(SpanKind::Fed) {
+            sink.record(
+                TraceEvent::instant(SpanKind::Fed, "promote_copy", self.fed_now())
+                    .with_shell(u16::from(new_home))
+                    .arg_u("from_shell", u64::from(old.shell))
+                    .arg_u("bytes", old.meta.kvc_len as u64),
+            );
+        }
         // fan out the invalidation of the dead primary and move the
         // placement accounting onto the promoted copy's shell
         self.evict_copy(&old, block, now_epoch);
@@ -889,6 +957,15 @@ impl FederatedKvcManager {
             }
         }
         *self.prev_live.lock().unwrap() = cands.iter().map(|c| c.live_fraction).collect();
+        let sink = self.trace.lock().unwrap().clone();
+        if sink.wants(SpanKind::Fed) {
+            sink.record(
+                TraceEvent::instant(SpanKind::Fed, "end_of_epoch", self.fed_now())
+                    .arg_u("epoch", now_epoch)
+                    .arg_u("preplaced", preplaced)
+                    .arg_u("replicated", replicated),
+            );
+        }
         (replicated, preplaced)
     }
 
@@ -945,11 +1022,23 @@ impl FederatedKvcManager {
                 e.preplaced = None;
             }
         }
-        if self.shell_layouts[from as usize] == self.shell_layouts[to as usize] {
+        let summary = if self.shell_layouts[from as usize] == self.shell_layouts[to as usize] {
             self.evacuate_same_layout(from, to)
         } else {
             self.evacuate_restripe(from, to, now_epoch)
+        };
+        let sink = self.trace.lock().unwrap().clone();
+        if sink.wants(SpanKind::Fed) {
+            sink.record(
+                TraceEvent::instant(SpanKind::Fed, "evacuate_shell", self.fed_now())
+                    .arg_u("from", u64::from(from))
+                    .arg_u("to", u64::from(to))
+                    .arg_u("chunks_moved", u64::from(summary.chunks_moved))
+                    .arg_u("bytes_moved", summary.bytes_moved)
+                    .arg_u("blocks_rehomed", summary.blocks_rehomed),
+            );
         }
+        summary
     }
 
     /// The offset-preserving evacuation path (identical layout configs).
@@ -1257,6 +1346,37 @@ mod tests {
             m.shell_counters()[home as usize].blocks_stored.load(Ordering::Relaxed),
             stored
         );
+    }
+
+    #[test]
+    fn trace_records_race_arms_and_epoch_boundaries() {
+        use crate::obs::Recorder;
+        let m = tri_manager(4, false);
+        let sink = Arc::new(Recorder::new());
+        m.set_trace_sink(sink.clone());
+        let tokens: Vec<i32> = (0..32).collect();
+        let hashes = block_hashes(&tokens, 32);
+        m.put_block(&hashes, 0, &values(2048, 5), 0).unwrap();
+        for _ in 0..3 {
+            assert!(m.fetch_block(&hashes, 0, 0).unwrap().is_some());
+        }
+        m.end_of_epoch(0);
+        assert!(m.replica_of(&hashes[0]).is_some(), "hot block should replicate");
+        assert!(m.fetch_block(&hashes, 0, 0).unwrap().is_some());
+        let events = sink.take();
+        let arms: Vec<_> = events.iter().filter(|e| e.name == "race_arm").collect();
+        // three single-arm fetches, then one two-arm race post-replication
+        assert_eq!(arms.len(), 5);
+        let outcome = |e: &TraceEvent, want: &str| {
+            e.args
+                .iter()
+                .any(|(k, v)| *k == "outcome" && matches!(v, ArgVal::S(s) if s == want))
+        };
+        assert_eq!(arms.iter().filter(|e| outcome(e, "win")).count(), 4);
+        assert_eq!(arms.iter().filter(|e| outcome(e, "lose")).count(), 1);
+        assert!(events.iter().any(|e| e.name == "end_of_epoch" && e.dur_ns == 0));
+        // the shell schedulers ride the same sink, stamped per shell
+        assert!(events.iter().any(|e| matches!(e.kind, SpanKind::Sched)));
     }
 
     #[test]

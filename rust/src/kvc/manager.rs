@@ -39,6 +39,7 @@ use crate::mapping::{box_width, Strategy};
 use crate::net::messages::{Request, Response};
 use crate::net::sched::{ChunkOp, ChunkResult, NetScheduler, SchedConfig, Transfer};
 use crate::net::transport::Transport;
+use crate::obs::{ArgVal, NoopSink, SpanKind, TraceEvent, TraceSink};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -189,6 +190,9 @@ pub struct KvcManager {
     /// Optional fast-RAM tier in front of the constellation (§2's memory
     /// hierarchy: GPU/CPU RAM above the LEO level).
     local: Option<crate::kvc::tiered::LocalTier>,
+    /// Flight-recorder sink for block-level Get/Set spans ([`NoopSink`]
+    /// by default: the gated sites cost one `wants` call per block op).
+    trace: Mutex<Arc<dyn TraceSink>>,
     pub stats: KvcStats,
 }
 
@@ -204,6 +208,7 @@ impl KvcManager {
             torus,
             index: Mutex::new(BlockIndex::new()),
             local: None,
+            trace: Mutex::new(Arc::new(NoopSink)),
             stats: KvcStats::default(),
         }
     }
@@ -211,6 +216,13 @@ impl KvcManager {
     /// The chunk fan-out's virtual-time scheduler (for its stats).
     pub fn sched(&self) -> &NetScheduler {
         &self.sched
+    }
+
+    /// Route trace events from this manager and its scheduler to `sink`.
+    /// Single-shell managers stamp every event with shell 0.
+    pub fn set_trace_sink(&self, sink: Arc<dyn TraceSink>) {
+        self.sched.set_trace_sink(sink.clone(), 0);
+        *self.trace.lock().unwrap() = sink;
     }
 
     /// Add a local RAM tier of `byte_budget` decoded-KV bytes.
@@ -341,7 +353,23 @@ impl KvcManager {
                 }
             })
             .collect();
+        let sink = self.trace.lock().unwrap().clone();
+        let tracing = sink.wants(SpanKind::Kvc);
+        let base = if tracing {
+            self.sched.stats.virtual_ns.load(Ordering::Relaxed)
+        } else {
+            0
+        };
         let batch = self.sched.run_batch(transfers);
+        if tracing {
+            let dur = self.sched.stats.virtual_ns.load(Ordering::Relaxed) - base;
+            sink.record(
+                TraceEvent::span(SpanKind::Kvc, "set_block", base, dur)
+                    .with_shell(0)
+                    .arg_u("bytes", payload.len() as u64)
+                    .arg_u("chunks", n_chunks as u64),
+            );
+        }
         for o in &batch.outcomes {
             if let ChunkResult::Failed(e) = &o.result {
                 bail!("chunk {} set failed: {e}", o.tag);
@@ -512,7 +540,29 @@ impl KvcManager {
                 },
             })
             .collect();
+        let sink = self.trace.lock().unwrap().clone();
+        let tracing = sink.wants(SpanKind::Kvc);
+        let base = if tracing {
+            self.sched.stats.virtual_ns.load(Ordering::Relaxed)
+        } else {
+            0
+        };
         let batch = self.sched.run_batch(transfers);
+        let batch_dur = if tracing {
+            self.sched.stats.virtual_ns.load(Ordering::Relaxed) - base
+        } else {
+            0
+        };
+        let trace_get = |outcome: &'static str| {
+            if tracing {
+                sink.record(
+                    TraceEvent::span(SpanKind::Kvc, "get_block", base, batch_dur)
+                        .with_shell(0)
+                        .arg_u("chunks", n_chunks as u64)
+                        .arg("outcome", ArgVal::S(outcome.to_string())),
+                );
+            }
+        };
         let mut fetched: Vec<Option<Vec<u8>>> = vec![None; n_chunks];
         for o in batch.outcomes {
             if let ChunkResult::Got(Some(data)) = o.result {
@@ -535,9 +585,11 @@ impl KvcManager {
         }
         if broken || payload.len() != meta.kvc_len as usize {
             self.stats.broken_blocks.fetch_add(1, Ordering::Relaxed);
+            trace_get("broken");
             self.handle_broken_block(hashes, block_idx, &meta, now_epoch);
             return Ok(None);
         }
+        trace_get("ok");
         self.stats.blocks_fetched.fetch_add(1, Ordering::Relaxed);
         self.stats.chunks_fetched.fetch_add(meta.num_chunks as u64, Ordering::Relaxed);
         self.stats.bytes_fetched.fetch_add(payload.len() as u64, Ordering::Relaxed);

@@ -38,6 +38,11 @@
 //!   the [`federation::manager::FederatedKvcManager`] with inter-shell
 //!   handover (offset-preserving or re-striping) under whole- and
 //!   partial-shell degradation.
+//! * [`obs`] — the deterministic flight recorder: [`obs::TraceSink`]
+//!   span/instant events stamped with `net::sched` virtual time (a
+//!   zero-cost [`obs::NoopSink`] is the default), exported as byte-stable
+//!   JSONL or Chrome trace-event JSON (Perfetto; shells as processes,
+//!   links as threads) via `skymemory trace` — see `docs/TRACING.md`.
 //! * [`satellite`] — the satellite node substrate (the paper's cFS stand-in):
 //!   chunk store with LRU, ISL forwarding, migration, eviction gossip.
 //! * [`sim`] — the §4 worst-case-latency simulator (Figure 16), workload
@@ -67,6 +72,7 @@ pub mod federation;
 pub mod kvc;
 pub mod mapping;
 pub mod net;
+pub mod obs;
 pub mod repro;
 pub mod runtime;
 pub mod satellite;

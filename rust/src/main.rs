@@ -14,12 +14,14 @@
 //! skymemory sched      [--name mega-shell] [--seed 42] [--windows 1,8,64]
 //! skymemory federate   [--shells 2|3 | --name NAME] [--seed 42]
 //!                      [--replicate K] [--baseline]
+//! skymemory trace      <builtin> [--seed 42] [--out PATH]
+//!                      [--format jsonl|chrome] [--spans KIND,...]
 //! skymemory repro      [--outdir results]
 //! skymemory bench      --diff <old.json> <new.json> [--tolerance PCT]
 //!                      [--det-only]
 //! ```
 //!
-//! `scenario`, `sched` and `federate` answer `--help` with their full
+//! `scenario`, `sched`, `federate` and `trace` answer `--help` with their full
 //! flag/default/exit-code contract; `docs/CLI.md` is the long-form
 //! reference and `docs/METRICS.md` documents every metrics-JSON key.
 //! (CLI parsing is hand-rolled: the offline build has no clap.)
@@ -450,6 +452,73 @@ fn cmd_federate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `skymemory trace --help`.
+const TRACE_HELP: &str = "\
+usage: skymemory trace <builtin> [--seed N] [--out PATH]
+                       [--format jsonl|chrome] [--spans KIND,...]
+
+Run one built-in scenario (single-shell or federated) with the obs
+flight recorder attached and write the trace (docs/TRACING.md documents
+the event schema and span kinds).
+
+formats:
+  jsonl    one compact JSON object per event, virtual-time ordered and
+           byte-stable: two runs of the same seed are byte-identical
+           (default)
+  chrome   Chrome trace-event JSON for Perfetto / chrome://tracing
+           (shells as processes, links as threads)
+
+flags:
+  --seed N      scenario seed (default 42)
+  --out PATH    write the trace to PATH instead of stdout
+  --format F    jsonl (default) or chrome
+  --spans LIST  comma-separated span kinds to record, from
+                sched,kvc,fed,fault,sim (default: all)
+  --help        this text
+
+exit codes: 0 success; 1 error (unknown scenario, bad --spans or
+--format, unwritable --out); 2 usage error.
+";
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{TRACE_HELP}");
+        return Ok(());
+    }
+    use skymemory::obs::{chrome, jsonl, Recorder, SpanFilter};
+    let Some(name) = args.positionals.first() else {
+        bail!("usage: skymemory trace <builtin> [--out PATH] (see --help)");
+    };
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let filter = match args.get("spans") {
+        Some(spec) => SpanFilter::parse(spec).map_err(|e| anyhow!(e))?,
+        None => SpanFilter::all(),
+    };
+    let sink = std::sync::Arc::new(Recorder::with_filter(filter));
+    if let Some(spec) = skymemory::sim::scenario::ScenarioSpec::by_name(name, seed) {
+        skymemory::sim::harness::run_scenario_with_sink(&spec, sink.clone());
+    } else if let Some(spec) = skymemory::sim::scenario::FederatedScenarioSpec::by_name(name, seed)
+    {
+        skymemory::sim::harness::run_federated_scenario_with_sink(&spec, sink.clone());
+    } else {
+        bail!("unknown scenario {name} (see `skymemory scenario --list`)");
+    }
+    let events = sink.take();
+    let out = match args.get("format").unwrap_or("jsonl") {
+        "jsonl" => jsonl(&events),
+        "chrome" => chrome(&events),
+        f => bail!("unknown --format {f} (jsonl | chrome)"),
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &out).with_context(|| format!("writing {path}"))?;
+            eprintln!("# wrote {} events to {path}", events.len());
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
 /// `skymemory bench --help`.
 const BENCH_HELP: &str = "\
 usage: skymemory bench --diff <old.json> <new.json> [--tolerance PCT]
@@ -519,7 +588,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|repro|bench> [flags]\n\
+        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|trace|repro|bench> [flags]\n\
          see rust/src/main.rs header for per-command flags"
     );
     std::process::exit(2)
@@ -539,6 +608,7 @@ fn main() -> Result<()> {
         "scenario" => cmd_scenario(&args),
         "sched" => cmd_sched(&args),
         "federate" => cmd_federate(&args),
+        "trace" => cmd_trace(&args),
         "repro" => cmd_repro(&args),
         "bench" => cmd_bench(&args),
         _ => usage(),

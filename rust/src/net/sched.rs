@@ -54,6 +54,7 @@ use crate::constellation::topology::SatId;
 use crate::kvc::chunk::ChunkKey;
 use crate::net::messages::{Request, Response};
 use crate::net::transport::{LinkModel, RouteInfo, Transport};
+use crate::obs::{NoopSink, SpanKind, TraceEvent, TraceSink};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -87,6 +88,18 @@ pub enum LinkKind {
 pub struct LinkKey {
     pub kind: LinkKind,
     pub sat: SatId,
+}
+
+impl LinkKey {
+    /// Stable text label (`uplink:P.S` / `serve:P.S`) used by trace
+    /// events and the metrics `timeline.links` rollup.
+    pub fn label(&self) -> String {
+        let kind = match self.kind {
+            LinkKind::Uplink => "uplink",
+            LinkKind::Serve => "serve",
+        };
+        format!("{kind}:{}.{}", self.sat.plane, self.sat.slot)
+    }
 }
 
 /// One chunk operation of a batch (the data plane of a transfer).
@@ -161,6 +174,19 @@ pub struct BatchReport {
     pub links_used: usize,
 }
 
+/// Cumulative per-link usage (the source of the scenario reports'
+/// `timeline.links` rollup).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkUsage {
+    pub transfers: u64,
+    /// Time spent serving transfers (serialization holds).
+    pub busy_ns: u64,
+    /// FIFO queueing delay paid on this link.
+    pub queued_ns: u64,
+    /// High-water mark of the link's FIFO queue depth.
+    pub queue_peak: u64,
+}
+
 /// Cumulative scheduler counters (the per-link queueing/utilization
 /// figures the scenario reports export).
 #[derive(Debug, Default)]
@@ -176,8 +202,8 @@ pub struct SchedStats {
     pub queued_ns: AtomicU64,
     /// Max in-flight concurrency seen in any batch.
     pub peak_in_flight: AtomicU64,
-    /// Cumulative transfer count per link (BTreeMap: deterministic).
-    links: Mutex<BTreeMap<LinkKey, u64>>,
+    /// Cumulative usage per link (BTreeMap: deterministic).
+    links: Mutex<BTreeMap<LinkKey, LinkUsage>>,
 }
 
 /// Plain-value copy of [`SchedStats`] for reports and deltas.
@@ -197,15 +223,24 @@ pub struct SchedSnapshot {
 }
 
 impl SchedStats {
-    fn record_links(&self, batch_links: &BTreeMap<LinkKey, u64>) {
+    fn record_links(&self, batch_links: &BTreeMap<LinkKey, LinkUsage>) {
         let mut links = self.links.lock().unwrap();
-        for (k, n) in batch_links {
-            *links.entry(*k).or_insert(0) += n;
+        for (k, u) in batch_links {
+            let e = links.entry(*k).or_default();
+            e.transfers += u.transfers;
+            e.busy_ns += u.busy_ns;
+            e.queued_ns += u.queued_ns;
+            e.queue_peak = e.queue_peak.max(u.queue_peak);
         }
     }
 
     pub fn links_used(&self) -> u64 {
         self.links.lock().unwrap().len() as u64
+    }
+
+    /// Cumulative per-link usage, sorted by link key.
+    pub fn link_rollup(&self) -> Vec<(LinkKey, LinkUsage)> {
+        self.links.lock().unwrap().iter().map(|(k, u)| (*k, *u)).collect()
     }
 
     pub fn snapshot(&self) -> SchedSnapshot {
@@ -220,9 +255,17 @@ impl SchedStats {
             queued_ns: ld(&self.queued_ns),
             peak_in_flight: ld(&self.peak_in_flight),
             links_used: links.len() as u64,
-            busiest_link_transfers: links.values().copied().max().unwrap_or(0),
+            busiest_link_transfers: links.values().map(|u| u.transfers).max().unwrap_or(0),
         }
     }
+}
+
+/// Trace routing installed on a scheduler: the sink plus the shell id
+/// its events are stamped with.
+#[derive(Clone)]
+struct TraceCtx {
+    sink: Arc<dyn TraceSink>,
+    shell: u16,
 }
 
 /// The virtual-time transfer engine over one transport.
@@ -230,16 +273,31 @@ pub struct NetScheduler {
     transport: Arc<dyn Transport>,
     pub config: SchedConfig,
     pub stats: SchedStats,
+    trace: Mutex<TraceCtx>,
 }
 
 impl NetScheduler {
     pub fn new(transport: Arc<dyn Transport>, config: SchedConfig) -> Self {
         assert!(config.window >= 1, "a link window must admit at least one transfer");
-        Self { transport, config, stats: SchedStats::default() }
+        Self {
+            transport,
+            config,
+            stats: SchedStats::default(),
+            trace: Mutex::new(TraceCtx { sink: Arc::new(NoopSink), shell: 0 }),
+        }
     }
 
     pub fn transport(&self) -> &Arc<dyn Transport> {
         &self.transport
+    }
+
+    /// Route this scheduler's trace events to `sink`, stamped with
+    /// `shell`.  Interior mutability because schedulers are shared
+    /// behind `Arc` (per-shell
+    /// [`crate::federation::transport::ShellLink`]s); the default sink
+    /// is [`NoopSink`], which disables all event construction.
+    pub fn set_trace_sink(&self, sink: Arc<dyn TraceSink>, shell: u16) {
+        *self.trace.lock().unwrap() = TraceCtx { sink, shell };
     }
 
     /// Run one batch of transfers to quiescence and return per-transfer
@@ -263,6 +321,8 @@ impl NetScheduler {
     /// the *slowest* arm ([`race_batches`]) instead of summing sleeps;
     /// virtual-time accounting is identical either way.
     pub fn run_batch_untimed(&self, transfers: Vec<Transfer>) -> BatchReport {
+        let trace = self.trace.lock().unwrap().clone();
+        let tracing = trace.sink.wants(SpanKind::Sched);
         let link_model = self.transport.link_model();
         let mut engine = Engine {
             transport: self.transport.as_ref(),
@@ -274,11 +334,15 @@ impl NetScheduler {
             active: 0,
             peak_in_flight: 0,
             failed: 0,
+            trace: if tracing { Some(Vec::new()) } else { None },
         };
         for t in transfers {
             engine.admit(t);
         }
         let report = engine.run();
+        // Virtual-time base of this batch: trace events are stamped
+        // relative to the cumulative clock before its makespan is added.
+        let base = self.stats.virtual_ns.load(Ordering::Relaxed);
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
         self.stats.transfers.fetch_add(report.outcomes.len() as u64, Ordering::Relaxed);
         self.stats.failed_transfers.fetch_add(engine.failed, Ordering::Relaxed);
@@ -286,9 +350,41 @@ impl NetScheduler {
         self.stats.busy_ns.fetch_add(report.busy_ns, Ordering::Relaxed);
         self.stats.queued_ns.fetch_add(report.queued_ns, Ordering::Relaxed);
         self.stats.peak_in_flight.fetch_max(report.peak_in_flight as u64, Ordering::Relaxed);
-        let batch_links: BTreeMap<LinkKey, u64> =
-            engine.links.iter().map(|(k, l)| (*k, l.transfers)).collect();
+        let batch_links: BTreeMap<LinkKey, LinkUsage> = engine
+            .links
+            .iter()
+            .map(|(k, l)| {
+                let usage = LinkUsage {
+                    transfers: l.transfers,
+                    busy_ns: l.busy_ns,
+                    queued_ns: l.queued_ns,
+                    queue_peak: l.queue_peak as u64,
+                };
+                (*k, usage)
+            })
+            .collect();
         self.stats.record_links(&batch_links);
+        if let Some(raw) = engine.trace.take() {
+            for r in raw {
+                let mut ev = TraceEvent::span(SpanKind::Sched, r.name, base + r.t, r.dur)
+                    .with_shell(trace.shell);
+                if let Some(key) = r.link {
+                    ev = ev.with_link(key.label());
+                }
+                for (k, v) in r.args {
+                    ev = ev.arg_u(k, v);
+                }
+                trace.sink.record(ev);
+            }
+            // One whole-round-trip span per transfer, in tag order.
+            for o in &report.outcomes {
+                trace.sink.record(
+                    TraceEvent::span(SpanKind::Sched, "xfer", base, o.completion_ns)
+                        .with_shell(trace.shell)
+                        .arg_u("tag", o.tag),
+                );
+            }
+        }
         report
     }
 }
@@ -369,6 +465,18 @@ struct LinkState {
     busy_ns: u64,
     queued_ns: u64,
     transfers: u64,
+    /// High-water mark of `queue`'s depth.
+    queue_peak: usize,
+}
+
+/// A buffered engine trace event with batch-relative time; stamped onto
+/// the cumulative virtual clock after the batch runs.
+struct RawEv {
+    t: u64,
+    dur: u64,
+    name: &'static str,
+    link: Option<LinkKey>,
+    args: Vec<(&'static str, u64)>,
 }
 
 struct Flight {
@@ -405,9 +513,25 @@ struct Engine<'a> {
     active: usize,
     peak_in_flight: usize,
     failed: u64,
+    /// Event buffer, `Some` only when the installed sink wants
+    /// [`SpanKind::Sched`] — the `None` path costs one branch per site.
+    trace: Option<Vec<RawEv>>,
 }
 
 impl Engine<'_> {
+    fn trace_ev(
+        &mut self,
+        t: u64,
+        dur: u64,
+        name: &'static str,
+        link: Option<LinkKey>,
+        args: &[(&'static str, u64)],
+    ) {
+        if let Some(buf) = &mut self.trace {
+            buf.push(RawEv { t, dur, name, link, args: args.to_vec() });
+        }
+    }
+
     fn ser_ns(&self, bytes: usize) -> u64 {
         match &self.link_model {
             Some(lm) => (lm.serial_s(bytes) * 1e9) as u64,
@@ -438,6 +562,7 @@ impl Engine<'_> {
         let prev = self.flights.insert(t.tag, flight);
         assert!(prev.is_none(), "duplicate transfer tag {}", t.tag);
         self.events.push(Reverse((0, t.tag, Ev::ArriveUplink)));
+        self.trace_ev(0, 0, "enqueue", None, &[("tag", t.tag)]);
     }
 
     /// Execute the data plane of one transfer (deterministic point in the
@@ -501,6 +626,7 @@ impl Engine<'_> {
         let link = self.links.entry(key).or_default();
         link.transfers += 1;
         link.busy_ns += hold;
+        self.trace_ev(t, hold, "serialize_req", Some(key), &[("tag", tag)]);
         self.events.push(Reverse((t + hold, tag, Ev::UplinkDone)));
     }
 
@@ -511,6 +637,7 @@ impl Engine<'_> {
         let link = self.links.entry(key).or_default();
         link.transfers += 1;
         link.busy_ns += hold;
+        self.trace_ev(t, hold, "serialize_resp", Some(key), &[("tag", tag)]);
         self.events.push(Reverse((t + hold, tag, Ev::ServeDone)));
     }
 
@@ -521,9 +648,14 @@ impl Engine<'_> {
         let link = self.links.entry(key).or_default();
         if link.in_flight < window {
             link.in_flight += 1;
+            let in_flight = link.in_flight as u64;
+            self.trace_ev(t, 0, "acquire", Some(key), &[("in_flight", in_flight), ("tag", tag)]);
             true
         } else {
             link.queue.insert((t, tag));
+            link.queue_peak = link.queue_peak.max(link.queue.len());
+            let depth = link.queue.len() as u64;
+            self.trace_ev(t, 0, "queue", Some(key), &[("depth", depth), ("tag", tag)]);
             false
         }
     }
@@ -538,6 +670,8 @@ impl Engine<'_> {
             link.queue.remove(&(arrival, wtag));
             link.in_flight += 1;
             link.queued_ns += t - arrival;
+            let waited = t - arrival;
+            self.trace_ev(t, 0, "acquire", Some(key), &[("tag", wtag), ("waited_ns", waited)]);
             Some(wtag)
         } else {
             None
@@ -778,6 +912,54 @@ mod tests {
         let (sa, sb) = (sched(&a, 4), sched(&b, 4));
         let tie = race_batches(vec![(&sa, mk()), (&sb, mk())]);
         assert_eq!(tie.fastest, 0, "ties must resolve to the first arm");
+    }
+
+    #[test]
+    fn tracing_preserves_timing_and_stays_silent_by_default() {
+        use crate::obs::Recorder;
+        let dest = SatId::new(3, 6);
+        let mk = || vec![set(0, dest, 9, 0, 1000), set(1, dest, 9, 1, 1000)];
+        let (_f1, t1) = stack(Some(1e8));
+        let plain = sched(&t1, 1).run_batch(mk());
+        let (_f2, t2) = stack(Some(1e8));
+        let s = sched(&t2, 1);
+        let rec = Arc::new(Recorder::new());
+        s.set_trace_sink(rec.clone(), 3);
+        let traced = s.run_batch(mk());
+        // instrumentation must never perturb the virtual timeline
+        assert_eq!(plain.makespan_ns, traced.makespan_ns);
+        assert_eq!(plain.queued_ns, traced.queued_ns);
+        assert_eq!(plain.busy_ns, traced.busy_ns);
+        let events = rec.take();
+        assert!(!events.is_empty());
+        assert!(events.iter().all(|e| e.shell == Some(3)));
+        for name in ["enqueue", "acquire", "queue", "serialize_req", "serialize_resp", "xfer"] {
+            assert!(events.iter().any(|e| e.name == name), "missing {name} event");
+        }
+        let xfer_durs: Vec<u64> =
+            events.iter().filter(|e| e.name == "xfer").map(|e| e.dur_ns).collect();
+        assert_eq!(xfer_durs.iter().max().copied(), Some(traced.makespan_ns));
+    }
+
+    #[test]
+    fn link_rollup_reports_per_link_usage_and_queue_peaks() {
+        let (_fleet, inproc) = stack(Some(1e8));
+        let s = sched(&inproc, 1);
+        let dest = SatId::new(3, 6);
+        s.run_batch(vec![
+            set(0, dest, 5, 0, 500),
+            set(1, dest, 5, 1, 500),
+            set(2, dest, 5, 2, 500),
+        ]);
+        let rollup = s.stats.link_rollup();
+        let (key, usage) =
+            rollup.iter().find(|(k, _)| k.kind == LinkKind::Uplink).expect("uplink present");
+        assert_eq!(usage.transfers, 3);
+        assert!(usage.busy_ns > 0);
+        // window 1, three simultaneous arrivals: two of them queue
+        assert_eq!(usage.queue_peak, 2);
+        assert!(usage.queued_ns > 0);
+        assert!(key.label().starts_with("uplink:"));
     }
 
     #[test]

@@ -1,0 +1,467 @@
+//! Observability: a deterministic, virtual-time flight recorder.
+//!
+//! Every layer that does timed work — the [`crate::net::sched`] link
+//! scheduler, the single-shell [`crate::kvc::manager::KvcManager`], the
+//! [`crate::federation::manager::FederatedKvcManager`] and the scenario
+//! harness — can emit structured span/instant [`TraceEvent`]s into a
+//! [`TraceSink`].  Events are stamped with **virtual time** (the
+//! scheduler's `virtual_ns` clock, never the wall clock) plus a logical
+//! sequence number assigned at record time as the deterministic
+//! tie-break, so two runs of the same seed produce byte-identical logs.
+//!
+//! The default sink is [`NoopSink`]: every instrumentation site first
+//! asks [`TraceSink::wants`] for its [`SpanKind`] and skips all event
+//! construction when the answer is `false`, so tracing is
+//! pay-for-what-you-use.  [`Recorder`] collects events in memory for the
+//! two exporters:
+//!
+//! * [`jsonl`] — compact one-object-per-line JSON, byte-stable under the
+//!   same `util::json` discipline as scenario metrics (golden-testable);
+//! * [`chrome`] — Chrome trace-event JSON loadable in Perfetto /
+//!   `chrome://tracing`, with shells rendered as processes and links as
+//!   threads.
+//!
+//! See `docs/TRACING.md` for the event schema and a worked example.
+
+use crate::util::json::{obj, s, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The layer a trace event belongs to; `--spans` filters on these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// `net::sched` transfer lifecycle: enqueue, acquire, queue, serialize, xfer.
+    Sched,
+    /// Single-shell manager Get/Set fan-out batches.
+    Kvc,
+    /// Federation: race arms, promotions, evacuations, epoch rotation.
+    Fed,
+    /// Injected failures: satellite loss, ISL outage, correlated plans.
+    Fault,
+    /// Harness milestones: epoch boundaries, handovers.
+    Sim,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 5] =
+        [SpanKind::Sched, SpanKind::Kvc, SpanKind::Fed, SpanKind::Fault, SpanKind::Sim];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Sched => "sched",
+            SpanKind::Kvc => "kvc",
+            SpanKind::Fed => "fed",
+            SpanKind::Fault => "fault",
+            SpanKind::Sim => "sim",
+        }
+    }
+
+    fn bit(self) -> u8 {
+        match self {
+            SpanKind::Sched => 1 << 0,
+            SpanKind::Kvc => 1 << 1,
+            SpanKind::Fed => 1 << 2,
+            SpanKind::Fault => 1 << 3,
+            SpanKind::Sim => 1 << 4,
+        }
+    }
+}
+
+/// Which [`SpanKind`]s a [`Recorder`] keeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanFilter {
+    mask: u8,
+}
+
+impl SpanFilter {
+    /// Keep every kind.
+    pub fn all() -> SpanFilter {
+        SpanFilter { mask: 0b1_1111 }
+    }
+
+    /// Parse a comma-separated kind list, e.g. `"sched,fed"`.
+    pub fn parse(spec: &str) -> Result<SpanFilter, String> {
+        let mut mask = 0u8;
+        for part in spec.split(',') {
+            let part = part.trim();
+            let kind = match part {
+                "sched" => SpanKind::Sched,
+                "kvc" => SpanKind::Kvc,
+                "fed" => SpanKind::Fed,
+                "fault" => SpanKind::Fault,
+                "sim" => SpanKind::Sim,
+                _ => {
+                    return Err(format!(
+                        "unknown span kind `{part}` (expected sched|kvc|fed|fault|sim)"
+                    ))
+                }
+            };
+            mask |= kind.bit();
+        }
+        if mask == 0 {
+            return Err("empty span filter".into());
+        }
+        Ok(SpanFilter { mask })
+    }
+
+    pub fn allows(self, kind: SpanKind) -> bool {
+        self.mask & kind.bit() != 0
+    }
+}
+
+impl Default for SpanFilter {
+    fn default() -> Self {
+        SpanFilter::all()
+    }
+}
+
+/// A structured argument value on a trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgVal {
+    U(u64),
+    I(i64),
+    S(String),
+}
+
+impl ArgVal {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgVal::U(v) => Json::Num(*v as f64),
+            ArgVal::I(v) => Json::Num(*v as f64),
+            ArgVal::S(v) => s(v),
+        }
+    }
+}
+
+/// One span (`dur_ns > 0`) or instant (`dur_ns == 0`) on the virtual
+/// timeline.  `seq` is assigned by the sink at record time and is the
+/// deterministic tie-break for events sharing a timestamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    /// Virtual-time start, nanoseconds.
+    pub ts_ns: u64,
+    /// Span duration in virtual nanoseconds; 0 marks an instant event.
+    pub dur_ns: u64,
+    pub kind: SpanKind,
+    pub name: &'static str,
+    /// Emitting shell, if the event is shell-scoped (federation control
+    /// events carry `None`).
+    pub shell: Option<u16>,
+    /// Link label (`uplink:P.S` / `serve:P.S`), if link-scoped.
+    pub link: Option<String>,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+impl TraceEvent {
+    /// An instant event (no duration).
+    pub fn instant(kind: SpanKind, name: &'static str, ts_ns: u64) -> TraceEvent {
+        TraceEvent { seq: 0, ts_ns, dur_ns: 0, kind, name, shell: None, link: None, args: vec![] }
+    }
+
+    /// A span event covering `[ts_ns, ts_ns + dur_ns)`.
+    pub fn span(kind: SpanKind, name: &'static str, ts_ns: u64, dur_ns: u64) -> TraceEvent {
+        TraceEvent { seq: 0, ts_ns, dur_ns, kind, name, shell: None, link: None, args: vec![] }
+    }
+
+    pub fn with_shell(mut self, shell: u16) -> TraceEvent {
+        self.shell = Some(shell);
+        self
+    }
+
+    pub fn with_link(mut self, link: String) -> TraceEvent {
+        self.link = Some(link);
+        self
+    }
+
+    pub fn arg(mut self, key: &'static str, val: ArgVal) -> TraceEvent {
+        self.args.push((key, val));
+        self
+    }
+
+    pub fn arg_u(self, key: &'static str, val: u64) -> TraceEvent {
+        self.arg(key, ArgVal::U(val))
+    }
+}
+
+/// Where instrumented code sends events.  Implementations must be cheap
+/// to interrogate: call sites gate all event construction on
+/// [`TraceSink::wants`].
+pub trait TraceSink: Send + Sync {
+    /// Does this sink want events of `kind` at all?  `false` lets the
+    /// caller skip event construction entirely.
+    fn wants(&self, kind: SpanKind) -> bool;
+    fn record(&self, ev: TraceEvent);
+}
+
+/// The zero-cost default sink: wants nothing, records nothing.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn wants(&self, _kind: SpanKind) -> bool {
+        false
+    }
+    fn record(&self, _ev: TraceEvent) {}
+}
+
+/// An in-memory sink.  Sequence numbers are assigned in record order;
+/// all instrumented paths record from a single thread of control, so
+/// record order — and therefore the exported byte stream — is a pure
+/// function of the seed.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    events: Mutex<Vec<TraceEvent>>,
+    seq: AtomicU64,
+    filter: SpanFilter,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::with_filter(SpanFilter::all())
+    }
+
+    pub fn with_filter(filter: SpanFilter) -> Recorder {
+        Recorder { events: Mutex::new(Vec::new()), seq: AtomicU64::new(0), filter }
+    }
+
+    /// Drain all recorded events, in sequence order.
+    pub fn take(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl TraceSink for Recorder {
+    fn wants(&self, kind: SpanKind) -> bool {
+        self.filter.allows(kind)
+    }
+
+    fn record(&self, mut ev: TraceEvent) {
+        if !self.filter.allows(ev.kind) {
+            return;
+        }
+        ev.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.events.lock().unwrap().push(ev);
+    }
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let args = Json::Obj(ev.args.iter().map(|(k, v)| (k.to_string(), v.to_json())).collect());
+    let mut pairs = vec![
+        ("args", args),
+        ("dur_ns", Json::Num(ev.dur_ns as f64)),
+        ("kind", s(ev.kind.as_str())),
+        ("name", s(ev.name)),
+        ("seq", Json::Num(ev.seq as f64)),
+        ("ts_ns", Json::Num(ev.ts_ns as f64)),
+    ];
+    if let Some(link) = &ev.link {
+        pairs.push(("link", s(link)));
+    }
+    if let Some(shell) = ev.shell {
+        pairs.push(("shell", Json::Num(shell as f64)));
+    }
+    obj(pairs)
+}
+
+/// Compact JSONL export: one event object per line, in sequence order,
+/// keys sorted — byte-stable across same-seed runs.
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 96);
+    for ev in events {
+        out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Process id for the Chrome export: shells map to pid `shell + 1`,
+/// shell-less (federation control / harness) events to pid 0.
+fn chrome_pid(ev: &TraceEvent) -> u64 {
+    match ev.shell {
+        Some(sh) => sh as u64 + 1,
+        None => 0,
+    }
+}
+
+/// Chrome trace-event JSON (the `traceEvents` array form), loadable in
+/// Perfetto or `chrome://tracing`.  Shells become processes, links
+/// become named threads; events without a link land on thread 0
+/// (`ops`).  Timestamps are virtual microseconds.
+pub fn chrome(events: &[TraceEvent]) -> String {
+    use std::collections::BTreeMap;
+    // Stable thread ids: per process, links sorted by label, from 1.
+    let mut pids: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for ev in events {
+        let links = pids.entry(chrome_pid(ev)).or_default();
+        if let Some(link) = &ev.link {
+            if !links.contains(link) {
+                links.push(link.clone());
+            }
+        }
+    }
+    let mut tid_of: BTreeMap<(u64, String), u64> = BTreeMap::new();
+    let mut meta: Vec<Json> = Vec::new();
+    for (pid, links) in &mut pids {
+        links.sort();
+        let pname = if *pid == 0 {
+            "control".to_string()
+        } else {
+            format!("shell {}", pid - 1)
+        };
+        meta.push(obj(vec![
+            ("args", obj(vec![("name", s(&pname))])),
+            ("name", s("process_name")),
+            ("ph", s("M")),
+            ("pid", Json::Num(*pid as f64)),
+            ("tid", Json::Num(0.0)),
+        ]));
+        for (i, link) in std::iter::once(&"ops".to_string()).chain(links.iter()).enumerate() {
+            tid_of.insert((*pid, link.clone()), i as u64);
+            meta.push(obj(vec![
+                ("args", obj(vec![("name", s(link))])),
+                ("name", s("thread_name")),
+                ("ph", s("M")),
+                ("pid", Json::Num(*pid as f64)),
+                ("tid", Json::Num(i as f64)),
+            ]));
+        }
+    }
+    let mut out: Vec<Json> = meta;
+    for ev in events {
+        let pid = chrome_pid(ev);
+        let tid = match &ev.link {
+            Some(link) => *tid_of.get(&(pid, link.clone())).unwrap_or(&0),
+            None => 0,
+        };
+        let mut arg_pairs: Vec<(String, Json)> =
+            ev.args.iter().map(|(k, v)| (k.to_string(), v.to_json())).collect();
+        arg_pairs.push(("seq".to_string(), Json::Num(ev.seq as f64)));
+        let mut pairs = vec![
+            ("args", Json::Obj(arg_pairs.into_iter().collect())),
+            ("cat", s(ev.kind.as_str())),
+            ("name", s(ev.name)),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(ev.ts_ns as f64 / 1000.0)),
+        ];
+        if ev.dur_ns > 0 {
+            pairs.push(("dur", Json::Num(ev.dur_ns as f64 / 1000.0)));
+            pairs.push(("ph", s("X")));
+        } else {
+            pairs.push(("ph", s("i")));
+            pairs.push(("s", s("t")));
+        }
+        out.push(obj(pairs));
+    }
+    obj(vec![("traceEvents", Json::Arr(out))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ev(kind: SpanKind, name: &'static str, ts: u64) -> TraceEvent {
+        TraceEvent::instant(kind, name, ts)
+    }
+
+    #[test]
+    fn noop_sink_wants_nothing() {
+        let sink = NoopSink;
+        for kind in SpanKind::ALL {
+            assert!(!sink.wants(kind));
+        }
+        sink.record(ev(SpanKind::Sched, "x", 0)); // must not panic
+    }
+
+    #[test]
+    fn recorder_assigns_monotone_sequence_numbers() {
+        let rec = Recorder::new();
+        rec.record(ev(SpanKind::Sched, "a", 10));
+        rec.record(ev(SpanKind::Kvc, "b", 5));
+        rec.record(ev(SpanKind::Fed, "c", 10));
+        let events = rec.take();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn span_filter_parses_and_filters() {
+        let f = SpanFilter::parse("sched,fed").unwrap();
+        assert!(f.allows(SpanKind::Sched));
+        assert!(f.allows(SpanKind::Fed));
+        assert!(!f.allows(SpanKind::Kvc));
+        assert!(!f.allows(SpanKind::Sim));
+        assert!(SpanFilter::parse("bogus").is_err());
+        assert!(SpanFilter::parse("").is_err());
+
+        let rec = Recorder::with_filter(f);
+        assert!(!rec.wants(SpanKind::Kvc));
+        rec.record(ev(SpanKind::Kvc, "dropped", 1));
+        rec.record(ev(SpanKind::Sched, "kept", 2));
+        let events = rec.take();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].name, "kept");
+        assert_eq!(events[0].seq, 0);
+    }
+
+    #[test]
+    fn jsonl_lines_are_sorted_key_objects() {
+        let e = TraceEvent::span(SpanKind::Sched, "serialize", 100, 50)
+            .with_shell(2)
+            .with_link("uplink:1.2".to_string())
+            .arg_u("tag", 7);
+        let out = jsonl(&[e]);
+        assert_eq!(
+            out,
+            "{\"args\":{\"tag\":7},\"dur_ns\":50,\"kind\":\"sched\",\"link\":\"uplink:1.2\",\
+             \"name\":\"serialize\",\"seq\":0,\"shell\":2,\"ts_ns\":100}\n"
+        );
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_metadata_and_phases() {
+        let events = vec![
+            TraceEvent::span(SpanKind::Sched, "serialize", 1000, 500)
+                .with_shell(0)
+                .with_link("uplink:1.2".to_string()),
+            TraceEvent::instant(SpanKind::Fed, "end_of_epoch", 2000).arg_u("epoch", 1),
+        ];
+        let out = chrome(&events);
+        let parsed = Json::parse(&out).expect("chrome export parses");
+        let Json::Obj(top) = parsed else { panic!("top level must be an object") };
+        let Json::Arr(evs) = &top["traceEvents"] else { panic!("traceEvents must be an array") };
+        // 2 data events + process/thread metadata for both pids.
+        assert!(evs.len() >= 2 + 2);
+        let phases: Vec<String> = evs
+            .iter()
+            .filter_map(|e| match e {
+                Json::Obj(o) => match &o["ph"] {
+                    Json::Str(p) => Some(p.clone()),
+                    _ => None,
+                },
+                _ => None,
+            })
+            .collect();
+        assert!(phases.iter().any(|p| p == "X"));
+        assert!(phases.iter().any(|p| p == "i"));
+        assert!(phases.iter().any(|p| p == "M"));
+    }
+
+    #[test]
+    fn recorder_works_through_a_trait_object() {
+        let sink: Arc<dyn TraceSink> = Arc::new(Recorder::new());
+        assert!(sink.wants(SpanKind::Sim));
+        sink.record(ev(SpanKind::Sim, "epoch", 0));
+    }
+}

@@ -172,6 +172,25 @@ pub fn scenarios() -> String {
     out
 }
 
+/// Flight-recorder snapshot of the paper's 19x5 testbed at the fixed
+/// seed: the byte-stable JSONL trace `skymemory trace paper-19x5`
+/// emits (docs/TRACING.md documents the schema).
+pub fn trace_paper_19x5() -> String {
+    let spec = crate::sim::scenario::ScenarioSpec::paper_19x5(42);
+    let sink = std::sync::Arc::new(crate::obs::Recorder::new());
+    crate::sim::harness::run_scenario_with_sink(&spec, sink.clone());
+    crate::obs::jsonl(&sink.take())
+}
+
+/// Flight-recorder snapshot of the federated tri-shell run at the fixed
+/// seed (race arms, evacuations and correlated failures included).
+pub fn trace_federated_tri_shell() -> String {
+    let spec = crate::sim::scenario::FederatedScenarioSpec::federated_tri_shell(42);
+    let sink = std::sync::Arc::new(crate::obs::Recorder::new());
+    crate::sim::harness::run_federated_scenario_with_sink(&spec, sink.clone());
+    crate::obs::jsonl(&sink.take())
+}
+
 /// Table 2: the simulation configuration actually used.
 pub fn table2() -> String {
     let c = crate::sim::SimConfig::default();
@@ -192,7 +211,7 @@ pub fn table2() -> String {
 /// into `outdir`; returns the file list.
 pub fn write_all(outdir: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {
     std::fs::create_dir_all(outdir)?;
-    let items: [(&str, String); 8] = [
+    let items: [(&str, String); 10] = [
         ("table1.csv", table1()),
         ("fig1_fig2.csv", fig1_fig2()),
         ("fig13.txt", fig13()),
@@ -201,6 +220,8 @@ pub fn write_all(outdir: &std::path::Path) -> std::io::Result<Vec<std::path::Pat
         ("fig16.csv", fig16()),
         ("table2.csv", table2()),
         ("scenarios.json", scenarios()),
+        ("trace_paper_19x5.jsonl", trace_paper_19x5()),
+        ("trace_federated_tri_shell.jsonl", trace_federated_tri_shell()),
     ];
     let mut written = Vec::new();
     for (name, content) in items {

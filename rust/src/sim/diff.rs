@@ -66,6 +66,9 @@ const LOWER_BETTER: &[&str] = &[
     "broken_blocks",
     "evicted_blocks",
     "evicted_chunks",
+    "dropped_ttl",
+    "dropped_stale",
+    "dropped_unroutable",
 ];
 
 /// Comparison tolerance: deltas at or below this are noise, not changes.
@@ -402,6 +405,28 @@ mod tests {
         let r = diff_metrics(a, b).unwrap();
         assert!(r.has_regressions());
         assert_eq!(r.deltas[0].key, "shells.1.hit_rate");
+    }
+
+    #[test]
+    fn transport_drop_counters_regress_when_they_rise() {
+        let a = r#"{"name":"s1","dropped_ttl":0,"dropped_stale":1,"dropped_unroutable":0}"#;
+        let b = r#"{"name":"s1","dropped_ttl":3,"dropped_stale":1,"dropped_unroutable":0}"#;
+        let r = diff_metrics(a, b).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.regressions().next().unwrap().key, "dropped_ttl");
+        // drops going away is an improvement, not a regression
+        let r2 = diff_metrics(b, a).unwrap();
+        assert_eq!(r2.deltas.len(), 1);
+        assert!(!r2.has_regressions());
+    }
+
+    #[test]
+    fn timeline_epochs_flatten_by_index() {
+        let a = r#"{"name":"s1","timeline":{"epochs":[{"epoch":0,"hit_rate":0.9}],"links":[{"transfers":5}],"links_elided":0}}"#;
+        let b = r#"{"name":"s1","timeline":{"epochs":[{"epoch":0,"hit_rate":0.4}],"links":[{"transfers":5}],"links_elided":0}}"#;
+        let r = diff_metrics(a, b).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.deltas[0].key, "timeline.epochs.0.hit_rate");
     }
 
     #[test]

@@ -28,8 +28,9 @@ use crate::kvc::block::{block_hashes, BlockHash};
 use crate::kvc::manager::{KvcManager, KvcStatsSnapshot};
 use crate::mapping::box_width;
 use crate::net::faults::FaultyTransport;
-use crate::net::sched::SchedSnapshot;
+use crate::net::sched::{LinkUsage, SchedSnapshot};
 use crate::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
+use crate::obs::{NoopSink, SpanKind, TraceEvent, TraceSink};
 use crate::satellite::fleet::Fleet;
 use crate::sim::config::SimConfig;
 use crate::sim::latency::worst_case_latency;
@@ -81,6 +82,17 @@ pub struct ScenarioReport {
     /// Total ISL hops and hop-weighted payload bytes on the mesh.
     pub isl_hops: u64,
     pub isl_bytes: u64,
+    /// Transport drop counters (TTL exhaustion, stale-epoch writes,
+    /// unroutable destinations) — silent drops are regressions.
+    pub dropped_ttl: u64,
+    pub dropped_stale: u64,
+    pub dropped_unroutable: u64,
+    /// Per-epoch deltas of the headline counters (`timeline.epochs`).
+    pub epoch_series: Vec<EpochSample>,
+    /// Busiest links with utilization aggregates (`timeline.links`).
+    pub link_rollup: Vec<LinkRollup>,
+    /// Links beyond the [`LINK_ROLLUP_CAP`] busiest.
+    pub links_elided: u64,
     /// Per-request accounted network time (emulated link model, ms).
     pub net_mean_ms: f64,
     pub net_p50_ms: f64,
@@ -93,6 +105,122 @@ pub struct ScenarioReport {
     /// Virtual-time scheduler counters: batches, in-flight peak, and the
     /// per-link queueing/utilization aggregates.
     pub sched: SchedSnapshot,
+}
+
+/// One epoch's slice of a run: deltas of the headline counters between
+/// consecutive epoch boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochSample {
+    pub epoch: u64,
+    pub requests: u64,
+    pub blocks_requested: u64,
+    pub blocks_hit: u64,
+    pub hit_rate: f64,
+    pub isl_bytes: u64,
+}
+
+/// Whole-run busy/queued utilization and queue high-water mark of one
+/// scheduler link (federated keys are prefixed `s{shell}:`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkRollup {
+    pub key: String,
+    pub transfers: u64,
+    pub busy_ns: u64,
+    pub queued_ns: u64,
+    pub queue_peak: u64,
+}
+
+/// Links reported in `timeline.links`; the rest are counted in
+/// `timeline.links_elided` so mega-shell reports stay bounded.
+const LINK_ROLLUP_CAP: usize = 16;
+
+/// Fold cumulative per-epoch marks `(requests, blocks_requested,
+/// blocks_hit, isl_bytes)` into per-epoch deltas.
+fn epoch_samples(marks: &[(u64, u64, u64, u64)]) -> Vec<EpochSample> {
+    let mut prev = (0u64, 0u64, 0u64, 0u64);
+    let mut out = Vec::with_capacity(marks.len());
+    for (i, m) in marks.iter().enumerate() {
+        let (requests, blocks_requested, blocks_hit, isl_bytes) =
+            (m.0 - prev.0, m.1 - prev.1, m.2 - prev.2, m.3 - prev.3);
+        out.push(EpochSample {
+            epoch: i as u64,
+            requests,
+            blocks_requested,
+            blocks_hit,
+            hit_rate: if blocks_requested == 0 {
+                0.0
+            } else {
+                blocks_hit as f64 / blocks_requested as f64
+            },
+            isl_bytes,
+        });
+        prev = *m;
+    }
+    out
+}
+
+/// Sort links by traffic (transfers, then busy time, ties by key) and
+/// keep the [`LINK_ROLLUP_CAP`] busiest; returns the rows kept and the
+/// count elided.
+fn link_rollups(raw: Vec<(String, LinkUsage)>) -> (Vec<LinkRollup>, u64) {
+    let mut rows: Vec<LinkRollup> = raw
+        .into_iter()
+        .map(|(key, u)| LinkRollup {
+            key,
+            transfers: u.transfers,
+            busy_ns: u.busy_ns,
+            queued_ns: u.queued_ns,
+            queue_peak: u.queue_peak,
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.transfers.cmp(&a.transfers).then(b.busy_ns.cmp(&a.busy_ns)).then(a.key.cmp(&b.key))
+    });
+    let elided = rows.len().saturating_sub(LINK_ROLLUP_CAP) as u64;
+    rows.truncate(LINK_ROLLUP_CAP);
+    (rows, elided)
+}
+
+/// Render the `timeline` object (shared by both report flavours).
+fn timeline_json(epochs: &[EpochSample], links: &[LinkRollup], elided: u64) -> Json {
+    obj(vec![
+        (
+            "epochs",
+            Json::Arr(
+                epochs
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("epoch", n(e.epoch as f64)),
+                            ("requests", n(e.requests as f64)),
+                            ("blocks_requested", n(e.blocks_requested as f64)),
+                            ("blocks_hit", n(e.blocks_hit as f64)),
+                            ("hit_rate", n(e.hit_rate)),
+                            ("isl_bytes", n(e.isl_bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "links",
+            Json::Arr(
+                links
+                    .iter()
+                    .map(|l| {
+                        obj(vec![
+                            ("key", s(&l.key)),
+                            ("transfers", n(l.transfers as f64)),
+                            ("busy_ns", n(l.busy_ns as f64)),
+                            ("queued_ns", n(l.queued_ns as f64)),
+                            ("queue_peak", n(l.queue_peak as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("links_elided", n(elided as f64)),
+    ])
 }
 
 /// Render a scheduler snapshot (shared by the single-shell and federated
@@ -136,6 +264,9 @@ impl ScenarioReport {
             ("evicted_blocks", n(self.evicted_blocks as f64)),
             ("isl_hops", n(self.isl_hops as f64)),
             ("isl_bytes", n(self.isl_bytes as f64)),
+            ("dropped_ttl", n(self.dropped_ttl as f64)),
+            ("dropped_stale", n(self.dropped_stale as f64)),
+            ("dropped_unroutable", n(self.dropped_unroutable as f64)),
             ("net_mean_ms", n(self.net_mean_ms)),
             ("net_p50_ms", n(self.net_p50_ms)),
             ("net_p99_ms", n(self.net_p99_ms)),
@@ -156,6 +287,10 @@ impl ScenarioReport {
                 ]),
             ),
             ("sched", sched_json(&self.sched)),
+            (
+                "timeline",
+                timeline_json(&self.epoch_series, &self.link_rollup, self.links_elided),
+            ),
         ])
     }
 
@@ -375,6 +510,14 @@ fn analytic_worst_case_s(spec: &ScenarioSpec) -> f64 {
 
 /// Run one scenario end to end and return its metrics report.
 pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
+    run_scenario_with_sink(spec, Arc::new(NoopSink))
+}
+
+/// [`run_scenario`] with a flight recorder installed on every layer
+/// (`skymemory trace`): the sink sees scheduler transfer spans, KVC
+/// Get/Set spans, and harness epoch/fault instants, all stamped with
+/// [`crate::net::sched`] virtual time.
+pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> ScenarioReport {
     spec.validate();
     let torus = spec.torus();
     let geometry = spec.geometry();
@@ -394,6 +537,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         los.half_planes,
     ));
     let manager = KvcManager::new(spec.kvc_config(), torus, faults.clone());
+    manager.set_trace_sink(sink.clone());
 
     let mut rng = XorShift64::new(spec.seed ^ 0x5EED_5CEA_0A11_0F01);
     let items = workload::generate(&spec.workload, spec.total_requests());
@@ -409,8 +553,15 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     let mut request_net_ns: Vec<u64> = Vec::with_capacity(items.len());
     // (heal_at_epoch, a, b) for active ISL outages
     let mut active_outages: Vec<(u64, SatId, SatId)> = Vec::new();
+    // cumulative (requests, blocks_requested, blocks_hit, isl_bytes) at
+    // each epoch boundary, folded into `timeline.epochs` deltas
+    let mut epoch_marks: Vec<(u64, u64, u64, u64)> = Vec::with_capacity(spec.epochs as usize);
 
     for epoch in 0..spec.epochs {
+        if sink.wants(SpanKind::Sim) {
+            let ts = manager.sched().stats.virtual_ns.load(Ordering::Relaxed);
+            sink.record(TraceEvent::instant(SpanKind::Sim, "epoch", ts).arg_u("epoch", epoch));
+        }
         // --- failure injection (epoch 0 populates the cache cleanly) ----
         if epoch > 0 && !spec.failures.is_none() {
             let (l, o, h) = inject_failures_epoch(
@@ -426,6 +577,18 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
             sat_losses += l;
             isl_outages += o;
             handovers += h;
+            if sink.wants(SpanKind::Fault) {
+                let ts = manager.sched().stats.virtual_ns.load(Ordering::Relaxed);
+                for (name, count) in [("sat_loss", l), ("isl_outage", o), ("handover", h)] {
+                    if count > 0 {
+                        sink.record(
+                            TraceEvent::instant(SpanKind::Fault, name, ts)
+                                .arg_u("count", count)
+                                .arg_u("epoch", epoch),
+                        );
+                    }
+                }
+            }
         }
 
         // --- serve this epoch's slice of the workload -------------------
@@ -480,6 +643,12 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
                 Err(_) => failed_migrations += 1,
             }
         }
+        epoch_marks.push((
+            request_net_ns.len() as u64,
+            blocks_requested,
+            blocks_hit,
+            inproc.stats().isl_bytes.load(Ordering::Relaxed),
+        ));
         manager.transport().set_epoch(epoch + 1);
     }
 
@@ -494,6 +663,10 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         evicted_chunks += st.evicted_chunks;
         evicted_blocks += st.evicted_blocks;
     }
+    let epoch_series = epoch_samples(&epoch_marks);
+    let (link_rollup, links_elided) = link_rollups(
+        manager.sched().link_rollup().into_iter().map(|(k, u)| (k.label(), u)).collect(),
+    );
 
     ScenarioReport {
         name: spec.name.clone(),
@@ -521,6 +694,12 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         evicted_blocks,
         isl_hops: inproc.stats().isl_hops.load(Ordering::Relaxed),
         isl_bytes: inproc.stats().isl_bytes.load(Ordering::Relaxed),
+        dropped_ttl: inproc.stats().dropped_ttl.load(Ordering::Relaxed),
+        dropped_stale: inproc.stats().dropped_stale.load(Ordering::Relaxed),
+        dropped_unroutable: inproc.stats().dropped_unroutable.load(Ordering::Relaxed),
+        epoch_series,
+        link_rollup,
+        links_elided,
         net_mean_ms: if requests == 0 { 0.0 } else { to_ms(total_ns / requests) },
         net_p50_ms: to_ms(percentile_ns(&sorted_ns, 0.50)),
         net_p99_ms: to_ms(percentile_ns(&sorted_ns, 0.99)),
@@ -654,6 +833,15 @@ pub struct FederatedScenarioReport {
     pub net_p50_ms: f64,
     pub net_p99_ms: f64,
     pub net_worst_ms: f64,
+    /// Transport drop counters summed across every shell.
+    pub dropped_ttl: u64,
+    pub dropped_stale: u64,
+    pub dropped_unroutable: u64,
+    /// Per-epoch deltas of the headline counters (federation-wide).
+    pub epoch_series: Vec<EpochSample>,
+    /// Busiest links federation-wide (keys prefixed `s{shell}:`).
+    pub link_rollup: Vec<LinkRollup>,
+    pub links_elided: u64,
     pub shells: Vec<FederatedShellReport>,
 }
 
@@ -699,6 +887,13 @@ impl FederatedScenarioReport {
             ("net_p50_ms", n(self.net_p50_ms)),
             ("net_p99_ms", n(self.net_p99_ms)),
             ("net_worst_ms", n(self.net_worst_ms)),
+            ("dropped_ttl", n(self.dropped_ttl as f64)),
+            ("dropped_stale", n(self.dropped_stale as f64)),
+            ("dropped_unroutable", n(self.dropped_unroutable as f64)),
+            (
+                "timeline",
+                timeline_json(&self.epoch_series, &self.link_rollup, self.links_elided),
+            ),
             ("shells", Json::Arr(self.shells.iter().map(|sh| sh.to_json()).collect())),
         ])
     }
@@ -747,6 +942,17 @@ fn build_shell_link(id: ShellId, ss: &ShellSpec, spec: &FederatedScenarioSpec) -
 /// rotation migration, and per-shell metrics.  Deterministic: the same
 /// spec (same seed) produces byte-identical metrics JSON.
 pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenarioReport {
+    run_federated_scenario_with_sink(spec, Arc::new(NoopSink))
+}
+
+/// [`run_federated_scenario`] with a flight recorder installed on the
+/// federation manager and every shell's scheduler (`skymemory trace`).
+/// Federation control events carry no shell; shell-stamped events use
+/// the shell's index as the Chrome-trace process.
+pub fn run_federated_scenario_with_sink(
+    spec: &FederatedScenarioSpec,
+    sink: Arc<dyn TraceSink>,
+) -> FederatedScenarioReport {
     spec.validate();
     let links: Vec<ShellLink> = spec
         .shells
@@ -764,8 +970,17 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
         spec.preplace,
         shell_layouts.clone(),
     );
+    manager.set_trace_sink(sink.clone());
     let primary = manager.primary_shell();
     debug_assert_eq!(primary as usize, spec.primary_shell_index());
+    // federation-level stamp: the sum of every shell scheduler's clock
+    let fed_ns = || {
+        transport
+            .links()
+            .iter()
+            .map(|l| l.sched.stats.virtual_ns.load(Ordering::Relaxed))
+            .sum::<u64>()
+    };
 
     let mut rng = XorShift64::new(spec.seed ^ 0x5EED_FEDE_0A11_0F02);
     let items = workload::generate(&spec.workload, spec.total_requests());
@@ -786,9 +1001,16 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
     let mut request_net_ns: Vec<u64> = Vec::with_capacity(items.len());
     // (heal_at_epoch, a, b) for active ISL outages on the primary shell
     let mut active_outages: Vec<(u64, SatId, SatId)> = Vec::new();
+    // cumulative (requests, blocks_requested, blocks_hit, isl_bytes) at
+    // each epoch boundary, folded into `timeline.epochs` deltas
+    let mut epoch_marks: Vec<(u64, u64, u64, u64)> = Vec::with_capacity(spec.epochs as usize);
     let half = (box_width(shell_layouts[primary as usize].n_servers) as i32 - 1) / 2;
 
     for epoch in 0..spec.epochs {
+        if sink.wants(SpanKind::Sim) {
+            let ev = TraceEvent::instant(SpanKind::Sim, "epoch", fed_ns()).arg_u("epoch", epoch);
+            sink.record(ev);
+        }
         // --- random failures on the primary shell (epoch 0 stays clean) -
         if epoch > 0 && !spec.failures.is_none() {
             let link = transport.link(primary);
@@ -805,6 +1027,19 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
             sat_losses += l;
             isl_outages += o;
             ground_handovers += h;
+            if sink.wants(SpanKind::Fault) {
+                let ts = fed_ns();
+                for (name, count) in [("sat_loss", l), ("isl_outage", o), ("handover", h)] {
+                    if count > 0 {
+                        sink.record(
+                            TraceEvent::instant(SpanKind::Fault, name, ts)
+                                .with_shell(u16::from(primary))
+                                .arg_u("count", count)
+                                .arg_u("epoch", epoch),
+                        );
+                    }
+                }
+            }
         }
 
         // --- scheduled correlated failures: no pre-announced evacuation -
@@ -815,6 +1050,16 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
             solar_storms += s;
             box_kills += b;
             correlated_killed_sats += k;
+            if p + s + b > 0 && sink.wants(SpanKind::Fault) {
+                sink.record(
+                    TraceEvent::instant(SpanKind::Fault, "correlated_failure", fed_ns())
+                        .arg_u("box_kills", b)
+                        .arg_u("epoch", epoch)
+                        .arg_u("killed", k)
+                        .arg_u("plane_losses", p)
+                        .arg_u("solar_storms", s),
+                );
+            }
         }
 
         // --- scheduled whole-box kill: evacuate first, then go dark -----
@@ -830,6 +1075,7 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
             // the box slides one slot west per epoch: kill the whole band
             // it will sweep so the primary stays dark until the run ends
             let remaining = (spec.epochs - epoch) as i32;
+            let killed_before = box_killed_sats;
             for dp in -half..=half {
                 for ds in (-half - remaining)..=half {
                     let sat = torus.offset(center, dp, ds);
@@ -839,6 +1085,14 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
                         box_killed_sats += 1;
                     }
                 }
+            }
+            if sink.wants(SpanKind::Fault) {
+                sink.record(
+                    TraceEvent::instant(SpanKind::Fault, "primary_kill", fed_ns())
+                        .with_shell(u16::from(primary))
+                        .arg_u("epoch", epoch)
+                        .arg_u("killed", box_killed_sats - killed_before),
+                );
             }
         }
 
@@ -890,6 +1144,12 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
                 }
             }
         }
+        let isl = transport
+            .links()
+            .iter()
+            .map(|l| l.inproc.stats().isl_bytes.load(Ordering::Relaxed))
+            .sum::<u64>();
+        epoch_marks.push((request_net_ns.len() as u64, blocks_requested, blocks_hit, isl));
         transport.set_epoch_all(epoch + 1);
     }
 
@@ -942,6 +1202,20 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
         })
         .collect();
 
+    let epoch_series = epoch_samples(&epoch_marks);
+    let mut raw_links: Vec<(String, LinkUsage)> = Vec::new();
+    let (mut dropped_ttl, mut dropped_stale, mut dropped_unroutable) = (0u64, 0u64, 0u64);
+    for (i, link) in transport.links().iter().enumerate() {
+        for (key, u) in link.sched.link_rollup() {
+            raw_links.push((format!("s{i}:{}", key.label()), u));
+        }
+        let st = link.inproc.stats();
+        dropped_ttl += st.dropped_ttl.load(Ordering::Relaxed);
+        dropped_stale += st.dropped_stale.load(Ordering::Relaxed);
+        dropped_unroutable += st.dropped_unroutable.load(Ordering::Relaxed);
+    }
+    let (link_rollup, links_elided) = link_rollups(raw_links);
+
     let proactive = manager.stats.proactive_handover_blocks.load(Ordering::Relaxed);
     let reactive = manager.stats.reactive_rehomed_blocks.load(Ordering::Relaxed);
     let promotions = manager.stats.replica_promotions.load(Ordering::Relaxed);
@@ -989,6 +1263,12 @@ pub fn run_federated_scenario(spec: &FederatedScenarioSpec) -> FederatedScenario
         net_p50_ms: to_ms(percentile_ns(&sorted_ns, 0.50)),
         net_p99_ms: to_ms(percentile_ns(&sorted_ns, 0.99)),
         net_worst_ms: to_ms(sorted_ns.last().copied().unwrap_or(0)),
+        dropped_ttl,
+        dropped_stale,
+        dropped_unroutable,
+        epoch_series,
+        link_rollup,
+        links_elided,
         shells,
     }
 }
@@ -1226,6 +1506,80 @@ mod tests {
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    #[test]
+    fn same_seed_traces_are_byte_identical_jsonl() {
+        use crate::obs::{jsonl, Recorder};
+        let spec = tiny_spec(7);
+        let a = Arc::new(Recorder::new());
+        run_scenario_with_sink(&spec, a.clone());
+        let b = Arc::new(Recorder::new());
+        run_scenario_with_sink(&spec, b.clone());
+        let ja = jsonl(&a.take());
+        let jb = jsonl(&b.take());
+        assert!(!ja.is_empty(), "a traced run must record events");
+        assert_eq!(ja, jb, "same seed must produce a byte-identical trace");
+    }
+
+    #[test]
+    fn federated_trace_carries_all_span_kinds() {
+        use crate::obs::Recorder;
+        let sink = Arc::new(Recorder::new());
+        run_federated_scenario_with_sink(&tiny_tri(11), sink.clone());
+        let events = sink.take();
+        for kind in crate::obs::SpanKind::ALL {
+            assert!(
+                events.iter().any(|e| e.kind == kind),
+                "no {} events in the tri-shell trace",
+                kind.as_str()
+            );
+        }
+        assert!(events.iter().any(|e| e.name == "race_arm"));
+        assert!(events.iter().any(|e| e.name == "correlated_failure"));
+        assert!(events.iter().any(|e| e.name == "epoch"));
+    }
+
+    #[test]
+    fn timeline_rollups_are_consistent_with_totals() {
+        let mut spec = tiny_spec(6);
+        spec.failures = FailurePlan::NONE;
+        let r = run_scenario(&spec);
+        assert_eq!(r.epoch_series.len(), spec.epochs as usize);
+        assert_eq!(r.epoch_series.iter().map(|e| e.requests).sum::<u64>(), r.requests);
+        assert_eq!(r.epoch_series.iter().map(|e| e.blocks_hit).sum::<u64>(), r.blocks_hit);
+        assert_eq!(r.epoch_series.iter().map(|e| e.isl_bytes).sum::<u64>(), r.isl_bytes);
+        assert!(!r.link_rollup.is_empty());
+        assert!(r.link_rollup.len() <= 16);
+        assert!(
+            r.link_rollup.windows(2).all(|w| w[0].transfers >= w[1].transfers),
+            "rollup must be sorted busiest-first"
+        );
+        let j = r.to_json_string();
+        for key in [
+            "\"timeline\"",
+            "\"epochs\"",
+            "\"links\"",
+            "\"links_elided\"",
+            "\"queue_peak\"",
+            "\"dropped_ttl\"",
+            "\"dropped_stale\"",
+            "\"dropped_unroutable\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[test]
+    fn federated_timeline_spans_shell_links() {
+        let spec = tiny_fed(3);
+        let r = run_federated_scenario(&spec);
+        assert_eq!(r.epoch_series.len(), spec.epochs as usize);
+        assert!(!r.link_rollup.is_empty());
+        // both shells carried traffic, under shell-prefixed keys
+        assert!(r.link_rollup.iter().any(|l| l.key.starts_with("s0:")));
+        assert!(r.link_rollup.iter().any(|l| l.key.starts_with("s1:")));
+        assert!(r.to_json_string().contains("\"timeline\""));
     }
 
     #[test]

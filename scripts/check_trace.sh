@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Chrome-trace validity check: the file passed as $1 must be valid
+# trace-event JSON (the format docs/TRACING.md documents and Perfetto /
+# chrome://tracing load): a traceEvents array, non-empty, every event
+# carrying name/ph/ts/pid/tid, every "X" (complete-span) event carrying
+# dur, instants marked with a scope. Runs in CI
+# (.github/workflows/ci.yml) against `skymemory trace --format chrome`.
+set -euo pipefail
+
+if [ $# -ne 1 ] || [ ! -f "$1" ]; then
+    echo "usage: $0 <trace.json>" >&2
+    exit 2
+fi
+
+python3 - "$1" <<'EOF'
+import json
+import sys
+
+path = sys.argv[1]
+with open(path) as f:
+    doc = json.load(f)
+
+events = doc.get("traceEvents")
+assert isinstance(events, list), "traceEvents must be an array"
+assert events, "traceEvents must not be empty"
+
+phases = {}
+for i, ev in enumerate(events):
+    for key in ("name", "ph", "ts", "pid", "tid"):
+        assert key in ev, f"event {i} missing {key!r}: {ev}"
+    ph = ev["ph"]
+    phases[ph] = phases.get(ph, 0) + 1
+    if ph == "X":
+        assert "dur" in ev, f"X event {i} missing dur: {ev}"
+        assert ev["dur"] >= 0, f"X event {i} has negative dur: {ev}"
+    if ph == "i":
+        assert ev.get("s") in ("t", "p", "g"), f"instant {i} missing scope: {ev}"
+
+assert phases.get("M", 0) > 0, "no metadata (process/thread name) events"
+spans = phases.get("X", 0) + phases.get("i", 0)
+assert spans > 0, "no span or instant events"
+print(f"{path}: OK — {len(events)} events ({phases})")
+EOF
