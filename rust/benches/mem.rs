@@ -1,0 +1,195 @@
+//! Bench: the deterministic memory-footprint model vs measured heap use.
+//!
+//! Sweeps cached-prefix counts: for each `n` it builds one prefix chain
+//! of `n` blocks — every block is `CHUNKS_PER_BLOCK` chunks of
+//! `CHUNK_BYTES` in a [`ChunkStore`] plus one [`BlockIndex`] entry per
+//! prefix — then reads the [`MemFootprint`] estimates and times both the
+//! build and the footprint rollup.
+//!
+//! `BENCH_mem.json` layout:
+//!
+//! * deterministic namespace — hand-predictable counters per sweep point
+//!   (`prefix{n}.payload_bytes = n * CHUNKS_PER_BLOCK * CHUNK_BYTES`,
+//!   `prefix{n}.cached_tokens = n * TOKENS_PER_BLOCK`,
+//!   `prefix{n}.indexed_blocks = n`) that the committed baseline gates
+//!   exactly, plus the model's estimate totals (`estimate_*_bytes`),
+//!   which are deterministic per binary but depend on struct layout, so
+//!   the baseline leaves them untracked (only-in-new keys are neutral).
+//! * timing namespace — wall-clock build/rollup stats, and under
+//!   `--features mem-profile` the counting allocator's measured
+//!   live/peak bytes and allocation counts for the same builds.
+//!
+//! With `mem-profile` enabled the bench also validates the model: the
+//! estimated total for each sweep point must land within a loose factor
+//! of the measured live-byte delta (the model charges flat
+//! [`ALLOC_OVERHEAD`](skymemory::obs::mem::ALLOC_OVERHEAD) per
+//! allocation and counts elements rather than capacities, so exact
+//! equality is not expected — order-of-magnitude agreement is the
+//! claim).
+//!
+//! ```text
+//! cargo bench --bench mem [-- --smoke]
+//! cargo bench --bench mem --features mem-profile [-- --smoke]
+//! ```
+
+use skymemory::kvc::block::BlockHash;
+use skymemory::kvc::chunk::ChunkKey;
+use skymemory::kvc::radix::{BlockIndex, BlockMeta};
+use skymemory::obs::mem::{FootprintEstimate, MemFootprint};
+use skymemory::satellite::store::ChunkStore;
+use skymemory::util::bench::{smoke_mode, BenchArtifact, Bencher};
+
+/// Use the counting allocator for the whole process when profiling.
+#[cfg(feature = "mem-profile")]
+#[global_allocator]
+static COUNTING: skymemory::obs::mem::profile::CountingAlloc =
+    skymemory::obs::mem::profile::CountingAlloc;
+
+/// Payload bytes per chunk — fixed so `payload_bytes` is hand-checkable.
+const CHUNK_BYTES: usize = 256;
+/// Chunks per cached block (paper-style striping unit).
+const CHUNKS_PER_BLOCK: usize = 4;
+/// Tokens represented by one cached block (KvcConfig default).
+const TOKENS_PER_BLOCK: u64 = 32;
+
+/// Sweep of cached-prefix lengths (number of blocks in the chain).
+fn sweep(smoke: bool) -> &'static [usize] {
+    if smoke {
+        &[16, 64]
+    } else {
+        &[64, 256, 1024]
+    }
+}
+
+fn hash_for(i: usize) -> BlockHash {
+    let mut bytes = [0u8; 32];
+    bytes[..8].copy_from_slice(&(i as u64).to_le_bytes());
+    BlockHash(bytes)
+}
+
+/// Build one prefix chain of `n` cached blocks: store holds the chunk
+/// payloads, index records every prefix `[0..=i]` as cached.
+fn build_chain(n: usize) -> (ChunkStore, BlockIndex) {
+    let mut store = ChunkStore::new(1 << 30);
+    let mut index = BlockIndex::new();
+    let hashes: Vec<BlockHash> = (0..n).map(hash_for).collect();
+    for (i, hash) in hashes.iter().enumerate() {
+        for c in 0..CHUNKS_PER_BLOCK {
+            let purged = store.set(ChunkKey::new(*hash, c as u32), vec![0xAB; CHUNK_BYTES]);
+            assert!(purged.is_empty(), "budget is sized to never purge");
+        }
+        let meta = BlockMeta {
+            num_chunks: CHUNKS_PER_BLOCK as u32,
+            kvc_len: (CHUNKS_PER_BLOCK * CHUNK_BYTES) as u32,
+            write_epoch: 0,
+            quantizer_id: 0,
+        };
+        index.insert(&hashes[..=i], meta);
+    }
+    (store, index)
+}
+
+fn footprint_of(store: &ChunkStore, index: &BlockIndex) -> FootprintEstimate {
+    let mut est = store.mem_footprint();
+    est.add(index.mem_footprint());
+    est
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("mem", smoke);
+
+    println!("=== footprint model over cached-prefix chains ===");
+    println!(
+        "=== {} chunks x {} B per block, {} tokens per block ===",
+        CHUNKS_PER_BLOCK, CHUNK_BYTES, TOKENS_PER_BLOCK
+    );
+
+    let mut prev_total = 0u64;
+    for &n in sweep(smoke) {
+        #[cfg(feature = "mem-profile")]
+        let before = skymemory::obs::mem::profile::snapshot();
+        let (store, index) = build_chain(n);
+        #[cfg(feature = "mem-profile")]
+        let after = skymemory::obs::mem::profile::snapshot();
+
+        let est = footprint_of(&store, &index);
+
+        // The model's payload side is exact by construction, and two
+        // same-content builds must agree byte-for-byte.
+        let payload = (n * CHUNKS_PER_BLOCK * CHUNK_BYTES) as u64;
+        assert_eq!(est.payload_bytes, payload, "payload model must be exact");
+        assert_eq!(index.len(), n, "one index entry per prefix");
+        let (store2, index2) = build_chain(n);
+        assert_eq!(footprint_of(&store2, &index2), est, "estimate must be deterministic");
+        assert!(est.total() > prev_total, "estimate must grow with the chain");
+        prev_total = est.total();
+
+        let cached_tokens = n as u64 * TOKENS_PER_BLOCK;
+        println!(
+            "prefix n={n:<5} payload {payload:>8} B  index {:>7} B  overhead {:>7} B  \
+             total {:>8} B  {:.1} B/token",
+            est.index_bytes,
+            est.overhead_bytes,
+            est.total(),
+            est.total() as f64 / cached_tokens as f64
+        );
+
+        // Hand-predictable counters: gated exactly by the committed
+        // baseline.
+        art.counter(&format!("prefix{n}.payload_bytes"), payload);
+        art.counter(&format!("prefix{n}.cached_tokens"), cached_tokens);
+        art.counter(&format!("prefix{n}.indexed_blocks"), n as u64);
+        // Model totals: deterministic per binary, layout-dependent, so
+        // deliberately absent from the baseline.
+        art.counter(&format!("prefix{n}.estimate_index_bytes"), est.index_bytes);
+        art.counter(&format!("prefix{n}.estimate_overhead_bytes"), est.overhead_bytes);
+        art.counter(&format!("prefix{n}.estimate_total_bytes"), est.total());
+
+        #[cfg(feature = "mem-profile")]
+        {
+            let live = after.live_bytes.saturating_sub(before.live_bytes);
+            let allocs = after.allocations - before.allocations;
+            let ratio = est.total() as f64 / live.max(1) as f64;
+            println!(
+                "prefix n={n:<5} measured {live:>8} B live over {allocs:>6} allocations  \
+                 estimate/measured {ratio:.2}x"
+            );
+            art.timing_ns(&format!("prefix{n}.measured_live_bytes"), live);
+            art.timing_ns(&format!("prefix{n}.measured_allocations"), allocs);
+            art.timing_ns(&format!("prefix{n}.measured_peak_bytes"), after.peak_bytes);
+            assert!(
+                (0.2..=5.0).contains(&ratio),
+                "estimate {} B vs measured {live} B for n={n}: model is off by more than 5x",
+                est.total()
+            );
+        }
+    }
+
+    println!("\n=== wall-clock: chain build and footprint rollup ===");
+    let &n = sweep(smoke).last().unwrap();
+    let iters = if smoke { 8 } else { 32 };
+    let build = Bencher::new(format!("mem build chain n={n}"))
+        .fixed_iters(iters)
+        .bytes_per_iter(n * CHUNKS_PER_BLOCK * CHUNK_BYTES)
+        .run(|| {
+            let (store, index) = build_chain(n);
+            assert_eq!(index.len(), n);
+            drop(store);
+        });
+    println!("{}", build.report());
+    art.push(&build);
+
+    let (store, index) = build_chain(n);
+    let rollup = Bencher::new(format!("mem footprint rollup n={n}"))
+        .fixed_iters(iters * 4)
+        .run(|| {
+            let est = footprint_of(&store, &index);
+            assert!(est.total() > 0);
+        });
+    println!("{}", rollup.report());
+    art.push(&rollup);
+
+    let path = art.write().expect("write BENCH_mem.json");
+    println!("wrote {}", path.display());
+}

@@ -57,9 +57,11 @@ use crate::kvc::quantize::Quantizer;
 use crate::kvc::radix::BlockMeta;
 use crate::mapping::box_width;
 use crate::net::sched::{race_batches, BatchReport, ChunkOp, ChunkResult, Transfer};
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use crate::obs::{ArgVal, NoopSink, SpanKind, TraceEvent, TraceSink};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::mem::size_of;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -1228,6 +1230,73 @@ impl FederatedKvcManager {
     /// Number of chunks a block of `n_values` f32s will produce.
     pub fn chunks_for_values(&self, n_values: usize) -> usize {
         self.config.chunks_for_values(n_values)
+    }
+
+    /// Tokens the federation index currently covers (`block_tokens`
+    /// tokens per indexed block, copies not double-counted).
+    pub fn cached_tokens(&self) -> u64 {
+        self.indexed_blocks() as u64 * self.config.block_tokens as u64
+    }
+
+    /// Block copies resident per shell (primary + replica + pre-placed),
+    /// in shell order — the per-shell residency signal of the memory
+    /// plane.  One deterministic pass over the (sorted) index.
+    pub fn shell_resident_copies(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.transport.n_shells()];
+        for entry in self.index.lock().unwrap().values() {
+            out[entry.shell as usize] += 1;
+            if let Some(r) = entry.replica {
+                out[r.shell as usize] += 1;
+            }
+            if let Some(p) = entry.preplaced {
+                out[p.shell as usize] += 1;
+            }
+        }
+        out
+    }
+
+    /// Store footprint of one shell: the rollup of every satellite chunk
+    /// store in that shell's fleet.
+    pub fn shell_store_footprint(&self, shell: ShellId) -> FootprintEstimate {
+        let mut est = FootprintEstimate::ZERO;
+        for node in self.transport.link(shell).fleet.nodes() {
+            est.add(node.footprint());
+        }
+        est
+    }
+
+    /// Footprint of the federation-side bookkeeping maps: the block
+    /// index plus the tombstone map.  B-tree nodes hold up to 11
+    /// entries, so we model one allocation per 11 plus two `usize` of
+    /// node linkage per entry.
+    pub fn index_footprint(&self) -> FootprintEstimate {
+        fn btree_est(len: u64, entry: usize) -> FootprintEstimate {
+            let slot = (entry + 2 * size_of::<usize>()) as u64;
+            let mut est = FootprintEstimate {
+                payload_bytes: 0,
+                index_bytes: len * slot,
+                overhead_bytes: 0,
+            };
+            est.charge_allocs(len.div_ceil(11));
+            est
+        }
+        let index_len = self.index.lock().unwrap().len() as u64;
+        let tomb_len = self.tombstones.lock().unwrap().len() as u64;
+        let mut est = btree_est(index_len, size_of::<(BlockHash, FedBlockMeta)>());
+        est.add(btree_est(tomb_len, size_of::<(BlockHash, ShellId)>()));
+        est
+    }
+}
+
+impl MemFootprint for FederatedKvcManager {
+    /// Federation total: every shell's fleet-store rollup plus the
+    /// federation-side index maps.
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let mut est = self.index_footprint();
+        for shell in 0..self.transport.n_shells() {
+            est.add(self.shell_store_footprint(shell as ShellId));
+        }
+        est
     }
 }
 

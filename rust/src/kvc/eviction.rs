@@ -5,8 +5,10 @@
 //! rotation synchronization") falls out of the satellite store dropping
 //! migrated-away chunks.
 
+use crate::obs::mem::FootprintEstimate;
 use std::collections::HashMap;
 use std::hash::Hash;
+use std::mem::size_of;
 
 /// How satellites and clients propagate an eviction (§3.9).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -121,6 +123,24 @@ impl<K: Eq + Hash + Clone> LruTracker<K> {
         } else {
             Some(&self.slab[self.tail].0)
         }
+    }
+
+    /// Estimated footprint of the tracker's bookkeeping: per live entry
+    /// one map slot (key + slab index + control byte) and one slab slot
+    /// (key + two links), plus the three container allocations.  Counted
+    /// from live entries — never slab/free capacities — so the estimate
+    /// shrinks when entries are removed.
+    pub fn footprint(&self) -> FootprintEstimate {
+        let live = self.map.len() as u64;
+        let map_slot = (size_of::<K>() + size_of::<usize>() + 1) as u64;
+        let slab_slot = size_of::<(K, usize, usize)>() as u64;
+        let mut est = FootprintEstimate {
+            payload_bytes: 0,
+            index_bytes: live * (map_slot + slab_slot),
+            overhead_bytes: 0,
+        };
+        est.charge_allocs(3); // map table + slab + free list
+        est
     }
 
     fn push_front(&mut self, idx: usize) {

@@ -39,6 +39,7 @@ use crate::mapping::{box_width, Strategy};
 use crate::net::messages::{Request, Response};
 use crate::net::sched::{ChunkOp, ChunkResult, NetScheduler, SchedConfig, Transfer};
 use crate::net::transport::Transport;
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use crate::obs::{ArgVal, NoopSink, SpanKind, TraceEvent, TraceSink};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -659,6 +660,31 @@ impl KvcManager {
     /// Number of chunks a block of `n_values` f32s will produce.
     pub fn chunks_for_values(&self, n_values: usize) -> usize {
         self.config.chunks_for_values(n_values)
+    }
+
+    /// Blocks currently present in the local radix index.
+    pub fn indexed_blocks(&self) -> usize {
+        self.index.lock().unwrap().len()
+    }
+
+    /// Tokens the indexed blocks cover (`block_tokens` tokens each) —
+    /// the denominator of the `bytes_per_cached_token` capacity metric.
+    pub fn cached_tokens(&self) -> u64 {
+        self.indexed_blocks() as u64 * self.config.block_tokens as u64
+    }
+}
+
+impl MemFootprint for KvcManager {
+    /// The manager-side footprint: the §3.10 radix prefix index plus the
+    /// optional local RAM tier.  The constellation's chunk stores belong
+    /// to the fleet, not the manager — the harness rolls those up per
+    /// satellite and adds this on top.
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let mut est = self.index.lock().unwrap().mem_footprint();
+        if let Some(local) = &self.local {
+            est.add(local.mem_footprint());
+        }
+        est
     }
 }
 

@@ -10,7 +10,9 @@
 
 use crate::kvc::block::BlockHash;
 use crate::kvc::eviction::LruTracker;
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use std::collections::HashMap;
+use std::mem::size_of;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -119,6 +121,26 @@ impl LocalTier {
     }
 }
 
+impl MemFootprint for LocalTier {
+    /// Payload = the tracked decoded-KV bytes (what `byte_budget`
+    /// meters).  Index = one map slot per block plus the LRU tracker.
+    /// Overhead = one heap allocation per value buffer plus the map
+    /// table.
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let inner = self.inner.lock().unwrap();
+        let blocks = inner.map.len() as u64;
+        let slot = (size_of::<BlockHash>() + size_of::<Vec<f32>>() + 1) as u64;
+        let mut est = FootprintEstimate {
+            payload_bytes: inner.bytes_used as u64,
+            index_bytes: blocks * slot,
+            overhead_bytes: 0,
+        };
+        est.charge_allocs(blocks + 1);
+        est.add(inner.lru.footprint());
+        est
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +188,20 @@ mod tests {
         t.put(bh(1), vec![0.0; 50]);
         assert_eq!(t.bytes_used(), 200);
         assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn footprint_follows_contents() {
+        let t = LocalTier::new(1 << 20);
+        let empty = t.mem_footprint().total();
+        t.put(bh(1), vec![0.0; 100]);
+        let one = t.mem_footprint();
+        assert_eq!(one.payload_bytes, 400);
+        assert!(one.total() > empty);
+        t.invalidate(&bh(1));
+        let back = t.mem_footprint();
+        assert_eq!(back.payload_bytes, 0);
+        assert_eq!(back.total(), empty);
     }
 
     #[test]

@@ -42,7 +42,12 @@
 //!   span/instant events stamped with `net::sched` virtual time (a
 //!   zero-cost [`obs::NoopSink`] is the default), exported as byte-stable
 //!   JSONL or Chrome trace-event JSON (Perfetto; shells as processes,
-//!   links as threads) via `skymemory trace` — see `docs/TRACING.md`.
+//!   links as threads) via `skymemory trace` — see `docs/TRACING.md`;
+//!   and the memory-footprint plane ([`obs::mem`]): deterministic
+//!   [`obs::mem::MemFootprint`] estimates over every cache container,
+//!   sampled per epoch into each report's `memory` object
+//!   (bytes per cached token, per-shell residency) and validated by the
+//!   `mem-profile` counting allocator in `rust/benches/mem.rs`.
 //! * [`satellite`] — the satellite node substrate (the paper's cFS stand-in):
 //!   chunk store with LRU, ISL forwarding, migration, eviction gossip.
 //! * [`sim`] — the §4 worst-case-latency simulator (Figure 16), workload

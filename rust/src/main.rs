@@ -16,6 +16,7 @@
 //!                      [--replicate K] [--baseline]
 //! skymemory trace      <builtin> [--seed 42] [--out PATH]
 //!                      [--format jsonl|chrome] [--spans KIND,...]
+//! skymemory mem        <builtin> [--seed 42] [--out PATH]
 //! skymemory repro      [--outdir results]
 //! skymemory bench      --diff <old.json> <new.json> [--tolerance PCT]
 //!                      [--det-only]
@@ -519,6 +520,63 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `skymemory mem --help`.
+const MEM_HELP: &str = "\
+usage: skymemory mem <builtin> [--seed N] [--out PATH]
+
+Run one built-in scenario (single-shell or federated) and print its
+memory-footprint report: the deterministic `memory` object of the
+scenario metrics (per-epoch payload/index/overhead series, end-of-run
+totals, bytes per cached token, high-water marks, and — federated —
+per-shell residency), keyed by scenario name and seed.  The object is
+byte-identical to the `memory` key of `skymemory scenario --name`,
+and two runs of the same seed print identical bytes
+(docs/METRICS.md documents every key).
+
+flags:
+  --seed N    scenario seed (default 42)
+  --out PATH  write the report to PATH instead of stdout
+  --help      this text
+
+exit codes: 0 success; 1 error (unknown scenario, unwritable --out);
+2 usage error.
+";
+
+fn cmd_mem(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{MEM_HELP}");
+        return Ok(());
+    }
+    use skymemory::sim::harness::{run_federated_scenario, run_scenario};
+    use skymemory::sim::scenario::{FederatedScenarioSpec, ScenarioSpec};
+    use skymemory::util::json::{n, obj, s};
+    let Some(name) = args.positionals.first() else {
+        bail!("usage: skymemory mem <builtin> [--seed N] [--out PATH] (see --help)");
+    };
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let report_json = if let Some(spec) = ScenarioSpec::by_name(name, seed) {
+        run_scenario(&spec).to_json()
+    } else if let Some(spec) = FederatedScenarioSpec::by_name(name, seed) {
+        run_federated_scenario(&spec).to_json()
+    } else {
+        bail!("unknown scenario {name} (see `skymemory scenario --list`)");
+    };
+    let memory = report_json
+        .get("memory")
+        .cloned()
+        .ok_or_else(|| anyhow!("scenario report carries no memory object"))?;
+    let line =
+        obj(vec![("memory", memory), ("name", s(name)), ("seed", n(seed as f64))]).to_string();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{line}\n")).with_context(|| format!("writing {path}"))?;
+            eprintln!("# wrote memory report to {path}");
+        }
+        None => println!("{line}"),
+    }
+    Ok(())
+}
+
 /// `skymemory bench --help`.
 const BENCH_HELP: &str = "\
 usage: skymemory bench --diff <old.json> <new.json> [--tolerance PCT]
@@ -588,7 +646,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|trace|repro|bench> [flags]\n\
+        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|trace|mem|repro|bench> [flags]\n\
          see rust/src/main.rs header for per-command flags"
     );
     std::process::exit(2)
@@ -609,6 +667,7 @@ fn main() -> Result<()> {
         "sched" => cmd_sched(&args),
         "federate" => cmd_federate(&args),
         "trace" => cmd_trace(&args),
+        "mem" => cmd_mem(&args),
         "repro" => cmd_repro(&args),
         "bench" => cmd_bench(&args),
         _ => usage(),

@@ -1,0 +1,195 @@
+//! Deterministic memory-footprint accounting — the capacity half of the
+//! observability plane (the flight recorder in [`crate::obs`] is the
+//! timing half).
+//!
+//! The paper's core claim is that a LEO shell can act as one giant
+//! distributed KV cache, which makes *cache bytes per cached token* the
+//! capacity currency of the whole system.  Every container that holds
+//! cache state — the satellite [`crate::satellite::store::ChunkStore`]s,
+//! the [`crate::kvc::radix`] prefix index, the managers' per-block maps —
+//! implements [`MemFootprint`] and reports a [`FootprintEstimate`] split
+//! three ways:
+//!
+//! * `payload_bytes` — the cached data itself (chunk payloads, decoded
+//!   KV values).  This is what the byte budgets meter.
+//! * `index_bytes` — bookkeeping that finds the payload: map entries,
+//!   radix nodes, LRU tracker slots.
+//! * `overhead_bytes` — modeled per-allocation cost
+//!   ([`ALLOC_OVERHEAD`] per heap allocation: allocator headers plus
+//!   size-class rounding).  Estimates that ignore this undercount small
+//!   objects badly, so it is carried explicitly, never folded into the
+//!   other two.
+//!
+//! Everything here is an *estimate* computed from live element counts
+//! and `size_of` — a pure function of cache state, so same-seed runs
+//! report byte-identical numbers and `sim::diff` can gate on them.  The
+//! feature-gated counting allocator in [`profile`] (`--features
+//! mem-profile`) provides ground truth to validate the model against
+//! (`rust/benches/mem.rs`).
+
+use crate::util::json::{n, obj, Json};
+
+/// Modeled cost of one heap allocation in bytes: allocator header plus
+/// size-class rounding.  48 B matches the jemalloc-measured per-object
+/// overhead of small-map workloads (see ROADMAP's memkv citation); the
+/// exact value matters less than charging *something* per allocation so
+/// many-small-objects layouts are not reported as free.
+pub const ALLOC_OVERHEAD: usize = 48;
+
+/// A structured memory estimate.  All byte counts are estimates derived
+/// from live element counts (never `Vec` capacities), so they are
+/// deterministic, monotone under inserts, and shrink on eviction.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FootprintEstimate {
+    /// Cached data itself (chunk payloads, decoded KV values).
+    pub payload_bytes: u64,
+    /// Bookkeeping that finds the payload (map entries, radix nodes,
+    /// LRU slots).
+    pub index_bytes: u64,
+    /// Modeled per-allocation overhead ([`ALLOC_OVERHEAD`] each).
+    pub overhead_bytes: u64,
+}
+
+impl FootprintEstimate {
+    pub const ZERO: FootprintEstimate =
+        FootprintEstimate { payload_bytes: 0, index_bytes: 0, overhead_bytes: 0 };
+
+    /// Sum of all three components.
+    pub fn total(&self) -> u64 {
+        self.payload_bytes + self.index_bytes + self.overhead_bytes
+    }
+
+    /// Accumulate another estimate into this one (rollups).
+    pub fn add(&mut self, other: FootprintEstimate) {
+        self.payload_bytes += other.payload_bytes;
+        self.index_bytes += other.index_bytes;
+        self.overhead_bytes += other.overhead_bytes;
+    }
+
+    /// Charge `count` heap allocations of modeled overhead.
+    pub fn charge_allocs(&mut self, count: u64) {
+        self.overhead_bytes += count * ALLOC_OVERHEAD as u64;
+    }
+
+    /// Byte-stable JSON rendering (sorted keys, integer bytes).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("index_bytes", n(self.index_bytes as f64)),
+            ("overhead_bytes", n(self.overhead_bytes as f64)),
+            ("payload_bytes", n(self.payload_bytes as f64)),
+            ("total_bytes", n(self.total() as f64)),
+        ])
+    }
+}
+
+/// Implemented by every container that holds cache state.  The estimate
+/// must be a pure function of the container's logical contents: two
+/// containers holding the same elements report the same footprint, no
+/// matter how they got there.
+pub trait MemFootprint {
+    fn mem_footprint(&self) -> FootprintEstimate;
+}
+
+/// The feature-gated counting global allocator (`--features
+/// mem-profile`): wraps the system allocator and keeps process-wide
+/// allocation count, live bytes, and peak bytes.  `rust/benches/mem.rs`
+/// installs it as `#[global_allocator]` to validate the
+/// [`FootprintEstimate`] model against measured reality; it is never
+/// compiled into default builds.
+#[cfg(feature = "mem-profile")]
+pub mod profile {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+    static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+    static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// Counting wrapper around [`System`].  `realloc` is counted as one
+    /// new allocation (the old block is debited, the new size credited),
+    /// so `allocations` is an upper bound on distinct live objects while
+    /// `live_bytes` stays exact.
+    pub struct CountingAlloc;
+
+    fn record_alloc(size: usize) {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        let live = LIVE_BYTES.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+        PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+    }
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() {
+                record_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc_zeroed(layout);
+            if !p.is_null() {
+                record_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() {
+                LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+                record_alloc(new_size);
+            }
+            p
+        }
+    }
+
+    /// A copy of the process-wide allocation counters.
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct AllocSnapshot {
+        pub allocations: u64,
+        pub live_bytes: u64,
+        pub peak_bytes: u64,
+    }
+
+    pub fn snapshot() -> AllocSnapshot {
+        AllocSnapshot {
+            allocations: ALLOCATIONS.load(Ordering::Relaxed),
+            live_bytes: LIVE_BYTES.load(Ordering::Relaxed),
+            peak_bytes: PEAK_BYTES.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_rollups() {
+        let mut a = FootprintEstimate { payload_bytes: 100, index_bytes: 10, overhead_bytes: 0 };
+        a.charge_allocs(2);
+        assert_eq!(a.overhead_bytes, 2 * ALLOC_OVERHEAD as u64);
+        assert_eq!(a.total(), 100 + 10 + 2 * ALLOC_OVERHEAD as u64);
+        let mut sum = FootprintEstimate::ZERO;
+        sum.add(a);
+        sum.add(a);
+        assert_eq!(sum.total(), 2 * a.total());
+        assert_eq!(FootprintEstimate::ZERO.total(), 0);
+    }
+
+    #[test]
+    fn json_is_sorted_and_integer() {
+        let e = FootprintEstimate { payload_bytes: 5, index_bytes: 3, overhead_bytes: 2 };
+        let j = e.to_json().to_string();
+        assert_eq!(
+            j,
+            r#"{"index_bytes":3,"overhead_bytes":2,"payload_bytes":5,"total_bytes":10}"#
+        );
+    }
+}

@@ -22,6 +22,13 @@
 //!   threads.
 //!
 //! See `docs/TRACING.md` for the event schema and a worked example.
+//!
+//! The capacity half of the plane lives in [`mem`]: deterministic
+//! memory-footprint estimates ([`mem::MemFootprint`]) for every
+//! cache-holding container, sampled by the harness into the scenario
+//! reports' `memory` object.
+
+pub mod mem;
 
 use crate::util::json::{obj, s, Json};
 use std::sync::atomic::{AtomicU64, Ordering};

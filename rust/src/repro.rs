@@ -191,6 +191,31 @@ pub fn trace_federated_tri_shell() -> String {
     crate::obs::jsonl(&sink.take())
 }
 
+/// Render one `skymemory mem`-style line from a scenario report's JSON:
+/// the `memory` object keyed by name and the fixed seed.
+fn mem_line(name: &str, report: crate::util::json::Json) -> String {
+    use crate::util::json::{n, obj, s};
+    let memory = report.get("memory").cloned().expect("report carries a memory object");
+    let mut line = obj(vec![("memory", memory), ("name", s(name)), ("seed", n(42.0))]).to_string();
+    line.push('\n');
+    line
+}
+
+/// Memory-footprint snapshot of the paper's 19x5 testbed at the fixed
+/// seed — the byte-stable line `skymemory mem paper-19x5` emits
+/// (docs/METRICS.md "The memory object" documents every key).
+pub fn mem_paper_19x5() -> String {
+    let spec = crate::sim::scenario::ScenarioSpec::paper_19x5(42);
+    mem_line("paper-19x5", crate::sim::harness::run_scenario(&spec).to_json())
+}
+
+/// Memory-footprint snapshot of the federated tri-shell run at the
+/// fixed seed, per-shell residency rows included.
+pub fn mem_federated_tri_shell() -> String {
+    let spec = crate::sim::scenario::FederatedScenarioSpec::federated_tri_shell(42);
+    mem_line("federated-tri-shell", crate::sim::harness::run_federated_scenario(&spec).to_json())
+}
+
 /// Table 2: the simulation configuration actually used.
 pub fn table2() -> String {
     let c = crate::sim::SimConfig::default();
@@ -211,7 +236,7 @@ pub fn table2() -> String {
 /// into `outdir`; returns the file list.
 pub fn write_all(outdir: &std::path::Path) -> std::io::Result<Vec<std::path::PathBuf>> {
     std::fs::create_dir_all(outdir)?;
-    let items: [(&str, String); 10] = [
+    let items: [(&str, String); 12] = [
         ("table1.csv", table1()),
         ("fig1_fig2.csv", fig1_fig2()),
         ("fig13.txt", fig13()),
@@ -222,6 +247,8 @@ pub fn write_all(outdir: &std::path::Path) -> std::io::Result<Vec<std::path::Pat
         ("scenarios.json", scenarios()),
         ("trace_paper_19x5.jsonl", trace_paper_19x5()),
         ("trace_federated_tri_shell.jsonl", trace_federated_tri_shell()),
+        ("mem_paper_19x5.json", mem_paper_19x5()),
+        ("mem_federated_tri_shell.json", mem_federated_tri_shell()),
     ];
     let mut written = Vec::new();
     for (name, content) in items {
@@ -310,6 +337,22 @@ mod tests {
             assert!(std::fs::metadata(f).unwrap().len() > 10);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mem_snapshots_carry_the_memory_plane() {
+        let single = mem_paper_19x5();
+        assert_eq!(single.trim().lines().count(), 1);
+        let keys =
+            ["\"memory\"", "\"bytes_per_cached_token\"", "\"peak_total_bytes\"", "\"paper-19x5\""];
+        for key in keys {
+            assert!(single.contains(key), "missing {key} in {single}");
+        }
+        assert!(!single.contains("\"resident_copies\""), "single-shell has no residency rows");
+        let fed = mem_federated_tri_shell();
+        for key in ["\"resident_copies\"", "\"shells\"", "\"federated-tri-shell\""] {
+            assert!(fed.contains(key), "missing {key} in {fed}");
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::constellation::topology::{SatId, Torus};
 use crate::kvc::chunk::ChunkKey;
 use crate::kvc::eviction::EvictionPolicy;
 use crate::net::messages::{Envelope, Request, Response};
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use crate::satellite::store::{ChunkStore, StoreStats};
 use std::sync::Mutex;
 
@@ -40,6 +41,11 @@ impl Node {
 
     pub fn bytes_used(&self) -> usize {
         self.store.lock().unwrap().bytes_used()
+    }
+
+    /// Memory-footprint estimate of this satellite's chunk store.
+    pub fn footprint(&self) -> FootprintEstimate {
+        self.store.lock().unwrap().mem_footprint()
     }
 
     /// Drop every stored chunk — failure injection for satellite loss (a

@@ -9,7 +9,9 @@
 use crate::kvc::block::BlockHash;
 use crate::kvc::chunk::ChunkKey;
 use crate::kvc::eviction::LruTracker;
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use std::collections::HashMap;
+use std::mem::size_of;
 
 /// Store statistics (exported via the node's telemetry).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -164,6 +166,25 @@ impl ChunkStore {
     }
 }
 
+impl MemFootprint for ChunkStore {
+    /// Payload = the tracked chunk bytes (what `byte_budget` meters).
+    /// Index = one map slot per chunk (key + `Vec` header + control
+    /// byte) plus the LRU tracker's bookkeeping.  Overhead = one heap
+    /// allocation per chunk payload buffer plus the map table itself.
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let chunks = self.map.len() as u64;
+        let slot = (size_of::<ChunkKey>() + size_of::<Vec<u8>>() + 1) as u64;
+        let mut est = FootprintEstimate {
+            payload_bytes: self.bytes_used as u64,
+            index_bytes: chunks * slot,
+            overhead_bytes: 0,
+        };
+        est.charge_allocs(chunks + 1);
+        est.add(self.lru.footprint());
+        est
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +274,52 @@ mod tests {
         // store remains usable after drain
         s.set(key(3, 0), vec![0; 10]);
         assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn interleaved_churn_returns_byte_total_to_zero() {
+        // satellite task: after interleaved put / evict / drain_all the
+        // tracked byte total must return exactly to zero — any residue
+        // is leak-style drift in the LRU byte budget
+        let mut s = ChunkStore::new(200);
+        for round in 0u8..4 {
+            for b in 0..6u8 {
+                for c in 0..3u32 {
+                    s.set(key(b.wrapping_add(round), c), vec![b; 10 + b as usize]);
+                }
+                if b % 2 == 0 {
+                    s.evict_block(BlockHash([b.wrapping_add(round); 32]));
+                }
+            }
+            // overwrite a key twice to exercise the replace path
+            s.set(key(round, 0), vec![9; 17]);
+            s.set(key(round, 0), vec![9; 5]);
+            let drained = s.drain_all();
+            assert_eq!(s.bytes_used(), 0, "round {round}: residue after drain");
+            assert!(s.is_empty());
+            assert!(!drained.is_empty());
+            let f = s.mem_footprint();
+            assert_eq!(f.payload_bytes, 0);
+            // only the fixed container allocations remain
+            assert_eq!(f.index_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn footprint_tracks_contents() {
+        let mut s = ChunkStore::new(1 << 20);
+        let empty = s.mem_footprint();
+        s.set(key(1, 0), vec![0; 100]);
+        let one = s.mem_footprint();
+        assert_eq!(one.payload_bytes, 100);
+        assert!(one.index_bytes > empty.index_bytes);
+        assert!(one.overhead_bytes > empty.overhead_bytes);
+        s.set(key(1, 1), vec![0; 50]);
+        let two = s.mem_footprint();
+        assert_eq!(two.payload_bytes, 150);
+        assert!(two.total() > one.total(), "inserts grow the estimate");
+        s.evict_block(BlockHash([1; 32]));
+        assert!(s.mem_footprint().total() < two.total(), "eviction shrinks it");
     }
 
     #[test]

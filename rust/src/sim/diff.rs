@@ -306,7 +306,22 @@ fn diff_with<F: Fn(&str) -> Rule>(a_text: &str, b_text: &str, rule: F) -> Result
 }
 
 /// Scenario classifier: the direction tables above, neutral otherwise.
+/// `memory.*` keys carry their own rules so footprint regressions gate
+/// CI exactly like latency ones: every byte counter (and the
+/// bytes-per-cached-token efficiency figure) is lower-better,
+/// `cached_tokens` is higher-better (losing cache coverage regresses
+/// too), and epoch stamps / residency counts are neutral.
 fn scenario_rule(key: &str) -> Rule {
+    if key.starts_with("memory.") {
+        let leaf = key.rsplit('.').next().unwrap_or(key);
+        return if leaf == "cached_tokens" {
+            Rule::HigherBetter
+        } else if leaf == "bytes_per_cached_token" || leaf.ends_with("_bytes") {
+            Rule::LowerBetter
+        } else {
+            Rule::Neutral
+        };
+    }
     match direction(key) {
         Some(true) => Rule::HigherBetter,
         Some(false) => Rule::LowerBetter,
@@ -476,6 +491,50 @@ mod tests {
         // an extra occurrence on one side surfaces as a missing scenario
         let r2 = diff_metrics(&a, A).unwrap();
         assert_eq!(r2.only_in_a, vec!["s1#2"]);
+    }
+
+    const MEM: &str = r#"{"name":"s1","memory":{"epochs":[{"cached_tokens":32,"epoch":0,"total_bytes":100}],"summary":{"bytes_per_cached_token":3.125,"cached_tokens":32,"index_bytes":20,"overhead_bytes":16,"payload_bytes":64,"peak_epoch":0,"peak_total_bytes":100,"shells":[{"name":"a","resident_copies":2,"total_bytes":100}],"total_bytes":100}}}"#;
+
+    #[test]
+    fn memory_bytes_rise_is_a_regression() {
+        let worse = MEM.replace(r#""total_bytes":100}}}"#, r#""total_bytes":150}}}"#);
+        let r = diff_metrics(MEM, &worse).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.regressions().next().unwrap().key, "memory.summary.total_bytes");
+        // shrinking the footprint is an improvement, not a regression
+        let better = MEM.replace(r#""total_bytes":100}}}"#, r#""total_bytes":80}}}"#);
+        let r2 = diff_metrics(MEM, &better).unwrap();
+        assert_eq!(r2.deltas.len(), 1, "still reported");
+        assert!(!r2.has_regressions());
+    }
+
+    #[test]
+    fn memory_efficiency_and_coverage_have_directions() {
+        let worse =
+            MEM.replace(r#""bytes_per_cached_token":3.125"#, r#""bytes_per_cached_token":9.5"#);
+        assert!(diff_metrics(MEM, &worse).unwrap().has_regressions());
+        // losing cached tokens regresses; epoch stamps and residency
+        // counts are neutral bookkeeping
+        let fewer = MEM.replace(
+            r#""cached_tokens":32,"index_bytes""#,
+            r#""cached_tokens":16,"index_bytes""#,
+        );
+        let r = diff_metrics(MEM, &fewer).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.regressions().next().unwrap().key, "memory.summary.cached_tokens");
+        let moved = MEM.replace(r#""resident_copies":2"#, r#""resident_copies":5"#);
+        assert!(!diff_metrics(MEM, &moved).unwrap().has_regressions());
+        let peak = MEM.replace(r#""peak_epoch":0"#, r#""peak_epoch":2"#);
+        assert!(!diff_metrics(MEM, &peak).unwrap().has_regressions());
+    }
+
+    #[test]
+    fn per_epoch_memory_series_is_direction_tracked() {
+        let worse =
+            MEM.replace(r#""epoch":0,"total_bytes":100}"#, r#""epoch":0,"total_bytes":400}"#);
+        let r = diff_metrics(MEM, &worse).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.regressions().next().unwrap().key, "memory.epochs.0.total_bytes");
     }
 
     const BA: &str = r#"{"deterministic":{"op":{"bytes":128,"iters":2},"sched.transfers":38},"mode":"smoke","name":"hotpath","timing":{"op":{"mean_ns":1000,"p50_ns":900}}}"#;

@@ -30,6 +30,7 @@ use crate::mapping::box_width;
 use crate::net::faults::FaultyTransport;
 use crate::net::sched::{LinkUsage, SchedSnapshot};
 use crate::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use crate::obs::{NoopSink, SpanKind, TraceEvent, TraceSink};
 use crate::satellite::fleet::Fleet;
 use crate::sim::config::SimConfig;
@@ -105,6 +106,8 @@ pub struct ScenarioReport {
     /// Virtual-time scheduler counters: batches, in-flight peak, and the
     /// per-link queueing/utilization aggregates.
     pub sched: SchedSnapshot,
+    /// Deterministic memory-footprint plane (`memory` in the JSON).
+    pub memory: MemoryPlane,
 }
 
 /// One epoch's slice of a run: deltas of the headline counters between
@@ -133,6 +136,146 @@ pub struct LinkRollup {
 /// Links reported in `timeline.links`; the rest are counted in
 /// `timeline.links_elided` so mega-shell reports stay bounded.
 const LINK_ROLLUP_CAP: usize = 16;
+
+/// One epoch-boundary sample of the memory plane: the footprint estimate
+/// of the whole cache stack at that instant plus the tokens it covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemorySample {
+    pub epoch: u64,
+    pub payload_bytes: u64,
+    pub index_bytes: u64,
+    pub overhead_bytes: u64,
+    pub total_bytes: u64,
+    pub cached_tokens: u64,
+}
+
+/// Per-shell residency row of the federated `memory.summary` (store
+/// footprint rollup of the shell's fleet plus the block copies homed
+/// there — primary, replica, or pre-placed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShellResidency {
+    pub name: String,
+    pub payload_bytes: u64,
+    pub index_bytes: u64,
+    pub overhead_bytes: u64,
+    pub total_bytes: u64,
+    pub resident_copies: u64,
+}
+
+/// The memory plane of one run (the `memory` object of both report
+/// flavours): per-epoch footprint series, end-of-run totals, the
+/// bytes-per-cached-token efficiency figure, and high-water marks.
+/// Deterministic: estimates are pure functions of cache contents.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MemoryPlane {
+    pub epochs: Vec<MemorySample>,
+    /// End-of-run footprint (the last epoch sample's split).
+    pub payload_bytes: u64,
+    pub index_bytes: u64,
+    pub overhead_bytes: u64,
+    pub total_bytes: u64,
+    /// Tokens the index covers at end of run (blocks x block_tokens).
+    pub cached_tokens: u64,
+    /// `total_bytes / cached_tokens` — the paper-facing cache-efficiency
+    /// figure (0 when nothing is cached).
+    pub bytes_per_cached_token: f64,
+    /// High-water mark of `total_bytes` across epoch samples, and the
+    /// first epoch that reached it.
+    pub peak_total_bytes: u64,
+    pub peak_epoch: u64,
+    /// Per-shell residency (federated runs only; empty single-shell).
+    pub shells: Vec<ShellResidency>,
+}
+
+impl MemoryPlane {
+    /// Record one epoch-boundary sample and roll the summary forward.
+    fn sample(&mut self, epoch: u64, est: FootprintEstimate, cached_tokens: u64) {
+        let total = est.total();
+        self.epochs.push(MemorySample {
+            epoch,
+            payload_bytes: est.payload_bytes,
+            index_bytes: est.index_bytes,
+            overhead_bytes: est.overhead_bytes,
+            total_bytes: total,
+            cached_tokens,
+        });
+        if total > self.peak_total_bytes {
+            self.peak_total_bytes = total;
+            self.peak_epoch = epoch;
+        }
+        self.payload_bytes = est.payload_bytes;
+        self.index_bytes = est.index_bytes;
+        self.overhead_bytes = est.overhead_bytes;
+        self.total_bytes = total;
+        self.cached_tokens = cached_tokens;
+    }
+
+    /// Close the plane: derive the efficiency figure and attach the
+    /// per-shell residency rows (empty for single-shell runs).
+    fn finish(&mut self, shells: Vec<ShellResidency>) {
+        self.bytes_per_cached_token = if self.cached_tokens == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.cached_tokens as f64
+        };
+        self.shells = shells;
+    }
+}
+
+/// Render the `memory` object (shared by both report flavours).
+fn memory_json(m: &MemoryPlane) -> Json {
+    let mut summary = vec![
+        ("bytes_per_cached_token", n(m.bytes_per_cached_token)),
+        ("cached_tokens", n(m.cached_tokens as f64)),
+        ("index_bytes", n(m.index_bytes as f64)),
+        ("overhead_bytes", n(m.overhead_bytes as f64)),
+        ("payload_bytes", n(m.payload_bytes as f64)),
+        ("peak_epoch", n(m.peak_epoch as f64)),
+        ("peak_total_bytes", n(m.peak_total_bytes as f64)),
+        ("total_bytes", n(m.total_bytes as f64)),
+    ];
+    if !m.shells.is_empty() {
+        summary.push((
+            "shells",
+            Json::Arr(
+                m.shells
+                    .iter()
+                    .map(|sh| {
+                        obj(vec![
+                            ("name", s(&sh.name)),
+                            ("payload_bytes", n(sh.payload_bytes as f64)),
+                            ("index_bytes", n(sh.index_bytes as f64)),
+                            ("overhead_bytes", n(sh.overhead_bytes as f64)),
+                            ("total_bytes", n(sh.total_bytes as f64)),
+                            ("resident_copies", n(sh.resident_copies as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    obj(vec![
+        (
+            "epochs",
+            Json::Arr(
+                m.epochs
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("epoch", n(e.epoch as f64)),
+                            ("payload_bytes", n(e.payload_bytes as f64)),
+                            ("index_bytes", n(e.index_bytes as f64)),
+                            ("overhead_bytes", n(e.overhead_bytes as f64)),
+                            ("total_bytes", n(e.total_bytes as f64)),
+                            ("cached_tokens", n(e.cached_tokens as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("summary", obj(summary)),
+    ])
+}
 
 /// Fold cumulative per-epoch marks `(requests, blocks_requested,
 /// blocks_hit, isl_bytes)` into per-epoch deltas.
@@ -287,6 +430,7 @@ impl ScenarioReport {
                 ]),
             ),
             ("sched", sched_json(&self.sched)),
+            ("memory", memory_json(&self.memory)),
             (
                 "timeline",
                 timeline_json(&self.epoch_series, &self.link_rollup, self.links_elided),
@@ -556,6 +700,7 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
     // cumulative (requests, blocks_requested, blocks_hit, isl_bytes) at
     // each epoch boundary, folded into `timeline.epochs` deltas
     let mut epoch_marks: Vec<(u64, u64, u64, u64)> = Vec::with_capacity(spec.epochs as usize);
+    let mut memory = MemoryPlane::default();
 
     for epoch in 0..spec.epochs {
         if sink.wants(SpanKind::Sim) {
@@ -649,6 +794,13 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
             blocks_hit,
             inproc.stats().isl_bytes.load(Ordering::Relaxed),
         ));
+        // memory plane: the whole stack's footprint at this boundary —
+        // radix index + local tier (manager) plus every satellite store
+        let mut est = manager.mem_footprint();
+        for node in fleet.nodes() {
+            est.add(node.footprint());
+        }
+        memory.sample(epoch, est, manager.cached_tokens());
         manager.transport().set_epoch(epoch + 1);
     }
 
@@ -667,6 +819,7 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
     let (link_rollup, links_elided) = link_rollups(
         manager.sched().link_rollup().into_iter().map(|(k, u)| (k.label(), u)).collect(),
     );
+    memory.finish(Vec::new());
 
     ScenarioReport {
         name: spec.name.clone(),
@@ -707,6 +860,7 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
         analytic_worst_case_s: analytic_worst_case_s(spec),
         kvc: manager.stats.snapshot(),
         sched: manager.sched().stats.snapshot(),
+        memory,
     }
 }
 
@@ -843,6 +997,9 @@ pub struct FederatedScenarioReport {
     pub link_rollup: Vec<LinkRollup>,
     pub links_elided: u64,
     pub shells: Vec<FederatedShellReport>,
+    /// Deterministic memory-footprint plane, federation-wide, with
+    /// per-shell residency rows in the summary.
+    pub memory: MemoryPlane,
 }
 
 impl FederatedScenarioReport {
@@ -890,6 +1047,7 @@ impl FederatedScenarioReport {
             ("dropped_ttl", n(self.dropped_ttl as f64)),
             ("dropped_stale", n(self.dropped_stale as f64)),
             ("dropped_unroutable", n(self.dropped_unroutable as f64)),
+            ("memory", memory_json(&self.memory)),
             (
                 "timeline",
                 timeline_json(&self.epoch_series, &self.link_rollup, self.links_elided),
@@ -1004,6 +1162,7 @@ pub fn run_federated_scenario_with_sink(
     // cumulative (requests, blocks_requested, blocks_hit, isl_bytes) at
     // each epoch boundary, folded into `timeline.epochs` deltas
     let mut epoch_marks: Vec<(u64, u64, u64, u64)> = Vec::with_capacity(spec.epochs as usize);
+    let mut memory = MemoryPlane::default();
     let half = (box_width(shell_layouts[primary as usize].n_servers) as i32 - 1) / 2;
 
     for epoch in 0..spec.epochs {
@@ -1150,6 +1309,9 @@ pub fn run_federated_scenario_with_sink(
             .map(|l| l.inproc.stats().isl_bytes.load(Ordering::Relaxed))
             .sum::<u64>();
         epoch_marks.push((request_net_ns.len() as u64, blocks_requested, blocks_hit, isl));
+        // memory plane: federation total (index maps + every shell's
+        // fleet stores) at this epoch boundary
+        memory.sample(epoch, manager.mem_footprint(), manager.cached_tokens());
         transport.set_epoch_all(epoch + 1);
     }
 
@@ -1216,6 +1378,25 @@ pub fn run_federated_scenario_with_sink(
     }
     let (link_rollup, links_elided) = link_rollups(raw_links);
 
+    let resident_copies = manager.shell_resident_copies();
+    memory.finish(
+        spec.shells
+            .iter()
+            .enumerate()
+            .map(|(i, ss)| {
+                let est = manager.shell_store_footprint(i as ShellId);
+                ShellResidency {
+                    name: ss.name.clone(),
+                    payload_bytes: est.payload_bytes,
+                    index_bytes: est.index_bytes,
+                    overhead_bytes: est.overhead_bytes,
+                    total_bytes: est.total(),
+                    resident_copies: resident_copies[i],
+                }
+            })
+            .collect(),
+    );
+
     let proactive = manager.stats.proactive_handover_blocks.load(Ordering::Relaxed);
     let reactive = manager.stats.reactive_rehomed_blocks.load(Ordering::Relaxed);
     let promotions = manager.stats.replica_promotions.load(Ordering::Relaxed);
@@ -1270,6 +1451,7 @@ pub fn run_federated_scenario_with_sink(
         link_rollup,
         links_elided,
         shells,
+        memory,
     }
 }
 
@@ -1580,6 +1762,55 @@ mod tests {
         assert!(r.link_rollup.iter().any(|l| l.key.starts_with("s0:")));
         assert!(r.link_rollup.iter().any(|l| l.key.starts_with("s1:")));
         assert!(r.to_json_string().contains("\"timeline\""));
+    }
+
+    #[test]
+    fn memory_plane_tracks_the_cache() {
+        let mut spec = tiny_spec(8);
+        spec.failures = FailurePlan::NONE;
+        let r = run_scenario(&spec);
+        let m = &r.memory;
+        assert_eq!(m.epochs.len(), spec.epochs as usize);
+        assert!(m.cached_tokens > 0, "the cache must hold blocks: {m:?}");
+        assert!(m.payload_bytes > 0);
+        assert_eq!(m.total_bytes, m.payload_bytes + m.index_bytes + m.overhead_bytes);
+        assert!(m.bytes_per_cached_token > 0.0);
+        assert_eq!(
+            m.peak_total_bytes,
+            m.epochs.iter().map(|e| e.total_bytes).max().unwrap(),
+            "peak must be the high-water mark of the series"
+        );
+        assert!(m.shells.is_empty(), "single-shell runs carry no residency rows");
+        let j = r.to_json_string();
+        for key in [
+            "\"memory\"",
+            "\"bytes_per_cached_token\"",
+            "\"cached_tokens\"",
+            "\"peak_total_bytes\"",
+            "\"peak_epoch\"",
+            "\"summary\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[test]
+    fn federated_memory_plane_has_per_shell_residency() {
+        let spec = tiny_fed(7);
+        let r = run_federated_scenario(&spec);
+        let m = &r.memory;
+        assert_eq!(m.epochs.len(), spec.epochs as usize);
+        assert_eq!(m.shells.len(), 2, "one residency row per shell");
+        assert!(m.cached_tokens > 0);
+        assert!(m.bytes_per_cached_token > 0.0);
+        assert!(m.shells.iter().any(|sh| sh.total_bytes > 0));
+        assert!(
+            m.shells.iter().map(|sh| sh.resident_copies).sum::<u64>() > 0,
+            "blocks must be resident somewhere: {m:?}"
+        );
+        let j = r.to_json_string();
+        assert!(j.contains("\"resident_copies\""), "missing residency in {j}");
+        assert!(j.contains("\"bytes_per_cached_token\""));
     }
 
     #[test]

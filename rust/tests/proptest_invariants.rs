@@ -10,13 +10,14 @@ use skymemory::kvc::block::{block_hashes, BlockHash};
 use skymemory::kvc::chunk::{chunk_count, join_chunks, split_chunks, ChunkKey};
 use skymemory::kvc::eviction::{EvictionPolicy, LruTracker};
 use skymemory::kvc::quantize::Quantizer;
-use skymemory::kvc::radix::RadixTree;
+use skymemory::kvc::radix::{BlockIndex, BlockMeta, RadixTree};
 use skymemory::mapping::{box_width, Strategy};
 use skymemory::net::messages::{
     decode_request, decode_response, encode_request, encode_response, Envelope, Request, Response,
 };
 use skymemory::net::sched::{ChunkOp, ChunkResult, NetScheduler, SchedConfig, Transfer};
 use skymemory::net::transport::{GroundView, InProcTransport, LinkModel, Transport};
+use skymemory::obs::mem::MemFootprint;
 use skymemory::satellite::fleet::Fleet;
 use skymemory::satellite::store::ChunkStore;
 use skymemory::util::rng::XorShift64;
@@ -568,6 +569,112 @@ fn prop_bench_percentiles_match_nearest_rank_oracle() {
             "seed {seed}: percentiles must be ordered"
         );
     }
+}
+
+#[test]
+fn prop_store_footprint_monotone_under_inserts_and_shrinks_on_eviction() {
+    // the footprint estimate is a pure function of contents: it never
+    // decreases while distinct chunks are inserted, never increases while
+    // blocks are evicted, and returns exactly to the empty-store estimate
+    // after drain_all
+    for seed in 0..60 {
+        let mut rng = XorShift64::new(seed + 150_000);
+        let empty = ChunkStore::new(1 << 30).mem_footprint();
+        let mut store = ChunkStore::new(1 << 30);
+        let mut blocks = Vec::new();
+        let mut prev = store.mem_footprint().total();
+        for b in 0..(1 + rng.next_range(12)) {
+            let block = BlockHash([b as u8; 32]);
+            blocks.push(block);
+            for c in 0..(1 + rng.next_range(6)) {
+                let purged = store.set(
+                    skymemory::kvc::chunk::ChunkKey::new(block, c as u32),
+                    vec![0xCD; 1 + rng.next_range(512)],
+                );
+                assert!(purged.is_empty(), "seed {seed}: budget must never purge");
+                let total = store.mem_footprint().total();
+                assert!(total >= prev, "seed {seed}: insert shrank the estimate");
+                prev = total;
+            }
+        }
+        // shuffled eviction order
+        for i in (1..blocks.len()).rev() {
+            blocks.swap(i, rng.next_range(i + 1));
+        }
+        for block in &blocks {
+            assert!(store.evict_block(*block) > 0, "seed {seed}");
+            let total = store.mem_footprint().total();
+            assert!(total <= prev, "seed {seed}: eviction grew the estimate");
+            prev = total;
+        }
+        assert_eq!(store.mem_footprint(), empty, "seed {seed}: must return to empty");
+        assert_eq!(store.bytes_used(), 0, "seed {seed}");
+        // drain_all from a refilled store also lands exactly on empty
+        store.set(skymemory::kvc::chunk::ChunkKey::new(BlockHash([99; 32]), 0), vec![1; 64]);
+        let _ = store.drain_all();
+        assert_eq!(store.mem_footprint(), empty, "seed {seed}: drain_all must zero it");
+    }
+}
+
+#[test]
+fn prop_index_footprint_monotone_under_inserts_and_shrinks_on_remove() {
+    for seed in 0..60 {
+        let mut rng = XorShift64::new(seed + 160_000);
+        let empty = BlockIndex::new().mem_footprint();
+        let mut index = BlockIndex::new();
+        let n = 1 + rng.next_range(24);
+        let hashes: Vec<BlockHash> = (0..n)
+            .map(|_| BlockHash([(rng.next_u64() & 0xFF) as u8; 32]))
+            .collect();
+        let meta = BlockMeta { num_chunks: 1, kvc_len: 64, write_epoch: 0, quantizer_id: 0 };
+        let mut prev = index.mem_footprint().total();
+        for i in 0..n {
+            index.insert(&hashes[..=i], meta);
+            let total = index.mem_footprint().total();
+            assert!(total >= prev, "seed {seed} prefix {i}: insert shrank the estimate");
+            prev = total;
+        }
+        // remove prefixes in a shuffled order (every prefix length is a
+        // distinct key, so each remove drops exactly one entry)
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            order.swap(i, rng.next_range(i + 1));
+        }
+        for &i in &order {
+            let _ = index.remove(&hashes[..=i]);
+            let total = index.mem_footprint().total();
+            assert!(total <= prev, "seed {seed} prefix {i}: remove grew the estimate");
+            prev = total;
+        }
+        assert_eq!(index.mem_footprint(), empty, "seed {seed}: must return to empty");
+        assert!(index.is_empty(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_same_seed_runs_render_identical_memory_objects() {
+    // the memory plane is part of the deterministic report contract: two
+    // runs of the same seeded scenario render byte-identical `memory`
+    // JSON, single-shell and federated alike
+    use skymemory::sim::harness::{run_federated_scenario, run_scenario};
+    use skymemory::sim::scenario::{FederatedScenarioSpec, ScenarioSpec};
+    for seed in [7u64, 42] {
+        let render = || {
+            let json = run_scenario(&ScenarioSpec::paper_19x5(seed)).to_json();
+            json.get("memory").expect("report carries a memory object").to_string()
+        };
+        let a = render();
+        assert!(a.contains("\"bytes_per_cached_token\""), "seed {seed}");
+        assert_eq!(a, render(), "seed {seed}: memory object must be byte-stable");
+    }
+    let render = || {
+        let spec = FederatedScenarioSpec::federated_tri_shell(42);
+        let json = run_federated_scenario(&spec).to_json();
+        json.get("memory").expect("federated report carries a memory object").to_string()
+    };
+    let a = render();
+    assert!(a.contains("\"resident_copies\""), "per-shell residency must be rendered");
+    assert_eq!(a, render(), "federated memory object must be byte-stable");
 }
 
 #[test]
