@@ -1,0 +1,172 @@
+//! Bench: the kvc::session layer at 10⁵–10⁷ logical concurrent sessions.
+//!
+//! Drives the [`SessionManager`] directly (no satellites, no harness):
+//! for each sweep point `N` it creates one root session per prefix
+//! template, forks the roots round-robin into `N` logical sessions, and
+//! reads the refcount table and the [`MemFootprint`] metadata estimate.
+//! Every fork shares its template's whole 6-block prefix without copying
+//! a chunk, so the counters are hand-predictable:
+//!
+//! * `s{N}.logical_sessions = N + TEMPLATES`
+//! * `s{N}.unique_blocks   = TEMPLATES * TEMPLATE_BLOCKS` (forks add none)
+//! * `s{N}.total_refs      = (N + TEMPLATES) * TEMPLATE_BLOCKS`
+//! * `s{N}.shared_blocks   = TEMPLATES * TEMPLATE_BLOCKS` (all refcount 2+)
+//! * `s{N}.hist_top_bucket = TEMPLATES * TEMPLATE_BLOCKS` (all refcount 8+)
+//! * `s{N}.refs_after_drop = 0` and `s{N}.unique_after_drop = 0` — every
+//!   reference is returned exactly once when the sessions drop
+//!
+//! the committed `BENCH_sessions.json` baseline gates these exactly.
+//! `s{N}.metadata_bytes` (struct-layout dependent) and the Zipfian
+//! trace-generator counters (seeded, deterministic run-over-run but not
+//! hand-computable) stay out of the baseline: only-in-new keys are
+//! neutral.  The bench also asserts the headline scaling claim inline —
+//! a forked session costs well under 256 metadata bytes, which is what
+//! makes the 10⁷ sweep fit in RAM.
+//!
+//! ```text
+//! cargo bench --bench sessions [-- --smoke]
+//! ```
+
+use skymemory::kvc::session::{SessionId, SessionManager, REFCOUNT_BUCKETS};
+use skymemory::obs::mem::MemFootprint;
+use skymemory::sim::workload::{generate_sessions, SessionWorkloadConfig};
+use skymemory::util::bench::{smoke_mode, BenchArtifact, Bencher};
+
+/// Tokens per cached block (KvcConfig / scenario default).
+const BLOCK_TOKENS: usize = 32;
+/// Distinct prefix templates (Zipf popularity classes).
+const TEMPLATES: usize = 4;
+/// Blocks per template prefix (192 tokens / 32 per block).
+const TEMPLATE_BLOCKS: usize = 6;
+
+/// Sweep of logical concurrent session counts.
+fn sweep(smoke: bool) -> &'static [usize] {
+    if smoke {
+        &[100_000]
+    } else {
+        &[100_000, 1_000_000, 10_000_000]
+    }
+}
+
+fn template_tokens(t: usize) -> Vec<i32> {
+    (0..TEMPLATE_BLOCKS * BLOCK_TOKENS).map(|i| i as i32 * 31 + t as i32).collect()
+}
+
+/// One root per template, then `n` forks round-robin across the roots.
+fn populate(n: usize) -> (SessionManager, Vec<SessionId>, Vec<SessionId>) {
+    let m = SessionManager::new(BLOCK_TOKENS);
+    let roots: Vec<SessionId> = (0..TEMPLATES).map(|t| m.create(&template_tokens(t)).0).collect();
+    let mut forks = Vec::with_capacity(n);
+    for k in 0..n {
+        forks.push(m.fork(roots[k % TEMPLATES]));
+    }
+    (m, roots, forks)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let mut art = BenchArtifact::new("sessions", smoke);
+
+    println!("=== refcounted session sharing over forked prefix templates ===");
+    println!(
+        "=== {TEMPLATES} templates x {TEMPLATE_BLOCKS} blocks x {BLOCK_TOKENS} tokens ==="
+    );
+
+    for &n in sweep(smoke) {
+        let t0 = std::time::Instant::now();
+        let (m, roots, forks) = populate(n);
+        let built = t0.elapsed();
+
+        let sessions = (n + TEMPLATES) as u64;
+        let unique = (TEMPLATES * TEMPLATE_BLOCKS) as u64;
+        let refs = m.refs();
+        assert_eq!(m.live_sessions(), sessions);
+        assert_eq!(refs.unique_blocks(), unique, "forks must add zero blocks");
+        assert_eq!(refs.total_refs(), sessions * TEMPLATE_BLOCKS as u64);
+        assert_eq!(refs.shared_blocks(), unique, "every template block is shared");
+        let hist = refs.histogram();
+        assert_eq!(hist[REFCOUNT_BUCKETS - 1], unique, "all blocks sit at refcount 8+");
+
+        let est = m.mem_footprint();
+        let per_session = est.total() / sessions;
+        println!(
+            "n={n:<9} sessions {sessions:>9}  blocks {unique:>3}  refs {:>9}  \
+             metadata {:>11} B ({per_session} B/session)  built in {built:.2?}",
+            refs.total_refs(),
+            est.total(),
+        );
+        assert!(
+            per_session < 256,
+            "a forked session must cost well under 256 B, got {per_session}"
+        );
+
+        // Hand-predictable counters: gated exactly by the committed
+        // baseline.
+        art.counter(&format!("s{n}.logical_sessions"), sessions);
+        art.counter(&format!("s{n}.unique_blocks"), unique);
+        art.counter(&format!("s{n}.total_refs"), sessions * TEMPLATE_BLOCKS as u64);
+        art.counter(&format!("s{n}.shared_blocks"), unique);
+        art.counter(&format!("s{n}.hist_top_bucket"), hist[REFCOUNT_BUCKETS - 1]);
+        // Layout-dependent: deterministic per binary, absent from the
+        // baseline.
+        art.counter(&format!("s{n}.metadata_bytes"), est.total());
+        art.timing_ns(&format!("s{n}.populate_ns"), built.as_nanos() as u64);
+
+        // Tear the whole population down: every reference must come back
+        // exactly once, leaving the table empty.
+        let t0 = std::time::Instant::now();
+        for id in forks {
+            m.drop_session(id);
+        }
+        for id in roots {
+            m.drop_session(id);
+        }
+        let dropped = t0.elapsed();
+        assert_eq!(refs.total_refs(), 0, "drops must release every reference");
+        assert_eq!(refs.unique_blocks(), 0);
+        assert_eq!(m.live_sessions(), 0);
+        art.counter(&format!("s{n}.refs_after_drop"), refs.total_refs());
+        art.counter(&format!("s{n}.unique_after_drop"), refs.unique_blocks());
+        art.timing_ns(&format!("s{n}.teardown_ns"), dropped.as_nanos() as u64);
+    }
+
+    println!("\n=== wall-clock: session ops and the Zipfian trace generator ===");
+    let iters = if smoke { 2_000 } else { 20_000 };
+    let (m, roots, _forks) = populate(10_000);
+    let fork_drop = Bencher::new("session fork+drop roundtrip")
+        .fixed_iters(iters)
+        .batch(64)
+        .run(|| {
+            let child = m.fork(roots[0]);
+            m.drop_session(child);
+        });
+    println!("{}", fork_drop.report());
+    art.push(&fork_drop);
+
+    let snapshot = Bencher::new("session snapshot rollup").fixed_iters(iters / 4).run(|| {
+        let snap = m.snapshot();
+        assert!(snap.live > 0);
+    });
+    println!("{}", snapshot.report());
+    art.push(&snapshot);
+
+    let arrivals = if smoke { 4_096 } else { 65_536 };
+    let cfg = SessionWorkloadConfig::default();
+    let gen = Bencher::new(format!("session trace generate n={arrivals}"))
+        .fixed_iters(if smoke { 8 } else { 32 })
+        .run(|| {
+            let trace = generate_sessions(&cfg, arrivals);
+            assert_eq!(trace.arrivals, arrivals);
+        });
+    println!("{}", gen.report());
+    art.push(&gen);
+    // Seeded and deterministic run-over-run (gated by the run1-vs-run2
+    // diff), but not hand-computable — kept out of the committed
+    // baseline.
+    let trace = generate_sessions(&cfg, arrivals);
+    art.counter(&format!("trace{arrivals}.ops"), trace.ops.len() as u64);
+    art.counter(&format!("trace{arrivals}.arrivals"), trace.arrivals as u64);
+
+    let path = art.write().expect("write BENCH_sessions.json");
+    println!("wrote {}", path.display());
+}

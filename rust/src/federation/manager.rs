@@ -256,6 +256,17 @@ impl FederatedKvcManager {
         *self.trace.lock().unwrap() = sink;
     }
 
+    /// Install the session-layer reference table
+    /// ([`crate::kvc::session::BlockRefs`]) on every shell's fleet:
+    /// session-referenced blocks are pinned against LRU pressure and
+    /// propagated evictions federation-wide, so invalidation decrements
+    /// interest instead of deleting a prefix a live session still maps.
+    pub fn set_block_refs(&self, refs: &Arc<crate::kvc::session::BlockRefs>) {
+        for link in self.transport.links() {
+            link.fleet.set_block_refs(refs);
+        }
+    }
+
     /// Federation-level virtual-time stamp for events that belong to no
     /// single shell: the sum of every shell scheduler's clock (monotone
     /// and deterministic).

@@ -236,6 +236,17 @@ impl KvcManager {
         self.local.as_ref()
     }
 
+    /// Install the session-layer reference table
+    /// ([`crate::kvc::session::BlockRefs`]) on the local tier:
+    /// session-referenced blocks are pinned against its LRU pressure.
+    /// (The per-satellite stores are pinned via
+    /// [`crate::satellite::fleet::Fleet::set_block_refs`].)
+    pub fn set_block_refs(&self, refs: &Arc<crate::kvc::session::BlockRefs>) {
+        if let Some(tier) = &self.local {
+            tier.set_block_refs(refs.clone());
+        }
+    }
+
     pub fn transport(&self) -> &Arc<dyn Transport> {
         &self.transport
     }

@@ -3,9 +3,10 @@
 //! the Get/Set manager.
 //!
 //! Layering: [`hash`]/[`block`]/[`chunk`]/[`quantize`] are pure codecs,
-//! [`radix`] is the §3.10 local index, [`eviction`] the §3.9 policies, and
+//! [`radix`] is the §3.10 local index, [`eviction`] the §3.9 policies,
 //! [`manager::KvcManager`] drives the §3.8 protocol over a
-//! [`crate::net::transport::Transport`].
+//! [`crate::net::transport::Transport`], and [`session`] layers paged,
+//! forkable per-user sessions with refcounted prefix sharing on top.
 
 pub mod block;
 pub mod chunk;
@@ -14,9 +15,11 @@ pub mod hash;
 pub mod manager;
 pub mod quantize;
 pub mod radix;
+pub mod session;
 pub mod tiered;
 
 pub use block::{block_hashes, BlockHash};
 pub use chunk::{split_chunks, ChunkKey};
 pub use manager::KvcManager;
 pub use quantize::Quantizer;
+pub use session::{BlockRefs, SessionId, SessionManager};

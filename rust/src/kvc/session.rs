@@ -1,0 +1,580 @@
+//! Paged, forkable sessions with refcounted prefix sharing.
+//!
+//! The chained-hash scheme ([`crate::kvc::block::chain_hash`]) already
+//! dedups identical prefixes implicitly: two sessions whose token streams
+//! share a prefix produce the same block hashes, and `put_block` no-ops on
+//! an index hit.  This module makes that sharing *explicit*: a
+//! [`SessionManager`] keys paged per-user state by [`SessionId`] with
+//! `create / extend / fork / drop`, and a shared [`BlockRefs`] table counts
+//! how many live sessions reference each block.  `fork` shares the common
+//! prefix **without copying chunks** — the child acquires one reference on
+//! every block of the parent's chain and starts its own suffix; `drop`
+//! releases exactly the dropping session's chain.  The per-satellite
+//! stores and the manager's local tier consult the table before evicting:
+//! a block still referenced by a live session is *deflected* (skipped,
+//! counted), not deleted — eviction decrements interest, it never reaps a
+//! block another session still maps (§3.9 eviction made session-aware).
+//!
+//! Sessions are metadata-cheap: a record holds the parent id, the shared
+//! chain length, the session's own suffix hashes and the unaligned token
+//! tail — no KV payload, no copied prefix.  `skymemory sessions` and
+//! `benches/sessions.rs` sweep 10⁵–10⁷ logical sessions and report the
+//! per-session footprint through [`crate::obs::mem`].
+
+use crate::kvc::block::{chain_hash, BlockHash};
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
+use std::collections::BTreeMap;
+use std::mem::size_of;
+use std::sync::Mutex;
+
+/// Opaque session handle (dense, allocation order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionId(pub u64);
+
+/// Histogram buckets: blocks with refcount 1..=7, last bucket = 8+.
+pub const REFCOUNT_BUCKETS: usize = 8;
+
+#[derive(Default)]
+struct RefsInner {
+    counts: BTreeMap<BlockHash, u32>,
+    total_refs: u64,
+    deflected: u64,
+}
+
+/// The shared per-block reference table.  One count per block hash, the
+/// sum of live sessions whose chain includes the block.  Stores treat
+/// `refs > 0` as a pin: LRU victims and gossiped evictions against a
+/// pinned block are deflected and counted, never honored.
+#[derive(Default)]
+pub struct BlockRefs {
+    inner: Mutex<RefsInner>,
+}
+
+impl BlockRefs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take one reference on `block`.
+    pub fn acquire(&self, block: &BlockHash) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counts.entry(*block).or_insert(0) += 1;
+        inner.total_refs += 1;
+    }
+
+    /// Release one reference; the entry disappears at zero.
+    pub fn release(&self, block: &BlockHash) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(c) = inner.counts.get_mut(block) {
+            *c -= 1;
+            inner.total_refs -= 1;
+            if *c == 0 {
+                inner.counts.remove(block);
+            }
+        }
+    }
+
+    /// Current reference count of `block` (0 if untracked).
+    pub fn refs(&self, block: &BlockHash) -> u32 {
+        self.inner.lock().unwrap().counts.get(block).copied().unwrap_or(0)
+    }
+
+    /// Is the block pinned against eviction?
+    pub fn is_pinned(&self, block: &BlockHash) -> bool {
+        self.refs(block) > 0
+    }
+
+    /// Record an eviction deflected by a pin (called by the stores).
+    pub fn note_deflection(&self) {
+        self.inner.lock().unwrap().deflected += 1;
+    }
+
+    /// Evictions deflected so far.
+    pub fn deflections(&self) -> u64 {
+        self.inner.lock().unwrap().deflected
+    }
+
+    /// Blocks with at least one reference.
+    pub fn unique_blocks(&self) -> u64 {
+        self.inner.lock().unwrap().counts.len() as u64
+    }
+
+    /// Sum of all reference counts.
+    pub fn total_refs(&self) -> u64 {
+        self.inner.lock().unwrap().total_refs
+    }
+
+    /// Blocks referenced by two or more sessions (the shared set).
+    pub fn shared_blocks(&self) -> u64 {
+        self.inner.lock().unwrap().counts.values().filter(|&&c| c >= 2).count() as u64
+    }
+
+    /// `total_refs / unique_blocks` — 1.0 means no sharing at all; every
+    /// fork of an `n`-block prefix adds `n` refs but zero new blocks, so
+    /// higher is strictly more prefix reuse.
+    pub fn dedup_ratio(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        if inner.counts.is_empty() {
+            1.0
+        } else {
+            inner.total_refs as f64 / inner.counts.len() as f64
+        }
+    }
+
+    /// Blocks per refcount: bucket `i` counts blocks with `i + 1`
+    /// references, the last bucket everything at `REFCOUNT_BUCKETS`+.
+    pub fn histogram(&self) -> [u64; REFCOUNT_BUCKETS] {
+        let inner = self.inner.lock().unwrap();
+        let mut h = [0u64; REFCOUNT_BUCKETS];
+        for &c in inner.counts.values() {
+            let bucket = (c as usize).min(REFCOUNT_BUCKETS) - 1;
+            h[bucket] += 1;
+        }
+        h
+    }
+}
+
+impl MemFootprint for BlockRefs {
+    /// One BTreeMap slot (hash + count) per tracked block; B-tree nodes
+    /// amortize to roughly one allocation per 11 entries.
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let entries = self.inner.lock().unwrap().counts.len() as u64;
+        let slot = (size_of::<BlockHash>() + size_of::<u32>()) as u64;
+        let mut est = FootprintEstimate {
+            payload_bytes: 0,
+            index_bytes: entries * slot,
+            overhead_bytes: 0,
+        };
+        est.charge_allocs(entries / 11 + 1);
+        est
+    }
+}
+
+/// Per-session metadata: the parent link, how much of the parent's chain
+/// is shared, the session's own suffix of block hashes, and the unaligned
+/// token tail.  No KV payload and no copied prefix — this is what makes
+/// 10⁷ sessions cheap.
+struct SessionRecord {
+    parent: Option<SessionId>,
+    /// Blocks of the parent's chain shared at fork time.
+    shared_blocks: usize,
+    /// Block hashes appended by this session itself.
+    suffix: Vec<BlockHash>,
+    /// Tokens not yet forming a full block.
+    tail: Vec<i32>,
+    /// Hash of the last full block of the chain ([`BlockHash::NULL`] for
+    /// an empty chain) — extension never re-reads token history.
+    last_hash: BlockHash,
+    /// Live forked children (a dropped parent stays as a tombstone while
+    /// any child still needs its chain).
+    children: u32,
+    live: bool,
+}
+
+#[derive(Default)]
+struct SessionsInner {
+    sessions: BTreeMap<SessionId, SessionRecord>,
+    next_id: u64,
+    live: u64,
+    peak_live: u64,
+    created: u64,
+    forked: u64,
+    dropped: u64,
+}
+
+/// Deterministic point-in-time counters for the `sessions` report object.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionsSnapshot {
+    pub created: u64,
+    pub forked: u64,
+    pub dropped: u64,
+    pub live: u64,
+    pub peak_live: u64,
+    pub unique_blocks: u64,
+    pub total_refs: u64,
+    pub shared_blocks: u64,
+    pub dedup_ratio: f64,
+    pub deflected_evictions: u64,
+    pub refcount_histogram: [u64; REFCOUNT_BUCKETS],
+    /// Estimated session + refs metadata bytes (rolls into the memory
+    /// plane's index bytes).
+    pub metadata_bytes: u64,
+}
+
+/// The session layer above the KVC managers.  Thread-safe; all state
+/// behind one mutex, the [`BlockRefs`] table shared out by `Arc` so the
+/// satellite stores can consult it.
+pub struct SessionManager {
+    block_tokens: usize,
+    refs: std::sync::Arc<BlockRefs>,
+    inner: Mutex<SessionsInner>,
+}
+
+impl SessionManager {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens >= 1, "blocks need at least one token");
+        Self {
+            block_tokens,
+            refs: std::sync::Arc::new(BlockRefs::new()),
+            inner: Mutex::new(SessionsInner::default()),
+        }
+    }
+
+    /// The shared reference table (install it on stores / fleets).
+    pub fn refs(&self) -> std::sync::Arc<BlockRefs> {
+        self.refs.clone()
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn live_sessions(&self) -> u64 {
+        self.inner.lock().unwrap().live
+    }
+
+    /// Create a fresh session from `tokens`; returns the id and the full
+    /// blocks the caller must store.
+    pub fn create(&self, tokens: &[i32]) -> (SessionId, Vec<BlockHash>) {
+        let mut inner = self.inner.lock().unwrap();
+        let id = SessionId(inner.next_id);
+        inner.next_id += 1;
+        inner.created += 1;
+        inner.live += 1;
+        inner.peak_live = inner.peak_live.max(inner.live);
+        let mut rec = SessionRecord {
+            parent: None,
+            shared_blocks: 0,
+            suffix: Vec::new(),
+            tail: Vec::new(),
+            last_hash: BlockHash::NULL,
+            children: 0,
+            live: true,
+        };
+        let new = self.append(&mut rec, tokens);
+        inner.sessions.insert(id, rec);
+        (id, new)
+    }
+
+    /// Append `tokens` to a live session; returns the newly completed
+    /// blocks (the caller stores exactly these — the shared prefix is
+    /// untouched).
+    pub fn extend(&self, id: SessionId, tokens: &[i32]) -> Vec<BlockHash> {
+        let mut inner = self.inner.lock().unwrap();
+        let rec = inner.sessions.get_mut(&id).expect("extend of unknown session");
+        assert!(rec.live, "extend of a dropped session");
+        self.append(rec, tokens)
+    }
+
+    /// Fork a live session: the child shares the parent's whole chain
+    /// (one new reference per block, zero chunk copies) and diverges from
+    /// the parent's current tail.
+    pub fn fork(&self, id: SessionId) -> SessionId {
+        let mut inner = self.inner.lock().unwrap();
+        let chain = self.chain_locked(&inner, id);
+        let parent = inner.sessions.get_mut(&id).expect("fork of unknown session");
+        assert!(parent.live, "fork of a dropped session");
+        parent.children += 1;
+        let tail = parent.tail.clone();
+        let last_hash = parent.last_hash;
+        for h in &chain {
+            self.refs.acquire(h);
+        }
+        let child = SessionId(inner.next_id);
+        inner.next_id += 1;
+        inner.forked += 1;
+        inner.live += 1;
+        inner.peak_live = inner.peak_live.max(inner.live);
+        inner.sessions.insert(
+            child,
+            SessionRecord {
+                parent: Some(id),
+                shared_blocks: chain.len(),
+                suffix: Vec::new(),
+                tail,
+                last_hash,
+                children: 0,
+                live: true,
+            },
+        );
+        child
+    }
+
+    /// Drop a session: releases exactly its chain's references.  The
+    /// record tombstones while forked children still need the chain and
+    /// is freed (recursively up the parent links) once the last child
+    /// goes.
+    pub fn drop_session(&self, id: SessionId) {
+        let mut inner = self.inner.lock().unwrap();
+        let chain = self.chain_locked(&inner, id);
+        for h in &chain {
+            self.refs.release(h);
+        }
+        let rec = inner.sessions.get_mut(&id).expect("drop of unknown session");
+        assert!(rec.live, "double drop");
+        rec.live = false;
+        inner.live -= 1;
+        inner.dropped += 1;
+        Self::reap(&mut inner.sessions, id);
+    }
+
+    /// Free tombstoned records with no remaining children, walking up the
+    /// parent links.
+    fn reap(sessions: &mut BTreeMap<SessionId, SessionRecord>, mut id: SessionId) {
+        loop {
+            let removable =
+                sessions.get(&id).map(|r| !r.live && r.children == 0).unwrap_or(false);
+            if !removable {
+                return;
+            }
+            let rec = sessions.remove(&id).unwrap();
+            let Some(parent) = rec.parent else { return };
+            let p = sessions.get_mut(&parent).expect("parent outlives child");
+            p.children -= 1;
+            id = parent;
+        }
+    }
+
+    /// The session's full block chain (shared prefix + own suffix).
+    pub fn chain(&self, id: SessionId) -> Vec<BlockHash> {
+        let inner = self.inner.lock().unwrap();
+        self.chain_locked(&inner, id)
+    }
+
+    fn chain_locked(&self, inner: &SessionsInner, id: SessionId) -> Vec<BlockHash> {
+        let rec = inner.sessions.get(&id).expect("chain of unknown session");
+        let mut out = match rec.parent {
+            Some(p) => {
+                let mut prefix = self.chain_locked(inner, p);
+                prefix.truncate(rec.shared_blocks);
+                prefix
+            }
+            None => Vec::new(),
+        };
+        out.extend_from_slice(&rec.suffix);
+        out
+    }
+
+    /// Hash-chain `tokens` onto `rec`, completing blocks of
+    /// `block_tokens`; returns the completed hashes and holds the rest in
+    /// the tail.  One reference is acquired per completed block.
+    fn append(&self, rec: &mut SessionRecord, tokens: &[i32]) -> Vec<BlockHash> {
+        let mut new = Vec::new();
+        rec.tail.extend_from_slice(tokens);
+        let mut consumed = 0;
+        while rec.tail.len() - consumed >= self.block_tokens {
+            let block = &rec.tail[consumed..consumed + self.block_tokens];
+            let h = chain_hash(&rec.last_hash, block);
+            self.refs.acquire(&h);
+            rec.last_hash = h;
+            rec.suffix.push(h);
+            new.push(h);
+            consumed += self.block_tokens;
+        }
+        rec.tail.drain(..consumed);
+        new
+    }
+
+    /// Point-in-time counters for the report `sessions` object.
+    pub fn snapshot(&self) -> SessionsSnapshot {
+        let metadata_bytes = self.mem_footprint().total();
+        let inner = self.inner.lock().unwrap();
+        SessionsSnapshot {
+            created: inner.created,
+            forked: inner.forked,
+            dropped: inner.dropped,
+            live: inner.live,
+            peak_live: inner.peak_live,
+            unique_blocks: self.refs.unique_blocks(),
+            total_refs: self.refs.total_refs(),
+            shared_blocks: self.refs.shared_blocks(),
+            dedup_ratio: self.refs.dedup_ratio(),
+            deflected_evictions: self.refs.deflections(),
+            refcount_histogram: self.refs.histogram(),
+            metadata_bytes,
+        }
+    }
+}
+
+impl MemFootprint for SessionManager {
+    /// One BTreeMap slot per record plus each record's suffix / tail
+    /// buffers, and the shared refs table.  B-tree nodes amortize to one
+    /// allocation per 11 entries; each non-empty Vec is one allocation.
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let inner = self.inner.lock().unwrap();
+        let slot = (size_of::<SessionId>() + size_of::<SessionRecord>()) as u64;
+        let mut index_bytes = inner.sessions.len() as u64 * slot;
+        let mut allocs = inner.sessions.len() as u64 / 11 + 1;
+        for rec in inner.sessions.values() {
+            index_bytes += (rec.suffix.len() * size_of::<BlockHash>()) as u64;
+            index_bytes += (rec.tail.len() * size_of::<i32>()) as u64;
+            allocs += u64::from(!rec.suffix.is_empty()) + u64::from(!rec.tail.is_empty());
+        }
+        let mut est =
+            FootprintEstimate { payload_bytes: 0, index_bytes, overhead_bytes: 0 };
+        est.charge_allocs(allocs);
+        est.add(self.refs.mem_footprint());
+        est
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvc::block::block_hashes;
+
+    fn toks(n: usize, salt: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 31 + salt).collect()
+    }
+
+    #[test]
+    fn create_matches_block_hashes() {
+        let m = SessionManager::new(4);
+        let tokens = toks(12, 1);
+        let (id, new) = m.create(&tokens);
+        assert_eq!(new, block_hashes(&tokens, 4));
+        assert_eq!(m.chain(id), new);
+        assert_eq!(m.refs().total_refs(), 3);
+        assert_eq!(m.refs().unique_blocks(), 3);
+    }
+
+    #[test]
+    fn extend_chains_incrementally_across_tails() {
+        let m = SessionManager::new(4);
+        let all = toks(11, 2);
+        // feed in ragged pieces: 3 + 5 + 3 tokens = 11 -> 2 full blocks
+        let (id, a) = m.create(&all[..3]);
+        assert!(a.is_empty(), "3 tokens complete no block");
+        let b = m.extend(id, &all[3..8]);
+        let c = m.extend(id, &all[8..]);
+        let mut got = b;
+        got.extend(c);
+        assert_eq!(got, block_hashes(&all, 4));
+        assert_eq!(m.chain(id), block_hashes(&all, 4));
+    }
+
+    #[test]
+    fn fork_shares_the_prefix_without_new_blocks() {
+        let m = SessionManager::new(4);
+        let (parent, _) = m.create(&toks(8, 3));
+        let before_blocks = m.refs().unique_blocks();
+        let child = m.fork(parent);
+        assert_eq!(m.refs().unique_blocks(), before_blocks, "fork copies nothing");
+        assert_eq!(m.refs().total_refs(), 4, "2 blocks x 2 sessions");
+        assert_eq!(m.refs().shared_blocks(), 2);
+        assert!((m.refs().dedup_ratio() - 2.0).abs() < 1e-12);
+        assert_eq!(m.chain(child), m.chain(parent));
+        // divergent extends chain off the same last hash differently
+        let p = m.extend(parent, &toks(4, 10));
+        let c = m.extend(child, &toks(4, 20));
+        assert_ne!(p, c);
+        assert_eq!(m.chain(parent)[..2], m.chain(child)[..2]);
+    }
+
+    #[test]
+    fn forked_replay_is_byte_identical_to_fresh() {
+        let m = SessionManager::new(4);
+        let prefix = toks(12, 4);
+        let turn = toks(8, 5);
+        let (parent, _) = m.create(&prefix);
+        let child = m.fork(parent);
+        let forked_new = m.extend(child, &turn);
+        // a fresh session replaying prefix+turn yields the same chain...
+        let mut full = prefix.clone();
+        full.extend_from_slice(&turn);
+        let (fresh, fresh_new) = m.create(&full);
+        assert_eq!(m.chain(fresh), m.chain(child));
+        // ...but must store strictly more new blocks than the fork path
+        assert!(forked_new.len() < fresh_new.len());
+        assert_eq!(forked_new[..], fresh_new[fresh_new.len() - forked_new.len()..]);
+    }
+
+    #[test]
+    fn drop_releases_exactly_the_suffix_refs() {
+        let m = SessionManager::new(4);
+        let (parent, _) = m.create(&toks(8, 6)); // 2 blocks
+        let child = m.fork(parent);
+        m.extend(child, &toks(4, 7)); // child adds 1 block
+        assert_eq!(m.refs().total_refs(), 5);
+        m.drop_session(child);
+        // the child's 3 refs (2 shared + 1 own) are gone; parent's remain
+        assert_eq!(m.refs().total_refs(), 2);
+        assert_eq!(m.refs().unique_blocks(), 2);
+        m.drop_session(parent);
+        assert_eq!(m.refs().total_refs(), 0);
+        assert_eq!(m.refs().unique_blocks(), 0);
+    }
+
+    #[test]
+    fn dropped_parent_tombstones_until_children_drop() {
+        let m = SessionManager::new(4);
+        let (parent, _) = m.create(&toks(8, 8));
+        let child = m.fork(parent);
+        m.drop_session(parent);
+        assert_eq!(m.live_sessions(), 1);
+        // the child's chain (through the tombstoned parent) stays whole
+        assert_eq!(m.chain(child).len(), 2);
+        assert_eq!(m.refs().total_refs(), 2, "the child still pins the prefix");
+        m.drop_session(child);
+        assert_eq!(m.live_sessions(), 0);
+        assert_eq!(m.refs().total_refs(), 0);
+        assert_eq!(m.inner.lock().unwrap().sessions.len(), 0, "tombstones reaped");
+    }
+
+    #[test]
+    fn grandchildren_keep_the_whole_ancestry_alive() {
+        let m = SessionManager::new(4);
+        let (a, _) = m.create(&toks(4, 9));
+        let b = m.fork(a);
+        m.extend(b, &toks(4, 10));
+        let c = m.fork(b);
+        m.drop_session(a);
+        m.drop_session(b);
+        assert_eq!(m.chain(c).len(), 2, "c sees a's block and b's block");
+        assert_eq!(m.refs().total_refs(), 2);
+        m.drop_session(c);
+        assert_eq!(m.refs().total_refs(), 0);
+        assert_eq!(m.inner.lock().unwrap().sessions.len(), 0);
+    }
+
+    #[test]
+    fn histogram_and_snapshot_counters() {
+        let m = SessionManager::new(4);
+        let (a, _) = m.create(&toks(8, 11)); // 2 blocks at refcount 1
+        m.fork(a); // -> refcount 2
+        m.fork(a); // -> refcount 3
+        let h = m.refs().histogram();
+        assert_eq!(h[2], 2, "both blocks sit in the refcount-3 bucket");
+        assert_eq!(h.iter().sum::<u64>(), m.refs().unique_blocks());
+        let snap = m.snapshot();
+        assert_eq!(snap.created, 1);
+        assert_eq!(snap.forked, 2);
+        assert_eq!(snap.live, 3);
+        assert_eq!(snap.peak_live, 3);
+        assert!((snap.dedup_ratio - 3.0).abs() < 1e-12);
+        assert!(snap.metadata_bytes > 0);
+    }
+
+    #[test]
+    fn sessions_are_metadata_cheap() {
+        let m = SessionManager::new(4);
+        let (root, _) = m.create(&toks(16, 12));
+        for _ in 0..1000 {
+            m.fork(root);
+        }
+        let per_session = m.mem_footprint().total() / 1001;
+        assert!(
+            per_session < 256,
+            "a forked session must cost well under 256 B, got {per_session}"
+        );
+    }
+
+    #[test]
+    fn deflections_count() {
+        let r = BlockRefs::new();
+        assert_eq!(r.deflections(), 0);
+        r.note_deflection();
+        r.note_deflection();
+        assert_eq!(r.deflections(), 2);
+    }
+}

@@ -10,11 +10,12 @@
 
 use crate::kvc::block::BlockHash;
 use crate::kvc::eviction::LruTracker;
+use crate::kvc::session::BlockRefs;
 use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use std::collections::HashMap;
 use std::mem::size_of;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Tier statistics.
 #[derive(Debug, Default)]
@@ -23,12 +24,16 @@ pub struct TierStats {
     pub misses: AtomicU64,
     pub inserts: AtomicU64,
     pub evictions: AtomicU64,
+    /// Evictions deflected by a live session reference.
+    pub pinned_skips: AtomicU64,
 }
 
 struct Inner {
     map: HashMap<BlockHash, Vec<f32>>,
     lru: LruTracker<BlockHash>,
     bytes_used: usize,
+    /// Session refcounts to consult before evicting (None = none).
+    refs: Option<Arc<BlockRefs>>,
 }
 
 /// A bounded local block cache (thread-safe).
@@ -41,10 +46,23 @@ pub struct LocalTier {
 impl LocalTier {
     pub fn new(byte_budget: usize) -> Self {
         Self {
-            inner: Mutex::new(Inner { map: HashMap::new(), lru: LruTracker::new(), bytes_used: 0 }),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                lru: LruTracker::new(),
+                bytes_used: 0,
+                refs: None,
+            }),
             byte_budget,
             stats: TierStats::default(),
         }
+    }
+
+    /// Install the session-layer reference table: referenced blocks are
+    /// pinned against LRU pressure (invalidation still applies — a
+    /// propagated eviction means the constellation copy is gone, and the
+    /// local tier is a cache of it, not the owner).
+    pub fn set_block_refs(&self, refs: Arc<BlockRefs>) {
+        self.inner.lock().unwrap().refs = Some(refs);
     }
 
     pub fn byte_budget(&self) -> usize {
@@ -87,12 +105,26 @@ impl LocalTier {
             inner.bytes_used -= old.len() * 4;
             inner.lru.remove(&block);
         }
+        let mut skipped: Vec<BlockHash> = Vec::new();
         while inner.bytes_used + bytes > self.byte_budget {
             let Some(victim) = inner.lru.pop_lru() else { break };
+            if inner.refs.as_ref().is_some_and(|r| r.is_pinned(&victim)) {
+                if let Some(r) = &inner.refs {
+                    r.note_deflection();
+                }
+                self.stats.pinned_skips.fetch_add(1, Ordering::Relaxed);
+                skipped.push(victim);
+                continue;
+            }
             if let Some(old) = inner.map.remove(&victim) {
                 inner.bytes_used -= old.len() * 4;
                 self.stats.evictions.fetch_add(1, Ordering::Relaxed);
             }
+        }
+        // pinned survivors re-enter at the fresh end; when everything
+        // was pinned the tier runs soft-over-budget for this insert
+        for k in &skipped {
+            inner.lru.touch(k);
         }
         inner.bytes_used += bytes;
         inner.lru.touch(&block);
@@ -202,6 +234,25 @@ mod tests {
         let back = t.mem_footprint();
         assert_eq!(back.payload_bytes, 0);
         assert_eq!(back.total(), empty);
+    }
+
+    #[test]
+    fn pinned_blocks_survive_tier_pressure() {
+        let refs = Arc::new(BlockRefs::new());
+        let t = LocalTier::new(100); // 25 f32s
+        t.set_block_refs(refs.clone());
+        refs.acquire(&bh(1));
+        t.put(bh(1), vec![0.0; 10]);
+        t.put(bh(2), vec![0.0; 10]);
+        // pressure: block 1 is LRU but pinned -> block 2 goes instead
+        t.put(bh(3), vec![0.0; 10]);
+        assert!(t.get(&bh(1)).is_some());
+        assert!(t.get(&bh(2)).is_none());
+        assert!(t.get(&bh(3)).is_some());
+        assert_eq!(t.stats.pinned_skips.load(Ordering::Relaxed), 1);
+        // invalidation still applies: the constellation copy is gone
+        t.invalidate(&bh(1));
+        assert!(t.get(&bh(1)).is_none());
     }
 
     #[test]

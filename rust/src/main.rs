@@ -17,6 +17,8 @@
 //! skymemory trace      <builtin> [--seed 42] [--out PATH]
 //!                      [--format jsonl|chrome] [--spans KIND,...]
 //! skymemory mem        <builtin> [--seed 42] [--out PATH]
+//! skymemory sessions   <builtin> [--seed 42] [--sessions N]
+//!                      [--fork-frac F] [--baseline]
 //! skymemory repro      [--outdir results]
 //! skymemory bench      --diff <old.json> <new.json> [--tolerance PCT]
 //!                      [--det-only]
@@ -577,6 +579,121 @@ fn cmd_mem(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `skymemory sessions --help`.
+const SESSIONS_HELP: &str = "\
+usage: skymemory sessions <builtin> [--seed N] [--sessions N]
+                          [--fork-frac F] [--baseline]
+
+Run a single-shell scenario driven by the kvc::session layer (paged,
+forkable sessions with refcounted prefix sharing) and print its metrics
+JSON, including the deterministic `sessions` object (fork/drop
+counters, blocks shared zero-copy, dedup ratio, refcount histogram,
+session-metadata bytes; docs/METRICS.md documents every key).
+Scenarios without a session workload (everything but fork-heavy-chat)
+get the default one attached.
+
+flags:
+  --seed N       scenario seed (default 42)
+  --sessions N   pre-register N logical sessions before the run — the
+                 10^5..10^7 concurrency sweep knob; metadata only, the
+                 served token traffic is identical at every N
+  --fork-frac F  fraction of arrivals that fork a live session
+                 (0..=1, default from the spec; the extend fraction
+                 shrinks if needed so the mix still sums to <= 1)
+  --baseline     also run the independent-sessions baseline (the same
+                 trace with sharing disabled, every fork replayed as a
+                 fresh session), print both, then gate: the fork run
+                 must strictly beat the baseline on block hit rate,
+                 ISL bytes and bytes per cached token
+  --help         this text
+
+exit codes: 0 success; 1 the --baseline gate failed or an error
+(unknown or federated scenario, bad flag value); 2 usage error.
+";
+
+fn cmd_sessions(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{SESSIONS_HELP}");
+        return Ok(());
+    }
+    use skymemory::sim::workload::SessionWorkloadConfig;
+    let Some(name) = args.positionals.first() else {
+        bail!("usage: skymemory sessions <builtin> [--baseline] (see --help)");
+    };
+    let seed: u64 = args.get_or("seed", 42u64)?;
+    let Some(mut spec) = skymemory::sim::scenario::ScenarioSpec::by_name(name, seed) else {
+        if skymemory::sim::scenario::FederatedScenarioSpec::by_name(name, seed).is_some() {
+            bail!("{name} is federated; `skymemory sessions` drives single-shell scenarios");
+        }
+        bail!("unknown scenario {name} (see `skymemory scenario --list`)");
+    };
+    let mut sw =
+        spec.sessions.unwrap_or(SessionWorkloadConfig { seed, ..SessionWorkloadConfig::default() });
+    sw.presessions = args.get_or("sessions", sw.presessions)?;
+    if let Some(f) = args.get("fork-frac") {
+        let f: f64 = f.parse().map_err(|_| anyhow!("bad value for --fork-frac: {f}"))?;
+        if !(0.0..=1.0).contains(&f) {
+            bail!("bad value for --fork-frac: {f} (need 0..=1)");
+        }
+        sw.fork_frac = f;
+        sw.extend_frac = sw.extend_frac.min(1.0 - f);
+    }
+    spec.sessions = Some(sw);
+    spec.validate();
+    let report = skymemory::sim::harness::run_scenario(&spec);
+    println!("{}", report.to_json_string());
+    let s = report.sessions.as_ref().expect("session-driven run reports sessions");
+    if args.has("baseline") {
+        // acceptance gate: refcounted prefix sharing must strictly beat
+        // serving the identical trace as independent sessions — more
+        // hits, less orbit traffic, cheaper bytes per cached token
+        let base = skymemory::sim::harness::run_scenario(&spec.session_baseline());
+        println!("{}", base.to_json_string());
+        println!(
+            "# fork-sharing hit rate {:.3} vs independent {:.3}; isl bytes {} vs {}; \
+             bytes/cached-token {:.3} vs {:.3} ({} forks, {} blocks shared, dedup {:.2})",
+            report.block_hit_rate,
+            base.block_hit_rate,
+            report.isl_bytes,
+            base.isl_bytes,
+            report.memory.bytes_per_cached_token,
+            base.memory.bytes_per_cached_token,
+            s.forked,
+            s.blocks_shared,
+            s.dedup_ratio
+        );
+        let mut failed = false;
+        if report.block_hit_rate <= base.block_hit_rate {
+            eprintln!("# FAIL: fork sharing does not out-hit independent sessions");
+            failed = true;
+        }
+        if report.isl_bytes >= base.isl_bytes {
+            eprintln!("# FAIL: fork sharing does not reduce ISL traffic");
+            failed = true;
+        }
+        if report.memory.bytes_per_cached_token >= base.memory.bytes_per_cached_token {
+            eprintln!("# FAIL: fork sharing does not reduce bytes per cached token");
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+    } else {
+        println!(
+            "# sessions: {} created, {} forked, {} dropped, peak {} live, {} blocks shared, \
+             dedup {:.2}, {} metadata bytes",
+            s.created,
+            s.forked,
+            s.dropped,
+            s.peak_live,
+            s.blocks_shared,
+            s.dedup_ratio,
+            s.metadata_bytes
+        );
+    }
+    Ok(())
+}
+
 /// `skymemory bench --help`.
 const BENCH_HELP: &str = "\
 usage: skymemory bench --diff <old.json> <new.json> [--tolerance PCT]
@@ -646,7 +763,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|trace|mem|repro|bench> [flags]\n\
+        "usage: skymemory <serve|generate|satellite|simulate|scenario|sched|federate|trace|mem|sessions|repro|bench> [flags]\n\
          see rust/src/main.rs header for per-command flags"
     );
     std::process::exit(2)
@@ -668,6 +785,7 @@ fn main() -> Result<()> {
         "federate" => cmd_federate(&args),
         "trace" => cmd_trace(&args),
         "mem" => cmd_mem(&args),
+        "sessions" => cmd_sessions(&args),
         "repro" => cmd_repro(&args),
         "bench" => cmd_bench(&args),
         _ => usage(),

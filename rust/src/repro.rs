@@ -153,9 +153,10 @@ pub fn fig16_summary() -> String {
 
 /// The scenario-harness reports: every built-in scenario (the paper's
 /// 19x5 testbed, the Starlink- and Kuiper-like mega shells, the
-/// net::sched mega-shell stress, and the federated dual- and tri-shell
-/// runs) at a fixed seed, one metrics-JSON line each.  Deterministic:
-/// re-running produces byte-identical output.
+/// net::sched mega-shell stress, the fork-heavy session run, and the
+/// federated dual- and tri-shell runs) at a fixed seed, one
+/// metrics-JSON line each.  Deterministic: re-running produces
+/// byte-identical output.
 pub fn scenarios() -> String {
     let mut out = String::new();
     for spec in crate::sim::scenario::ScenarioSpec::builtin(42) {
@@ -358,12 +359,13 @@ mod tests {
     #[test]
     fn scenarios_artifact_has_one_line_per_builtin() {
         let text = scenarios();
-        assert_eq!(text.trim().lines().count(), 6);
+        assert_eq!(text.trim().lines().count(), 7);
         for name in [
             "paper-19x5",
             "starlink-shell",
             "kuiper-shell",
             "mega-shell",
+            "fork-heavy-chat",
             "federated-dual-shell",
             "federated-tri-shell",
         ] {

@@ -47,6 +47,15 @@ impl Fleet {
         &self.nodes
     }
 
+    /// Install the session-layer reference table on every satellite's
+    /// store: session-referenced blocks are pinned against LRU pressure
+    /// and propagated evictions fleet-wide.
+    pub fn set_block_refs(&self, refs: &Arc<crate::kvc::session::BlockRefs>) {
+        for node in &self.nodes {
+            node.set_block_refs(refs.clone());
+        }
+    }
+
     /// Deliver `req` to `env.dest`, entering the constellation at `entry`
     /// (the ground uplink satellite).  Returns the response and the ISL
     /// hop count; side-effect sends (gossip, migration) are delivered

@@ -35,6 +35,13 @@ impl Node {
         self.store.lock().unwrap().stats
     }
 
+    /// Install the session-layer reference table on this node's store
+    /// ([`crate::kvc::session::BlockRefs`]): referenced blocks are pinned
+    /// against LRU pressure and gossiped evictions.
+    pub fn set_block_refs(&self, refs: std::sync::Arc<crate::kvc::session::BlockRefs>) {
+        self.store.lock().unwrap().set_block_refs(refs);
+    }
+
     pub fn chunk_count(&self) -> usize {
         self.store.lock().unwrap().len()
     }

@@ -9,9 +9,11 @@
 use crate::kvc::block::BlockHash;
 use crate::kvc::chunk::ChunkKey;
 use crate::kvc::eviction::LruTracker;
+use crate::kvc::session::BlockRefs;
 use crate::obs::mem::{FootprintEstimate, MemFootprint};
 use std::collections::HashMap;
 use std::mem::size_of;
+use std::sync::Arc;
 
 /// Store statistics (exported via the node's telemetry).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -21,6 +23,9 @@ pub struct StoreStats {
     pub hits: u64,
     pub evicted_chunks: u64,
     pub evicted_blocks: u64,
+    /// Evictions deflected because a live session still references the
+    /// block ([`BlockRefs`]).
+    pub pinned_skips: u64,
 }
 
 /// A bounded chunk store.
@@ -29,6 +34,9 @@ pub struct ChunkStore {
     lru: LruTracker<ChunkKey>,
     bytes_used: usize,
     byte_budget: usize,
+    /// Session refcounts to consult before evicting (None = no session
+    /// layer, every block is fair game).
+    refs: Option<Arc<BlockRefs>>,
     pub stats: StoreStats,
 }
 
@@ -40,8 +48,19 @@ impl ChunkStore {
             lru: LruTracker::new(),
             bytes_used: 0,
             byte_budget,
+            refs: None,
             stats: StoreStats::default(),
         }
+    }
+
+    /// Install the session-layer reference table: blocks with live refs
+    /// are pinned against LRU pressure and propagated evictions.
+    pub fn set_block_refs(&mut self, refs: Arc<BlockRefs>) {
+        self.refs = Some(refs);
+    }
+
+    fn pinned(&self, block: &BlockHash) -> bool {
+        self.refs.as_ref().is_some_and(|r| r.is_pinned(block))
     }
 
     pub fn len(&self) -> usize {
@@ -107,9 +126,31 @@ impl ChunkStore {
     }
 
     /// Evict the LRU chunk *and* all local siblings of its block; returns
-    /// the purged block hash.
+    /// the purged block hash.  Chunks of session-pinned blocks are
+    /// skipped (deflected, counted) — when everything left is pinned the
+    /// store runs soft-over-budget rather than reaping a live session's
+    /// prefix.
     fn evict_lru(&mut self) -> Option<BlockHash> {
-        let victim = self.lru.pop_lru()?;
+        let mut skipped: Vec<ChunkKey> = Vec::new();
+        let mut found = None;
+        while let Some(victim) = self.lru.pop_lru() {
+            if self.pinned(&victim.block) {
+                self.stats.pinned_skips += 1;
+                if let Some(r) = &self.refs {
+                    r.note_deflection();
+                }
+                skipped.push(victim);
+                continue;
+            }
+            found = Some(victim);
+            break;
+        }
+        // pinned survivors re-enter at the fresh end, in their prior
+        // relative order — they are deflected wherever they sit
+        for k in &skipped {
+            self.lru.touch(k);
+        }
+        let victim = found?;
         let block = victim.block;
         if let Some(p) = self.map.remove(&victim) {
             self.bytes_used -= p.len();
@@ -135,8 +176,17 @@ impl ChunkStore {
         dropped
     }
 
-    /// Drop every chunk of `block` (explicit or gossiped eviction).
+    /// Drop every chunk of `block` (explicit or gossiped eviction).  A
+    /// session-pinned block is deflected: the eviction decrements remote
+    /// interest, it must not delete a prefix another live session maps.
     pub fn evict_block(&mut self, block: BlockHash) -> u32 {
+        if self.pinned(&block) {
+            self.stats.pinned_skips += 1;
+            if let Some(r) = &self.refs {
+                r.note_deflection();
+            }
+            return 0;
+        }
         let n = self.purge_block_internal(block);
         if n > 0 {
             self.stats.evicted_blocks += 1;
@@ -320,6 +370,42 @@ mod tests {
         assert!(two.total() > one.total(), "inserts grow the estimate");
         s.evict_block(BlockHash([1; 32]));
         assert!(s.mem_footprint().total() < two.total(), "eviction shrinks it");
+    }
+
+    #[test]
+    fn pinned_blocks_survive_pressure_and_gossip() {
+        let refs = Arc::new(BlockRefs::new());
+        let mut s = ChunkStore::new(100);
+        s.set_block_refs(refs.clone());
+        refs.acquire(&BlockHash([1; 32]));
+        s.set(key(1, 0), vec![0; 40]);
+        s.set(key(2, 0), vec![0; 40]);
+        // pressure: block 1 is LRU but pinned -> block 2 goes instead
+        let purged = s.set(key(3, 0), vec![0; 40]);
+        assert_eq!(purged, vec![BlockHash([2; 32])]);
+        assert!(s.contains(&key(1, 0)));
+        assert!(s.stats.pinned_skips >= 1);
+        assert!(refs.deflections() >= 1);
+        // an explicit / gossiped eviction is deflected too
+        assert_eq!(s.evict_block(BlockHash([1; 32])), 0);
+        assert!(s.contains(&key(1, 0)));
+        // releasing the last ref makes the block evictable again
+        refs.release(&BlockHash([1; 32]));
+        assert_eq!(s.evict_block(BlockHash([1; 32])), 1);
+    }
+
+    #[test]
+    fn all_pinned_runs_soft_over_budget() {
+        let refs = Arc::new(BlockRefs::new());
+        let mut s = ChunkStore::new(50);
+        s.set_block_refs(refs.clone());
+        refs.acquire(&BlockHash([1; 32]));
+        refs.acquire(&BlockHash([2; 32]));
+        s.set(key(1, 0), vec![0; 40]);
+        let purged = s.set(key(2, 0), vec![0; 40]);
+        assert!(purged.is_empty(), "nothing is evictable: {purged:?}");
+        assert!(s.bytes_used() > s.byte_budget(), "soft over budget beats data loss");
+        assert!(s.contains(&key(1, 0)) && s.contains(&key(2, 0)));
     }
 
     #[test]

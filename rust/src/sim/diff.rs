@@ -310,8 +310,22 @@ fn diff_with<F: Fn(&str) -> Rule>(a_text: &str, b_text: &str, rule: F) -> Result
 /// CI exactly like latency ones: every byte counter (and the
 /// bytes-per-cached-token efficiency figure) is lower-better,
 /// `cached_tokens` is higher-better (losing cache coverage regresses
-/// too), and epoch stamps / residency counts are neutral.
+/// too), and epoch stamps / residency counts are neutral.  `sessions.*`
+/// keys likewise: losing prefix reuse (`dedup_ratio`, `blocks_shared`,
+/// `shared_blocks` falling) regresses, session-metadata bytes rising
+/// regresses, and the raw op counters / refcount histogram are neutral
+/// bookkeeping.
 fn scenario_rule(key: &str) -> Rule {
+    if let Some(rest) = key.strip_prefix("sessions.") {
+        let leaf = rest.rsplit('.').next().unwrap_or(rest);
+        return if leaf == "dedup_ratio" || leaf == "blocks_shared" || leaf == "shared_blocks" {
+            Rule::HigherBetter
+        } else if leaf.ends_with("_bytes") {
+            Rule::LowerBetter
+        } else {
+            Rule::Neutral
+        };
+    }
     if key.starts_with("memory.") {
         let leaf = key.rsplit('.').next().unwrap_or(key);
         return if leaf == "cached_tokens" {
@@ -526,6 +540,36 @@ mod tests {
         assert!(!diff_metrics(MEM, &moved).unwrap().has_regressions());
         let peak = MEM.replace(r#""peak_epoch":0"#, r#""peak_epoch":2"#);
         assert!(!diff_metrics(MEM, &peak).unwrap().has_regressions());
+    }
+
+    const SES: &str = r#"{"name":"fhc","sessions":{"blocks_shared":90,"created":20,"dedup_ratio":2.5,"deflected_evictions":3,"dropped":12,"forked":14,"live":22,"metadata_bytes":4096,"mode":"shared","peak_live":25,"presessions":0,"refcount_histogram":[4,3,2,0,0,0,0,1],"shared_blocks":9,"total_refs":60,"unique_blocks":24}}"#;
+
+    #[test]
+    fn session_sharing_losses_regress_and_bookkeeping_is_neutral() {
+        // less prefix reuse regresses …
+        let worse = SES.replace(r#""dedup_ratio":2.5"#, r#""dedup_ratio":1.1"#);
+        let r = diff_metrics(SES, &worse).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.regressions().next().unwrap().key, "sessions.dedup_ratio");
+        let fewer = SES.replace(r#""blocks_shared":90"#, r#""blocks_shared":10"#);
+        assert!(diff_metrics(SES, &fewer).unwrap().has_regressions());
+        // … as does session metadata growing …
+        let heavier = SES.replace(r#""metadata_bytes":4096"#, r#""metadata_bytes":9999"#);
+        let r2 = diff_metrics(SES, &heavier).unwrap();
+        assert!(r2.has_regressions());
+        assert_eq!(r2.regressions().next().unwrap().key, "sessions.metadata_bytes");
+        // … while op counters and the refcount histogram are neutral.
+        let churn = SES
+            .replace(r#""forked":14"#, r#""forked":17"#)
+            .replace(r#""refcount_histogram":[4,"#, r#""refcount_histogram":[7,"#);
+        let r3 = diff_metrics(SES, &churn).unwrap();
+        assert_eq!(r3.deltas.len(), 2, "{r3:?}");
+        assert!(!r3.has_regressions());
+        // improvements in either tracked direction never regress
+        let better = SES
+            .replace(r#""dedup_ratio":2.5"#, r#""dedup_ratio":4.0"#)
+            .replace(r#""metadata_bytes":4096"#, r#""metadata_bytes":2048"#);
+        assert!(!diff_metrics(SES, &better).unwrap().has_regressions());
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::federation::transport::{FederatedTransport, ShellLink};
 use crate::federation::{Shell, ShellId};
 use crate::kvc::block::{block_hashes, BlockHash};
 use crate::kvc::manager::{KvcManager, KvcStatsSnapshot};
+use crate::kvc::session::{SessionId, SessionManager, REFCOUNT_BUCKETS};
 use crate::mapping::box_width;
 use crate::net::faults::FaultyTransport;
 use crate::net::sched::{LinkUsage, SchedSnapshot};
@@ -38,7 +39,7 @@ use crate::sim::latency::worst_case_latency;
 use crate::sim::scenario::{
     CorrelatedFailure, FailurePlan, FederatedScenarioSpec, ScenarioSpec, ShellSpec,
 };
-use crate::sim::workload;
+use crate::sim::workload::{self, SessionOp, SessionTrace, SessionWorkloadConfig};
 use crate::util::json::{n, obj, s, Json};
 use crate::util::rng::XorShift64;
 use std::sync::atomic::Ordering;
@@ -108,6 +109,9 @@ pub struct ScenarioReport {
     pub sched: SchedSnapshot,
     /// Deterministic memory-footprint plane (`memory` in the JSON).
     pub memory: MemoryPlane,
+    /// Session-layer state (`sessions` in the JSON; only for specs with
+    /// a [`SessionWorkloadConfig`]).
+    pub sessions: Option<SessionsReport>,
 }
 
 /// One epoch's slice of a run: deltas of the headline counters between
@@ -277,6 +281,247 @@ fn memory_json(m: &MemoryPlane) -> Json {
     ])
 }
 
+/// End-of-run state of the session layer (the `sessions` object of both
+/// report flavours, present only when the spec carries a
+/// [`SessionWorkloadConfig`]).  Deterministic: every field is a pure
+/// function of the op trace and the refcount table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionsReport {
+    /// True for the fork-sharing run, false for the independent-sessions
+    /// baseline replay of the identical trace.
+    pub mode_shared: bool,
+    pub created: u64,
+    pub forked: u64,
+    pub dropped: u64,
+    pub live: u64,
+    pub peak_live: u64,
+    /// Logical sessions pre-registered before the run (metadata only).
+    pub presessions: u64,
+    /// Prefix blocks served by zero-copy sharing on the fork path —
+    /// blocks the baseline must refetch from orbit instead.
+    pub blocks_shared: u64,
+    pub unique_blocks: u64,
+    pub total_refs: u64,
+    /// Blocks referenced by two or more live sessions at end of run.
+    pub shared_blocks: u64,
+    /// `total_refs / unique_blocks` — how many sessions each stored
+    /// block serves on average (1.0 = no sharing).
+    pub dedup_ratio: f64,
+    /// Eviction attempts deflected off session-pinned blocks.
+    pub deflected_evictions: u64,
+    /// Bucket `i` counts blocks with `i + 1` refs (last bucket: more).
+    pub refcount_histogram: [u64; REFCOUNT_BUCKETS],
+    /// Session-table + refcount-table footprint estimate.
+    pub metadata_bytes: u64,
+}
+
+/// Render the `sessions` object.
+fn sessions_json(r: &SessionsReport) -> Json {
+    obj(vec![
+        ("mode", s(if r.mode_shared { "shared" } else { "independent" })),
+        ("created", n(r.created as f64)),
+        ("forked", n(r.forked as f64)),
+        ("dropped", n(r.dropped as f64)),
+        ("live", n(r.live as f64)),
+        ("peak_live", n(r.peak_live as f64)),
+        ("presessions", n(r.presessions as f64)),
+        ("blocks_shared", n(r.blocks_shared as f64)),
+        ("unique_blocks", n(r.unique_blocks as f64)),
+        ("total_refs", n(r.total_refs as f64)),
+        ("shared_blocks", n(r.shared_blocks as f64)),
+        ("dedup_ratio", n(r.dedup_ratio)),
+        ("deflected_evictions", n(r.deflected_evictions as f64)),
+        (
+            "refcount_histogram",
+            Json::Arr(r.refcount_histogram.iter().map(|&c| n(c as f64)).collect()),
+        ),
+        ("metadata_bytes", n(r.metadata_bytes as f64)),
+    ])
+}
+
+/// How one session arrival is served against the KVC — produced by the
+/// [`SessionEngine`], executed by the harness serve loops so the
+/// single-shell and federated semantics cannot diverge.
+enum ServePlan {
+    /// Cold path: look the whole chain up, fetch the cached prefix from
+    /// orbit, store the rest (creates, and baseline fork replays).
+    Full { hashes: Vec<BlockHash> },
+    /// Fork path: the first `shared` blocks are inherited zero-copy from
+    /// the parent's KV mapping (no lookup, no fetch, no ISL traffic);
+    /// only the divergent turn blocks are stored.
+    Forked { hashes: Vec<BlockHash>, shared: usize },
+    /// Extend path: store the turn's new blocks (no prefix traffic in
+    /// either mode — the session already maps its own history).
+    Appended { hashes: Vec<BlockHash>, new_from: usize },
+}
+
+/// Drives a [`SessionTrace`] through a [`SessionManager`], mapping the
+/// generator's logical slots to live sessions and translating each op
+/// into a [`ServePlan`].  In baseline mode (`share == false`) the same
+/// trace replays every fork as a fresh session carrying its parent's
+/// full token history — identical token traffic, no sharing.
+struct SessionEngine {
+    mgr: SessionManager,
+    trace: SessionTrace,
+    share: bool,
+    cursor: usize,
+    slot_ids: Vec<Option<SessionId>>,
+    slot_tokens: Vec<Vec<i32>>,
+    presessions: u64,
+    blocks_shared: u64,
+}
+
+impl SessionEngine {
+    fn new(sw: &SessionWorkloadConfig, block_tokens: usize, arrivals: usize) -> Self {
+        let trace = workload::generate_sessions(sw, arrivals);
+        let mgr = SessionManager::new(block_tokens);
+        let mut engine = Self {
+            mgr,
+            trace,
+            share: sw.share,
+            cursor: 0,
+            slot_ids: Vec::new(),
+            slot_tokens: Vec::new(),
+            presessions: 0,
+            blocks_shared: 0,
+        };
+        // Pre-register the logical session population (the 10^5..10^7
+        // sweep knob): metadata-only — nothing is stored or fetched, so
+        // token traffic stays identical across sweep points.  Shared
+        // mode forks per-template roots (a ref increment per prefix
+        // block); the baseline re-registers the full prefix every time.
+        if sw.presessions > 0 {
+            let template_tokens: Vec<Vec<i32>> =
+                engine.trace.templates.iter().map(|t| Self::tokens(t)).collect();
+            if sw.share {
+                let roots: Vec<SessionId> = template_tokens
+                    .iter()
+                    .map(|toks| engine.mgr.create(toks).0)
+                    .collect();
+                engine.presessions += roots.len() as u64;
+                for k in 0..sw.presessions {
+                    engine.mgr.fork(roots[k % roots.len()]);
+                    engine.presessions += 1;
+                }
+            } else {
+                for k in 0..sw.presessions {
+                    engine.mgr.create(&template_tokens[k % template_tokens.len()]);
+                    engine.presessions += 1;
+                }
+            }
+        }
+        engine
+    }
+
+    fn tokens(text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    fn slot_mut(&mut self, slot: usize) -> (&mut Vec<Option<SessionId>>, &mut Vec<Vec<i32>>) {
+        if slot >= self.slot_ids.len() {
+            self.slot_ids.resize(slot + 1, None);
+            self.slot_tokens.resize(slot + 1, Vec::new());
+        }
+        (&mut self.slot_ids, &mut self.slot_tokens)
+    }
+
+    /// Register a fresh session for `slot` and return its cold-path plan.
+    fn create_slot(&mut self, slot: usize, tokens: Vec<i32>) -> ServePlan {
+        let (id, _) = self.mgr.create(&tokens);
+        let chain = self.mgr.chain(id);
+        let (ids, toks) = self.slot_mut(slot);
+        ids[slot] = Some(id);
+        toks[slot] = tokens;
+        ServePlan::Full { hashes: chain }
+    }
+
+    /// Advance the trace by one epoch's quota of arrivals (plus the drop
+    /// ops riding between them) and return the serve plans, in order.
+    fn next_epoch_plans(&mut self, arrivals: usize) -> Vec<ServePlan> {
+        let mut plans = Vec::with_capacity(arrivals);
+        let mut served = 0usize;
+        while self.cursor < self.trace.ops.len() {
+            if served == arrivals
+                && !matches!(self.trace.ops[self.cursor], SessionOp::Drop { .. })
+            {
+                break;
+            }
+            let op = self.trace.ops[self.cursor].clone();
+            self.cursor += 1;
+            match op {
+                SessionOp::Create { slot, template, turn } => {
+                    served += 1;
+                    let mut tokens = Self::tokens(&self.trace.templates[template]);
+                    tokens.extend(Self::tokens(&turn));
+                    plans.push(self.create_slot(slot, tokens));
+                }
+                SessionOp::Fork { slot, from_slot, turn } => {
+                    served += 1;
+                    let turn_tokens = Self::tokens(&turn);
+                    if self.share {
+                        let parent = self.slot_ids[from_slot].expect("fork of a live slot");
+                        let child = self.mgr.fork(parent);
+                        let new = self.mgr.extend(child, &turn_tokens);
+                        let chain = self.mgr.chain(child);
+                        let shared = chain.len() - new.len();
+                        self.blocks_shared += shared as u64;
+                        let mut tokens = self.slot_tokens[from_slot].clone();
+                        tokens.extend(&turn_tokens);
+                        let (ids, toks) = self.slot_mut(slot);
+                        ids[slot] = Some(child);
+                        toks[slot] = tokens;
+                        plans.push(ServePlan::Forked { hashes: chain, shared });
+                    } else {
+                        // baseline: the fork is an independent session
+                        // carrying the parent's full history — the whole
+                        // prefix goes back through the cold path
+                        let mut tokens = self.slot_tokens[from_slot].clone();
+                        tokens.extend(&turn_tokens);
+                        plans.push(self.create_slot(slot, tokens));
+                    }
+                }
+                SessionOp::Extend { slot, turn } => {
+                    served += 1;
+                    let turn_tokens = Self::tokens(&turn);
+                    let id = self.slot_ids[slot].expect("extend of a live slot");
+                    let new = self.mgr.extend(id, &turn_tokens);
+                    let chain = self.mgr.chain(id);
+                    let new_from = chain.len() - new.len();
+                    self.slot_tokens[slot].extend(&turn_tokens);
+                    plans.push(ServePlan::Appended { hashes: chain, new_from });
+                }
+                SessionOp::Drop { slot } => {
+                    let id = self.slot_ids[slot].take().expect("drop of a live slot");
+                    self.mgr.drop_session(id);
+                    self.slot_tokens[slot] = Vec::new();
+                }
+            }
+        }
+        plans
+    }
+
+    fn report(&self) -> SessionsReport {
+        let snap = self.mgr.snapshot();
+        SessionsReport {
+            mode_shared: self.share,
+            created: snap.created,
+            forked: snap.forked,
+            dropped: snap.dropped,
+            live: snap.live,
+            peak_live: snap.peak_live,
+            presessions: self.presessions,
+            blocks_shared: self.blocks_shared,
+            unique_blocks: snap.unique_blocks,
+            total_refs: snap.total_refs,
+            shared_blocks: snap.shared_blocks,
+            dedup_ratio: snap.dedup_ratio,
+            deflected_evictions: snap.deflected_evictions,
+            refcount_histogram: snap.refcount_histogram,
+            metadata_bytes: snap.metadata_bytes,
+        }
+    }
+}
+
 /// Fold cumulative per-epoch marks `(requests, blocks_requested,
 /// blocks_hit, isl_bytes)` into per-epoch deltas.
 fn epoch_samples(marks: &[(u64, u64, u64, u64)]) -> Vec<EpochSample> {
@@ -385,7 +630,7 @@ fn sched_json(s: &SchedSnapshot) -> Json {
 impl ScenarioReport {
     pub fn to_json(&self) -> Json {
         let k = &self.kvc;
-        obj(vec![
+        let mut fields = vec![
             ("name", s(&self.name)),
             ("seed", n(self.seed as f64)),
             ("planes", n(self.planes as f64)),
@@ -435,7 +680,11 @@ impl ScenarioReport {
                 "timeline",
                 timeline_json(&self.epoch_series, &self.link_rollup, self.links_elided),
             ),
-        ])
+        ];
+        if let Some(sr) = &self.sessions {
+            fields.push(("sessions", sessions_json(sr)));
+        }
+        obj(fields)
     }
 
     /// The canonical byte-stable rendering of this report.
@@ -640,7 +889,13 @@ fn analytic_shape_worst_case_s(
 }
 
 fn analytic_worst_case_s(spec: &ScenarioSpec) -> f64 {
-    let blocks_per_prompt = (spec.workload.context_chars / spec.block_tokens).max(1);
+    // session prompts are template + one turn; plain workload prompts
+    // are the shared context (tokens are bytes either way)
+    let prompt_chars = spec
+        .sessions
+        .map(|sw| sw.template_chars + sw.turn_chars)
+        .unwrap_or(spec.workload.context_chars);
+    let blocks_per_prompt = (prompt_chars / spec.block_tokens).max(1);
     analytic_shape_worst_case_s(
         spec.strategy,
         spec.altitude_km,
@@ -684,7 +939,23 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
     manager.set_trace_sink(sink.clone());
 
     let mut rng = XorShift64::new(spec.seed ^ 0x5EED_5CEA_0A11_0F01);
-    let items = workload::generate(&spec.workload, spec.total_requests());
+    let mut session_engine = spec
+        .sessions
+        .as_ref()
+        .map(|sw| SessionEngine::new(sw, spec.block_tokens, spec.total_requests()));
+    if let Some(engine) = &session_engine {
+        if engine.share {
+            // pin session-referenced blocks fleet-wide (and on the local
+            // tier): eviction deflects off live prefixes
+            fleet.set_block_refs(&engine.mgr.refs());
+            manager.set_block_refs(&engine.mgr.refs());
+        }
+    }
+    let items = if session_engine.is_some() {
+        Vec::new()
+    } else {
+        workload::generate(&spec.workload, spec.total_requests())
+    };
 
     let mut blocks_requested = 0u64;
     let mut blocks_hit = 0u64;
@@ -737,42 +1008,83 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
         }
 
         // --- serve this epoch's slice of the workload -------------------
-        let lo = epoch as usize * spec.requests_per_epoch;
-        let hi = lo + spec.requests_per_epoch;
-        for item in &items[lo..hi] {
-            let tokens: Vec<i32> = item.prompt.bytes().map(|b| b as i32).collect();
-            let hashes = block_hashes(&tokens, spec.block_tokens);
-            if hashes.is_empty() {
-                continue;
-            }
-            blocks_requested += hashes.len() as u64;
-            // request network time = serial accounting of the non-batched
-            // requests + pipelined makespans of the scheduler's batches
-            let net_now = || {
-                inproc.stats().sim_latency_ns.load(Ordering::Relaxed)
-                    + manager.sched().stats.virtual_ns.load(Ordering::Relaxed)
-            };
-            let before_ns = net_now();
-            let cached = manager.lookup(&hashes, epoch).map(|(b, _)| b).unwrap_or(0);
-            let fetched = if cached > 0 {
-                manager
-                    .fetch_prefix(&hashes, cached, epoch)
-                    .map(|f| f.blocks)
-                    .unwrap_or(0)
-            } else {
-                0
-            };
-            blocks_hit += fetched as u64;
-            // blocks not served from orbit get (re-)stored — the engine
-            // would prefill them and §3.8-Set the fresh KV
-            for b in fetched..hashes.len() {
-                let kv = block_values(&hashes[b], spec.kv_values_per_block);
-                if manager.put_block(&hashes, b, &kv, epoch).is_err() {
-                    failed_writes += 1;
+        // request network time = serial accounting of the non-batched
+        // requests + pipelined makespans of the scheduler's batches
+        let net_now = || {
+            inproc.stats().sim_latency_ns.load(Ordering::Relaxed)
+                + manager.sched().stats.virtual_ns.load(Ordering::Relaxed)
+        };
+        if let Some(engine) = &mut session_engine {
+            for plan in engine.next_epoch_plans(spec.requests_per_epoch) {
+                let before_ns = net_now();
+                let (hashes, hit, store_from) = match plan {
+                    ServePlan::Full { hashes } => {
+                        blocks_requested += hashes.len() as u64;
+                        let cached =
+                            manager.lookup(&hashes, epoch).map(|(b, _)| b).unwrap_or(0);
+                        let fetched = if cached > 0 {
+                            manager
+                                .fetch_prefix(&hashes, cached, epoch)
+                                .map(|f| f.blocks)
+                                .unwrap_or(0)
+                        } else {
+                            0
+                        };
+                        (hashes, fetched, fetched)
+                    }
+                    // the forked prefix is inherited zero-copy: counted
+                    // as hits without any orbit traffic
+                    ServePlan::Forked { hashes, shared } => {
+                        blocks_requested += hashes.len() as u64;
+                        (hashes, shared, shared)
+                    }
+                    ServePlan::Appended { hashes, new_from } => {
+                        blocks_requested += (hashes.len() - new_from) as u64;
+                        (hashes, 0, new_from)
+                    }
+                };
+                blocks_hit += hit as u64;
+                for b in store_from..hashes.len() {
+                    let kv = block_values(&hashes[b], spec.kv_values_per_block);
+                    if manager.put_block(&hashes, b, &kv, epoch).is_err() {
+                        failed_writes += 1;
+                    }
                 }
+                let after_ns = net_now();
+                request_net_ns.push(after_ns.saturating_sub(before_ns));
             }
-            let after_ns = net_now();
-            request_net_ns.push(after_ns.saturating_sub(before_ns));
+        } else {
+            let lo = epoch as usize * spec.requests_per_epoch;
+            let hi = lo + spec.requests_per_epoch;
+            for item in &items[lo..hi] {
+                let tokens: Vec<i32> = item.prompt.bytes().map(|b| b as i32).collect();
+                let hashes = block_hashes(&tokens, spec.block_tokens);
+                if hashes.is_empty() {
+                    continue;
+                }
+                blocks_requested += hashes.len() as u64;
+                let before_ns = net_now();
+                let cached = manager.lookup(&hashes, epoch).map(|(b, _)| b).unwrap_or(0);
+                let fetched = if cached > 0 {
+                    manager
+                        .fetch_prefix(&hashes, cached, epoch)
+                        .map(|f| f.blocks)
+                        .unwrap_or(0)
+                } else {
+                    0
+                };
+                blocks_hit += fetched as u64;
+                // blocks not served from orbit get (re-)stored — the engine
+                // would prefill them and §3.8-Set the fresh KV
+                for b in fetched..hashes.len() {
+                    let kv = block_values(&hashes[b], spec.kv_values_per_block);
+                    if manager.put_block(&hashes, b, &kv, epoch).is_err() {
+                        failed_writes += 1;
+                    }
+                }
+                let after_ns = net_now();
+                request_net_ns.push(after_ns.saturating_sub(before_ns));
+            }
         }
 
         // --- rotate: §3.4 column migration, then the ground view moves --
@@ -795,10 +1107,14 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
             inproc.stats().isl_bytes.load(Ordering::Relaxed),
         ));
         // memory plane: the whole stack's footprint at this boundary —
-        // radix index + local tier (manager) plus every satellite store
+        // radix index + local tier (manager) plus every satellite store,
+        // and the session/refcount tables when the session layer drives
         let mut est = manager.mem_footprint();
         for node in fleet.nodes() {
             est.add(node.footprint());
+        }
+        if let Some(engine) = &session_engine {
+            est.add(engine.mgr.mem_footprint());
         }
         memory.sample(epoch, est, manager.cached_tokens());
         manager.transport().set_epoch(epoch + 1);
@@ -861,6 +1177,7 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
         kvc: manager.stats.snapshot(),
         sched: manager.sched().stats.snapshot(),
         memory,
+        sessions: session_engine.as_ref().map(|e| e.report()),
     }
 }
 
@@ -1000,11 +1317,14 @@ pub struct FederatedScenarioReport {
     /// Deterministic memory-footprint plane, federation-wide, with
     /// per-shell residency rows in the summary.
     pub memory: MemoryPlane,
+    /// Session-layer state (`sessions` in the JSON; only for specs with
+    /// a [`SessionWorkloadConfig`]).
+    pub sessions: Option<SessionsReport>,
 }
 
 impl FederatedScenarioReport {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("name", s(&self.name)),
             ("seed", n(self.seed as f64)),
             ("epochs", n(self.epochs as f64)),
@@ -1053,7 +1373,11 @@ impl FederatedScenarioReport {
                 timeline_json(&self.epoch_series, &self.link_rollup, self.links_elided),
             ),
             ("shells", Json::Arr(self.shells.iter().map(|sh| sh.to_json()).collect())),
-        ])
+        ];
+        if let Some(sr) = &self.sessions {
+            fields.push(("sessions", sessions_json(sr)));
+        }
+        obj(fields)
     }
 
     /// The canonical byte-stable rendering of this report.
@@ -1141,7 +1465,21 @@ pub fn run_federated_scenario_with_sink(
     };
 
     let mut rng = XorShift64::new(spec.seed ^ 0x5EED_FEDE_0A11_0F02);
-    let items = workload::generate(&spec.workload, spec.total_requests());
+    let mut session_engine = spec
+        .sessions
+        .as_ref()
+        .map(|sw| SessionEngine::new(sw, spec.block_tokens, spec.total_requests()));
+    if let Some(engine) = &session_engine {
+        if engine.share {
+            // pin session-referenced blocks on every shell's fleet
+            manager.set_block_refs(&engine.mgr.refs());
+        }
+    }
+    let items = if session_engine.is_some() {
+        Vec::new()
+    } else {
+        workload::generate(&spec.workload, spec.total_requests())
+    };
 
     let mut blocks_requested = 0u64;
     let mut blocks_hit = 0u64;
@@ -1256,31 +1594,68 @@ pub fn run_federated_scenario_with_sink(
         }
 
         // --- serve this epoch's slice of the workload -------------------
-        let lo = epoch as usize * spec.requests_per_epoch;
-        let hi = lo + spec.requests_per_epoch;
-        for item in &items[lo..hi] {
-            let tokens: Vec<i32> = item.prompt.bytes().map(|b| b as i32).collect();
-            let hashes = block_hashes(&tokens, spec.block_tokens);
-            if hashes.is_empty() {
-                continue;
-            }
-            blocks_requested += hashes.len() as u64;
-            let before_ns = transport.total_latency_ns();
-            let cached = manager.lookup(&hashes);
-            let fetched = if cached > 0 {
-                manager.fetch_prefix(&hashes, cached, epoch).unwrap_or(0)
-            } else {
-                0
-            };
-            blocks_hit += fetched as u64;
-            for b in fetched..hashes.len() {
-                let kv = block_values(&hashes[b], spec.kv_values_per_block);
-                if manager.put_block(&hashes, b, &kv, epoch).is_err() {
-                    failed_writes += 1;
+        if let Some(engine) = &mut session_engine {
+            for plan in engine.next_epoch_plans(spec.requests_per_epoch) {
+                let before_ns = transport.total_latency_ns();
+                let (hashes, hit, store_from) = match plan {
+                    ServePlan::Full { hashes } => {
+                        blocks_requested += hashes.len() as u64;
+                        let cached = manager.lookup(&hashes);
+                        let fetched = if cached > 0 {
+                            manager.fetch_prefix(&hashes, cached, epoch).unwrap_or(0)
+                        } else {
+                            0
+                        };
+                        (hashes, fetched, fetched)
+                    }
+                    // the forked prefix is inherited zero-copy: counted
+                    // as hits without any orbit traffic
+                    ServePlan::Forked { hashes, shared } => {
+                        blocks_requested += hashes.len() as u64;
+                        (hashes, shared, shared)
+                    }
+                    ServePlan::Appended { hashes, new_from } => {
+                        blocks_requested += (hashes.len() - new_from) as u64;
+                        (hashes, 0, new_from)
+                    }
+                };
+                blocks_hit += hit as u64;
+                for b in store_from..hashes.len() {
+                    let kv = block_values(&hashes[b], spec.kv_values_per_block);
+                    if manager.put_block(&hashes, b, &kv, epoch).is_err() {
+                        failed_writes += 1;
+                    }
                 }
+                let after_ns = transport.total_latency_ns();
+                request_net_ns.push(after_ns.saturating_sub(before_ns));
             }
-            let after_ns = transport.total_latency_ns();
-            request_net_ns.push(after_ns.saturating_sub(before_ns));
+        } else {
+            let lo = epoch as usize * spec.requests_per_epoch;
+            let hi = lo + spec.requests_per_epoch;
+            for item in &items[lo..hi] {
+                let tokens: Vec<i32> = item.prompt.bytes().map(|b| b as i32).collect();
+                let hashes = block_hashes(&tokens, spec.block_tokens);
+                if hashes.is_empty() {
+                    continue;
+                }
+                blocks_requested += hashes.len() as u64;
+                let before_ns = transport.total_latency_ns();
+                let cached = manager.lookup(&hashes);
+                let fetched = if cached > 0 {
+                    manager.fetch_prefix(&hashes, cached, epoch).unwrap_or(0)
+                } else {
+                    0
+                };
+                blocks_hit += fetched as u64;
+                for b in fetched..hashes.len() {
+                    let kv = block_values(&hashes[b], spec.kv_values_per_block);
+                    if manager.put_block(&hashes, b, &kv, epoch).is_err() {
+                        failed_writes += 1;
+                    }
+                }
+                let after_ns = transport.total_latency_ns();
+                request_net_ns.push(after_ns.saturating_sub(before_ns));
+            }
         }
 
         // --- epoch boundary: replicate the hot set across the cheapest
@@ -1310,8 +1685,13 @@ pub fn run_federated_scenario_with_sink(
             .sum::<u64>();
         epoch_marks.push((request_net_ns.len() as u64, blocks_requested, blocks_hit, isl));
         // memory plane: federation total (index maps + every shell's
-        // fleet stores) at this epoch boundary
-        memory.sample(epoch, manager.mem_footprint(), manager.cached_tokens());
+        // fleet stores, plus the session/refcount tables when the
+        // session layer drives) at this epoch boundary
+        let mut est = manager.mem_footprint();
+        if let Some(engine) = &session_engine {
+            est.add(engine.mgr.mem_footprint());
+        }
+        memory.sample(epoch, est, manager.cached_tokens());
         transport.set_epoch_all(epoch + 1);
     }
 
@@ -1452,6 +1832,7 @@ pub fn run_federated_scenario_with_sink(
         links_elided,
         shells,
         memory,
+        sessions: session_engine.as_ref().map(|e| e.report()),
     }
 }
 
@@ -1826,5 +2207,137 @@ mod tests {
         assert!(r.sched.virtual_ns > 0, "link model must cost virtual time");
         assert!(r.sched.peak_in_flight > 1, "chunks must overlap in flight");
         assert!(r.sched.links_used > 1);
+    }
+
+    /// The fork-heavy session scenario scaled down to milliseconds.
+    fn fork_heavy_tiny(seed: u64) -> ScenarioSpec {
+        let mut spec = ScenarioSpec::fork_heavy_chat(seed);
+        spec.epochs = 4;
+        spec.requests_per_epoch = 16;
+        spec
+    }
+
+    #[test]
+    fn fork_heavy_sessions_are_deterministic() {
+        let spec = fork_heavy_tiny(11);
+        let a = run_scenario(&spec);
+        let b = run_scenario(&spec);
+        assert_eq!(a, b);
+        assert_eq!(a.to_json_string(), b.to_json_string());
+        assert!(a.sessions.is_some(), "session-driven runs must report sessions");
+        let j = a.to_json_string();
+        for key in [
+            "\"sessions\"",
+            "\"mode\"",
+            "\"dedup_ratio\"",
+            "\"blocks_shared\"",
+            "\"refcount_histogram\"",
+            "\"deflected_evictions\"",
+            "\"metadata_bytes\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+
+    #[test]
+    fn session_counters_are_consistent() {
+        let spec = fork_heavy_tiny(7);
+        let r = run_scenario(&spec);
+        // every arrival (create / fork / extend) is served as one request
+        assert_eq!(r.requests, spec.total_requests() as u64);
+        let s = r.sessions.as_ref().unwrap();
+        assert!(s.mode_shared);
+        assert!(s.created > 0 && s.forked > 0 && s.dropped > 0, "{s:?}");
+        assert!(s.blocks_shared > 0, "forks must inherit prefix blocks: {s:?}");
+        assert!(s.live <= s.peak_live);
+        assert_eq!(s.created + s.forked, s.dropped + s.live, "{s:?}");
+        assert_eq!(s.refcount_histogram.iter().sum::<u64>(), s.unique_blocks);
+        assert!(s.dedup_ratio >= 1.0);
+        assert!(s.total_refs >= s.unique_blocks);
+        assert!(s.metadata_bytes > 0);
+    }
+
+    #[test]
+    fn fork_sharing_beats_independent_sessions() {
+        let spec = fork_heavy_tiny(9);
+        let fork = run_scenario(&spec);
+        let base = run_scenario(&spec.session_baseline());
+        // the baseline replays the identical trace with sharing disabled:
+        // same arrivals, same chains, same hit-rate denominator
+        assert_eq!(fork.requests, base.requests);
+        assert_eq!(fork.blocks_requested, base.blocks_requested, "identical token traffic");
+        let fs = fork.sessions.as_ref().unwrap();
+        let bs = base.sessions.as_ref().unwrap();
+        assert!(fs.mode_shared && !bs.mode_shared);
+        assert!(fs.forked > 0 && fs.blocks_shared > 0);
+        assert_eq!(bs.forked, 0, "the baseline replays forks as fresh sessions");
+        assert_eq!(bs.blocks_shared, 0);
+        assert!(
+            fork.block_hit_rate > base.block_hit_rate,
+            "zero-copy forks must out-hit independent replays: {} vs {}",
+            fork.block_hit_rate,
+            base.block_hit_rate
+        );
+        assert!(
+            fork.isl_bytes < base.isl_bytes,
+            "shared prefixes must skip orbit refetches: {} vs {}",
+            fork.isl_bytes,
+            base.isl_bytes
+        );
+        assert!(
+            fork.memory.bytes_per_cached_token < base.memory.bytes_per_cached_token,
+            "sharing must cost fewer bytes per cached token: {} vs {}",
+            fork.memory.bytes_per_cached_token,
+            base.memory.bytes_per_cached_token
+        );
+    }
+
+    #[test]
+    fn presessions_are_metadata_cheap_and_traffic_neutral() {
+        let small = fork_heavy_tiny(5);
+        let mut big = fork_heavy_tiny(5);
+        big.sessions.as_mut().unwrap().presessions = 10_000;
+        let rs = run_scenario(&small);
+        let rb = run_scenario(&big);
+        // pre-registered sessions are metadata only: the served trace and
+        // its token traffic are identical across sweep points
+        assert_eq!(rb.requests, rs.requests);
+        assert_eq!(rb.blocks_requested, rs.blocks_requested);
+        let ss = rs.sessions.as_ref().unwrap();
+        let sb = rb.sessions.as_ref().unwrap();
+        assert!(sb.presessions >= 10_000, "{sb:?}");
+        assert!(sb.live >= 10_000, "presessions stay live for the whole run");
+        let per_session = (sb.metadata_bytes - ss.metadata_bytes) / 10_000;
+        assert!(
+            per_session < 256,
+            "a pre-registered fork must cost well under 256 B, got {per_session}"
+        );
+    }
+
+    #[test]
+    fn federated_runs_carry_the_session_layer() {
+        let mut spec = tiny_fed(11);
+        spec.sessions = Some(crate::sim::workload::SessionWorkloadConfig {
+            seed: 11,
+            ..Default::default()
+        });
+        let a = run_federated_scenario(&spec);
+        let b = run_federated_scenario(&spec);
+        assert_eq!(a, b);
+        assert_eq!(a.to_json_string(), b.to_json_string());
+        let s = a.sessions.as_ref().unwrap();
+        assert!(s.mode_shared && s.created > 0, "{s:?}");
+        assert!(a.block_hit_rate > 0.0);
+        assert!(a.to_json_string().contains("\"sessions\""));
+    }
+
+    #[test]
+    fn non_session_reports_omit_the_sessions_object() {
+        let r = run_scenario(&tiny_spec(3));
+        assert!(r.sessions.is_none());
+        assert!(!r.to_json_string().contains("\"sessions\""));
+        let f = run_federated_scenario(&tiny_fed(3));
+        assert!(f.sessions.is_none());
+        assert!(!f.to_json_string().contains("\"sessions\""));
     }
 }

@@ -9,7 +9,7 @@
 //! nondeterminism (hash-map iteration order, wall-clock time, thread
 //! scheduling observable at block granularity).
 //!
-//! Six scenarios ship built in (`skymemory scenario --list`):
+//! Seven scenarios ship built in (`skymemory scenario --list`):
 //!
 //! * `paper-19x5` — the paper's NUC-testbed shape (§5): 5 planes x 19
 //!   satellites at 550 km, 9 virtual servers, heavy per-satellite memory
@@ -22,6 +22,14 @@
 //! * `mega-shell` — the [`crate::net::sched`] stress shape: the 72x22
 //!   shell with >1000 in-flight chunks per block over throttled links,
 //!   for sweeping the per-link transfer window (`skymemory sched`).
+//! * `fork-heavy-chat` — the session-layer scenario: the paper's 5x19
+//!   shape driven by a Zipfian multi-tenant chat trace through
+//!   [`crate::kvc::session::SessionManager`] — forked sessions share
+//!   their prefix blocks by refcount instead of refetching them, and the
+//!   refs pin shared blocks against eviction.  `skymemory sessions
+//!   fork-heavy-chat --baseline` gates it against the independent-
+//!   sessions replay of the identical trace
+//!   ([`ScenarioSpec::session_baseline`]).
 //! * `federated-dual-shell` — a two-shell federation (the Starlink-like
 //!   72x22 shell at 550 km plus the Kuiper-like 34x34 shell at 630 km)
 //!   run through [`crate::federation`]: shell-aware placement with
@@ -48,7 +56,7 @@ use crate::kvc::eviction::EvictionPolicy;
 use crate::kvc::manager::KvcConfig;
 use crate::kvc::quantize::Quantizer;
 use crate::mapping::{box_width, Strategy};
-use crate::sim::workload::WorkloadConfig;
+use crate::sim::workload::{SessionWorkloadConfig, WorkloadConfig};
 
 /// The failure classes the harness can inject.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,6 +172,11 @@ pub struct ScenarioSpec {
     pub epochs: u64,
     pub requests_per_epoch: usize,
     pub workload: WorkloadConfig,
+    /// When set, the run is driven by the session layer instead of the
+    /// plain prefix workload: `requests_per_epoch` arrivals per epoch are
+    /// drawn from the Zipfian session trace and served through
+    /// [`crate::kvc::session::SessionManager`] (`workload` is ignored).
+    pub sessions: Option<SessionWorkloadConfig>,
     pub failures: FailurePlan,
     /// Per-link in-flight window of the [`crate::net::sched`] scheduler
     /// driving the chunk fan-out.
@@ -229,6 +242,26 @@ impl ScenarioSpec {
         assert!(self.epochs >= 1 && self.requests_per_epoch >= 1, "{}: empty run", self.name);
         assert!(self.sched_window >= 1, "{}: a link window must admit a transfer", self.name);
         assert!(self.link_bandwidth_bps > 0.0, "{}: links need bandwidth", self.name);
+        if let Some(sw) = &self.sessions {
+            // tokens are prompt bytes, so char counts are token counts:
+            // block-aligned templates and turns keep session chains free of
+            // partial-block tails and make the traffic hand-predictable
+            assert!(
+                sw.template_chars % self.block_tokens == 0
+                    && sw.turn_chars % self.block_tokens == 0,
+                "{}: session template/turn chars must be block_tokens-aligned",
+                self.name
+            );
+            assert!(sw.n_templates >= 1, "{}: sessions need a template", self.name);
+            assert!(
+                sw.fork_frac >= 0.0
+                    && sw.extend_frac >= 0.0
+                    && sw.fork_frac + sw.extend_frac <= 1.0,
+                "{}: fork/extend fractions must partition the arrival mix",
+                self.name
+            );
+            assert!(sw.lifetime_turns >= 1, "{}: sessions must live a turn", self.name);
+        }
     }
 
     // --- built-in scenarios ---------------------------------------------
@@ -264,6 +297,7 @@ impl ScenarioSpec {
                 scan_every: 5,
                 seed,
             },
+            sessions: None,
             failures: FailurePlan {
                 sat_losses_per_epoch: 1,
                 isl_outages_per_epoch: 1,
@@ -305,6 +339,7 @@ impl ScenarioSpec {
                 scan_every: 6,
                 seed,
             },
+            sessions: None,
             failures: FailurePlan {
                 sat_losses_per_epoch: 2,
                 isl_outages_per_epoch: 2,
@@ -346,6 +381,7 @@ impl ScenarioSpec {
                 scan_every: 6,
                 seed,
             },
+            sessions: None,
             failures: FailurePlan {
                 sat_losses_per_epoch: 1,
                 isl_outages_per_epoch: 2,
@@ -392,6 +428,7 @@ impl ScenarioSpec {
                 scan_every: 6,
                 seed,
             },
+            sessions: None,
             failures: FailurePlan {
                 sat_losses_per_epoch: 1,
                 isl_outages_per_epoch: 1,
@@ -404,6 +441,83 @@ impl ScenarioSpec {
         }
     }
 
+    /// The session-layer scenario: the paper's 5x19 shape under a
+    /// Zipfian multi-tenant chat trace where half the arrivals *fork* a
+    /// live conversation (shared system prompt + history) instead of
+    /// starting cold.  Forks share their prefix blocks through
+    /// [`crate::kvc::session::SessionManager`] refcounts — no refetch, no
+    /// re-store — and the refs pin shared blocks against the same LRU /
+    /// gossip eviction pressure `paper-19x5` runs under.  The
+    /// independent-sessions baseline ([`ScenarioSpec::session_baseline`])
+    /// replays the identical token traffic with every fork served as a
+    /// fresh session.
+    pub fn fork_heavy_chat(seed: u64) -> ScenarioSpec {
+        ScenarioSpec {
+            name: "fork-heavy-chat".into(),
+            planes: 5,
+            sats_per_plane: 19,
+            altitude_km: 550.0,
+            strategy: Strategy::RotationHopAware,
+            n_servers: 9,
+            block_tokens: 32,
+            chunk_size: 600,
+            quantizer: Quantizer::QuantoInt8 { group: 32 },
+            eviction: EvictionPolicy::Gossip,
+            // the same tight budget as paper-19x5: session turns keep
+            // minting fresh blocks, so the stores overflow and eviction
+            // must steer around the pinned shared prefixes
+            sat_budget_bytes: 48 << 10,
+            kv_values_per_block: 8192,
+            epochs: 6,
+            requests_per_epoch: 24,
+            // unused when `sessions` is set; kept spec-complete
+            workload: WorkloadConfig {
+                n_contexts: 4,
+                context_chars: 192,
+                n_questions: 6,
+                scan_every: 5,
+                seed,
+            },
+            sessions: Some(SessionWorkloadConfig {
+                n_templates: 4,
+                zipf_s: 1.1,
+                // 6 blocks of shared template, 1 block per turn
+                template_chars: 192,
+                turn_chars: 32,
+                fork_frac: 0.5,
+                extend_frac: 0.25,
+                lifetime_turns: 4,
+                presessions: 0,
+                share: true,
+                seed,
+            }),
+            failures: FailurePlan {
+                sat_losses_per_epoch: 1,
+                isl_outages_per_epoch: 1,
+                isl_outage_heal_epochs: 2,
+                handover_every_epochs: 0,
+            },
+            sched_window: 8,
+            link_bandwidth_bps: 1e9,
+            seed,
+        }
+    }
+
+    /// The independent-sessions baseline of a session scenario: the
+    /// *identical* op trace (same seed, same templates, same turns) with
+    /// prefix sharing switched off — every fork is served as a fresh
+    /// session carrying its parent's full token history, refs are not
+    /// installed, nothing is pinned.  `skymemory sessions --baseline`
+    /// gates the fork-heavy run against this.
+    pub fn session_baseline(&self) -> ScenarioSpec {
+        let mut spec = self.clone();
+        spec.name = format!("{}-baseline", self.name);
+        if let Some(sw) = &mut spec.sessions {
+            sw.share = false;
+        }
+        spec
+    }
+
     /// All built-in scenarios, paper shape first.
     pub fn builtin(seed: u64) -> Vec<ScenarioSpec> {
         vec![
@@ -411,6 +525,7 @@ impl ScenarioSpec {
             ScenarioSpec::starlink_shell(seed),
             ScenarioSpec::kuiper_shell(seed),
             ScenarioSpec::mega_shell(seed),
+            ScenarioSpec::fork_heavy_chat(seed),
         ]
     }
 
@@ -421,6 +536,7 @@ impl ScenarioSpec {
             "starlink-shell" => Some(ScenarioSpec::starlink_shell(seed)),
             "kuiper-shell" => Some(ScenarioSpec::kuiper_shell(seed)),
             "mega-shell" => Some(ScenarioSpec::mega_shell(seed)),
+            "fork-heavy-chat" => Some(ScenarioSpec::fork_heavy_chat(seed)),
             _ => None,
         }
     }
@@ -444,6 +560,10 @@ pub const BUILTIN_SUMMARIES: &[(&str, &str)] = &[
     (
         "mega-shell",
         "net::sched stress: 72x22 shell, >1000 in-flight chunks per block, 20 Mbit/s links (sweep windows via `skymemory sched`)",
+    ),
+    (
+        "fork-heavy-chat",
+        "session layer on the 5x19 shape: Zipfian chat trace, half the arrivals fork a live session and share its prefix by refcount (gate vs the no-sharing baseline via `skymemory sessions`)",
     ),
     (
         "federated-dual-shell",
@@ -506,6 +626,9 @@ pub struct FederatedScenarioSpec {
     pub epochs: u64,
     pub requests_per_epoch: usize,
     pub workload: WorkloadConfig,
+    /// When set, the federated run is driven by the session layer instead
+    /// of the plain prefix workload (see [`ScenarioSpec::sessions`]).
+    pub sessions: Option<SessionWorkloadConfig>,
     /// Random failures, injected into the primary shell only.
     pub failures: FailurePlan,
     /// Scheduled correlated failures (whole-plane loss, fractional box
@@ -747,6 +870,7 @@ impl FederatedScenarioSpec {
                 scan_every: 5,
                 seed,
             },
+            sessions: None,
             failures: FailurePlan {
                 sat_losses_per_epoch: 1,
                 isl_outages_per_epoch: 1,
@@ -831,6 +955,7 @@ impl FederatedScenarioSpec {
                 scan_every: 5,
                 seed,
             },
+            sessions: None,
             failures: FailurePlan {
                 sat_losses_per_epoch: 1,
                 isl_outages_per_epoch: 1,
@@ -883,7 +1008,7 @@ mod tests {
     #[test]
     fn builtin_specs_validate() {
         let specs = ScenarioSpec::builtin(7);
-        assert_eq!(specs.len(), 4);
+        assert_eq!(specs.len(), 5);
         for s in &specs {
             s.validate();
             assert!(s.torus().len() >= s.n_servers);
@@ -919,6 +1044,44 @@ mod tests {
                 "{name} is summarized but not registered"
             );
         }
+    }
+
+    #[test]
+    fn fork_heavy_chat_spec_is_sound() {
+        let s = ScenarioSpec::fork_heavy_chat(7);
+        s.validate();
+        let sw = s.sessions.expect("session scenario carries a session workload");
+        assert!(sw.share, "the builtin runs with sharing on");
+        assert!(sw.fork_frac >= 0.5, "fork-heavy means fork-heavy");
+        assert_eq!(sw.template_chars % s.block_tokens, 0);
+        assert_eq!(sw.turn_chars % s.block_tokens, 0);
+        // the other builtins stay session-free
+        assert!(ScenarioSpec::paper_19x5(7).sessions.is_none());
+    }
+
+    #[test]
+    fn session_baseline_disables_sharing_only() {
+        let s = ScenarioSpec::fork_heavy_chat(9);
+        let b = s.session_baseline();
+        b.validate();
+        assert_eq!(b.name, "fork-heavy-chat-baseline");
+        let (sw, bw) = (s.sessions.unwrap(), b.sessions.unwrap());
+        assert!(!bw.share);
+        // identical trace parameters -> identical token traffic
+        assert_eq!(bw.seed, sw.seed);
+        assert_eq!(bw.fork_frac, sw.fork_frac);
+        assert_eq!(bw.n_templates, sw.n_templates);
+        assert_eq!(b.sat_budget_bytes, s.sat_budget_bytes);
+    }
+
+    #[test]
+    fn misaligned_session_chars_fail_validation() {
+        let mut s = ScenarioSpec::fork_heavy_chat(1);
+        if let Some(sw) = &mut s.sessions {
+            sw.turn_chars = 33; // not a multiple of block_tokens = 32
+        }
+        let r = std::panic::catch_unwind(move || s.validate());
+        assert!(r.is_err());
     }
 
     #[test]

@@ -81,6 +81,155 @@ pub fn generate(cfg: &WorkloadConfig, n: usize) -> Vec<WorkloadItem> {
         .collect()
 }
 
+/// Session-workload configuration: multi-tenant chat traffic over
+/// Zipfian-popular prefix templates (shared system prompts / documents),
+/// a fork-vs-fresh arrival mix, and a per-session lifetime.  Drives the
+/// [`crate::kvc::session::SessionManager`] layer in the harness.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionWorkloadConfig {
+    /// Distinct prefix templates (system prompts).
+    pub n_templates: usize,
+    /// Zipf exponent of template popularity (0 = uniform).
+    pub zipf_s: f64,
+    /// Characters per template prefix (tokens are bytes; keep this a
+    /// multiple of the scenario's `block_tokens` so chains align).
+    pub template_chars: usize,
+    /// Characters appended per conversation turn (same alignment rule).
+    pub turn_chars: usize,
+    /// Fraction of arrivals that fork the youngest live session of their
+    /// template instead of starting fresh.
+    pub fork_frac: f64,
+    /// Fraction of arrivals that extend the youngest live session of
+    /// their template by one turn.
+    pub extend_frac: f64,
+    /// Turns after which a session drops (its refs release).
+    pub lifetime_turns: usize,
+    /// Logical sessions pre-registered before the run — metadata-only
+    /// forks of per-template roots, the 10⁵–10⁷ sweep knob
+    /// (`skymemory sessions --sessions N`).
+    pub presessions: usize,
+    /// When true the harness forks for real (refcounted zero-copy prefix
+    /// sharing, stores pinned); when false the identical trace replays
+    /// every fork as an independent fresh session — the baseline.
+    pub share: bool,
+    pub seed: u64,
+}
+
+impl Default for SessionWorkloadConfig {
+    fn default() -> Self {
+        Self {
+            n_templates: 4,
+            zipf_s: 1.1,
+            template_chars: 192,
+            turn_chars: 32,
+            fork_frac: 0.5,
+            extend_frac: 0.25,
+            lifetime_turns: 4,
+            presessions: 0,
+            share: true,
+            seed: 7,
+        }
+    }
+}
+
+/// One session-layer operation.  `slot` numbers are dense logical ids
+/// assigned by the generator; the harness maps them to live
+/// [`crate::kvc::session::SessionId`]s.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SessionOp {
+    /// Start a fresh session: template prefix plus one turn.
+    Create { slot: usize, template: usize, turn: String },
+    /// Fork `from_slot` and append one divergent turn.
+    Fork { slot: usize, from_slot: usize, turn: String },
+    /// Append one turn to a live session.
+    Extend { slot: usize, turn: String },
+    /// End of life: the session's references release.
+    Drop { slot: usize },
+}
+
+/// A generated session trace: the template texts plus the op stream.
+#[derive(Debug, Clone)]
+pub struct SessionTrace {
+    pub templates: Vec<String>,
+    pub ops: Vec<SessionOp>,
+    /// Arrivals generated (ops minus the interleaved drops).
+    pub arrivals: usize,
+}
+
+/// Sample an index from Zipfian cumulative weights.
+fn zipf_pick(cum: &[f64], r: f64) -> usize {
+    let total = *cum.last().unwrap();
+    let x = r * total;
+    cum.iter().position(|&c| x < c).unwrap_or(cum.len() - 1)
+}
+
+/// Generate `arrivals` session-layer arrivals.  Each arrival picks a
+/// template by Zipf popularity, then forks / extends / creates per the
+/// configured mix; a touched session reaching `lifetime_turns` drops
+/// immediately (the drop rides the op stream).  Deterministic per seed;
+/// turn texts embed the arrival index so turns never collide across
+/// sessions.
+pub fn generate_sessions(cfg: &SessionWorkloadConfig, arrivals: usize) -> SessionTrace {
+    assert!(cfg.n_templates >= 1, "sessions need a template");
+    assert!(cfg.lifetime_turns >= 1, "sessions must live at least one turn");
+    assert!(
+        cfg.fork_frac >= 0.0 && cfg.extend_frac >= 0.0 && cfg.fork_frac + cfg.extend_frac <= 1.0,
+        "fork/extend fractions must partition the arrival mix"
+    );
+    let mut rng = XorShift64::new(cfg.seed ^ 0x5E55_10F0_0000_0001);
+    let templates: Vec<String> =
+        (0..cfg.n_templates).map(|_| synth_text(&mut rng, cfg.template_chars)).collect();
+    let cum: Vec<f64> = (0..cfg.n_templates)
+        .scan(0.0, |acc, i| {
+            *acc += 1.0 / ((i + 1) as f64).powf(cfg.zipf_s);
+            Some(*acc)
+        })
+        .collect();
+
+    let mut ops = Vec::with_capacity(arrivals + arrivals / cfg.lifetime_turns + 1);
+    // youngest-last live slots per template, and per-slot turn counts
+    let mut live: Vec<Vec<usize>> = vec![Vec::new(); cfg.n_templates];
+    let mut slot_turns: Vec<usize> = Vec::new();
+    let mut slot_template: Vec<usize> = Vec::new();
+    let mut turn_text = |rng: &mut XorShift64, i: usize| {
+        let mut t = format!(" a{i} {}", synth_text(rng, cfg.turn_chars));
+        t.truncate(cfg.turn_chars.max(1));
+        t
+    };
+    for i in 0..arrivals {
+        let t = zipf_pick(&cum, rng.next_f64());
+        let r = rng.next_f64();
+        let turn = turn_text(&mut rng, i);
+        let touched = if r < cfg.fork_frac && !live[t].is_empty() {
+            let from_slot = *live[t].last().unwrap();
+            let slot = slot_turns.len();
+            slot_turns.push(slot_turns[from_slot]);
+            slot_template.push(t);
+            live[t].push(slot);
+            ops.push(SessionOp::Fork { slot, from_slot, turn });
+            slot
+        } else if r < cfg.fork_frac + cfg.extend_frac && !live[t].is_empty() {
+            let slot = *live[t].last().unwrap();
+            ops.push(SessionOp::Extend { slot, turn });
+            slot
+        } else {
+            let slot = slot_turns.len();
+            slot_turns.push(0);
+            slot_template.push(t);
+            live[t].push(slot);
+            ops.push(SessionOp::Create { slot, template: t, turn });
+            slot
+        };
+        slot_turns[touched] += 1;
+        if slot_turns[touched] >= cfg.lifetime_turns {
+            let tpl = slot_template[touched];
+            live[tpl].retain(|&s| s != touched);
+            ops.push(SessionOp::Drop { slot: touched });
+        }
+    }
+    SessionTrace { templates, ops, arrivals }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +298,102 @@ mod tests {
         assert_eq!(
             items.iter().map(|x| &x.prompt).collect::<Vec<_>>(),
             again.iter().map(|x| &x.prompt).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn session_trace_is_deterministic() {
+        let cfg = SessionWorkloadConfig::default();
+        let a = generate_sessions(&cfg, 64);
+        let b = generate_sessions(&cfg, 64);
+        assert_eq!(a.templates, b.templates);
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.arrivals, 64);
+    }
+
+    #[test]
+    fn session_trace_mixes_forks_extends_and_drops() {
+        let cfg = SessionWorkloadConfig::default();
+        let trace = generate_sessions(&cfg, 96);
+        let mut forks = 0;
+        let mut extends = 0;
+        let mut creates = 0;
+        let mut drops = 0;
+        for op in &trace.ops {
+            match op {
+                SessionOp::Create { .. } => creates += 1,
+                SessionOp::Fork { .. } => forks += 1,
+                SessionOp::Extend { .. } => extends += 1,
+                SessionOp::Drop { .. } => drops += 1,
+            }
+        }
+        assert!(creates >= 1 && forks >= 1 && extends >= 1 && drops >= 1);
+        assert_eq!(creates + forks + extends, trace.arrivals);
+    }
+
+    #[test]
+    fn session_ops_reference_earlier_live_slots() {
+        let cfg = SessionWorkloadConfig { lifetime_turns: 3, ..Default::default() };
+        let trace = generate_sessions(&cfg, 80);
+        let mut live: Vec<bool> = Vec::new();
+        for op in &trace.ops {
+            match op {
+                SessionOp::Create { slot, template, .. } => {
+                    assert_eq!(*slot, live.len(), "slots are dense");
+                    assert!(*template < cfg.n_templates);
+                    live.push(true);
+                }
+                SessionOp::Fork { slot, from_slot, .. } => {
+                    assert_eq!(*slot, live.len());
+                    assert!(live[*from_slot], "forks only target live sessions");
+                    live.push(true);
+                }
+                SessionOp::Extend { slot, .. } => assert!(live[*slot]),
+                SessionOp::Drop { slot } => {
+                    assert!(live[*slot], "double drop");
+                    live[*slot] = false;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn session_turns_are_block_aligned_and_unique() {
+        let cfg = SessionWorkloadConfig::default();
+        let trace = generate_sessions(&cfg, 48);
+        assert!(trace.templates.iter().all(|t| t.len() == cfg.template_chars));
+        let mut turns: Vec<&String> = Vec::new();
+        for op in &trace.ops {
+            let turn = match op {
+                SessionOp::Create { turn, .. }
+                | SessionOp::Fork { turn, .. }
+                | SessionOp::Extend { turn, .. } => turn,
+                SessionOp::Drop { .. } => continue,
+            };
+            assert_eq!(turn.len(), cfg.turn_chars);
+            assert!(!turns.contains(&turn), "turn text collides across arrivals");
+            turns.push(turn);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_template_popularity() {
+        let cfg = SessionWorkloadConfig {
+            fork_frac: 0.0,
+            extend_frac: 0.0,
+            zipf_s: 1.4,
+            ..Default::default()
+        };
+        let trace = generate_sessions(&cfg, 200);
+        let mut counts = vec![0usize; cfg.n_templates];
+        for op in &trace.ops {
+            if let SessionOp::Create { template, .. } = op {
+                counts[*template] += 1;
+            }
+        }
+        assert!(
+            counts[0] > counts[cfg.n_templates - 1],
+            "template 0 must dominate the tail: {counts:?}"
         );
     }
 }

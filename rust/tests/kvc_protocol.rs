@@ -159,6 +159,69 @@ fn lazy_eviction_cleans_index_after_sabotage() {
 }
 
 #[test]
+fn session_pinned_prefix_survives_eviction_pressure() {
+    // regression for the refcount-aware eviction guard: before the
+    // session layer installed its BlockRefs on the fleet, LRU pressure
+    // (or a gossiped eviction) would happily delete a prefix that a
+    // live forked session still mapped, and the fork's next read came
+    // back a miss.  Pinned blocks must deflect eviction, stay fetchable
+    // and uncorrupted, and become evictable again once the sessions
+    // drop.
+    use skymemory::kvc::session::SessionManager;
+    let (fleet, m) = setup(
+        KvcConfig { n_servers: 9, eviction: EvictionPolicy::Gossip, ..KvcConfig::default() },
+        3_000, // ~4 chunks per satellite -> heavy LRU churn
+    );
+    let sessions = SessionManager::new(32);
+    fleet.set_block_refs(&sessions.refs());
+
+    // a 2-block template prefix, stored once, then forked
+    let tokens: Vec<i32> = (0..64).map(|i| i * 3 + 1).collect();
+    let (root, new_blocks) = sessions.create(&tokens);
+    let hashes = sessions.chain(root);
+    assert_eq!(new_blocks, hashes);
+    for b in 0..hashes.len() {
+        m.put_block(&hashes, b, &values(2048, b as u64), 0).unwrap();
+    }
+    let fork = sessions.fork(root);
+
+    // heavy unpinned scan traffic overflows the per-satellite budgets
+    for p in 0i32..12 {
+        let scan: Vec<i32> = (0..64).map(|i| (i + 1) * (p + 100)).collect();
+        let sh = block_hashes(&scan, 32);
+        for b in 0usize..2 {
+            m.put_block(&sh, b, &values(2048, 90 + p as u64), 0).unwrap();
+        }
+    }
+    // and a gossiped eviction aimed straight at the pinned block is
+    // deflected on every satellite it reaches
+    let center = m.transport().closest();
+    m.transport().evict_block(center, hashes[0], 2).unwrap();
+    assert!(sessions.refs().deflections() > 0, "the guard must actually fire");
+
+    // the fork's prefix is still fully resident and uncorrupted
+    let (blocks, _) = m.lookup(&hashes, 0).expect("pinned prefix must stay indexed");
+    assert_eq!(blocks, hashes.len());
+    let fetch = m.fetch_prefix(&hashes, blocks, 0).unwrap();
+    assert_eq!(fetch.blocks, hashes.len());
+    for (b, kv) in fetch.kv_blocks.iter().enumerate() {
+        let orig = values(2048, b as u64);
+        let max_err =
+            orig.iter().zip(kv).map(|(a, x)| (a - x).abs()).fold(0f32, f32::max);
+        assert!(max_err < 0.06, "fork block {b} corrupted: {max_err}");
+    }
+
+    // dropping both sessions releases the pin: the same eviction now
+    // actually removes chunks
+    sessions.drop_session(fork);
+    sessions.drop_session(root);
+    assert_eq!(sessions.refs().total_refs(), 0);
+    let before = fleet.total_chunks();
+    m.transport().evict_block(center, hashes[0], 2).unwrap();
+    assert!(fleet.total_chunks() < before, "unpinned blocks must evict again");
+}
+
+#[test]
 fn distributed_and_radix_lookup_agree_under_rotation() {
     let cfg = KvcConfig { n_servers: 9, ..KvcConfig::default() };
     let (_fleet, m) = setup(cfg, 10 << 20);

@@ -678,6 +678,63 @@ fn prop_same_seed_runs_render_identical_memory_objects() {
 }
 
 #[test]
+fn prop_forked_replay_is_byte_identical_and_refs_return_to_zero() {
+    // the kvc::session sharing contract, across random shapes: (1) a
+    // forked session extended with fresh turns carries exactly the
+    // chained hashes of a fresh session over the concatenated stream —
+    // sharing never changes a byte of what the cache stores; (2) the
+    // fork completes strictly fewer new blocks than the fresh replay
+    // (the shared prefix is never re-stored); (3) after every session
+    // drops — in any order — the refcount table is exactly empty.
+    use skymemory::kvc::session::SessionManager;
+    for seed in 0..150 {
+        let mut rng = XorShift64::new(seed + 170_000);
+        let bs = 1 + rng.next_range(16);
+        let m = SessionManager::new(bs);
+        let prefix_blocks = 1 + rng.next_range(6);
+        let prefix: Vec<i32> =
+            (0..prefix_blocks * bs).map(|_| rng.next_range(1 << 15) as i32).collect();
+        let (parent, parent_new) = m.create(&prefix);
+        assert_eq!(parent_new.len(), prefix_blocks, "seed {seed}");
+        let child = m.fork(parent);
+        let ext_blocks = 1 + rng.next_range(5);
+        let ext: Vec<i32> = (0..ext_blocks * bs + rng.next_range(bs))
+            .map(|_| rng.next_range(1 << 15) as i32)
+            .collect();
+        let child_new = m.extend(child, &ext);
+        let mut full = prefix.clone();
+        full.extend_from_slice(&ext);
+        let (fresh, fresh_new) = m.create(&full);
+        // (1) byte-identical chains: fork+extend == fresh == oracle
+        assert_eq!(m.chain(child), m.chain(fresh), "seed {seed}");
+        assert_eq!(m.chain(child), block_hashes(&full, bs), "seed {seed}");
+        // (2) the fork completed only the extension's blocks
+        assert_eq!(fresh_new.len(), prefix_blocks + ext_blocks, "seed {seed}");
+        assert_eq!(child_new.len(), ext_blocks, "seed {seed}");
+        assert!(
+            child_new.len() < fresh_new.len(),
+            "seed {seed}: the fork must store strictly less"
+        );
+        // the shared prefix is multiply referenced while everyone lives
+        let refs = m.refs();
+        for h in &m.chain(parent) {
+            assert!(refs.refs(h) >= 2, "seed {seed}: prefix blocks must be shared");
+        }
+        // (3) shuffled drop order: every reference comes back exactly once
+        let mut ids = vec![parent, child, fresh];
+        for i in (1..ids.len()).rev() {
+            ids.swap(i, rng.next_range(i + 1));
+        }
+        for id in ids {
+            m.drop_session(id);
+        }
+        assert_eq!(refs.total_refs(), 0, "seed {seed}");
+        assert_eq!(refs.unique_blocks(), 0, "seed {seed}");
+        assert_eq!(m.live_sessions(), 0, "seed {seed}");
+    }
+}
+
+#[test]
 fn prop_decode_rejects_random_corruption() {
     // flip random bytes in valid messages: decode must error or return a
     // different-but-valid message, never panic

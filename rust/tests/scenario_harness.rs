@@ -99,13 +99,83 @@ fn seeds_change_the_numbers_but_not_the_shape() {
 #[test]
 fn registry_covers_all_builtins() {
     let specs = ScenarioSpec::builtin(8);
-    assert_eq!(specs.len(), 4);
+    assert_eq!(specs.len(), 5);
     for spec in &specs {
         spec.validate();
         let found = ScenarioSpec::by_name(&spec.name, 8).expect("by_name finds builtin");
         assert_eq!(found.planes, spec.planes);
     }
     assert!(ScenarioSpec::by_name("not-a-scenario", 8).is_none());
+}
+
+#[test]
+fn builtin_summaries_resolve_exactly_one_registry_each() {
+    // `scenario --list` prints BUILTIN_SUMMARIES; `scenario`, `trace` and
+    // `mem` resolve names through the two by_name registries.  Every
+    // summarized name must resolve in exactly one of them (a double
+    // registration would make the CLI dispatch ambiguous), every
+    // registered builtin must be summarized, and every resolved spec must
+    // validate so all CLI paths can actually run it.
+    use skymemory::sim::scenario::{FederatedScenarioSpec, BUILTIN_SUMMARIES};
+    let summarized: Vec<&str> = BUILTIN_SUMMARIES.iter().map(|(n, _)| *n).collect();
+    for (name, _) in BUILTIN_SUMMARIES {
+        let single = ScenarioSpec::by_name(name, 3);
+        let fed = FederatedScenarioSpec::by_name(name, 3);
+        assert!(
+            single.is_some() != fed.is_some(),
+            "{name} must resolve in exactly one registry"
+        );
+        if let Some(spec) = single {
+            assert_eq!(spec.name, *name, "registry key must match the spec name");
+            spec.validate();
+        }
+        if let Some(spec) = fed {
+            assert_eq!(spec.name, *name, "registry key must match the spec name");
+            spec.validate();
+        }
+    }
+    for spec in ScenarioSpec::builtin(3) {
+        assert!(summarized.contains(&spec.name.as_str()), "{} lacks a summary", spec.name);
+    }
+    for name in ["federated-dual-shell", "federated-tri-shell"] {
+        assert!(summarized.contains(&name), "{name} lacks a summary");
+    }
+}
+
+/// Acceptance for the `kvc::session` layer: the fork-heavy builtin must
+/// strictly beat the independent-sessions replay of the identical token
+/// traffic on hit rate, ISL bytes moved, and bytes per cached token —
+/// prefix sharing has to pay for itself end to end.
+#[test]
+fn fork_heavy_chat_beats_its_baseline_end_to_end() {
+    let spec = ScenarioSpec::fork_heavy_chat(42);
+    let shared = run_scenario(&spec);
+    let base = run_scenario(&spec.session_baseline());
+    assert_eq!(shared.requests, base.requests, "identical traffic either way");
+    let ss = shared.sessions.as_ref().expect("session run reports sessions");
+    let bs = base.sessions.as_ref().expect("baseline reports sessions");
+    assert!(ss.mode_shared && !bs.mode_shared);
+    assert!(ss.forked > 0, "the trace must actually fork: {ss:?}");
+    assert!(ss.blocks_shared > 0, "forks must share blocks: {ss:?}");
+    assert_eq!(bs.blocks_shared, 0, "the baseline must not share");
+    assert!(
+        shared.block_hit_rate > base.block_hit_rate,
+        "sharing must win hit rate: {} vs {}",
+        shared.block_hit_rate,
+        base.block_hit_rate
+    );
+    assert!(
+        shared.isl_bytes < base.isl_bytes,
+        "sharing must move fewer ISL bytes: {} vs {}",
+        shared.isl_bytes,
+        base.isl_bytes
+    );
+    assert!(
+        shared.memory.bytes_per_cached_token < base.memory.bytes_per_cached_token,
+        "sharing must cache more per byte: {} vs {}",
+        shared.memory.bytes_per_cached_token,
+        base.memory.bytes_per_cached_token
+    );
 }
 
 /// Acceptance for the `net::sched` engine: the mega-shell scenario runs
