@@ -11,10 +11,12 @@
 //! * deterministic namespace — hand-predictable counters per sweep point
 //!   (`prefix{n}.payload_bytes = n * CHUNKS_PER_BLOCK * CHUNK_BYTES`,
 //!   `prefix{n}.cached_tokens = n * TOKENS_PER_BLOCK`,
-//!   `prefix{n}.indexed_blocks = n`) that the committed baseline gates
-//!   exactly, plus the model's estimate totals (`estimate_*_bytes`),
-//!   which are deterministic per binary but depend on struct layout, so
-//!   the baseline leaves them untracked (only-in-new keys are neutral).
+//!   `prefix{n}.indexed_blocks = n`, and the compacted two-layer index's
+//!   `prefix{n}.frozen_index_bytes = 60n + 4` for these zero-lcp keys)
+//!   that the committed baseline gates exactly, plus the model's
+//!   estimate totals (`estimate_*_bytes`), which are deterministic per
+//!   binary but depend on struct layout, so the baseline leaves them
+//!   untracked (only-in-new keys are neutral).
 //! * timing namespace — wall-clock build/rollup stats, and under
 //!   `--features mem-profile` the counting allocator's measured
 //!   live/peak bytes and allocation counts for the same builds.
@@ -34,6 +36,7 @@
 
 use skymemory::kvc::block::BlockHash;
 use skymemory::kvc::chunk::ChunkKey;
+use skymemory::kvc::frozen::FrozenBlockIndex;
 use skymemory::kvc::radix::{BlockIndex, BlockMeta};
 use skymemory::obs::mem::{FootprintEstimate, MemFootprint};
 use skymemory::satellite::store::ChunkStore;
@@ -67,6 +70,15 @@ fn hash_for(i: usize) -> BlockHash {
     BlockHash(bytes)
 }
 
+fn block_meta() -> BlockMeta {
+    BlockMeta {
+        num_chunks: CHUNKS_PER_BLOCK as u32,
+        kvc_len: (CHUNKS_PER_BLOCK * CHUNK_BYTES) as u32,
+        write_epoch: 0,
+        quantizer_id: 0,
+    }
+}
+
 /// Build one prefix chain of `n` cached blocks: store holds the chunk
 /// payloads, index records every prefix `[0..=i]` as cached.
 fn build_chain(n: usize) -> (ChunkStore, BlockIndex) {
@@ -78,15 +90,23 @@ fn build_chain(n: usize) -> (ChunkStore, BlockIndex) {
             let purged = store.set(ChunkKey::new(*hash, c as u32), vec![0xAB; CHUNK_BYTES]);
             assert!(purged.is_empty(), "budget is sized to never purge");
         }
-        let meta = BlockMeta {
-            num_chunks: CHUNKS_PER_BLOCK as u32,
-            kvc_len: (CHUNKS_PER_BLOCK * CHUNK_BYTES) as u32,
-            write_epoch: 0,
-            quantizer_id: 0,
-        };
-        index.insert(&hashes[..=i], meta);
+        index.insert(&hashes[..=i], block_meta());
     }
     (store, index)
+}
+
+/// Build the two-layer index over the same chain and freeze it: every
+/// prefix lands in the radix delta, one compaction collapses them all
+/// into the arena's three flat allocations keyed by terminal hash.
+fn build_frozen_chain(n: usize) -> FrozenBlockIndex {
+    let hashes: Vec<BlockHash> = (0..n).map(hash_for).collect();
+    let mut index = FrozenBlockIndex::new();
+    for i in 0..n {
+        index.insert(&hashes[..=i], block_meta());
+    }
+    assert!(index.compact(), "a non-empty delta must freeze");
+    assert_eq!(index.longest_cached_prefix(&hashes).map(|(k, _)| k), Some(n));
+    index
 }
 
 fn footprint_of(store: &ChunkStore, index: &BlockIndex) -> FootprintEstimate {
@@ -146,6 +166,33 @@ fn main() {
         art.counter(&format!("prefix{n}.estimate_overhead_bytes"), est.overhead_bytes);
         art.counter(&format!("prefix{n}.estimate_total_bytes"), est.total());
 
+        // The frozen two-layer index over the same chain, post-compaction:
+        // three flat allocations instead of one boxed radix node per
+        // prefix.  The chain's keys share no byte-0 prefix, so the arena
+        // is exactly `60n + 4` bytes — hand-predictable and gated.
+        #[cfg(feature = "mem-profile")]
+        let fz_before = skymemory::obs::mem::profile::snapshot();
+        let frozen = build_frozen_chain(n);
+        #[cfg(feature = "mem-profile")]
+        let fz_after = skymemory::obs::mem::profile::snapshot();
+        assert_eq!((frozen.len(), frozen.delta_len()), (n, 0));
+        let frozen_est = frozen.mem_footprint();
+        assert_eq!(frozen_est.frozen_bytes, frozen_est.index_bytes + frozen_est.overhead_bytes);
+        let radix_est = index.mem_footprint();
+        assert!(
+            frozen_est.total() as f64 <= 0.7 * radix_est.total() as f64,
+            "frozen layer must undercut the radix index by >=30%: {} vs {} for n={n}",
+            frozen_est.total(),
+            radix_est.total()
+        );
+        println!(
+            "prefix n={n:<5} frozen index {:>7} B vs radix {:>7} B ({:.2}x smaller)",
+            frozen_est.index_bytes,
+            radix_est.total(),
+            radix_est.total() as f64 / frozen_est.total().max(1) as f64
+        );
+        art.counter(&format!("prefix{n}.frozen_index_bytes"), frozen_est.index_bytes);
+
         #[cfg(feature = "mem-profile")]
         {
             let live = after.live_bytes.saturating_sub(before.live_bytes);
@@ -162,6 +209,37 @@ fn main() {
                 (0.2..=5.0).contains(&ratio),
                 "estimate {} B vs measured {live} B for n={n}: model is off by more than 5x",
                 est.total()
+            );
+
+            // Allocator-measured frozen build: the compacted index's live
+            // bytes must sit within the same loose factor of its model
+            // and strictly below a plain per-block BTreeMap of the same
+            // chain (the pre-compaction shape the arena replaces).
+            let frozen_live = fz_after.live_bytes.saturating_sub(fz_before.live_bytes);
+            let frozen_ratio = frozen_est.total() as f64 / frozen_live.max(1) as f64;
+            let bt_before = skymemory::obs::mem::profile::snapshot();
+            let mut btree: std::collections::BTreeMap<BlockHash, BlockMeta> = Default::default();
+            for i in 0..n {
+                btree.insert(hash_for(i), block_meta());
+            }
+            let bt_after = skymemory::obs::mem::profile::snapshot();
+            let btree_live = bt_after.live_bytes.saturating_sub(bt_before.live_bytes);
+            assert_eq!(btree.len(), n);
+            println!(
+                "prefix n={n:<5} frozen measured {frozen_live:>7} B live (btree {btree_live:>7} B)  \
+                 estimate/measured {frozen_ratio:.2}x"
+            );
+            art.timing_ns(&format!("prefix{n}.measured_frozen_live_bytes"), frozen_live);
+            art.timing_ns(&format!("prefix{n}.measured_btree_live_bytes"), btree_live);
+            assert!(
+                (0.2..=5.0).contains(&frozen_ratio),
+                "frozen estimate {} B vs measured {frozen_live} B for n={n}: model is off by more than 5x",
+                frozen_est.total()
+            );
+            assert!(
+                frozen_live < btree_live,
+                "frozen layer must beat the plain BTreeMap on measured bytes: \
+                 {frozen_live} vs {btree_live} B for n={n}"
             );
         }
     }

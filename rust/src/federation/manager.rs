@@ -52,6 +52,7 @@ use crate::federation::transport::FederatedTransport;
 use crate::federation::{FedSatId, ShellId};
 use crate::kvc::block::BlockHash;
 use crate::kvc::chunk::{chunk_count, split_chunks, ChunkKey};
+use crate::kvc::frozen::FrozenMap;
 use crate::kvc::manager::{encode_chunk_header, KvcConfig, CHUNK_HEADER_LEN};
 use crate::kvc::quantize::Quantizer;
 use crate::kvc::radix::BlockMeta;
@@ -156,9 +157,13 @@ pub struct FederatedKvcManager {
     /// Block -> home shell + reassembly metadata + copies.  Chained
     /// hashes commit to the whole prefix, so one entry per block hash
     /// suffices (no radix walk needed; prefix length is a `take_while`
-    /// over the hash list).  BTreeMap: deterministic iteration for
-    /// evacuation and hot-set order.
-    index: Mutex<BTreeMap<BlockHash, FedBlockMeta>>,
+    /// over the hash list).  Two layers ([`crate::kvc::frozen`]): an
+    /// immutable epoch-compacted arena plus a BTreeMap delta holding the
+    /// live epoch's writes (copy-on-write on mutation, tombstones on
+    /// removal); [`Self::end_of_epoch`] freezes the delta.  Merged
+    /// iteration is hash-sorted, preserving the old BTreeMap's
+    /// deterministic evacuation and hot-set order.
+    index: Mutex<FrozenMap<FedBlockMeta>>,
     /// Last known home of blocks dropped as broken, to count reactive
     /// re-homing on their next Set.
     tombstones: Mutex<BTreeMap<BlockHash, ShellId>>,
@@ -233,7 +238,7 @@ impl FederatedKvcManager {
             preplace,
             transport,
             shell_layouts,
-            index: Mutex::new(BTreeMap::new()),
+            index: Mutex::new(FrozenMap::new()),
             tombstones: Mutex::new(BTreeMap::new()),
             prev_live: Mutex::new(prev_live),
             shell_counters,
@@ -818,8 +823,8 @@ impl FederatedKvcManager {
     /// asc)` among blocks with at least
     /// [`ReplicationPolicy::min_accesses`] accesses.
     fn hot_blocks(&self, k: usize) -> Vec<BlockHash> {
-        let index = self.index.lock().unwrap();
-        let mut hot: Vec<(u64, BlockHash)> = index
+        let entries = self.index.lock().unwrap().entries();
+        let mut hot: Vec<(u64, BlockHash)> = entries
             .iter()
             .filter(|(_, e)| e.accesses >= self.replication.min_accesses)
             .map(|(h, e)| (e.accesses, *h))
@@ -970,16 +975,26 @@ impl FederatedKvcManager {
             }
         }
         *self.prev_live.lock().unwrap() = cands.iter().map(|c| c.live_fraction).collect();
+        // freeze the live epoch's index delta into a new generation
+        // (tombstoned keys drop for real, everything else survives)
+        let compacted = self.index.lock().unwrap().compact();
         let sink = self.trace.lock().unwrap().clone();
         if sink.wants(SpanKind::Fed) {
             sink.record(
                 TraceEvent::instant(SpanKind::Fed, "end_of_epoch", self.fed_now())
+                    .arg_u("compacted", u64::from(compacted))
                     .arg_u("epoch", now_epoch)
                     .arg_u("preplaced", preplaced)
                     .arg_u("replicated", replicated),
             );
         }
         (replicated, preplaced)
+    }
+
+    /// Frozen index generations built (one per compacting
+    /// [`Self::end_of_epoch`]).
+    pub fn index_compactions(&self) -> u64 {
+        self.index.lock().unwrap().compactions()
     }
 
     // ------------------------------------------------------ ROTATION ----
@@ -1023,8 +1038,9 @@ impl FederatedKvcManager {
             .index
             .lock()
             .unwrap()
-            .iter()
-            .filter_map(|(h, e)| e.preplaced.filter(|c| c.shell == from).map(|c| (*h, c)))
+            .entries()
+            .into_iter()
+            .filter_map(|(h, e)| e.preplaced.filter(|c| c.shell == from).map(|c| (h, c)))
             .collect();
         for (block, copy) in &stranded {
             self.evict_copy(copy, *block, now_epoch);
@@ -1077,7 +1093,12 @@ impl FederatedKvcManager {
         let mut copy_bytes_moved = 0u64;
         let mut copy_bytes_merged = 0u64;
         let mut copy_bytes_collapsed = 0u64;
-        for entry in self.index.lock().unwrap().values_mut() {
+        // walk a merged snapshot and write back only the entries that
+        // actually changed, so untouched frozen entries are not
+        // copy-on-write'd into the delta
+        let mut index = self.index.lock().unwrap();
+        for (block, before) in index.entries() {
+            let mut entry = before;
             if entry.shell == from {
                 entry.shell = to;
                 rehomed += 1;
@@ -1117,7 +1138,11 @@ impl FederatedKvcManager {
                     }
                 }
             }
+            if entry != before {
+                *index.get_mut(&block).expect("key came from entries()") = entry;
+            }
         }
+        drop(index);
         self.stats.proactive_handover_blocks.fetch_add(rehomed, Ordering::Relaxed);
         // move the placement accounting with the blocks (payload-byte
         // convention, matching store_payload; every moved copy was
@@ -1146,9 +1171,10 @@ impl FederatedKvcManager {
             .index
             .lock()
             .unwrap()
-            .iter()
+            .entries()
+            .into_iter()
             .filter(|(_, e)| e.shell != from)
-            .filter_map(|(h, e)| e.replica.filter(|c| c.shell == from).map(|c| (*h, c)))
+            .filter_map(|(h, e)| e.replica.filter(|c| c.shell == from).map(|c| (h, c)))
             .collect();
         for (block, copy) in &stranded {
             self.evict_copy(copy, *block, now_epoch);
@@ -1163,9 +1189,9 @@ impl FederatedKvcManager {
             .index
             .lock()
             .unwrap()
-            .iter()
+            .entries()
+            .into_iter()
             .filter(|(_, e)| e.shell == from)
-            .map(|(h, e)| (*h, *e))
             .collect();
         let dst_center = self.transport.closest(to);
         let mut chunks_moved = 0u32;
@@ -1254,7 +1280,7 @@ impl FederatedKvcManager {
     /// plane.  One deterministic pass over the (sorted) index.
     pub fn shell_resident_copies(&self) -> Vec<u64> {
         let mut out = vec![0u64; self.transport.n_shells()];
-        for entry in self.index.lock().unwrap().values() {
+        for (_, entry) in self.index.lock().unwrap().entries() {
             out[entry.shell as usize] += 1;
             if let Some(r) = entry.replica {
                 out[r.shell as usize] += 1;
@@ -1276,24 +1302,23 @@ impl FederatedKvcManager {
         est
     }
 
-    /// Footprint of the federation-side bookkeeping maps: the block
-    /// index plus the tombstone map.  B-tree nodes hold up to 11
-    /// entries, so we model one allocation per 11 plus two `usize` of
-    /// node linkage per entry.
+    /// Footprint of the federation-side bookkeeping: the two-layer block
+    /// index (frozen arena + B-tree delta, reported with its
+    /// frozen/delta split) plus the broken-block tombstone map.  B-tree
+    /// nodes hold up to 11 entries, so the B-tree model charges one
+    /// allocation per 11 plus two `usize` of node linkage per entry.
     pub fn index_footprint(&self) -> FootprintEstimate {
         fn btree_est(len: u64, entry: usize) -> FootprintEstimate {
             let slot = (entry + 2 * size_of::<usize>()) as u64;
             let mut est = FootprintEstimate {
-                payload_bytes: 0,
                 index_bytes: len * slot,
-                overhead_bytes: 0,
+                ..FootprintEstimate::ZERO
             };
             est.charge_allocs(len.div_ceil(11));
             est
         }
-        let index_len = self.index.lock().unwrap().len() as u64;
+        let mut est = self.index.lock().unwrap().mem_footprint();
         let tomb_len = self.tombstones.lock().unwrap().len() as u64;
-        let mut est = btree_est(index_len, size_of::<(BlockHash, FedBlockMeta)>());
         est.add(btree_est(tomb_len, size_of::<(BlockHash, ShellId)>()));
         est
     }

@@ -135,9 +135,8 @@ impl<K: Eq + Hash + Clone> LruTracker<K> {
         let map_slot = (size_of::<K>() + size_of::<usize>() + 1) as u64;
         let slab_slot = size_of::<(K, usize, usize)>() as u64;
         let mut est = FootprintEstimate {
-            payload_bytes: 0,
             index_bytes: live * (map_slot + slab_slot),
-            overhead_bytes: 0,
+            ..FootprintEstimate::ZERO
         };
         est.charge_allocs(3); // map table + slab + free list
         est

@@ -1,0 +1,788 @@
+//! Epoch-frozen two-layer chunk index: an immutable, compacted *frozen*
+//! layer plus a small mutable *delta* absorbing the live epoch's writes.
+//!
+//! The Box-heavy radix tree ([`crate::kvc::radix`]) and the managers'
+//! per-block BTreeMaps pay ~200 modeled bytes per indexed prefix once
+//! per-allocation overhead is charged.  At "billions of cached prefixes"
+//! scale (ROADMAP) the index itself becomes the capacity bottleneck, so
+//! this module stores the cold majority of keys in a handful of large
+//! flat allocations instead of one heap object per node/entry:
+//!
+//! * [`FrozenArena`] — the frozen layer.  A sorted key arena with front
+//!   coding (FST-style prefix compression) over the 32-byte chained
+//!   block hashes: each key stores only its suffix after the longest
+//!   common prefix with its predecessor, with a full restart key every
+//!   [`RESTART_INTERVAL`] entries so lookups binary-search the restarts
+//!   and decode at most one bucket.  Three `Vec`s total — suffix bytes,
+//!   a `u32` offset table, and the values — so the whole layer costs
+//!   `suffix + 4 + size_of::<V>()` bytes per key and three allocations.
+//! * [`FrozenBlockIndex`] — the [`crate::kvc::manager::KvcManager`]
+//!   index: a [`RadixTree`] delta over concatenated chain keys (the
+//!   §3.10 structure, unchanged) in front of a [`FrozenArena`] keyed by
+//!   each prefix's *terminal* hash — valid because chained hashes commit
+//!   to their whole prefix, so the last hash alone identifies the chain.
+//! * [`FrozenMap`] — the [`crate::federation::manager::FederatedKvcManager`]
+//!   index: a `BTreeMap` delta with copy-on-write `get_mut` in front of
+//!   the same arena.
+//!
+//! Lookups consult delta-then-frozen; removals of frozen keys leave a
+//! *tombstone* in the delta that shadows the frozen entry.  At each
+//! epoch boundary (`end_of_epoch` in both managers) [`FrozenBlockIndex::compact`]
+//! / [`FrozenMap::compact`] merge the delta into a new frozen
+//! generation, dropping tombstoned keys and preserving everything else —
+//! so blocks pinned by [`crate::kvc::session::BlockRefs`] always
+//! survive.  The differential oracle in `rust/tests/frozen_index_oracle.rs`
+//! proves the two-layer index observationally identical to the plain
+//! structures it replaces.
+
+use crate::kvc::block::BlockHash;
+use crate::kvc::radix::{BlockMeta, RadixTree};
+use crate::obs::mem::{FootprintEstimate, MemFootprint};
+use std::collections::BTreeMap;
+use std::mem::size_of;
+
+/// Every `RESTART_INTERVAL`-th arena entry stores its full 32-byte key
+/// (front coding resets), bounding a lookup's linear decode to one
+/// bucket of this size.
+pub const RESTART_INTERVAL: usize = 16;
+
+/// Key length of the frozen layer: one chained block hash.
+const KEY_LEN: usize = 32;
+
+fn common_prefix(a: &[u8; KEY_LEN], b: &[u8; KEY_LEN]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// The immutable frozen layer: front-coded sorted 32-byte keys in one
+/// flat byte arena, a `u32` offset table, and a parallel value array.
+///
+/// Entry `i` stores `key[lcp..]` where `lcp` is the common prefix with
+/// entry `i-1` (forced to 0 at restarts), so `lcp = KEY_LEN - suffix_len`
+/// is derivable from the offset table alone.  Built only by
+/// [`FrozenArena::from_sorted`]; never mutated in place.
+pub struct FrozenArena<V> {
+    /// Concatenated key suffixes.
+    arena: Vec<u8>,
+    /// `offsets[i]..offsets[i+1]` is entry `i`'s suffix (`len + 1`
+    /// entries when non-empty, exactly sized).
+    offsets: Vec<u32>,
+    vals: Vec<V>,
+}
+
+impl<V> Default for FrozenArena<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V: Copy> FrozenArena<V> {
+    pub fn new() -> Self {
+        Self { arena: Vec::new(), offsets: Vec::new(), vals: Vec::new() }
+    }
+
+    fn lcp_at(entries: &[([u8; KEY_LEN], V)], i: usize) -> usize {
+        if i % RESTART_INTERVAL == 0 {
+            0
+        } else {
+            common_prefix(&entries[i - 1].0, &entries[i].0)
+        }
+    }
+
+    /// Build a frozen generation from entries sorted by key, strictly
+    /// ascending.  Allocations are exact-capacity so the modeled
+    /// footprint matches the measured one under `--features mem-profile`.
+    pub fn from_sorted(entries: &[([u8; KEY_LEN], V)]) -> Self {
+        if entries.is_empty() {
+            return Self::new();
+        }
+        let mut arena_len = 0usize;
+        for i in 0..entries.len() {
+            debug_assert!(i == 0 || entries[i - 1].0 < entries[i].0, "keys strictly ascending");
+            arena_len += KEY_LEN - Self::lcp_at(entries, i);
+        }
+        let mut arena = Vec::with_capacity(arena_len);
+        let mut offsets = Vec::with_capacity(entries.len() + 1);
+        let mut vals = Vec::with_capacity(entries.len());
+        offsets.push(0u32);
+        for (i, (key, v)) in entries.iter().enumerate() {
+            let lcp = Self::lcp_at(entries, i);
+            arena.extend_from_slice(&key[lcp..]);
+            offsets.push(arena.len() as u32);
+            vals.push(*v);
+        }
+        debug_assert_eq!(arena.len(), arena_len);
+        Self { arena, offsets, vals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    fn suffix(&self, i: usize) -> &[u8] {
+        &self.arena[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Exact lookup: binary search the restart keys (stored in full),
+    /// then decode at most one bucket front-to-back.
+    pub fn get(&self, key: &[u8; KEY_LEN]) -> Option<&V> {
+        let n = self.vals.len();
+        if n == 0 {
+            return None;
+        }
+        let n_restarts = n.div_ceil(RESTART_INTERVAL);
+        // count restarts whose (full) key is <= the target
+        let mut lo = 0usize;
+        let mut hi = n_restarts;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.suffix(mid * RESTART_INTERVAL) <= &key[..] {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo == 0 {
+            return None; // target sorts before the first key
+        }
+        let start = (lo - 1) * RESTART_INTERVAL;
+        let end = (start + RESTART_INTERVAL).min(n);
+        let mut scratch = [0u8; KEY_LEN];
+        for i in start..end {
+            let suffix = self.suffix(i);
+            // lcp is relative to the immediate predecessor, whose key is
+            // what the scratch currently holds
+            scratch[KEY_LEN - suffix.len()..].copy_from_slice(suffix);
+            match scratch.cmp(key) {
+                std::cmp::Ordering::Equal => return Some(&self.vals[i]),
+                std::cmp::Ordering::Greater => return None,
+                std::cmp::Ordering::Less => {}
+            }
+        }
+        None
+    }
+
+    pub fn contains(&self, key: &[u8; KEY_LEN]) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Visit every entry in key order, decoding keys incrementally.
+    pub fn for_each(&self, mut f: impl FnMut(&[u8; KEY_LEN], &V)) {
+        let mut scratch = [0u8; KEY_LEN];
+        for (i, v) in self.vals.iter().enumerate() {
+            let suffix = self.suffix(i);
+            scratch[KEY_LEN - suffix.len()..].copy_from_slice(suffix);
+            f(&scratch, v);
+        }
+    }
+
+    /// Frozen-layer footprint: the three flat arrays, three modeled
+    /// allocations total, tagged as `frozen_bytes`.
+    pub fn footprint(&self) -> FootprintEstimate {
+        let mut est = FootprintEstimate::ZERO;
+        if self.vals.is_empty() {
+            return est;
+        }
+        est.index_bytes = self.arena.len() as u64
+            + (self.offsets.len() * size_of::<u32>()) as u64
+            + (self.vals.len() * size_of::<V>()) as u64;
+        est.charge_allocs(3);
+        est.frozen_bytes = est.index_bytes + est.overhead_bytes;
+        est
+    }
+}
+
+/// The two-layer §3.10 block index replacing [`crate::kvc::radix::BlockIndex`]
+/// inside [`crate::kvc::manager::KvcManager`].
+///
+/// The delta keeps the radix tree over concatenated chain keys (`None`
+/// values are tombstones shadowing frozen entries); the frozen layer is
+/// keyed by each prefix's terminal hash.  `len` counts live keys across
+/// both layers and is maintained incrementally.
+pub struct FrozenBlockIndex {
+    delta: RadixTree<Option<BlockMeta>>,
+    frozen: FrozenArena<BlockMeta>,
+    live: usize,
+    compactions: u64,
+}
+
+impl Default for FrozenBlockIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrozenBlockIndex {
+    pub fn new() -> Self {
+        Self { delta: RadixTree::new(), frozen: FrozenArena::new(), live: 0, compactions: 0 }
+    }
+
+    fn key_for(hashes: &[BlockHash]) -> Vec<u8> {
+        let mut key = Vec::with_capacity(KEY_LEN * hashes.len());
+        for h in hashes {
+            key.extend_from_slice(h.as_bytes());
+        }
+        key
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Live keys in the frozen layer (tombstoned entries still count
+    /// until the next compaction rewrites the generation).
+    pub fn frozen_len(&self) -> usize {
+        self.frozen.len()
+    }
+
+    /// Entries (writes + tombstones) in the mutable delta.
+    pub fn delta_len(&self) -> usize {
+        self.delta.len()
+    }
+
+    /// Frozen generations built so far.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Record that the prefix ending at `hashes.last()` is cached.
+    pub fn insert(&mut self, hashes: &[BlockHash], meta: BlockMeta) {
+        assert!(!hashes.is_empty());
+        let prev = self.delta.insert(&Self::key_for(hashes), Some(meta));
+        let was_live = match prev {
+            Some(Some(_)) => true,
+            Some(None) => false, // resurrecting a tombstoned key
+            None => self.frozen.contains(hashes.last().unwrap().as_bytes()),
+        };
+        if !was_live {
+            self.live += 1;
+        }
+    }
+
+    /// Exact metadata for a prefix: delta first (a tombstone shadows the
+    /// frozen layer), then the frozen arena by terminal hash.
+    pub fn get(&self, hashes: &[BlockHash]) -> Option<BlockMeta> {
+        match self.delta.get(&Self::key_for(hashes)) {
+            Some(Some(m)) => Some(*m),
+            Some(None) => None,
+            None => self.frozen.get(hashes.last()?.as_bytes()).copied(),
+        }
+    }
+
+    /// Drop the entry for a prefix (lazy eviction propagation): a key
+    /// only in the delta is removed outright; a frozen key gains a delta
+    /// tombstone that the next compaction turns into a real drop.
+    pub fn remove(&mut self, hashes: &[BlockHash]) -> Option<BlockMeta> {
+        assert!(!hashes.is_empty());
+        let key = Self::key_for(hashes);
+        let terminal = hashes.last().unwrap().as_bytes();
+        let out = match self.delta.get(&key).copied() {
+            Some(Some(m)) => {
+                if self.frozen.contains(terminal) {
+                    self.delta.insert(&key, None);
+                } else {
+                    self.delta.remove(&key);
+                }
+                Some(m)
+            }
+            Some(None) => None, // already tombstoned
+            None => match self.frozen.get(terminal).copied() {
+                Some(m) => {
+                    self.delta.insert(&key, None);
+                    Some(m)
+                }
+                None => None,
+            },
+        };
+        if out.is_some() {
+            self.live -= 1;
+        }
+        out
+    }
+
+    /// Longest cached prefix of the prompt's block-hash list: deepest
+    /// live prefix across both layers (holes are jumped, matching the
+    /// radix tree's deepest-match semantics).
+    pub fn longest_cached_prefix(&self, hashes: &[BlockHash]) -> Option<(usize, BlockMeta)> {
+        for k in (1..=hashes.len()).rev() {
+            if let Some(m) = self.get(&hashes[..k]) {
+                return Some((k, m));
+            }
+        }
+        None
+    }
+
+    /// Every live entry as `(terminal hash, meta)`, sorted by terminal
+    /// hash — the merged view compaction freezes and the oracle compares.
+    pub fn entries(&self) -> Vec<([u8; KEY_LEN], BlockMeta)> {
+        let mut ops: Vec<([u8; KEY_LEN], Option<BlockMeta>)> = self
+            .delta
+            .iter_collect()
+            .into_iter()
+            .map(|(key, v)| {
+                debug_assert!(key.len() >= KEY_LEN && key.len() % KEY_LEN == 0);
+                let mut t = [0u8; KEY_LEN];
+                t.copy_from_slice(&key[key.len() - KEY_LEN..]);
+                (t, *v)
+            })
+            .collect();
+        ops.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        let mut merged: Vec<([u8; KEY_LEN], BlockMeta)> = Vec::with_capacity(self.live);
+        let mut di = 0usize;
+        self.frozen.for_each(|key, v| {
+            while di < ops.len() && ops[di].0 < *key {
+                if let Some(m) = ops[di].1 {
+                    merged.push((ops[di].0, m));
+                }
+                di += 1;
+            }
+            if di < ops.len() && ops[di].0 == *key {
+                // delta overrides the frozen entry (tombstones drop it)
+                if let Some(m) = ops[di].1 {
+                    merged.push((ops[di].0, m));
+                }
+                di += 1;
+            } else {
+                merged.push((*key, *v));
+            }
+        });
+        while di < ops.len() {
+            if let Some(m) = ops[di].1 {
+                merged.push((ops[di].0, m));
+            }
+            di += 1;
+        }
+        debug_assert_eq!(merged.len(), self.live);
+        merged
+    }
+
+    /// Epoch-boundary compaction: merge the delta into a new frozen
+    /// generation (delta wins, tombstoned keys drop, everything else —
+    /// pinned or not — survives) and reset the delta.  No-op (and no
+    /// generation bump) when the delta is empty, so repeated boundaries
+    /// without writes never rebuild the arena.
+    pub fn compact(&mut self) -> bool {
+        if self.delta.is_empty() {
+            return false;
+        }
+        let merged = self.entries();
+        self.frozen = FrozenArena::from_sorted(&merged);
+        self.delta = RadixTree::new();
+        self.compactions += 1;
+        true
+    }
+
+    /// The frozen layer's own footprint (tagged `frozen_bytes`).
+    pub fn frozen_footprint(&self) -> FootprintEstimate {
+        self.frozen.footprint()
+    }
+
+    /// The delta layer's own footprint (the radix model, tagged
+    /// `delta_bytes`).
+    pub fn delta_footprint(&self) -> FootprintEstimate {
+        let mut est = self.delta.mem_footprint();
+        est.delta_bytes = est.index_bytes + est.overhead_bytes;
+        est
+    }
+}
+
+impl MemFootprint for FrozenBlockIndex {
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let mut est = self.frozen_footprint();
+        est.add(self.delta_footprint());
+        est
+    }
+}
+
+/// The federated two-layer index: a `BTreeMap<BlockHash, Option<V>>`
+/// delta (`None` = tombstone) in front of a [`FrozenArena`].
+///
+/// `get_mut` copies a frozen entry into the delta on first mutation
+/// (copy-on-write); the stale frozen copy stays shadowed until the next
+/// compaction rewrites the generation.  Iteration ([`FrozenMap::entries`])
+/// merges both layers in key order, reproducing the BTreeMap's
+/// deterministic order exactly.
+pub struct FrozenMap<V> {
+    frozen: FrozenArena<V>,
+    delta: BTreeMap<BlockHash, Option<V>>,
+    live: usize,
+    compactions: u64,
+}
+
+impl<V> Default for FrozenMap<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> FrozenMap<V> {
+    pub fn new() -> Self {
+        Self { frozen: FrozenArena::new(), delta: BTreeMap::new(), live: 0, compactions: 0 }
+    }
+}
+
+impl<V: Copy> FrozenMap<V> {
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn frozen_len(&self) -> usize {
+        self.frozen.len()
+    }
+
+    pub fn delta_len(&self) -> usize {
+        self.delta.len()
+    }
+
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    pub fn get(&self, h: &BlockHash) -> Option<&V> {
+        match self.delta.get(h) {
+            Some(slot) => slot.as_ref(),
+            None => self.frozen.get(h.as_bytes()),
+        }
+    }
+
+    pub fn contains_key(&self, h: &BlockHash) -> bool {
+        self.get(h).is_some()
+    }
+
+    /// Mutable access with copy-on-write: a frozen entry is copied into
+    /// the delta first, shadowing the frozen copy until compaction.
+    pub fn get_mut(&mut self, h: &BlockHash) -> Option<&mut V> {
+        use std::collections::btree_map::Entry;
+        match self.delta.entry(*h) {
+            Entry::Occupied(e) => e.into_mut().as_mut(),
+            Entry::Vacant(slot) => {
+                let v = *self.frozen.get(h.as_bytes())?;
+                slot.insert(Some(v)).as_mut()
+            }
+        }
+    }
+
+    pub fn insert(&mut self, h: BlockHash, v: V) -> Option<V> {
+        let prev = match self.delta.insert(h, Some(v)) {
+            Some(slot) => slot,
+            None => self.frozen.get(h.as_bytes()).copied(),
+        };
+        if prev.is_none() {
+            self.live += 1;
+        }
+        prev
+    }
+
+    pub fn remove(&mut self, h: &BlockHash) -> Option<V> {
+        let out = match self.delta.get(h).copied() {
+            Some(Some(v)) => {
+                if self.frozen.contains(h.as_bytes()) {
+                    self.delta.insert(*h, None);
+                } else {
+                    self.delta.remove(h);
+                }
+                Some(v)
+            }
+            Some(None) => None,
+            None => match self.frozen.get(h.as_bytes()).copied() {
+                Some(v) => {
+                    self.delta.insert(*h, None);
+                    Some(v)
+                }
+                None => None,
+            },
+        };
+        if out.is_some() {
+            self.live -= 1;
+        }
+        out
+    }
+
+    /// Every live entry in key order: a two-pointer merge of the sorted
+    /// delta and the sorted frozen arena (delta wins, tombstones drop) —
+    /// byte-identical to the iteration order of the plain BTreeMap it
+    /// replaces.
+    pub fn entries(&self) -> Vec<(BlockHash, V)> {
+        let mut merged: Vec<(BlockHash, V)> = Vec::with_capacity(self.live);
+        let mut di = self.delta.iter().peekable();
+        self.frozen.for_each(|key, v| {
+            while let Some((dh, slot)) = di.peek() {
+                if dh.as_bytes() < key {
+                    if let Some(dv) = slot {
+                        merged.push((**dh, *dv));
+                    }
+                    di.next();
+                } else {
+                    break;
+                }
+            }
+            if let Some((dh, slot)) = di.peek() {
+                if dh.as_bytes() == key {
+                    if let Some(dv) = slot {
+                        merged.push((**dh, *dv));
+                    }
+                    di.next();
+                    return;
+                }
+            }
+            merged.push((BlockHash(*key), *v));
+        });
+        for (dh, slot) in di {
+            if let Some(dv) = slot {
+                merged.push((*dh, *dv));
+            }
+        }
+        debug_assert_eq!(merged.len(), self.live);
+        merged
+    }
+
+    /// Epoch-boundary compaction (see [`FrozenBlockIndex::compact`]).
+    pub fn compact(&mut self) -> bool {
+        if self.delta.is_empty() {
+            return false;
+        }
+        let merged: Vec<([u8; KEY_LEN], V)> =
+            self.entries().into_iter().map(|(h, v)| (h.0, v)).collect();
+        self.frozen = FrozenArena::from_sorted(&merged);
+        self.delta.clear();
+        self.compactions += 1;
+        true
+    }
+
+    /// The frozen layer's own footprint (tagged `frozen_bytes`).
+    pub fn frozen_footprint(&self) -> FootprintEstimate {
+        self.frozen.footprint()
+    }
+
+    /// The delta layer's own footprint: the B-tree model (nodes hold up
+    /// to 11 entries; one allocation per 11 plus two `usize` of node
+    /// linkage per entry), tagged `delta_bytes`.
+    pub fn delta_footprint(&self) -> FootprintEstimate {
+        let len = self.delta.len() as u64;
+        let slot = (size_of::<(BlockHash, Option<V>)>() + 2 * size_of::<usize>()) as u64;
+        let mut est = FootprintEstimate { index_bytes: len * slot, ..FootprintEstimate::ZERO };
+        est.charge_allocs(len.div_ceil(11));
+        est.delta_bytes = est.index_bytes + est.overhead_bytes;
+        est
+    }
+}
+
+impl<V: Copy> MemFootprint for FrozenMap<V> {
+    fn mem_footprint(&self) -> FootprintEstimate {
+        let mut est = self.frozen_footprint();
+        est.add(self.delta_footprint());
+        est
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvc::block::block_hashes;
+
+    fn meta(n: u32) -> BlockMeta {
+        BlockMeta { num_chunks: n, kvc_len: n * 6000, write_epoch: 0, quantizer_id: 1 }
+    }
+
+    fn key(i: u64) -> [u8; 32] {
+        let mut k = [0u8; 32];
+        k[..8].copy_from_slice(&i.to_be_bytes());
+        k
+    }
+
+    #[test]
+    fn arena_roundtrip_and_order() {
+        let entries: Vec<([u8; 32], u64)> = (0..100u64).map(|i| (key(i * 3), i)).collect();
+        let arena = FrozenArena::from_sorted(&entries);
+        assert_eq!(arena.len(), 100);
+        for (k, v) in &entries {
+            assert_eq!(arena.get(k), Some(v));
+        }
+        // misses on both sides of every bucket
+        assert_eq!(arena.get(&key(1)), None);
+        assert_eq!(arena.get(&key(1000)), None);
+        let mut seen = Vec::new();
+        arena.for_each(|k, v| seen.push((*k, *v)));
+        assert_eq!(seen, entries, "iteration is key order");
+    }
+
+    #[test]
+    fn arena_front_coding_compresses_shared_prefixes() {
+        // consecutive big-endian keys share 7 leading bytes, so
+        // non-restart suffixes are far shorter than full keys
+        let entries: Vec<([u8; 32], u64)> = (0..64u64).map(|i| (key(i), i)).collect();
+        let arena = FrozenArena::from_sorted(&entries);
+        let est = arena.footprint();
+        let uncompressed = (64 * 32 + 65 * 4 + 64 * 8) as u64;
+        assert!(
+            est.index_bytes < uncompressed,
+            "front coding must beat full keys: {} vs {uncompressed}",
+            est.index_bytes
+        );
+        assert_eq!(est.frozen_bytes, est.index_bytes + est.overhead_bytes);
+        assert_eq!(est.delta_bytes, 0);
+        for (k, v) in &entries {
+            assert_eq!(arena.get(k), Some(v));
+        }
+    }
+
+    #[test]
+    fn empty_arena_weighs_nothing() {
+        let arena = FrozenArena::<u64>::new();
+        assert_eq!(arena.footprint(), FootprintEstimate::ZERO);
+        assert_eq!(arena.get(&key(0)), None);
+    }
+
+    #[test]
+    fn block_index_insert_get_remove_across_layers() {
+        let tokens: Vec<i32> = (0..160).collect();
+        let hashes = block_hashes(&tokens, 32); // 5 blocks
+        let mut idx = FrozenBlockIndex::new();
+        idx.insert(&hashes[..2], meta(22));
+        idx.insert(&hashes[..4], meta(44));
+        assert_eq!(idx.len(), 2);
+        assert!(idx.compact());
+        assert_eq!(idx.frozen_len(), 2);
+        assert_eq!(idx.delta_len(), 0);
+        // frozen entries answer lookups
+        assert_eq!(idx.get(&hashes[..2]).unwrap().num_chunks, 22);
+        let (blocks, m) = idx.longest_cached_prefix(&hashes).unwrap();
+        assert_eq!((blocks, m.num_chunks), (4, 44));
+        // a tombstone shadows the frozen entry
+        assert_eq!(idx.remove(&hashes[..4]).unwrap().num_chunks, 44);
+        assert_eq!(idx.get(&hashes[..4]), None);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.longest_cached_prefix(&hashes).unwrap().0, 2);
+        // double remove is a no-op
+        assert_eq!(idx.remove(&hashes[..4]), None);
+        assert_eq!(idx.len(), 1);
+        // compaction drops the tombstoned key for real
+        assert!(idx.compact());
+        assert_eq!(idx.frozen_len(), 1);
+        assert_eq!(idx.compactions(), 2);
+        // resurrect it with fresh metadata
+        idx.insert(&hashes[..4], meta(99));
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx.get(&hashes[..4]).unwrap().num_chunks, 99);
+    }
+
+    #[test]
+    fn block_index_longest_prefix_jumps_holes() {
+        let tokens: Vec<i32> = (0..160).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let mut idx = FrozenBlockIndex::new();
+        idx.insert(&hashes[..1], meta(1));
+        idx.insert(&hashes[..2], meta(2));
+        idx.insert(&hashes[..4], meta(4)); // depth 3 is a hole
+        idx.compact();
+        assert_eq!(idx.longest_cached_prefix(&hashes).unwrap().0, 4);
+        idx.remove(&hashes[..4]);
+        assert_eq!(idx.longest_cached_prefix(&hashes).unwrap().0, 2);
+    }
+
+    #[test]
+    fn block_index_compaction_is_noop_without_writes() {
+        let tokens: Vec<i32> = (0..64).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let mut idx = FrozenBlockIndex::new();
+        idx.insert(&hashes[..1], meta(1));
+        assert!(idx.compact());
+        let before = idx.mem_footprint();
+        assert!(!idx.compact(), "empty delta must not rebuild the generation");
+        assert_eq!(idx.compactions(), 1);
+        assert_eq!(idx.mem_footprint(), before);
+    }
+
+    #[test]
+    fn block_index_footprint_splits_frozen_and_delta() {
+        let tokens: Vec<i32> = (0..160).collect();
+        let hashes = block_hashes(&tokens, 32);
+        let mut idx = FrozenBlockIndex::new();
+        for k in 1..=5 {
+            idx.insert(&hashes[..k], meta(k as u32));
+        }
+        let pre = idx.mem_footprint();
+        assert_eq!(pre.frozen_bytes, 0);
+        assert!(pre.delta_bytes > 0);
+        assert_eq!(pre.delta_bytes + pre.frozen_bytes, pre.index_bytes + pre.overhead_bytes);
+        idx.compact();
+        let post = idx.mem_footprint();
+        assert!(post.frozen_bytes > 0);
+        assert_eq!(post.delta_bytes, 0);
+        assert!(
+            post.total() <= pre.total(),
+            "compaction must not grow the footprint: {} -> {}",
+            pre.total(),
+            post.total()
+        );
+    }
+
+    #[test]
+    fn frozen_map_cow_and_tombstones() {
+        let tokens: Vec<i32> = (0..320).collect();
+        let hashes = block_hashes(&tokens, 32); // 10 blocks
+        let mut map = FrozenMap::new();
+        for (i, h) in hashes.iter().enumerate() {
+            assert_eq!(map.insert(*h, i as u64), None);
+        }
+        assert_eq!(map.len(), 10);
+        assert!(map.compact());
+        assert_eq!((map.frozen_len(), map.delta_len()), (10, 0));
+        // copy-on-write mutation shadows the frozen copy
+        *map.get_mut(&hashes[3]).unwrap() = 999;
+        assert_eq!(map.delta_len(), 1);
+        assert_eq!(map.get(&hashes[3]), Some(&999));
+        assert_eq!(map.len(), 10);
+        // remove a frozen key -> tombstone until compaction
+        assert_eq!(map.remove(&hashes[5]), Some(5));
+        assert_eq!(map.get(&hashes[5]), None);
+        assert!(!map.contains_key(&hashes[5]));
+        assert_eq!(map.len(), 9);
+        assert_eq!(map.remove(&hashes[5]), None);
+        // merged iteration matches a plain BTreeMap of the same content
+        let mut oracle: BTreeMap<BlockHash, u64> = BTreeMap::new();
+        for (i, h) in hashes.iter().enumerate() {
+            oracle.insert(*h, i as u64);
+        }
+        oracle.insert(hashes[3], 999);
+        oracle.remove(&hashes[5]);
+        let want: Vec<(BlockHash, u64)> = oracle.iter().map(|(h, v)| (*h, *v)).collect();
+        assert_eq!(map.entries(), want);
+        map.compact();
+        assert_eq!((map.frozen_len(), map.delta_len()), (9, 0));
+        assert_eq!(map.entries(), want);
+        assert_eq!(map.get(&hashes[3]), Some(&999));
+    }
+
+    #[test]
+    fn frozen_map_compaction_shrinks_a_real_delta() {
+        let tokens: Vec<i32> = (0..(64 * 32)).collect();
+        let hashes = block_hashes(&tokens, 32); // 64 blocks
+        let mut map = FrozenMap::new();
+        for (i, h) in hashes.iter().enumerate() {
+            map.insert(*h, i as u64);
+        }
+        let pre = map.mem_footprint();
+        assert!(pre.delta_bytes > 0);
+        map.compact();
+        let post = map.mem_footprint();
+        assert!(post.frozen_bytes > 0);
+        assert!(
+            post.total() < pre.total(),
+            "freezing 64 B-tree entries must shrink the footprint: {} -> {}",
+            pre.total(),
+            post.total()
+        );
+    }
+}

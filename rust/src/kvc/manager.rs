@@ -34,7 +34,8 @@ use crate::kvc::block::BlockHash;
 use crate::kvc::chunk::{chunk_count, split_chunks, ChunkKey};
 use crate::kvc::eviction::EvictionPolicy;
 use crate::kvc::quantize::Quantizer;
-use crate::kvc::radix::{BlockIndex, BlockMeta};
+use crate::kvc::frozen::FrozenBlockIndex;
+use crate::kvc::radix::BlockMeta;
 use crate::mapping::{box_width, Strategy};
 use crate::net::messages::{Request, Response};
 use crate::net::sched::{ChunkOp, ChunkResult, NetScheduler, SchedConfig, Transfer};
@@ -187,7 +188,10 @@ pub struct KvcManager {
     /// plane; `transport` stays the data plane).
     sched: NetScheduler,
     torus: Torus,
-    index: Mutex<BlockIndex>,
+    /// Two-layer §3.10 index: an immutable epoch-compacted frozen arena
+    /// plus a mutable radix delta ([`crate::kvc::frozen`]);
+    /// [`Self::end_of_epoch`] freezes the live epoch's writes.
+    index: Mutex<FrozenBlockIndex>,
     /// Optional fast-RAM tier in front of the constellation (§2's memory
     /// hierarchy: GPU/CPU RAM above the LEO level).
     local: Option<crate::kvc::tiered::LocalTier>,
@@ -207,7 +211,7 @@ impl KvcManager {
             transport,
             sched,
             torus,
-            index: Mutex::new(BlockIndex::new()),
+            index: Mutex::new(FrozenBlockIndex::new()),
             local: None,
             trace: Mutex::new(Arc::new(NoopSink)),
             stats: KvcStats::default(),
@@ -515,7 +519,7 @@ impl KvcManager {
         }
         let meta = if self.config.use_radix_index {
             match self.index.lock().unwrap().get(&hashes[..=block_idx]) {
-                Some(m) => *m,
+                Some(m) => m,
                 None => return Ok(None),
             }
         } else {
@@ -682,6 +686,33 @@ impl KvcManager {
     /// the denominator of the `bytes_per_cached_token` capacity metric.
     pub fn cached_tokens(&self) -> u64 {
         self.indexed_blocks() as u64 * self.config.block_tokens as u64
+    }
+
+    /// Epoch-boundary housekeeping: compact the live epoch's index delta
+    /// into a new frozen generation (tombstoned keys drop for real, every
+    /// other entry — pinned or not — survives).  Returns whether a new
+    /// generation was built; repeated boundaries without writes are
+    /// no-ops.
+    pub fn end_of_epoch(&self, now_epoch: u64) -> bool {
+        let compacted = self.index.lock().unwrap().compact();
+        if compacted {
+            let sink = self.trace.lock().unwrap().clone();
+            if sink.wants(SpanKind::Kvc) {
+                let at = self.sched.stats.virtual_ns.load(Ordering::Relaxed);
+                sink.record(
+                    TraceEvent::instant(SpanKind::Kvc, "index_compact", at)
+                        .with_shell(0)
+                        .arg_u("epoch", now_epoch),
+                );
+            }
+        }
+        compacted
+    }
+
+    /// Frozen generations the index has built (one per compacting
+    /// [`Self::end_of_epoch`]).
+    pub fn index_compactions(&self) -> u64 {
+        self.index.lock().unwrap().compactions()
     }
 }
 

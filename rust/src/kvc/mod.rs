@@ -3,14 +3,17 @@
 //! the Get/Set manager.
 //!
 //! Layering: [`hash`]/[`block`]/[`chunk`]/[`quantize`] are pure codecs,
-//! [`radix`] is the §3.10 local index, [`eviction`] the §3.9 policies,
-//! [`manager::KvcManager`] drives the §3.8 protocol over a
-//! [`crate::net::transport::Transport`], and [`session`] layers paged,
-//! forkable per-user sessions with refcounted prefix sharing on top.
+//! [`radix`] is the §3.10 local index and [`frozen`] its two-layer
+//! epoch-compacted form (immutable arena + mutable delta), [`eviction`]
+//! the §3.9 policies, [`manager::KvcManager`] drives the §3.8 protocol
+//! over a [`crate::net::transport::Transport`], and [`session`] layers
+//! paged, forkable per-user sessions with refcounted prefix sharing on
+//! top.
 
 pub mod block;
 pub mod chunk;
 pub mod eviction;
+pub mod frozen;
 pub mod hash;
 pub mod manager;
 pub mod quantize;

@@ -188,22 +188,6 @@ impl<V> RadixTree<V> {
         best
     }
 
-    fn footprint_at(node: &Node<V>, est: &mut FootprintEstimate) {
-        // label bytes live on the heap when non-empty (one allocation);
-        // each child Node is inline in the parent's children Vec (one
-        // allocation per non-empty Vec)
-        est.index_bytes += node.label.len() as u64;
-        if !node.label.is_empty() {
-            est.charge_allocs(1);
-        }
-        if !node.children.is_empty() {
-            est.index_bytes += (node.children.len() * size_of::<Node<V>>()) as u64;
-            est.charge_allocs(1);
-        }
-        for c in &node.children {
-            Self::footprint_at(c, est);
-        }
-    }
 }
 
 impl<V> MemFootprint for RadixTree<V> {
@@ -211,9 +195,27 @@ impl<V> MemFootprint for RadixTree<V> {
     /// `index_bytes`: edge labels plus inline node structs, counted from
     /// live nodes (never `Vec` capacities), with one modeled allocation
     /// per label buffer and per children array.
+    ///
+    /// The walk keeps its own worklist instead of recursing: degenerate
+    /// prefix chains (one block per edge over a very long prompt) can
+    /// nest 10^5 nodes deep, far past any thread's call stack.
     fn mem_footprint(&self) -> FootprintEstimate {
         let mut est = FootprintEstimate::ZERO;
-        Self::footprint_at(&self.root, &mut est);
+        let mut stack = vec![&self.root];
+        while let Some(node) = stack.pop() {
+            // label bytes live on the heap when non-empty (one
+            // allocation); each child Node is inline in the parent's
+            // children Vec (one allocation per non-empty Vec)
+            est.index_bytes += node.label.len() as u64;
+            if !node.label.is_empty() {
+                est.charge_allocs(1);
+            }
+            if !node.children.is_empty() {
+                est.index_bytes += (node.children.len() * size_of::<Node<V>>()) as u64;
+                est.charge_allocs(1);
+            }
+            stack.extend(node.children.iter());
+        }
         est
     }
 }
@@ -462,6 +464,51 @@ mod tests {
             fresh.insert(key, 1u32);
         }
         assert_eq!(fresh.mem_footprint(), t.mem_footprint());
+    }
+
+    #[test]
+    fn footprint_survives_a_degenerate_deep_chain() {
+        use crate::obs::mem::ALLOC_OVERHEAD;
+        // 10^5 nested one-byte edges: a chain this deep used to blow the
+        // stack in the recursive footprint walk.  The chain is built
+        // node-by-node (an insert-per-prefix build touches O(depth^2)
+        // key bytes) and dismantled iteratively at the end (drop glue
+        // recurses per nesting level too), on a deliberately small 1 MiB
+        // stack so a recursive walk cannot hide behind a big main-thread
+        // stack.
+        const DEPTH: usize = 100_000;
+        std::thread::Builder::new()
+            .name("deep-chain".into())
+            .stack_size(1 << 20)
+            .spawn(|| {
+                let mut node = Node::new(vec![7u8]);
+                node.value = Some(1u32);
+                for _ in 1..DEPTH {
+                    let mut parent = Node::new(vec![7u8]);
+                    parent.children.push(node);
+                    node = parent;
+                }
+                let mut t = RadixTree::new();
+                t.root.children.push(node);
+                t.len = 1;
+                let est = t.mem_footprint();
+                // DEPTH label bytes + DEPTH single-child arrays (the
+                // root's plus every internal node's), two modeled
+                // allocations per level
+                let node_sz = size_of::<Node<u32>>() as u64;
+                assert_eq!(est.index_bytes, DEPTH as u64 + DEPTH as u64 * node_sz);
+                assert_eq!(est.overhead_bytes, 2 * DEPTH as u64 * ALLOC_OVERHEAD as u64);
+                let key = vec![7u8; DEPTH];
+                assert_eq!(t.get(&key), Some(&1));
+                assert_eq!(t.longest_prefix(&key), Some((DEPTH, &1)));
+                let mut teardown = vec![std::mem::replace(&mut t.root, Node::new(Vec::new()))];
+                while let Some(mut n) = teardown.pop() {
+                    teardown.append(&mut n.children);
+                }
+            })
+            .unwrap()
+            .join()
+            .unwrap();
     }
 
     #[test]

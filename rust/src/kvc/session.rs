@@ -141,9 +141,8 @@ impl MemFootprint for BlockRefs {
         let entries = self.inner.lock().unwrap().counts.len() as u64;
         let slot = (size_of::<BlockHash>() + size_of::<u32>()) as u64;
         let mut est = FootprintEstimate {
-            payload_bytes: 0,
             index_bytes: entries * slot,
-            overhead_bytes: 0,
+            ..FootprintEstimate::ZERO
         };
         est.charge_allocs(entries / 11 + 1);
         est
@@ -410,8 +409,7 @@ impl MemFootprint for SessionManager {
             index_bytes += (rec.tail.len() * size_of::<i32>()) as u64;
             allocs += u64::from(!rec.suffix.is_empty()) + u64::from(!rec.tail.is_empty());
         }
-        let mut est =
-            FootprintEstimate { payload_bytes: 0, index_bytes, overhead_bytes: 0 };
+        let mut est = FootprintEstimate { index_bytes, ..FootprintEstimate::ZERO };
         est.charge_allocs(allocs);
         est.add(self.refs.mem_footprint());
         est

@@ -165,7 +165,7 @@ impl MemFootprint for LocalTier {
         let mut est = FootprintEstimate {
             payload_bytes: inner.bytes_used as u64,
             index_bytes: blocks * slot,
-            overhead_bytes: 0,
+            ..FootprintEstimate::ZERO
         };
         est.charge_allocs(blocks + 1);
         est.add(inner.lru.footprint());

@@ -528,9 +528,12 @@ usage: skymemory mem <builtin> [--seed N] [--out PATH]
 
 Run one built-in scenario (single-shell or federated) and print its
 memory-footprint report: the deterministic `memory` object of the
-scenario metrics (per-epoch payload/index/overhead series, end-of-run
-totals, bytes per cached token, high-water marks, and — federated —
-per-shell residency), keyed by scenario name and seed.  The object is
+scenario metrics (per-epoch payload/index/overhead series with the
+index split into its frozen arena and mutable delta layers
+(`frozen_bytes` / `delta_bytes`), end-of-run totals, bytes per cached
+token, epoch-compaction count (`compactions`), high-water marks, and
+— federated — per-shell residency), keyed by scenario name and seed.
+The object is
 byte-identical to the `memory` key of `skymemory scenario --name`,
 and two runs of the same seed print identical bytes
 (docs/METRICS.md documents every key).

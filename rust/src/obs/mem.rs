@@ -20,6 +20,14 @@
 //!   objects badly, so it is carried explicitly, never folded into the
 //!   other two.
 //!
+//! Index containers additionally report an informational *layer split*:
+//! `frozen_bytes` (the immutable epoch-compacted arena in
+//! [`crate::kvc::frozen`]) and `delta_bytes` (the mutable layer
+//! absorbing the live epoch's writes).  Both re-tag bytes already
+//! counted in `index_bytes`/`overhead_bytes`, so they are *not* part of
+//! [`FootprintEstimate::total`] — they say where the index bytes live,
+//! not add to them.
+//!
 //! Everything here is an *estimate* computed from live element counts
 //! and `size_of` — a pure function of cache state, so same-seed runs
 //! report byte-identical numbers and `sim::diff` can gate on them.  The
@@ -48,11 +56,23 @@ pub struct FootprintEstimate {
     pub index_bytes: u64,
     /// Modeled per-allocation overhead ([`ALLOC_OVERHEAD`] each).
     pub overhead_bytes: u64,
+    /// Informational: index + overhead bytes living in an immutable
+    /// epoch-compacted frozen layer ([`crate::kvc::frozen`]).  A re-tag
+    /// of bytes already counted above, never added to [`Self::total`].
+    pub frozen_bytes: u64,
+    /// Informational: index + overhead bytes living in a mutable delta
+    /// layer (the live epoch's writes).  A re-tag, like `frozen_bytes`.
+    pub delta_bytes: u64,
 }
 
 impl FootprintEstimate {
-    pub const ZERO: FootprintEstimate =
-        FootprintEstimate { payload_bytes: 0, index_bytes: 0, overhead_bytes: 0 };
+    pub const ZERO: FootprintEstimate = FootprintEstimate {
+        payload_bytes: 0,
+        index_bytes: 0,
+        overhead_bytes: 0,
+        frozen_bytes: 0,
+        delta_bytes: 0,
+    };
 
     /// Sum of all three components.
     pub fn total(&self) -> u64 {
@@ -64,6 +84,8 @@ impl FootprintEstimate {
         self.payload_bytes += other.payload_bytes;
         self.index_bytes += other.index_bytes;
         self.overhead_bytes += other.overhead_bytes;
+        self.frozen_bytes += other.frozen_bytes;
+        self.delta_bytes += other.delta_bytes;
     }
 
     /// Charge `count` heap allocations of modeled overhead.
@@ -74,6 +96,8 @@ impl FootprintEstimate {
     /// Byte-stable JSON rendering (sorted keys, integer bytes).
     pub fn to_json(&self) -> Json {
         obj(vec![
+            ("delta_bytes", n(self.delta_bytes as f64)),
+            ("frozen_bytes", n(self.frozen_bytes as f64)),
             ("index_bytes", n(self.index_bytes as f64)),
             ("overhead_bytes", n(self.overhead_bytes as f64)),
             ("payload_bytes", n(self.payload_bytes as f64)),
@@ -172,7 +196,11 @@ mod tests {
 
     #[test]
     fn totals_and_rollups() {
-        let mut a = FootprintEstimate { payload_bytes: 100, index_bytes: 10, overhead_bytes: 0 };
+        let mut a = FootprintEstimate {
+            payload_bytes: 100,
+            index_bytes: 10,
+            ..FootprintEstimate::ZERO
+        };
         a.charge_allocs(2);
         assert_eq!(a.overhead_bytes, 2 * ALLOC_OVERHEAD as u64);
         assert_eq!(a.total(), 100 + 10 + 2 * ALLOC_OVERHEAD as u64);
@@ -184,12 +212,35 @@ mod tests {
     }
 
     #[test]
+    fn layer_split_is_informational_not_additive() {
+        let mut a = FootprintEstimate {
+            index_bytes: 40,
+            overhead_bytes: 8,
+            frozen_bytes: 30,
+            delta_bytes: 18,
+            ..FootprintEstimate::ZERO
+        };
+        // the split re-tags index + overhead; total ignores it
+        assert_eq!(a.total(), 48);
+        let b = a;
+        a.add(b);
+        assert_eq!((a.frozen_bytes, a.delta_bytes), (60, 36));
+        assert_eq!(a.total(), 96);
+    }
+
+    #[test]
     fn json_is_sorted_and_integer() {
-        let e = FootprintEstimate { payload_bytes: 5, index_bytes: 3, overhead_bytes: 2 };
+        let e = FootprintEstimate {
+            payload_bytes: 5,
+            index_bytes: 3,
+            overhead_bytes: 2,
+            frozen_bytes: 4,
+            delta_bytes: 1,
+        };
         let j = e.to_json().to_string();
         assert_eq!(
             j,
-            r#"{"index_bytes":3,"overhead_bytes":2,"payload_bytes":5,"total_bytes":10}"#
+            r#"{"delta_bytes":1,"frozen_bytes":4,"index_bytes":3,"overhead_bytes":2,"payload_bytes":5,"total_bytes":10}"#
         );
     }
 }

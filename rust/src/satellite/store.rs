@@ -227,7 +227,7 @@ impl MemFootprint for ChunkStore {
         let mut est = FootprintEstimate {
             payload_bytes: self.bytes_used as u64,
             index_bytes: chunks * slot,
-            overhead_bytes: 0,
+            ..FootprintEstimate::ZERO
         };
         est.charge_allocs(chunks + 1);
         est.add(self.lru.footprint());

@@ -581,6 +581,48 @@ mod tests {
         assert_eq!(r.regressions().next().unwrap().key, "memory.epochs.0.total_bytes");
     }
 
+    const MEM_SPLIT: &str = r#"{"name":"s2","memory":{"epochs":[{"cached_tokens":32,"delta_bytes":0,"epoch":0,"frozen_bytes":52,"total_bytes":100}],"summary":{"bytes_per_cached_token":3.125,"cached_tokens":32,"compactions":3,"delta_bytes":12,"frozen_bytes":40,"index_bytes":20,"overhead_bytes":32,"payload_bytes":48,"total_bytes":100}}}"#;
+
+    #[test]
+    fn frozen_and_delta_split_is_direction_tracked() {
+        // the frozen layer growing regresses …
+        let fatter = MEM_SPLIT.replace(r#""frozen_bytes":40"#, r#""frozen_bytes":90"#);
+        let r = diff_metrics(MEM_SPLIT, &fatter).unwrap();
+        assert!(r.has_regressions());
+        assert_eq!(r.regressions().next().unwrap().key, "memory.summary.frozen_bytes");
+        // … as does an unmerged delta swelling, and the per-epoch series
+        // carries the same direction as the summary
+        let swollen = MEM_SPLIT.replace(r#""delta_bytes":12"#, r#""delta_bytes":500"#);
+        assert!(diff_metrics(MEM_SPLIT, &swollen).unwrap().has_regressions());
+        let epoch = MEM_SPLIT.replace(r#""frozen_bytes":52"#, r#""frozen_bytes":99"#);
+        let re = diff_metrics(MEM_SPLIT, &epoch).unwrap();
+        assert!(re.has_regressions());
+        assert_eq!(re.regressions().next().unwrap().key, "memory.epochs.0.frozen_bytes");
+        // shrinking a layer is an improvement, not a regression
+        let thinner = MEM_SPLIT.replace(r#""frozen_bytes":40"#, r#""frozen_bytes":8"#);
+        let r2 = diff_metrics(MEM_SPLIT, &thinner).unwrap();
+        assert_eq!(r2.deltas.len(), 1, "still reported");
+        assert!(!r2.has_regressions());
+    }
+
+    #[test]
+    fn compaction_cadence_is_neutral_bookkeeping() {
+        // epoch boundaries may merge the delta more or less often
+        // without that being a regression in either direction
+        let often = MEM_SPLIT.replace(r#""compactions":3"#, r#""compactions":7"#);
+        let r = diff_metrics(MEM_SPLIT, &often).unwrap();
+        assert_eq!(r.deltas.len(), 1, "still reported");
+        assert!(!r.has_regressions());
+        let never = MEM_SPLIT.replace(r#""compactions":3"#, r#""compactions":0"#);
+        assert!(!diff_metrics(MEM_SPLIT, &never).unwrap().has_regressions());
+        // the classifier itself, pinned: the split keys are lower-better
+        // wherever they appear, the cadence counter is neutral
+        assert_eq!(scenario_rule("memory.summary.frozen_bytes"), Rule::LowerBetter);
+        assert_eq!(scenario_rule("memory.summary.delta_bytes"), Rule::LowerBetter);
+        assert_eq!(scenario_rule("memory.epochs.9.delta_bytes"), Rule::LowerBetter);
+        assert_eq!(scenario_rule("memory.summary.compactions"), Rule::Neutral);
+    }
+
     const BA: &str = r#"{"deterministic":{"op":{"bytes":128,"iters":2},"sched.transfers":38},"mode":"smoke","name":"hotpath","timing":{"op":{"mean_ns":1000,"p50_ns":900}}}"#;
 
     #[test]

@@ -149,6 +149,11 @@ pub struct MemorySample {
     pub payload_bytes: u64,
     pub index_bytes: u64,
     pub overhead_bytes: u64,
+    /// Index + overhead bytes in the immutable frozen index layer
+    /// ([`crate::kvc::frozen`]); informational split of the above.
+    pub frozen_bytes: u64,
+    /// Index + overhead bytes in the mutable delta layer.
+    pub delta_bytes: u64,
     pub total_bytes: u64,
     pub cached_tokens: u64,
 }
@@ -177,6 +182,13 @@ pub struct MemoryPlane {
     pub payload_bytes: u64,
     pub index_bytes: u64,
     pub overhead_bytes: u64,
+    /// End-of-run frozen/delta split of the index layers
+    /// ([`crate::kvc::frozen`]); informational, already counted above.
+    pub frozen_bytes: u64,
+    pub delta_bytes: u64,
+    /// Frozen index generations built across the run (one per
+    /// compacting epoch boundary).
+    pub compactions: u64,
     pub total_bytes: u64,
     /// Tokens the index covers at end of run (blocks x block_tokens).
     pub cached_tokens: u64,
@@ -200,6 +212,8 @@ impl MemoryPlane {
             payload_bytes: est.payload_bytes,
             index_bytes: est.index_bytes,
             overhead_bytes: est.overhead_bytes,
+            frozen_bytes: est.frozen_bytes,
+            delta_bytes: est.delta_bytes,
             total_bytes: total,
             cached_tokens,
         });
@@ -210,6 +224,8 @@ impl MemoryPlane {
         self.payload_bytes = est.payload_bytes;
         self.index_bytes = est.index_bytes;
         self.overhead_bytes = est.overhead_bytes;
+        self.frozen_bytes = est.frozen_bytes;
+        self.delta_bytes = est.delta_bytes;
         self.total_bytes = total;
         self.cached_tokens = cached_tokens;
     }
@@ -231,6 +247,9 @@ fn memory_json(m: &MemoryPlane) -> Json {
     let mut summary = vec![
         ("bytes_per_cached_token", n(m.bytes_per_cached_token)),
         ("cached_tokens", n(m.cached_tokens as f64)),
+        ("compactions", n(m.compactions as f64)),
+        ("delta_bytes", n(m.delta_bytes as f64)),
+        ("frozen_bytes", n(m.frozen_bytes as f64)),
         ("index_bytes", n(m.index_bytes as f64)),
         ("overhead_bytes", n(m.overhead_bytes as f64)),
         ("payload_bytes", n(m.payload_bytes as f64)),
@@ -269,6 +288,8 @@ fn memory_json(m: &MemoryPlane) -> Json {
                             ("epoch", n(e.epoch as f64)),
                             ("payload_bytes", n(e.payload_bytes as f64)),
                             ("index_bytes", n(e.index_bytes as f64)),
+                            ("frozen_bytes", n(e.frozen_bytes as f64)),
+                            ("delta_bytes", n(e.delta_bytes as f64)),
                             ("overhead_bytes", n(e.overhead_bytes as f64)),
                             ("total_bytes", n(e.total_bytes as f64)),
                             ("cached_tokens", n(e.cached_tokens as f64)),
@@ -1106,9 +1127,13 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
             blocks_hit,
             inproc.stats().isl_bytes.load(Ordering::Relaxed),
         ));
+        // epoch boundary: freeze the index delta into a new generation
+        // before sampling, so the memory plane sees the compacted layout
+        manager.end_of_epoch(epoch);
         // memory plane: the whole stack's footprint at this boundary —
-        // radix index + local tier (manager) plus every satellite store,
-        // and the session/refcount tables when the session layer drives
+        // two-layer index + local tier (manager) plus every satellite
+        // store, and the session/refcount tables when the session layer
+        // drives
         let mut est = manager.mem_footprint();
         for node in fleet.nodes() {
             est.add(node.footprint());
@@ -1135,6 +1160,7 @@ pub fn run_scenario_with_sink(spec: &ScenarioSpec, sink: Arc<dyn TraceSink>) -> 
     let (link_rollup, links_elided) = link_rollups(
         manager.sched().link_rollup().into_iter().map(|(k, u)| (k.label(), u)).collect(),
     );
+    memory.compactions = manager.index_compactions();
     memory.finish(Vec::new());
 
     ScenarioReport {
@@ -1759,6 +1785,7 @@ pub fn run_federated_scenario_with_sink(
     let (link_rollup, links_elided) = link_rollups(raw_links);
 
     let resident_copies = manager.shell_resident_copies();
+    memory.compactions = manager.index_compactions();
     memory.finish(
         spec.shells
             .iter()

@@ -1,0 +1,312 @@
+//! Differential test oracle for the epoch-frozen two-layer index
+//! (`kvc::frozen`).
+//!
+//! The offline build has no proptest crate, so this is a from-scratch
+//! property harness (same idiom as `proptest_invariants.rs`):
+//! deterministic XorShift-driven random interleavings of insert /
+//! prefix-lookup / evict (tombstone) / compact, checked op-for-op
+//! against the plain structures the two-layer index replaces — the
+//! radix [`BlockIndex`] and a `BTreeMap` — plus the layer-specific
+//! invariants the plain structures cannot express:
+//!
+//! * every lookup answer is byte-identical across all three structures,
+//!   before and after any number of compactions;
+//! * merged iteration order ([`FrozenBlockIndex::entries`] /
+//!   [`FrozenMap::entries`]) is byte-identical to the sorted oracle;
+//! * blocks pinned through [`BlockRefs`] survive every compaction;
+//! * a compaction never grows the modeled footprint, and evicting then
+//!   compacting strictly shrinks it.
+//!
+//! Failure seeds are printed in every assertion for reproduction.
+
+use skymemory::kvc::block::{block_hashes, BlockHash};
+use skymemory::kvc::frozen::{FrozenBlockIndex, FrozenMap};
+use skymemory::kvc::radix::{BlockIndex, BlockMeta};
+use skymemory::kvc::session::BlockRefs;
+use skymemory::obs::mem::MemFootprint;
+use skymemory::util::rng::XorShift64;
+use std::collections::BTreeMap;
+
+const CASES: u64 = 120;
+const OPS: usize = 160;
+
+fn rand_meta(rng: &mut XorShift64) -> BlockMeta {
+    BlockMeta {
+        num_chunks: 1 + rng.next_range(8) as u32,
+        kvc_len: 256 + rng.next_range(1 << 16) as u32,
+        write_epoch: rng.next_range(64) as u64,
+        quantizer_id: rng.next_range(3) as u8,
+    }
+}
+
+/// Pool of block-hash chains with heavy prefix sharing: every chain
+/// forks off a shared base at a random block boundary, so radix paths,
+/// front-coded arena buckets and tombstone shadowing all get exercised
+/// on overlapping keys.
+fn chain_pool(rng: &mut XorShift64) -> Vec<Vec<BlockHash>> {
+    let block = 32usize;
+    let base_blocks = 4 + rng.next_range(8);
+    let base: Vec<i32> = (0..(base_blocks * block) as i32).collect();
+    let mut pool = vec![block_hashes(&base, block)];
+    for fork in 0..5i32 {
+        let keep = rng.next_range(base_blocks);
+        let extra = 1 + rng.next_range(6);
+        let mut tokens: Vec<i32> = base[..keep * block].to_vec();
+        for t in 0..(extra * block) as i32 {
+            tokens.push(10_000 + fork * 1_000 + t);
+        }
+        pool.push(block_hashes(&tokens, block));
+    }
+    pool
+}
+
+/// Pick a random prefix (chain slice of depth >= 1) from the pool.
+fn rand_prefix<'a>(rng: &mut XorShift64, pool: &'a [Vec<BlockHash>]) -> &'a [BlockHash] {
+    let chain = &pool[rng.next_range(pool.len())];
+    &chain[..1 + rng.next_range(chain.len())]
+}
+
+fn oracle_key(hashes: &[BlockHash]) -> Vec<u8> {
+    let mut key = Vec::with_capacity(32 * hashes.len());
+    for h in hashes {
+        key.extend_from_slice(h.as_bytes());
+    }
+    key
+}
+
+/// The oracle's view of what the frozen layer must iterate: every live
+/// chain keyed by its *terminal* hash, sorted by that hash.
+fn oracle_entries(oracle: &BTreeMap<Vec<u8>, BlockMeta>) -> Vec<([u8; 32], BlockMeta)> {
+    let mut want: Vec<([u8; 32], BlockMeta)> = oracle
+        .iter()
+        .map(|(key, m)| {
+            let mut t = [0u8; 32];
+            t.copy_from_slice(&key[key.len() - 32..]);
+            (t, *m)
+        })
+        .collect();
+    want.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+    want
+}
+
+/// Longest cached prefix per the oracle: deepest live depth, jumping
+/// holes, matching the radix tree's deepest-match semantics.
+fn oracle_longest(
+    oracle: &BTreeMap<Vec<u8>, BlockMeta>,
+    chain: &[BlockHash],
+) -> Option<(usize, BlockMeta)> {
+    (1..=chain.len())
+        .rev()
+        .find_map(|k| oracle.get(&oracle_key(&chain[..k])).map(|m| (k, *m)))
+}
+
+#[test]
+fn prop_frozen_block_index_matches_radix_and_btreemap() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 1);
+        let pool = chain_pool(&mut rng);
+        let mut frozen = FrozenBlockIndex::new();
+        let mut radix = BlockIndex::new();
+        let mut oracle: BTreeMap<Vec<u8>, BlockMeta> = BTreeMap::new();
+        let refs = BlockRefs::new();
+        let mut pinned: Vec<Vec<BlockHash>> = Vec::new();
+
+        for op in 0..OPS {
+            match rng.next_range(100) {
+                // insert, occasionally pinning the block like a live
+                // session holding a refcount on it
+                0..=34 => {
+                    let prefix = rand_prefix(&mut rng, &pool);
+                    let meta = rand_meta(&mut rng);
+                    frozen.insert(prefix, meta);
+                    radix.insert(prefix, meta);
+                    oracle.insert(oracle_key(prefix), meta);
+                    if rng.next_range(8) == 0 {
+                        refs.acquire(prefix.last().unwrap());
+                        pinned.push(prefix.to_vec());
+                    }
+                }
+                // evict — unless the block is pinned, mirroring the
+                // session layer's refcount check
+                35..=54 => {
+                    let prefix = rand_prefix(&mut rng, &pool);
+                    if refs.is_pinned(prefix.last().unwrap()) {
+                        continue;
+                    }
+                    let got = frozen.remove(prefix);
+                    assert_eq!(got, radix.remove(prefix), "seed {seed} op {op}: remove");
+                    assert_eq!(got, oracle.remove(&oracle_key(prefix)), "seed {seed} op {op}");
+                }
+                // exact lookup
+                55..=74 => {
+                    let prefix = rand_prefix(&mut rng, &pool);
+                    let got = frozen.get(prefix);
+                    assert_eq!(got, radix.get(prefix).copied(), "seed {seed} op {op}: get");
+                    assert_eq!(
+                        got,
+                        oracle.get(&oracle_key(prefix)).copied(),
+                        "seed {seed} op {op}: get vs oracle"
+                    );
+                }
+                // longest cached prefix over a full chain
+                75..=89 => {
+                    let chain = &pool[rng.next_range(pool.len())];
+                    let got = frozen.longest_cached_prefix(chain);
+                    assert_eq!(
+                        got,
+                        radix.longest_cached_prefix(chain),
+                        "seed {seed} op {op}: longest vs radix"
+                    );
+                    assert_eq!(
+                        got,
+                        oracle_longest(&oracle, chain),
+                        "seed {seed} op {op}: longest vs oracle"
+                    );
+                }
+                // epoch boundary: compact and check the frozen-only
+                // invariants the oracle cannot express
+                _ => {
+                    let pre = frozen.mem_footprint();
+                    frozen.compact();
+                    let post = frozen.mem_footprint();
+                    assert_eq!(frozen.delta_len(), 0, "seed {seed} op {op}: delta drained");
+                    assert!(
+                        post.total() <= pre.total(),
+                        "seed {seed} op {op}: compaction grew the footprint {} -> {}",
+                        pre.total(),
+                        post.total()
+                    );
+                    for chain in &pinned {
+                        assert_eq!(
+                            frozen.get(chain),
+                            oracle.get(&oracle_key(chain)).copied(),
+                            "seed {seed} op {op}: pinned block lost by compaction"
+                        );
+                        assert!(
+                            frozen.get(chain).is_some(),
+                            "seed {seed} op {op}: pinned block must stay cached"
+                        );
+                    }
+                    assert_eq!(
+                        frozen.entries(),
+                        oracle_entries(&oracle),
+                        "seed {seed} op {op}: iteration order after compaction"
+                    );
+                }
+            }
+            assert_eq!(frozen.len(), oracle.len(), "seed {seed} op {op}: len");
+            assert_eq!(frozen.len(), radix.len(), "seed {seed} op {op}: len vs radix");
+        }
+
+        // final sweep: every prefix in the universe answers identically,
+        // and the merged iteration is byte-identical to the oracle
+        frozen.compact();
+        for chain in &pool {
+            for k in 1..=chain.len() {
+                let prefix = &chain[..k];
+                assert_eq!(
+                    frozen.get(prefix),
+                    oracle.get(&oracle_key(prefix)).copied(),
+                    "seed {seed}: final sweep"
+                );
+            }
+        }
+        assert_eq!(frozen.entries(), oracle_entries(&oracle), "seed {seed}: final iteration");
+    }
+}
+
+#[test]
+fn prop_frozen_map_matches_btreemap() {
+    for seed in 0..CASES {
+        let mut rng = XorShift64::new(seed + 50_000);
+        let universe: Vec<BlockHash> = (0..40)
+            .map(|_| {
+                let mut bytes = [0u8; 32];
+                for b in bytes.chunks_exact_mut(8) {
+                    b.copy_from_slice(&rng.next_u64().to_le_bytes());
+                }
+                BlockHash(bytes)
+            })
+            .collect();
+        let mut map: FrozenMap<u64> = FrozenMap::new();
+        let mut oracle: BTreeMap<BlockHash, u64> = BTreeMap::new();
+
+        for op in 0..OPS {
+            let h = universe[rng.next_range(universe.len())];
+            match rng.next_range(100) {
+                0..=29 => {
+                    let v = rng.next_u64();
+                    assert_eq!(map.insert(h, v), oracle.insert(h, v), "seed {seed} op {op}");
+                }
+                30..=49 => {
+                    assert_eq!(map.remove(&h), oracle.remove(&h), "seed {seed} op {op}: remove");
+                }
+                50..=69 => {
+                    assert_eq!(map.get(&h), oracle.get(&h), "seed {seed} op {op}: get");
+                    assert_eq!(
+                        map.contains_key(&h),
+                        oracle.contains_key(&h),
+                        "seed {seed} op {op}"
+                    );
+                }
+                // copy-on-write mutation: bump through get_mut in both
+                70..=84 => {
+                    let got = map.get_mut(&h).map(|v| {
+                        *v = v.wrapping_add(1);
+                        *v
+                    });
+                    let want = oracle.get_mut(&h).map(|v| {
+                        *v = v.wrapping_add(1);
+                        *v
+                    });
+                    assert_eq!(got, want, "seed {seed} op {op}: get_mut");
+                }
+                // epoch boundary: behavior must be unchanged by freezing
+                _ => {
+                    map.compact();
+                    assert_eq!(map.delta_len(), 0, "seed {seed} op {op}");
+                }
+            }
+            assert_eq!(map.len(), oracle.len(), "seed {seed} op {op}: len");
+        }
+
+        let want: Vec<(BlockHash, u64)> = oracle.iter().map(|(h, v)| (*h, *v)).collect();
+        assert_eq!(map.entries(), want, "seed {seed}: final iteration order");
+        for h in &universe {
+            assert_eq!(map.get(h), oracle.get(h), "seed {seed}: final sweep");
+        }
+    }
+}
+
+/// Evict-then-compact must strictly shrink the modeled footprint: the
+/// monotone-shrink half of the satellite-task invariant (the random
+/// interleavings above check the never-grows half at every boundary).
+#[test]
+fn eviction_compaction_strictly_shrinks_the_frozen_layer() {
+    let tokens: Vec<i32> = (0..(64 * 32)).collect();
+    let hashes = block_hashes(&tokens, 32); // one 64-block chain
+    let mut idx = FrozenBlockIndex::new();
+    for k in 1..=hashes.len() {
+        idx.insert(&hashes[..k], rand_meta(&mut XorShift64::new(k as u64)));
+    }
+    assert!(idx.compact());
+    let full = idx.mem_footprint();
+    // tombstone three of every four prefixes, then compact them away
+    for k in 1..=hashes.len() {
+        if k % 4 != 0 {
+            idx.remove(&hashes[..k]);
+        }
+    }
+    assert!(idx.compact());
+    let quarter = idx.mem_footprint();
+    assert_eq!(idx.len(), 16);
+    assert_eq!(idx.frozen_len(), 16);
+    assert!(
+        quarter.total() < full.total(),
+        "evicting 48 of 64 prefixes must shrink the frozen layer: {} -> {}",
+        full.total(),
+        quarter.total()
+    );
+    assert_eq!(quarter.delta_bytes, 0);
+    assert!(quarter.frozen_bytes > 0);
+}

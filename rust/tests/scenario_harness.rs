@@ -178,6 +178,35 @@ fn fork_heavy_chat_beats_its_baseline_end_to_end() {
     );
 }
 
+/// Acceptance for the epoch-frozen two-layer index (`kvc::frozen`):
+/// epoch boundaries must actually compact the delta into the frozen
+/// layer, the frozen/delta split must land in the metrics JSON, and the
+/// whole `memory` object — split included — must stay byte-identical
+/// across same-seed runs, single-shell and federated alike.
+#[test]
+fn frozen_index_split_is_reported_and_deterministic() {
+    use skymemory::sim::harness::run_federated_scenario;
+    use skymemory::sim::scenario::FederatedScenarioSpec;
+
+    let spec = ScenarioSpec::fork_heavy_chat(7);
+    let a = run_scenario(&spec);
+    let b = run_scenario(&spec);
+    assert_eq!(a.to_json_string(), b.to_json_string(), "byte-identical incl. the split");
+    assert!(a.memory.compactions > 0, "epoch boundaries must compact: {:?}", a.memory);
+    assert!(a.memory.frozen_bytes > 0, "writes must freeze by the last epoch: {:?}", a.memory);
+    let j = a.to_json_string();
+    for key in ["\"frozen_bytes\"", "\"delta_bytes\"", "\"compactions\""] {
+        assert!(j.contains(key), "missing {key}");
+    }
+
+    let fspec = FederatedScenarioSpec::by_name("federated-tri-shell", 7).expect("builtin");
+    let fa = run_federated_scenario(&fspec);
+    let fb = run_federated_scenario(&fspec);
+    assert_eq!(fa.to_json_string(), fb.to_json_string(), "federated runs byte-identical");
+    assert!(fa.memory.compactions > 0, "federated boundaries must compact: {:?}", fa.memory);
+    assert!(fa.memory.frozen_bytes > 0, "federated index must freeze: {:?}", fa.memory);
+}
+
 /// Acceptance for the `net::sched` engine: the mega-shell scenario runs
 /// byte-stably with >= 1000 chunks concurrently in flight — concurrency
 /// no thread-per-chunk (or 8-thread-stripe) model could express — and
